@@ -1,0 +1,11 @@
+fn main() {
+    let specs = nexus::workloads::suite(1);
+    let cfg = nexus::config::ArchConfig::nexus();
+    let built: Vec<_> = specs.iter().map(|s| s.build(&cfg)).collect();
+    for _ in 0..10 {
+        for b in &built {
+            let mut f = nexus::fabric::NexusFabric::new(cfg.clone());
+            nexus::workloads::run_on_fabric(&mut f, b).expect("run");
+        }
+    }
+}

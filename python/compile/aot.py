@@ -1,0 +1,41 @@
+"""AOT lowering: JAX/Pallas golden models -> artifacts/<name>.hlo.txt.
+
+Runs once at build time (``make artifacts``); the rust binary loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client.  Interchange is HLO **text**, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+"""
+
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from compile.model import MODELS  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    out_dir = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "artifacts")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name, (fn, example_args) in MODELS.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"  {name:<12} -> {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: tiled dense matmul (MXU blocks).
+
+The dense-workload golden kernel: output tiled ``[TILE, TILE]``, K
+traversed in the innermost grid dimension with a VMEM accumulator —
+the canonical TPU matmul schedule (HBM->VMEM panels, MXU per tile).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 8
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul(a, b):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % TILE == 0 and n % TILE == 0 and k % TILE == 0
+    grid = (m // TILE, n // TILE, k // TILE)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

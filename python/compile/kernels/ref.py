@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the L1 correctness references: every Pallas kernel in this
+package must agree with its oracle bit-for-bit on integer-valued f32
+inputs (pytest + hypothesis sweep shapes and densities in
+``python/tests/``).  The rust simulator is in turn validated against the
+AOT-lowered L2 models built from these kernels (``nexus golden``).
+"""
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(values, colidx, x):
+    """ELL-padded SpMV: ``y[r] = sum_s values[r, s] * x[colidx[r, s]]``.
+
+    Padding slots carry value 0 (and column 0), so they contribute nothing.
+    ``colidx`` arrives as f32 (the PJRT input path feeds f32 buffers) and is
+    cast in-graph.
+    """
+    idx = colidx.astype(jnp.int32)
+    gathered = x[idx]  # [rows, width]
+    return jnp.sum(values * gathered, axis=1)
+
+
+def sddmm_ref(mask, a, b):
+    """Masked dense matmul: ``C = mask * (A @ B)`` (mask is binary)."""
+    return mask * (a @ b)
+
+
+def matmul_ref(a, b):
+    """Plain dense matmul."""
+    return a @ b
+
+
+def spmadd_ref(a, b):
+    """Element-wise addition of (densified) sparse matrices."""
+    return a + b

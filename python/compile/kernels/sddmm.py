@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: SDDMM as a masked dense matmul.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on a TPU the
+profitable SDDMM strategy at moderate density is to run the dense product
+on the MXU and apply sparsity as an elementwise mask (the ViTCoD-style
+attention masks the paper evaluates are exactly this shape).  The kernel
+tiles the output into ``[TILE_M, TILE_N]`` MXU-aligned blocks; each block
+computes ``mask_block * (A_row_panel @ B_col_panel)``.
+
+MXU notes: TILE_M = TILE_N = 16 divides the artifact shapes and maps onto
+the 128x128 systolic array in one pass per block at these sizes; K stays
+unsplit (K=16) so no accumulator carries across grid steps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 16
+TILE_N = 16
+
+
+def _kernel(mask_ref, a_ref, b_ref, o_ref):
+    acc = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = mask_ref[...] * acc
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sddmm(mask, a, b):
+    """``C = mask * (A @ B)`` with a binary mask."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and mask.shape == (m, n)
+    assert m % TILE_M == 0 and n % TILE_N == 0
+    grid = (m // TILE_M, n // TILE_N)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+            pl.BlockSpec((TILE_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, TILE_N), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(mask, a, b)

@@ -1,0 +1,36 @@
+"""L1 Pallas kernel: element-wise sparse-matrix addition (densified).
+
+Trivial VPU kernel, blocked row-wise so arbitrary matrix heights stream
+through a fixed VMEM footprint.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 8
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def spmadd(a, b):
+    assert a.shape == b.shape
+    rows, cols = a.shape
+    assert rows % ROW_BLOCK == 0
+    grid = (rows // ROW_BLOCK,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, cols), lambda r: (r, 0)),
+            pl.BlockSpec((ROW_BLOCK, cols), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, cols), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        interpret=True,
+    )(a, b)

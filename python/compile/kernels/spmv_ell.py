@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: ELL-padded SpMV.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the fabric's
+data-driven CSR gather does not map onto the MXU, so the golden kernel
+works on the ELL padding — a dense ``[rows, width]`` slab of values and
+column indices.  The gather becomes a vectorized ``take`` on the VPU and
+the reduction a lane-wise multiply-add, with BlockSpec tiling rows into
+VMEM-sized blocks.
+
+TPU sizing notes (the structural targets we optimize for; interpret=True
+gives CPU-numpy timing only, so we reason from footprints):
+
+- VMEM per block = ``ROW_BLOCK * width * 4B * 2`` (values + gathered x)
+  plus the full ``x`` vector, broadcast to every block.  For the artifact
+  shape (64x32 + x[64]) that is ~18KB, far under the ~16MB VMEM budget;
+  ROW_BLOCK=8 keeps the sublane dimension aligned (8 f32 sublanes).
+- The kernel is VPU-bound (no matmul): roofline is the HBM stream of the
+  ELL slabs, ~2 flops/byte.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 8
+
+
+def _kernel(x_ref, values_ref, colidx_ref, o_ref):
+    """One row-block: gather x by colidx, multiply, reduce across width."""
+    vals = values_ref[...]  # [ROW_BLOCK, width]
+    idx = colidx_ref[...].astype(jnp.int32)  # [ROW_BLOCK, width]
+    x = x_ref[...]  # [cols] (whole vector in VMEM)
+    gathered = x[idx]  # VPU gather
+    o_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def spmv_ell(values, colidx, x):
+    """``y = A @ x`` with A in ELL form (values/colidx ``[rows, width]``)."""
+    rows, _width = values.shape
+    assert rows % ROW_BLOCK == 0, f"rows {rows} must be a multiple of {ROW_BLOCK}"
+    grid = (rows // ROW_BLOCK,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda r: (0,)),  # x: replicated
+            pl.BlockSpec((ROW_BLOCK, values.shape[1]), lambda r: (r, 0)),
+            pl.BlockSpec((ROW_BLOCK, values.shape[1]), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK,), lambda r: (r,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), values.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, values, colidx)

@@ -1,0 +1,60 @@
+"""L2 golden models: the JAX compute graphs the rust runtime validates the
+fabric against.  Each model is a thin jax function over the L1 Pallas
+kernels; ``aot.py`` lowers every entry of ``MODELS`` to HLO text once at
+build time.  Shapes are fixed here (XLA AOT requires static shapes) and
+mirrored in ``rust/src/golden.rs``.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul
+from compile.kernels.sddmm import sddmm
+from compile.kernels.spmadd import spmadd
+from compile.kernels.spmv_ell import spmv_ell
+
+# Artifact shapes — keep in sync with rust/src/golden.rs.
+SPMV_ROWS, SPMV_COLS, SPMV_ELL_WIDTH = 64, 64, 32
+SDDMM_M, SDDMM_K, SDDMM_N = 32, 16, 32
+MATMUL_N = 24
+SPMADD_N = 64
+
+
+def spmv_model(values, colidx, x):
+    return (spmv_ell(values, colidx, x),)
+
+
+def sddmm_model(mask, a, b):
+    return (sddmm(mask, a, b),)
+
+
+def matmul_model(a, b):
+    return (matmul(a, b),)
+
+
+def spmadd_model(a, b):
+    return (spmadd(a, b),)
+
+
+def _s(*shape):
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+#: name -> (fn, example_args)
+MODELS = {
+    "spmv_ell": (
+        spmv_model,
+        (
+            _s(SPMV_ROWS, SPMV_ELL_WIDTH),
+            _s(SPMV_ROWS, SPMV_ELL_WIDTH),
+            _s(SPMV_COLS),
+        ),
+    ),
+    "sddmm": (
+        sddmm_model,
+        (_s(SDDMM_M, SDDMM_N), _s(SDDMM_M, SDDMM_K), _s(SDDMM_K, SDDMM_N)),
+    ),
+    "matmul": (matmul_model, (_s(MATMUL_N, MATMUL_N), _s(MATMUL_N, MATMUL_N))),
+    "spmadd": (spmadd_model, (_s(SPMADD_N, SPMADD_N), _s(SPMADD_N, SPMADD_N))),
+}

@@ -1,0 +1,62 @@
+"""L2 model checks: every registered model lowers to HLO text, keeps its
+declared shapes, and agrees with the oracle composition."""
+
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from compile import model  # noqa: E402
+from compile.aot import to_hlo_text  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+
+def test_all_models_lower_to_hlo_text():
+    import jax
+
+    for name, (fn, example_args) in model.MODELS.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        assert "HloModule" in text, name
+        # The text must be parseable interchange: ENTRY computation present.
+        assert "ENTRY" in text, name
+
+
+def test_model_shapes_match_golden_rs_constants():
+    # These constants are mirrored in rust/src/golden.rs; a drift here
+    # silently breaks the cross-language check, so pin them.
+    assert (model.SPMV_ROWS, model.SPMV_COLS, model.SPMV_ELL_WIDTH) == (64, 64, 32)
+    assert (model.SDDMM_M, model.SDDMM_K, model.SDDMM_N) == (32, 16, 32)
+    assert model.MATMUL_N == 24
+    assert model.SPMADD_N == 64
+
+
+def test_models_agree_with_oracles_end_to_end():
+    rng = np.random.default_rng(7)
+
+    def ints(shape):
+        return rng.integers(-3, 4, size=shape).astype(np.float32)
+
+    v = ints((model.SPMV_ROWS, model.SPMV_ELL_WIDTH))
+    c = rng.integers(0, model.SPMV_COLS, size=v.shape).astype(np.float32)
+    x = ints((model.SPMV_COLS,))
+    (y,) = model.spmv_model(v, c, x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref.spmv_ell_ref(v, c, x)))
+
+    mask = (rng.random((model.SDDMM_M, model.SDDMM_N)) < 0.3).astype(np.float32)
+    a = ints((model.SDDMM_M, model.SDDMM_K))
+    b = ints((model.SDDMM_K, model.SDDMM_N))
+    (cc,) = model.sddmm_model(mask, a, b)
+    np.testing.assert_array_equal(np.asarray(cc), np.asarray(ref.sddmm_ref(mask, a, b)))
+
+    a = ints((model.MATMUL_N, model.MATMUL_N))
+    b = ints((model.MATMUL_N, model.MATMUL_N))
+    (mm,) = model.matmul_model(a, b)
+    np.testing.assert_array_equal(np.asarray(mm), np.asarray(ref.matmul_ref(a, b)))
+
+    a = ints((model.SPMADD_N, model.SPMADD_N))
+    b = ints((model.SPMADD_N, model.SPMADD_N))
+    (ss,) = model.spmadd_model(a, b)
+    np.testing.assert_array_equal(np.asarray(ss), np.asarray(ref.spmadd_ref(a, b)))

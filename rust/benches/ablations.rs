@@ -1,0 +1,14 @@
+//! `cargo bench --bench ablations` — design-choice ablations (en-route
+//! execution, routing policy, buffer depth, AM window, Algorithm-1
+//! placement) over the irregular suite.
+
+use nexus::coordinator::ablation;
+use nexus::util::bench::bench;
+
+fn main() {
+    let mut out = String::new();
+    bench("ablations", 2, || {
+        out = ablation::report(1);
+    });
+    println!("{out}");
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig10_power_ablation` — regenerates the paper's fig10 power ablation
+//! series from the cycle-accurate simulator, and times the regeneration.
+
+use nexus::coordinator::{self, report};
+use nexus::util::bench::bench;
+
+fn main() {
+    let mut out = String::new();
+    bench("fig10_power_ablation", 3, || {
+        let m = coordinator::run_matrix(1);
+        out = report::fig10(&m);
+    });
+    println!("{out}");
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig11_performance` — regenerates the paper's fig11 performance
+//! series from the cycle-accurate simulator, and times the regeneration.
+
+use nexus::coordinator::{self, report};
+use nexus::util::bench::bench;
+
+fn main() {
+    let mut out = String::new();
+    bench("fig11_performance", 3, || {
+        let m = coordinator::run_matrix(1);
+        out = report::fig11(&m);
+    });
+    println!("{out}");
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig12_perf_per_watt` — regenerates the paper's fig12 perf per watt
+//! series from the cycle-accurate simulator, and times the regeneration.
+
+use nexus::coordinator::{self, report};
+use nexus::util::bench::bench;
+
+fn main() {
+    let mut out = String::new();
+    bench("fig12_perf_per_watt", 3, || {
+        let m = coordinator::run_matrix(1);
+        out = report::fig12(&m);
+    });
+    println!("{out}");
+}

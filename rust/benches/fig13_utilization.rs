@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig13_utilization` — regenerates the paper's fig13 utilization
+//! series from the cycle-accurate simulator, and times the regeneration.
+
+use nexus::coordinator::{self, report};
+use nexus::util::bench::bench;
+
+fn main() {
+    let mut out = String::new();
+    bench("fig13_utilization", 3, || {
+        let m = coordinator::run_matrix(1);
+        out = report::fig13(&m);
+    });
+    println!("{out}");
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig14_congestion` — regenerates the paper's fig14 congestion
+//! series from the cycle-accurate simulator, and times the regeneration.
+
+use nexus::coordinator::{self, report};
+use nexus::util::bench::bench;
+
+fn main() {
+    let mut out = String::new();
+    bench("fig14_congestion", 3, || {
+        let m = coordinator::run_matrix(1);
+        out = report::fig14(&m);
+    });
+    println!("{out}");
+}

@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig15_area` — regenerates the paper's fig15 area
+//! series from the cycle-accurate simulator, and times the regeneration.
+
+use nexus::coordinator::report;
+use nexus::util::bench::bench;
+
+fn main() {
+    let mut out = String::new();
+    bench("fig15_area", 10, || {
+        out = report::fig15();
+    });
+    println!("{out}");
+}

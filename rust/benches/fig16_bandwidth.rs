@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig16_bandwidth` — regenerates the paper's fig16 bandwidth
+//! series from the cycle-accurate simulator, and times the regeneration.
+
+use nexus::coordinator::{self, report};
+use nexus::util::bench::bench;
+
+fn main() {
+    let mut out = String::new();
+    bench("fig16_bandwidth", 2, || {
+        let pts = coordinator::bandwidth_sweep(1);
+        out = report::fig16(&pts);
+    });
+    println!("{out}");
+}

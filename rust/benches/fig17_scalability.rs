@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig17_scalability` — regenerates the paper's fig17 scalability
+//! series from the cycle-accurate simulator, and times the regeneration.
+
+use nexus::coordinator::{self, report};
+use nexus::util::bench::bench;
+
+fn main() {
+    let mut out = String::new();
+    bench("fig17_scalability", 2, || {
+        let pts = coordinator::scalability_sweep(1, &[2, 4, 6, 8]);
+        out = report::fig17(&pts);
+    });
+    println!("{out}");
+}

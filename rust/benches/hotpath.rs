@@ -1,0 +1,52 @@
+//! `cargo bench --bench hotpath` — the simulator's own performance: PE-cycle
+//! throughput of `NexusFabric::step()` on a saturated fabric, plus the §4
+//! compile-path timing comparison. This is the EXPERIMENTS.md §Perf probe.
+
+use nexus::baselines::cgra::{mem_trace, GenericCgra};
+use nexus::config::ArchConfig;
+use nexus::fabric::NexusFabric;
+use nexus::util::bench::{bench, throughput};
+use std::time::Instant;
+
+fn main() {
+    // Hot path: full suite on the Nexus fabric, measured in PE-cycles/s.
+    let specs = nexus::workloads::suite(1);
+    let cfg = ArchConfig::nexus();
+    let built: Vec<_> = specs.iter().map(|s| s.build(&cfg)).collect();
+
+    let mut total_cycles = 0u64;
+    let t0 = Instant::now();
+    for b in &built {
+        let mut f = NexusFabric::new(cfg.clone());
+        nexus::workloads::run_on_fabric(&mut f, b).expect("run");
+        total_cycles += f.stats.cycles;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    throughput(
+        "fabric step() PE-cycles",
+        total_cycles * cfg.num_pes() as u64,
+        dt,
+    );
+
+    bench("suite end-to-end (nexus)", 5, || {
+        for b in &built {
+            let mut f = NexusFabric::new(cfg.clone());
+            nexus::workloads::run_on_fabric(&mut f, b).expect("run");
+        }
+    });
+
+    // Compile paths (§4: 0.55 s Nexus vs 7.22 s CGRA on the authors' setup).
+    bench("compile path: nexus", 5, || {
+        for s in &specs {
+            std::hint::black_box(s.build(&cfg));
+        }
+    });
+    bench("compile path: generic CGRA", 5, || {
+        let m = GenericCgra::default();
+        for s in &specs {
+            let dfg = s.dfg();
+            let (trace, bytes) = mem_trace(s);
+            std::hint::black_box(m.simulate(&dfg, &trace, bytes));
+        }
+    });
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench table2_sota` — regenerates the paper's table2 sota
+//! series from the cycle-accurate simulator, and times the regeneration.
+
+use nexus::coordinator::{self, report};
+use nexus::util::bench::bench;
+
+fn main() {
+    let mut out = String::new();
+    bench("table2_sota", 3, || {
+        let m = coordinator::run_matrix(1);
+        out = report::table2(&m);
+    });
+    println!("{out}");
+}

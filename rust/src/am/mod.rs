@@ -1,0 +1,237 @@
+//! Active Messages: the single-flit packets that carry instructions, operand
+//! values/addresses, and a multi-destination route (Fig 7).
+//!
+//! Two representations exist:
+//!
+//! - [`Message`] — the unpacked struct the simulator moves around. It also
+//!   carries simulator-only metadata (id, birth cycle, hop count) that has no
+//!   hardware counterpart and is excluded from the packed format.
+//! - [`packed`] — the 70-bit wire format of Fig 7, with exact field widths,
+//!   used by the codegen (AM-queue images are 70-bit entries, Table 1) and
+//!   round-trip tested against the unpacked form.
+
+pub mod packed;
+
+use crate::isa::{ConfigEntry, Opcode};
+
+/// Maximum intermediate destinations in one message (Fig 7: R1, R2, R3 —
+/// "as SDDMM has three inputs, destinations correspond to two inputs and one
+/// output tensor").
+pub const MAX_DESTS: usize = 3;
+
+/// Sentinel for an empty destination slot.
+pub const NO_DEST: u8 = 0xFF;
+
+/// An Active Message in flight. `Copy`: the struct is a few dozen bytes of
+/// plain data and the simulator moves it by value through router buffers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Message {
+    /// Destination list (PE ids). `dests[0]` is the current head destination:
+    /// the owner PE of the next memory-class operation. Consumed (rotated)
+    /// when that operation executes. ALU-class opcodes do not consume
+    /// destinations — they may run anywhere along the route.
+    pub dests: [u8; MAX_DESTS],
+    /// Number of valid destinations remaining.
+    pub ndests: u8,
+    /// Program counter into the replicated configuration memory: selects the
+    /// entry that morphs this message after its current opcode executes.
+    pub n_pc: u8,
+    /// Operation to perform at the next execution site.
+    pub opcode: Opcode,
+    /// Res_c: `result` holds an address (into the owner PE's data memory).
+    pub res_is_addr: bool,
+    /// Op1_c: `op1` holds an address rather than a value.
+    pub op1_is_addr: bool,
+    /// Op2_c: `op2` holds an address rather than a value.
+    pub op2_is_addr: bool,
+    /// Result field: final-store/accumulate address (Res_c=1) or a value.
+    /// For `Stream` it carries the element count.
+    pub result: u16,
+    /// Operand 1 (value or address per `op1_is_addr`).
+    pub op1: u16,
+    /// Operand 2 (value or address per `op2_is_addr`).
+    pub op2: u16,
+
+    // --- simulator-only metadata (not part of the 70-bit format) ---------
+    /// Unique id for tracing/conservation checks.
+    pub id: u64,
+    /// Cycle the message was injected.
+    pub birth: u64,
+    /// Router hops traversed so far.
+    pub hops: u16,
+    /// Valiant intermediate destination, if routing policy is Valiant and the
+    /// first phase is still in progress.
+    pub valiant_hop: Option<u8>,
+    /// Set when an intermediate PE executed this message's opcode en-route
+    /// (for the Fig 11 right-axis "% computations in-network" series).
+    pub executed_enroute: bool,
+}
+
+impl Message {
+    /// A blank message; codegen fills in fields.
+    pub fn new() -> Self {
+        Message {
+            dests: [NO_DEST; MAX_DESTS],
+            ndests: 0,
+            n_pc: 0,
+            opcode: Opcode::Halt,
+            res_is_addr: false,
+            op1_is_addr: false,
+            op2_is_addr: false,
+            result: 0,
+            op1: 0,
+            op2: 0,
+            id: 0,
+            birth: 0,
+            hops: 0,
+            valiant_hop: None,
+            executed_enroute: false,
+        }
+    }
+
+    /// Current head destination PE, if any destinations remain.
+    #[inline]
+    pub fn head_dest(&self) -> Option<u8> {
+        if self.ndests > 0 {
+            Some(self.dests[0])
+        } else {
+            None
+        }
+    }
+
+    /// Routing target for this cycle: the Valiant intermediate hop when one
+    /// is pending, else the head destination.
+    #[inline]
+    pub fn route_target(&self) -> Option<u8> {
+        self.valiant_hop.or_else(|| self.head_dest())
+    }
+
+    /// Consume the head destination, cyclically rotating the remainder
+    /// (§3.2: "the remaining destinations are cyclically rotated, making R2
+    /// the first and R3 the second").
+    pub fn rotate_dests(&mut self) {
+        if self.ndests == 0 {
+            return;
+        }
+        for i in 0..MAX_DESTS - 1 {
+            self.dests[i] = self.dests[i + 1];
+        }
+        self.dests[MAX_DESTS - 1] = NO_DEST;
+        self.ndests -= 1;
+    }
+
+    /// Push a destination onto the list (codegen helper).
+    pub fn push_dest(&mut self, pe: u8) {
+        assert!((self.ndests as usize) < MAX_DESTS, "too many destinations");
+        self.dests[self.ndests as usize] = pe;
+        self.ndests += 1;
+    }
+
+    /// Morph this message after its current opcode produced `result_value`:
+    /// load the next [`ConfigEntry`], place the output in `op1` (§3.3.1:
+    /// "generates an output that is combined with the original AM, replacing
+    /// the Op1 field"), and adopt the entry's opcode/flags/PC. The `result`
+    /// (store-address) field and destination list are preserved.
+    pub fn morph(&mut self, result_value: u16, entry: &ConfigEntry) {
+        self.op1 = result_value;
+        self.op1_is_addr = entry.op1_is_addr;
+        self.op2_is_addr = entry.op2_is_addr;
+        // res_is_addr is sticky once set by codegen (the final store address
+        // travels with the message); the config entry can still clear it for
+        // value-carrying responses.
+        self.res_is_addr = entry.res_is_addr || self.res_is_addr;
+        self.opcode = entry.opcode;
+        self.n_pc = entry.next_pc;
+    }
+
+    /// True if the current opcode can execute right now on an arbitrary ALU:
+    /// ALU-class with both operands resolved to values.
+    #[inline]
+    pub fn alu_ready(&self) -> bool {
+        self.opcode.is_alu() && !self.op1_is_addr && !self.op2_is_addr
+    }
+
+    /// Advance this message to the next [`ConfigEntry`] *without* replacing
+    /// an operand — the decode-unit path. Memory-class operations (Load,
+    /// Stream, AccMin re-trigger) write their own operand field and then
+    /// adopt the entry's opcode/flags/PC; ALU-class operations use
+    /// [`Message::morph`] instead, which additionally places the ALU output
+    /// into `op1`.
+    pub fn advance(&mut self, entry: &ConfigEntry) {
+        self.opcode = entry.opcode;
+        self.n_pc = entry.next_pc;
+        self.op1_is_addr = entry.op1_is_addr;
+        self.op2_is_addr = entry.op2_is_addr;
+        self.res_is_addr = entry.res_is_addr || self.res_is_addr;
+    }
+}
+
+impl Default for Message {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::ConfigEntry;
+
+    #[test]
+    fn rotation_consumes_in_order() {
+        let mut m = Message::new();
+        m.push_dest(3);
+        m.push_dest(7);
+        m.push_dest(11);
+        assert_eq!(m.head_dest(), Some(3));
+        m.rotate_dests();
+        assert_eq!(m.head_dest(), Some(7));
+        m.rotate_dests();
+        assert_eq!(m.head_dest(), Some(11));
+        m.rotate_dests();
+        assert_eq!(m.head_dest(), None);
+        m.rotate_dests(); // no-op on empty
+        assert_eq!(m.ndests, 0);
+    }
+
+    #[test]
+    fn morph_replaces_op1_and_adopts_config() {
+        let mut m = Message::new();
+        m.opcode = Opcode::Mul;
+        m.op1 = 6;
+        m.op2 = 7;
+        m.result = 0x55; // store address placed by codegen
+        m.res_is_addr = true;
+        let next = ConfigEntry::new(Opcode::Accum, 3).res_addr();
+        m.morph(42, &next);
+        assert_eq!(m.op1, 42);
+        assert_eq!(m.opcode, Opcode::Accum);
+        assert_eq!(m.n_pc, 3);
+        assert!(m.res_is_addr);
+        assert_eq!(m.result, 0x55, "store address must survive morphing");
+    }
+
+    #[test]
+    fn alu_ready_requires_value_operands() {
+        let mut m = Message::new();
+        m.opcode = Opcode::Add;
+        m.op1_is_addr = false;
+        m.op2_is_addr = true;
+        assert!(!m.alu_ready());
+        m.op2_is_addr = false;
+        assert!(m.alu_ready());
+        m.opcode = Opcode::Load;
+        assert!(!m.alu_ready());
+    }
+
+    #[test]
+    fn valiant_hop_takes_routing_priority() {
+        let mut m = Message::new();
+        m.push_dest(9);
+        assert_eq!(m.route_target(), Some(9));
+        m.valiant_hop = Some(2);
+        assert_eq!(m.route_target(), Some(2));
+        m.valiant_hop = None;
+        assert_eq!(m.route_target(), Some(9));
+    }
+}

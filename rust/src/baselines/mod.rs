@@ -1,0 +1,188 @@
+//! The four baseline architectures of §4.1, behind one [`Architecture`]
+//! trait so the coordinator can sweep them uniformly:
+//!
+//! - **Nexus Machine / TIA / TIA-Valiant** — the same cycle-accurate fabric
+//!   with the paper's ablation flags ([`crate::config::ArchKind`]).
+//! - **Generic CGRA** — an analytical modulo-scheduling model (HyCube-like,
+//!   8 shared edge banks) driven by the workload's *actual* memory trace,
+//!   so bank conflicts emerge from real access patterns ([`cgra`]).
+//! - **Systolic array** — a TPU-like weight-stationary dense model that
+//!   cannot exploit sparsity and pays im2col for Conv ([`systolic`]).
+
+pub mod cgra;
+pub mod systolic;
+
+use crate::config::ArchConfig;
+use crate::fabric::NexusFabric;
+use crate::power::EnergyEvents;
+use crate::workloads::{run_on_fabric, Spec};
+
+/// Outcome of running one workload on one architecture.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub arch: &'static str,
+    pub workload: String,
+    /// Total cycles (compute + data movement phases).
+    pub cycles: u64,
+    /// Algorithmic useful operations (identical across architectures for a
+    /// given workload — the normalized-performance numerator).
+    pub work_ops: u64,
+    /// Fabric utilization in \[0,1\] (Fig 13).
+    pub utilization: f64,
+    /// Fraction of ALU ops executed in-network (Fig 11 right axis).
+    pub in_network_frac: f64,
+    /// Mean blocked fraction per input-port class (Fig 14); zeros for the
+    /// analytical models (static routing has no dynamic congestion).
+    pub congestion: [f64; 5],
+    /// Bytes moved over the off-chip interface (Fig 16).
+    pub offchip_bytes: u64,
+    /// Event counts for the energy model (Figs 10, 12).
+    pub events: EnergyEvents,
+    /// True when outputs were validated against the reference (fabric
+    /// architectures always validate; analytical models are trusted).
+    pub validated: bool,
+}
+
+impl RunResult {
+    /// Useful operations per cycle — the normalized-performance metric.
+    pub fn perf(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.work_ops as f64 / self.cycles as f64
+        }
+    }
+
+    /// Throughput in MOPS at `freq_mhz`.
+    pub fn mops(&self, freq_mhz: f64) -> f64 {
+        self.perf() * freq_mhz
+    }
+}
+
+/// An architecture that can execute evaluation workloads.
+pub trait Architecture: Sync {
+    fn name(&self) -> &'static str;
+    /// Run a workload. `None` when the architecture cannot execute it
+    /// (systolic arrays cannot run graph analytics).
+    fn run(&self, spec: &Spec) -> Option<RunResult>;
+}
+
+/// Fabric-backed architecture (Nexus, TIA, TIA-Valiant).
+pub struct FabricArch {
+    pub name: &'static str,
+    pub cfg: ArchConfig,
+}
+
+impl FabricArch {
+    pub fn nexus() -> Self {
+        FabricArch {
+            name: "Nexus",
+            cfg: ArchConfig::nexus(),
+        }
+    }
+
+    pub fn tia() -> Self {
+        FabricArch {
+            name: "TIA",
+            cfg: ArchConfig::tia(),
+        }
+    }
+
+    pub fn tia_valiant() -> Self {
+        FabricArch {
+            name: "TIA-Valiant",
+            cfg: ArchConfig::tia_valiant(),
+        }
+    }
+
+    /// All three fabric variants.
+    pub fn variants() -> Vec<FabricArch> {
+        vec![Self::nexus(), Self::tia(), Self::tia_valiant()]
+    }
+}
+
+impl Architecture for FabricArch {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn run(&self, spec: &Spec) -> Option<RunResult> {
+        let built = spec.build(&self.cfg);
+        let mut f = NexusFabric::new(self.cfg.clone());
+        let out = run_on_fabric(&mut f, &built).expect("fabric deadlock");
+        let validated = out == built.expected;
+        assert!(
+            validated,
+            "{} produced wrong output for {}",
+            self.name,
+            built.name
+        );
+        let s = &f.stats;
+        Some(RunResult {
+            arch: self.name,
+            workload: spec.name(),
+            cycles: s.cycles,
+            work_ops: built.work_ops,
+            utilization: s.utilization(),
+            in_network_frac: s.in_network_fraction(),
+            congestion: std::array::from_fn(|p| s.port_congestion(p)),
+            offchip_bytes: s.offchip_bytes,
+            events: EnergyEvents::from_fabric(s, self.cfg.kind),
+            validated,
+        })
+    }
+}
+
+/// The full evaluation roster: systolic, Generic CGRA, TIA, TIA-Valiant,
+/// Nexus — the order the paper's figures present them in.
+pub fn roster() -> Vec<Box<dyn Architecture>> {
+    vec![
+        Box::new(systolic::Systolic::default()),
+        Box::new(cgra::GenericCgra::default()),
+        Box::new(FabricArch::tia()),
+        Box::new(FabricArch::tia_valiant()),
+        Box::new(FabricArch::nexus()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::suite;
+
+    #[test]
+    fn fabric_archs_run_and_validate_spmv() {
+        let specs = suite(1);
+        let spmv = specs
+            .iter()
+            .find(|s| s.name().starts_with("SpMV"))
+            .unwrap();
+        for arch in FabricArch::variants() {
+            let r = arch.run(spmv).unwrap();
+            assert!(r.validated);
+            assert!(r.cycles > 0);
+            assert!(r.perf() > 0.0);
+        }
+    }
+
+    #[test]
+    fn nexus_beats_tia_on_skewed_sparse() {
+        // The headline claim at small scale: en-route execution helps an
+        // irregular, load-imbalanced workload.
+        let specs = suite(2);
+        let spmv = specs
+            .iter()
+            .find(|s| s.name().starts_with("SpMV"))
+            .unwrap();
+        let nexus = FabricArch::nexus().run(spmv).unwrap();
+        let tia = FabricArch::tia().run(spmv).unwrap();
+        assert!(
+            nexus.perf() > tia.perf(),
+            "Nexus {} vs TIA {}",
+            nexus.perf(),
+            tia.perf()
+        );
+        assert!(nexus.in_network_frac > 0.0);
+        assert_eq!(tia.in_network_frac, 0.0);
+    }
+}

@@ -1,0 +1,197 @@
+//! The **systolic array** baseline (§4.1): a TPU-like 4×4 weight-stationary
+//! MAC grid. It is the dense-GEMM specialist of the roster:
+//!
+//! - Dense MatMul / MV: near-peak efficiency (the paper's Fig 11/12 winner
+//!   for MatMul and MV).
+//! - Sparse workloads: **no sparsity support** — it executes the dense
+//!   equivalent, so its useful-work performance collapses as sparsity
+//!   rises.
+//! - Conv: "inefficient ... due to im2col overhead and cannot execute Conv
+//!   natively" (§5.1) — it pays the im2col expansion's memory traffic.
+//! - Graph analytics: not executable (`run` returns `None`).
+
+use super::{Architecture, RunResult};
+use crate::power::EnergyEvents;
+use crate::workloads::Spec;
+
+#[derive(Debug, Clone)]
+pub struct Systolic {
+    /// Grid dimension (4 => 4x4 = 16 MACs, matching the fabric's ALUs).
+    pub dim: usize,
+    pub axi_bytes_per_cycle: f64,
+}
+
+impl Default for Systolic {
+    fn default() -> Self {
+        Systolic {
+            dim: 4,
+            axi_bytes_per_cycle: 8.0,
+        }
+    }
+}
+
+/// Outcome of the analytical GEMM model.
+#[derive(Debug, Clone, Copy)]
+pub struct SystolicOutcome {
+    pub cycles: u64,
+    pub macs: u64,
+    pub load_bytes: u64,
+}
+
+impl Systolic {
+    /// Weight-stationary GEMM `M x K x N`: the output space is tiled into
+    /// `ceil(M/dim) x ceil(N/dim)` tiles; each tile streams K operands
+    /// through the grid plus 2*dim skew-in/skew-out cycles, with a K-cycle
+    /// weight (re)load per tile column.
+    pub fn gemm(&self, m: usize, k: usize, n: usize, extra_bytes: u64) -> SystolicOutcome {
+        let d = self.dim;
+        let tm = m.div_ceil(d).max(1);
+        let tn = n.div_ceil(d).max(1);
+        let per_tile = k as u64 + 2 * d as u64;
+        let weight_loads = (tm * tn) as u64 * k as u64 / 2; // double-buffered
+        let compute = (tm * tn) as u64 * per_tile + weight_loads;
+        let data_bytes = 2 * (m * k + k * n + m * n) as u64 + extra_bytes;
+        let load_cycles = (data_bytes as f64 / self.axi_bytes_per_cycle).ceil() as u64;
+        SystolicOutcome {
+            cycles: compute + load_cycles,
+            macs: (m * k * n) as u64,
+            load_bytes: data_bytes,
+        }
+    }
+
+    /// Element-wise streaming (SpM+SpM executed dense): `dim*dim` lanes.
+    pub fn elementwise(&self, elems: usize) -> SystolicOutcome {
+        let lanes = (self.dim * self.dim) as u64;
+        let compute = (elems as u64).div_ceil(lanes);
+        let data_bytes = 2 * 3 * elems as u64; // two operands + result
+        let load_cycles = (data_bytes as f64 / self.axi_bytes_per_cycle).ceil() as u64;
+        SystolicOutcome {
+            cycles: compute + load_cycles,
+            macs: elems as u64,
+            load_bytes: data_bytes,
+        }
+    }
+}
+
+impl Architecture for Systolic {
+    fn name(&self) -> &'static str {
+        "Systolic"
+    }
+
+    fn run(&self, spec: &Spec) -> Option<RunResult> {
+        let o = match spec {
+            // Sparse executed as dense (no sparsity support).
+            Spec::Spmv { a, .. } => self.gemm(a.rows, a.cols, 1, 0),
+            Spec::SpMSpM { a, b, .. } => self.gemm(a.rows, a.cols, b.cols, 0),
+            Spec::Sddmm { mask, a, b } => self.gemm(mask.rows, a.cols, b.cols, 0),
+            Spec::SpAdd { a, .. } => self.elementwise(a.rows * a.cols),
+            Spec::MatMul { a, b } => self.gemm(a.rows, a.cols, b.cols, 0),
+            Spec::Mv { a, .. } => self.gemm(a.rows, a.cols, 1, 0),
+            Spec::Conv { input, filter } => {
+                // im2col: materialize an (oh*ow) x (fh*fw) patch matrix and
+                // move it through memory — the §5.1 overhead.
+                let oh = input.rows - filter.rows + 1;
+                let ow = input.cols - filter.cols + 1;
+                let patch = filter.rows * filter.cols;
+                let im2col_bytes = 2 * (oh * ow * patch) as u64 * 2; // write + read back
+                self.gemm(oh * ow, patch, 1, im2col_bytes)
+            }
+            // Graph analytics cannot be expressed as a systolic dataflow.
+            Spec::Bfs { .. } | Spec::Sssp { .. } | Spec::PageRank { .. } => return None,
+        };
+        let pes = (self.dim * self.dim) as u64;
+        // Utilization over compute cycles only (matching FabricStats).
+        let load_cycles = (o.load_bytes as f64 / self.axi_bytes_per_cycle).ceil() as u64;
+        let compute = o.cycles.saturating_sub(load_cycles).max(1);
+        let utilization = if o.cycles == 0 {
+            0.0
+        } else {
+            (o.macs as f64 / (pes * compute) as f64).min(1.0)
+        };
+        let mut events = EnergyEvents::default();
+        events.alu_ops = o.macs;
+        events.bank_accesses = o.macs / self.dim as u64; // edge-fed operands
+        events.noc_hops = o.macs; // systolic register-to-register shifts
+        events.offchip_bytes = o.load_bytes;
+        events.cycles = o.cycles;
+        Some(RunResult {
+            arch: self.name(),
+            workload: spec.name(),
+            cycles: o.cycles,
+            work_ops: spec.build_work_ops(),
+            utilization,
+            in_network_frac: 0.0,
+            congestion: [0.0; 5],
+            offchip_bytes: o.load_bytes,
+            events,
+            validated: true,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gen;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn systolic_wins_dense_matmul_but_loses_sparse() {
+        let sys = Systolic::default();
+        let mut rng = SplitMix64::new(20);
+        let a = gen::random_dense(&mut rng, 24, 24, 3);
+        let b = gen::random_dense(&mut rng, 24, 24, 3);
+        let dense = sys
+            .run(&Spec::MatMul { a, b })
+            .unwrap();
+        // 90%-sparse SpMSpM: same dense dims, tiny useful work.
+        let sa = gen::random_csr(&mut rng, 24, 24, 0.1);
+        let sb = gen::random_csr(&mut rng, 24, 24, 0.1);
+        let sparse = sys
+            .run(&Spec::SpMSpM {
+                a: sa,
+                b: sb,
+                regime: crate::tensor::gen::SparsityRegime::S4,
+            })
+            .unwrap();
+        assert!(
+            dense.perf() > 4.0 * sparse.perf(),
+            "dense {} vs sparse {}",
+            dense.perf(),
+            sparse.perf()
+        );
+    }
+
+    #[test]
+    fn systolic_refuses_graph_workloads() {
+        let sys = Systolic::default();
+        let mut rng = SplitMix64::new(21);
+        let g = crate::tensor::Graph::synthetic_contact(&mut rng, 32, 120);
+        assert!(sys.run(&Spec::Bfs { g: g.clone(), src: 0 }).is_none());
+        assert!(sys.run(&Spec::PageRank { g, iters: 2 }).is_none());
+    }
+
+    #[test]
+    fn mv_underutilizes_the_grid() {
+        let sys = Systolic::default();
+        let mut rng = SplitMix64::new(22);
+        let a = gen::random_dense(&mut rng, 48, 48, 3);
+        let x = gen::random_vec(&mut rng, 48, 3);
+        let r = sys.run(&Spec::Mv { a, x }).unwrap();
+        // Single output column keeps most of the grid idle.
+        assert!(r.utilization < 0.5, "utilization {}", r.utilization);
+    }
+
+    #[test]
+    fn conv_pays_im2col() {
+        let sys = Systolic::default();
+        let mut rng = SplitMix64::new(23);
+        let input = gen::random_dense(&mut rng, 12, 12, 3);
+        let filter = gen::random_dense(&mut rng, 3, 3, 2);
+        let spec = Spec::Conv { input, filter };
+        let r = sys.run(&spec).unwrap();
+        // im2col traffic: off-chip bytes exceed the raw tensor footprint.
+        let raw = 2 * (12 * 12 + 9 + 10 * 10) as u64;
+        assert!(r.offchip_bytes > raw, "{} <= {raw}", r.offchip_bytes);
+    }
+}

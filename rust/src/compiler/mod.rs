@@ -1,0 +1,350 @@
+//! The Nexus Machine compiler (§3.6): transforms workload kernels and their
+//! tensors into the per-PE images the fabric executes.
+//!
+//! The static compiler side — DFG construction and ASAP scheduling — lives
+//! in [`dfg`]; the data-placement side — nnz-balanced and dissimilarity-aware
+//! partitioning (Algorithm 1) — in [`partition`]. This module owns the
+//! output artifact: a [`Program`] of per-PE data-memory images, stream
+//! tables, trigger tables, static-AM queues, and the replicated
+//! configuration memory, produced through the [`ProgramBuilder`].
+//!
+//! The *lightweight runtime manager* of §3.6 corresponds to the workload
+//! builders in [`crate::workloads`]: they walk the partitioned tensors and
+//! emit one static AM per element of the first operand, exactly as the
+//! paper describes ("For every element in the first operand, the runtime
+//! manager generates a static AM containing information about the operands
+//! and the result").
+
+pub mod dfg;
+pub mod partition;
+
+use crate::am::Message;
+use crate::config::ArchConfig;
+use crate::isa::ConfigEntry;
+use crate::pe::StreamElem;
+
+/// Per-PE load image.
+#[derive(Debug, Clone, Default)]
+pub struct PeImage {
+    /// Initial data-memory contents as (address, value) words.
+    pub dmem_init: Vec<(u16, u16)>,
+    /// Stream element records (the decode unit's streaming-mode tables).
+    pub stream_elems: Vec<StreamElem>,
+    /// Trigger descriptors: (dmem address, stream base, element count).
+    /// `Stream` opcodes key on `op2`; `AccMin` re-emission keys on `result`.
+    pub triggers: Vec<(u16, u32, u16)>,
+    /// Precompiled static AMs, in injection order (the AM queue image).
+    pub static_ams: Vec<Message>,
+}
+
+/// A compiled program: everything the fabric needs to run one tile.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: String,
+    /// Replicated configuration memory (identical in every PE — the +8%
+    /// power of Fig 10 pays for exactly this replication).
+    pub config: Vec<ConfigEntry>,
+    /// One image per PE.
+    pub pes: Vec<PeImage>,
+    /// Output locations in logical order: `outputs[i]` = (pe, dmem address)
+    /// of the i-th element of the result tensor.
+    pub outputs: Vec<(usize, u16)>,
+}
+
+impl Program {
+    /// Total static AMs across all queues.
+    pub fn num_static_ams(&self) -> usize {
+        self.pes.iter().map(|p| p.static_ams.len()).sum()
+    }
+
+    /// Off-chip bytes needed to load this program: AM-queue entries
+    /// (9 bytes each, the byte-aligned 70-bit format), data-memory words,
+    /// and stream-element records (3 words each).
+    pub fn load_bytes(&self) -> u64 {
+        let mut bytes = 0u64;
+        for pe in &self.pes {
+            bytes += pe.static_ams.len() as u64 * crate::am::packed::AM_BYTES as u64;
+            bytes += pe.dmem_init.len() as u64 * 2;
+            bytes += pe.stream_elems.len() as u64 * crate::pe::STREAM_ELEM_WORDS as u64 * 2;
+        }
+        bytes
+    }
+
+    /// Bytes written back off-chip at tile end (the output tensor).
+    pub fn writeback_bytes(&self) -> u64 {
+        self.outputs.len() as u64 * 2
+    }
+
+    /// Validate the program against an architecture: config fits the config
+    /// memory, every PE image fits its SRAM, destinations are in range.
+    pub fn validate(&self, cfg: &ArchConfig) -> Result<(), String> {
+        if self.config.len() > cfg.config_entries {
+            return Err(format!(
+                "{}: {} config entries > {} available",
+                self.name,
+                self.config.len(),
+                cfg.config_entries
+            ));
+        }
+        if self.pes.len() != cfg.num_pes() {
+            return Err(format!(
+                "{}: image for {} PEs, fabric has {}",
+                self.name,
+                self.pes.len(),
+                cfg.num_pes()
+            ));
+        }
+        for (id, pe) in self.pes.iter().enumerate() {
+            let words_used = pe
+                .dmem_init
+                .iter()
+                .map(|&(a, _)| a as usize + 1)
+                .max()
+                .unwrap_or(0);
+            let stream_words = pe.stream_elems.len() * crate::pe::STREAM_ELEM_WORDS;
+            if words_used + stream_words > cfg.dmem_words {
+                return Err(format!(
+                    "{}: PE{} SRAM overflow: {} dmem + {} stream words > {}",
+                    self.name, id, words_used, stream_words, cfg.dmem_words
+                ));
+            }
+            for (addr, base, count) in &pe.triggers {
+                if *addr as usize >= cfg.dmem_words {
+                    return Err(format!("{}: PE{id} trigger addr {addr} out of range", self.name));
+                }
+                if *base as usize + *count as usize > pe.stream_elems.len() {
+                    return Err(format!("{}: PE{id} trigger overruns stream table", self.name));
+                }
+            }
+            for am in &pe.static_ams {
+                for d in 0..am.ndests as usize {
+                    if am.dests[d] as usize >= cfg.num_pes() {
+                        return Err(format!(
+                            "{}: PE{id} static AM dest {} out of range",
+                            self.name, am.dests[d]
+                        ));
+                    }
+                }
+                if am.n_pc as usize >= self.config.len().max(1) {
+                    return Err(format!("{}: PE{id} static AM N_PC out of range", self.name));
+                }
+            }
+        }
+        for &(pe, addr) in &self.outputs {
+            if pe >= cfg.num_pes() || addr as usize >= cfg.dmem_words {
+                return Err(format!("{}: output location ({pe},{addr}) out of range", self.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Incremental builder for [`Program`]s: bump-allocates data memory per PE,
+/// interns config entries, and collects static AMs / stream tables.
+pub struct ProgramBuilder {
+    name: String,
+    dmem_words: usize,
+    config: Vec<ConfigEntry>,
+    pes: Vec<PeImage>,
+    /// Per-PE data-memory bump pointer.
+    cursor: Vec<u16>,
+    outputs: Vec<(usize, u16)>,
+}
+
+impl ProgramBuilder {
+    pub fn new(name: &str, cfg: &ArchConfig) -> Self {
+        ProgramBuilder {
+            name: name.to_string(),
+            dmem_words: cfg.dmem_words,
+            config: Vec::new(),
+            pes: vec![PeImage::default(); cfg.num_pes()],
+            cursor: vec![0; cfg.num_pes()],
+            outputs: Vec::new(),
+        }
+    }
+
+    /// Append a config entry, returning its PC. Identical entries are
+    /// interned (the config memory has only 8 slots).
+    pub fn config(&mut self, entry: ConfigEntry) -> u8 {
+        if let Some(pos) = self.config.iter().position(|e| *e == entry) {
+            return pos as u8;
+        }
+        self.config.push(entry);
+        (self.config.len() - 1) as u8
+    }
+
+    /// Reserve `n` words of PE `pe`'s data memory, returning the base
+    /// address. Panics on SRAM overflow (workloads are sized to fit;
+    /// `Program::validate` re-checks including stream tables).
+    pub fn alloc(&mut self, pe: usize, n: usize) -> u16 {
+        self.try_alloc(pe, n).unwrap_or_else(|| {
+            panic!(
+                "{}: PE{pe} dmem overflow ({} words requested at {})",
+                self.name, n, self.cursor[pe]
+            )
+        })
+    }
+
+    /// Fallible [`ProgramBuilder::alloc`] for capacity-probing compilers
+    /// (the tiled SpMSpM grows tiles until allocation fails).
+    pub fn try_alloc(&mut self, pe: usize, n: usize) -> Option<u16> {
+        let base = self.cursor[pe];
+        let end = base as usize + n;
+        if end > self.dmem_words {
+            return None;
+        }
+        self.cursor[pe] = end as u16;
+        Some(base)
+    }
+
+    /// Fallible [`ProgramBuilder::place`].
+    pub fn try_place(&mut self, pe: usize, values: &[i16]) -> Option<u16> {
+        let base = self.try_alloc(pe, values.len())?;
+        for (i, &v) in values.iter().enumerate() {
+            self.pes[pe].dmem_init.push((base + i as u16, v as u16));
+        }
+        Some(base)
+    }
+
+    /// Place an array of words in PE `pe`'s data memory; returns base addr.
+    pub fn place(&mut self, pe: usize, values: &[i16]) -> u16 {
+        self.try_place(pe, values).unwrap_or_else(|| {
+            panic!(
+                "{}: PE{pe} dmem overflow ({} words requested at {})",
+                self.name,
+                values.len(),
+                self.cursor[pe]
+            )
+        })
+    }
+
+    /// Words still free in PE `pe`'s data memory (before stream accounting).
+    pub fn free_words(&self, pe: usize) -> usize {
+        self.dmem_words - self.cursor[pe] as usize
+    }
+
+    /// Append stream elements to PE `pe`'s stream table; returns the base
+    /// index for a trigger descriptor.
+    pub fn stream(&mut self, pe: usize, elems: &[StreamElem]) -> u32 {
+        let base = self.pes[pe].stream_elems.len() as u32;
+        self.pes[pe].stream_elems.extend_from_slice(elems);
+        base
+    }
+
+    /// Register a trigger: messages keying `addr` at PE `pe` start a
+    /// streaming decode of `count` elements at `base`. Returns `addr`.
+    pub fn trigger(&mut self, pe: usize, addr: u16, base: u32, count: u16) -> u16 {
+        self.pes[pe].triggers.push((addr, base, count));
+        addr
+    }
+
+    /// Allocate a fresh key address and register a trigger on it in one step
+    /// (for streams not anchored to a data word, e.g. Conv tap tables).
+    pub fn keyed_trigger(&mut self, pe: usize, base: u32, count: u16) -> u16 {
+        let addr = self.alloc(pe, 1);
+        self.trigger(pe, addr, base, count)
+    }
+
+    /// Queue a static AM on PE `pe`.
+    pub fn static_am(&mut self, pe: usize, am: Message) {
+        self.pes[pe].static_ams.push(am);
+    }
+
+    /// Record that logical output element `outputs.len()` lives at
+    /// (`pe`, `addr`). Call in logical order.
+    pub fn output(&mut self, pe: usize, addr: u16) {
+        self.outputs.push((pe, addr));
+    }
+
+    pub fn build(self) -> Program {
+        Program {
+            name: self.name,
+            config: self.config,
+            pes: self.pes,
+            outputs: self.outputs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Opcode;
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::nexus()
+    }
+
+    #[test]
+    fn builder_places_and_allocates() {
+        let mut b = ProgramBuilder::new("t", &cfg());
+        let a0 = b.place(0, &[1, 2, 3]);
+        let a1 = b.place(0, &[9]);
+        assert_eq!(a0, 0);
+        assert_eq!(a1, 3);
+        assert_eq!(b.free_words(0), 512 - 4);
+        let p = b.build();
+        assert_eq!(p.pes[0].dmem_init.len(), 4);
+        assert_eq!(p.pes[0].dmem_init[3], (3, 9));
+    }
+
+    #[test]
+    fn config_interning_dedupes() {
+        let mut b = ProgramBuilder::new("t", &cfg());
+        let e = ConfigEntry::new(Opcode::Mul, 2);
+        let p0 = b.config(e);
+        let p1 = b.config(ConfigEntry::new(Opcode::Accum, 0).res_addr());
+        let p2 = b.config(e);
+        assert_eq!(p0, p2);
+        assert_ne!(p0, p1);
+        assert_eq!(b.build().config.len(), 2);
+    }
+
+    #[test]
+    fn validate_catches_sram_overflow() {
+        let c = cfg();
+        let mut b = ProgramBuilder::new("t", &c);
+        b.place(0, &vec![0i16; 500]);
+        // 500 dmem + 10 stream elems * 3 words = 530 > 512.
+        b.stream(
+            0,
+            &vec![
+                StreamElem {
+                    value: 0,
+                    aux: 0,
+                    dest_pe: 0,
+                    mode: crate::pe::StreamMode::PerDest,
+                };
+                10
+            ],
+        );
+        assert!(b.build().validate(&c).is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_dest() {
+        let c = cfg();
+        let mut b = ProgramBuilder::new("t", &c);
+        let mut am = Message::new();
+        am.push_dest(99); // > 15 PEs
+        b.static_am(0, am);
+        assert!(b.build().validate(&c).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "dmem overflow")]
+    fn alloc_panics_past_capacity() {
+        let mut b = ProgramBuilder::new("t", &cfg());
+        b.alloc(0, 513);
+    }
+
+    #[test]
+    fn load_bytes_accounting() {
+        let c = cfg();
+        let mut b = ProgramBuilder::new("t", &c);
+        b.place(0, &[1, 2]);
+        b.static_am(0, Message::new());
+        let p = b.build();
+        assert_eq!(p.load_bytes(), 2 * 2 + 9);
+    }
+}

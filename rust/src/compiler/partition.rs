@@ -1,0 +1,221 @@
+//! Data partitioning (§3.1.1 and §3.6, Algorithm 1).
+//!
+//! Two strategies from the paper:
+//!
+//! - **nnz-balanced row partitioning**: split a CSR matrix's rows into `N`
+//!   contiguous groups such that each group holds ≈ `nnz/N` nonzeros,
+//!   computed "via a linear scan of the row pointer array, with complexity
+//!   O(m)" (§3.1.1).
+//! - **dissimilarity-aware mapping** (Algorithm 1): rows are described by the
+//!   set of memory banks their column indices touch; rows with *similar*
+//!   bank sets cluster onto the same PE (their accesses serialize locally
+//!   instead of contending), while dissimilar rows spread out. We implement
+//!   the clustering step greedily: seeds are picked far apart by bank-set
+//!   distance, rows join the nearest under-capacity cluster.
+//!
+//! Dense 1-D tensors are partitioned into contiguous equal blocks aligned
+//!   with the matrix partition ("Y and Z are partitioned correspondingly").
+
+use crate::tensor::Csr;
+
+/// Contiguous nnz-balanced row partition: returns `part[r] in [0, parts)`,
+/// non-decreasing in `r`, with each part's nonzero total ≈ `nnz/parts`.
+pub fn nnz_balanced(m: &Csr, parts: usize) -> Vec<usize> {
+    assert!(parts > 0);
+    let total = m.nnz();
+    let mut part = vec![0usize; m.rows];
+    let mut p = 0usize;
+    let mut acc = 0usize;
+    // Ideal cumulative boundary after part p is (p+1) * total / parts.
+    for r in 0..m.rows {
+        // Advance to the next part when we've met this part's quota and
+        // there are still parts left for the remaining rows.
+        let quota_met = acc * parts >= (p + 1) * total;
+        let rows_left = m.rows - r;
+        let parts_left = parts - p;
+        if (quota_met || rows_left == parts_left) && p + 1 < parts && rows_left > 1 {
+            // only advance if remaining rows can still cover remaining parts
+            if quota_met || rows_left <= parts_left {
+                p += 1;
+            }
+        }
+        part[r] = p;
+        acc += m.row_nnz(r);
+    }
+    part
+}
+
+/// Bank-set signature of a row: bit `b` set iff the row touches bank `b`
+/// (column index modulo `banks`, the usual low-order interleave).
+fn bank_set(m: &Csr, r: usize, banks: usize) -> u64 {
+    debug_assert!(banks <= 64);
+    let mut s = 0u64;
+    for (c, _) in m.row(r) {
+        s |= 1 << (c % banks);
+    }
+    s
+}
+
+/// Symmetric-difference distance between two bank sets (Algorithm 1,
+/// line 5: `d(i,j) = |L_i Δ L_j|`).
+#[inline]
+pub fn bank_distance(a: u64, b: u64) -> u32 {
+    (a ^ b).count_ones()
+}
+
+/// Algorithm 1: dissimilarity-aware row → PE mapping. Groups rows with
+/// similar bank-access sets onto the same PE (so their conflicting accesses
+/// serialize locally) under an nnz capacity bound per PE, spreading
+/// dissimilar rows across PEs.
+pub fn dissimilarity_aware(m: &Csr, parts: usize, banks: usize) -> Vec<usize> {
+    assert!(parts > 0 && banks > 0 && banks <= 64);
+    if m.rows == 0 {
+        return Vec::new();
+    }
+    let sets: Vec<u64> = (0..m.rows).map(|r| bank_set(m, r, banks)).collect();
+    let nnz: Vec<usize> = (0..m.rows).map(|r| m.row_nnz(r)).collect();
+    let cap = (m.nnz() + parts - 1) / parts; // nnz budget per PE (±1 row)
+
+    // Seed selection: first seed = heaviest row; each further seed maximizes
+    // its minimum distance to existing seeds (k-center style), so clusters
+    // start maximally dissimilar.
+    let mut seeds: Vec<usize> = Vec::with_capacity(parts);
+    let first = (0..m.rows).max_by_key(|&r| nnz[r]).unwrap();
+    seeds.push(first);
+    while seeds.len() < parts.min(m.rows) {
+        let next = (0..m.rows)
+            .filter(|r| !seeds.contains(r))
+            .max_by_key(|&r| {
+                seeds
+                    .iter()
+                    .map(|&s| bank_distance(sets[r], sets[s]))
+                    .min()
+                    .unwrap_or(0)
+            })
+            .unwrap();
+        seeds.push(next);
+    }
+
+    let mut part = vec![usize::MAX; m.rows];
+    let mut load = vec![0usize; parts];
+    for (k, &s) in seeds.iter().enumerate() {
+        part[s] = k;
+        load[k] = nnz[s];
+    }
+    // Assign remaining rows, heaviest first (greedy bin packing): nearest
+    // cluster by bank distance among those under capacity; ties broken by
+    // lighter load.
+    let mut order: Vec<usize> = (0..m.rows).filter(|&r| part[r] == usize::MAX).collect();
+    order.sort_unstable_by_key(|&r| std::cmp::Reverse(nnz[r]));
+    for r in order {
+        let k = (0..parts)
+            .filter(|&k| load[k] + nnz[r] <= cap + nnz[r].min(cap)) // soft cap
+            .min_by_key(|&k| {
+                let d = bank_distance(sets[r], sets[seeds[k.min(seeds.len() - 1)]]);
+                (d, load[k])
+            })
+            .unwrap_or_else(|| (0..parts).min_by_key(|&k| load[k]).unwrap());
+        part[r] = k;
+        load[k] += nnz[r];
+    }
+    part
+}
+
+/// Uniform contiguous block partition of a length-`n` 1-D tensor into
+/// `parts` blocks ("for dense tensors, uniform segmentation into k equal
+/// parts"). Returns `part[i] in [0, parts)`, non-decreasing.
+pub fn uniform_blocks(n: usize, parts: usize) -> Vec<usize> {
+    assert!(parts > 0);
+    (0..n).map(|i| (i * parts / n.max(1)).min(parts - 1)).collect()
+}
+
+/// Maximum per-part nonzero count under a partition (balance diagnostics).
+pub fn max_part_nnz(m: &Csr, part: &[usize], parts: usize) -> usize {
+    let mut load = vec![0usize; parts];
+    for r in 0..m.rows {
+        load[part[r]] += m.row_nnz(r);
+    }
+    load.into_iter().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gen;
+    use crate::util::prop::{ensure, forall};
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn nnz_balanced_is_contiguous_and_total() {
+        forall(50, |rng| {
+            let rows = 4 + rng.below_usize(60);
+            let m = gen::skewed_csr(rng, rows, 32, 0.3);
+            let parts = 1 + rng.below_usize(16);
+            let part = nnz_balanced(&m, parts);
+            ensure(part.len() == rows, || "length".into())?;
+            for w in part.windows(2) {
+                ensure(w[1] == w[0] || w[1] == w[0] + 1, || {
+                    "parts must be contiguous non-decreasing".into()
+                })?;
+            }
+            ensure(part.iter().all(|&p| p < parts), || "range".into())
+        });
+    }
+
+    #[test]
+    fn nnz_balanced_balances_skewed_matrix() {
+        let mut rng = SplitMix64::new(7);
+        let m = gen::skewed_csr(&mut rng, 64, 64, 0.3);
+        let parts = 8;
+        let part = nnz_balanced(&m, parts);
+        let worst = max_part_nnz(&m, &part, parts);
+        let ideal = m.nnz() / parts;
+        // Against a *row-uniform* split of a skewed matrix, the nnz split
+        // must be far closer to ideal.
+        let uniform = uniform_blocks(64, parts);
+        let worst_uniform = max_part_nnz(&m, &uniform, parts);
+        assert!(
+            worst <= worst_uniform,
+            "nnz-balanced {worst} vs uniform {worst_uniform} (ideal {ideal})"
+        );
+    }
+
+    #[test]
+    fn dissimilarity_covers_all_rows_in_range() {
+        forall(30, |rng| {
+            let rows = 2 + rng.below_usize(60);
+            let m = gen::random_csr(rng, rows, 32, 0.3);
+            let parts = 1 + rng.below_usize(16);
+            let part = dissimilarity_aware(&m, parts, 8);
+            ensure(part.len() == rows, || "length".into())?;
+            ensure(part.iter().all(|&p| p < parts), || "range".into())
+        });
+    }
+
+    #[test]
+    fn bank_distance_is_metric_like() {
+        assert_eq!(bank_distance(0b1010, 0b1010), 0);
+        assert_eq!(bank_distance(0b1010, 0b0101), 4);
+        assert_eq!(bank_distance(0b1010, 0b1000), 1);
+    }
+
+    #[test]
+    fn uniform_blocks_are_balanced() {
+        forall(50, |rng| {
+            let n = 1 + rng.below_usize(100);
+            let parts = 1 + rng.below_usize(16);
+            let part = uniform_blocks(n, parts);
+            let mut sizes = vec![0usize; parts];
+            for &p in &part {
+                sizes[p] += 1;
+            }
+            let max = *sizes.iter().max().unwrap();
+            let min = *sizes.iter().filter(|&&s| s > 0).min().unwrap_or(&0);
+            ensure(max - min <= 1, || format!("unbalanced {sizes:?}"))?;
+            for w in part.windows(2) {
+                ensure(w[1] >= w[0], || "non-decreasing".into())?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,269 @@
+//! Architectural configuration for the Nexus Machine fabric and its
+//! ablation variants (TIA, TIA-Valiant), mirroring Table 1 of the paper.
+//!
+//! The same cycle-accurate fabric executes Nexus Machine, TIA and
+//! TIA-Valiant: the three differ only in the [`ExecPolicy`] /
+//! [`RoutingPolicy`] feature flags, which is exactly the paper's ablation
+//! framing (§5.1: "TIA and TIA-Valiant ... serve as ablation points to
+//! distinguish the benefits of en-route computation").
+
+/// Which architecture variant a fabric instance models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArchKind {
+    /// Full Nexus Machine: AMs carry instructions; idle PEs execute en-route.
+    Nexus,
+    /// Triggered-Instruction baseline: data-local execution only; AMs carry
+    /// operands, instructions are anchored at the destination PE.
+    Tia,
+    /// TIA + Valiant randomized minimal-path load balancing: each message is
+    /// first routed to a random intermediate PE, then to its destination.
+    TiaValiant,
+}
+
+impl ArchKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArchKind::Nexus => "NexusMachine",
+            ArchKind::Tia => "TIA",
+            ArchKind::TiaValiant => "TIA-Valiant",
+        }
+    }
+}
+
+/// Whether in-network (en-route) execution of AMs on idle PEs is enabled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecPolicy {
+    /// Opportunistic execution: the paper's contribution.
+    EnRoute,
+    /// Execute only at the destination PE (TIA-style).
+    DestinationOnly,
+}
+
+/// NoC routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// West-first turn-model routing with congestion-aware adaptivity in the
+    /// permitted quadrant (the paper's "dynamic turn model routing").
+    TurnModelAdaptive,
+    /// Deterministic XY dimension-order routing (used for sensitivity tests).
+    Xy,
+    /// Valiant: route to a random intermediate PE with XY, then XY to the
+    /// real destination.
+    Valiant,
+}
+
+/// Full architectural parameter set (Table 1 defaults).
+#[derive(Debug, Clone)]
+pub struct ArchConfig {
+    /// Which variant this configuration models (sets defaults for flags).
+    pub kind: ArchKind,
+    /// Mesh width (PEs per row). Table 1: 4.
+    pub width: usize,
+    /// Mesh height (PEs per column). Table 1: 4.
+    pub height: usize,
+    /// Data-memory words (u16) per PE. Table 1: 1KB per PE = 512 words.
+    pub dmem_words: usize,
+    /// AM-queue capacity in entries of 70 bits. Table 1: 1KB -> 114 entries.
+    /// This is the *on-chip window*; the logical queue streams from off-chip
+    /// memory (§3.3.3) at AXI bandwidth, hiding load latency.
+    pub am_queue_entries: usize,
+    /// Configuration-memory entries per PE (§3.3.1: up to 8 configurations).
+    pub config_entries: usize,
+    /// Router input-buffer depth in flits (§3.3.2: three registers).
+    pub router_buf_depth: usize,
+    /// On/Off flow-control OFF threshold (free slots <= T_off => OFF).
+    pub t_off: usize,
+    /// On/Off flow-control ON threshold (free slots >= T_on => ON).
+    pub t_on: usize,
+    /// Execution policy (en-route vs destination-only).
+    pub exec: ExecPolicy,
+    /// Routing policy.
+    pub routing: RoutingPolicy,
+    /// Clock frequency in MHz (paper: synthesized at up to 588 MHz).
+    pub freq_mhz: f64,
+    /// Off-chip AXI bandwidth in bytes/cycle aggregated over the west-edge
+    /// ports (Table 1: 4.7 GB/s at 588 MHz ~= 8 bytes/cycle).
+    pub axi_bytes_per_cycle: f64,
+    /// Latency (cycles) of the global idle/termination AND-tree (§3.1.4).
+    pub idle_tree_latency: u64,
+    /// Extra scheduler latency per triggered instruction for the TIA
+    /// baseline's tag-matching/priority-encoder path (§1: "runtime scheduler
+    /// for tag matching and a priority encoder ... adding significant
+    /// hardware overhead"). 0 for Nexus.
+    pub trigger_latency: u64,
+    /// Safety net: simulation aborts (reporting deadlock) past this many
+    /// cycles. Property tests rely on this to prove liveness.
+    pub max_cycles: u64,
+    /// Seed for any randomized behavior (Valiant intermediate selection).
+    pub seed: u64,
+}
+
+impl ArchConfig {
+    /// Table 1 Nexus Machine configuration: 4x4 INT16 array, 1KB SRAM +
+    /// 1KB AM queue per PE, 3-flit router buffers, T_off=1 / T_on=2.
+    pub fn nexus() -> Self {
+        Self {
+            kind: ArchKind::Nexus,
+            width: 4,
+            height: 4,
+            dmem_words: 512,
+            am_queue_entries: 114, // 1KB / 70 bits
+            config_entries: 8,
+            router_buf_depth: 3,
+            t_off: 1,
+            t_on: 2,
+            exec: ExecPolicy::EnRoute,
+            routing: RoutingPolicy::TurnModelAdaptive,
+            freq_mhz: 588.0,
+            axi_bytes_per_cycle: 8.0,
+            idle_tree_latency: 4,
+            trigger_latency: 0,
+            max_cycles: 2_000_000,
+            seed: 0xA3C5,
+        }
+    }
+
+    /// TIA baseline: identical fabric, destination-only execution, and one
+    /// extra cycle of triggered-scheduler latency per instruction launch.
+    /// Paper §4.1 gives TIA 2KB unified SRAM per PE; we keep the same split
+    /// so data capacity matches.
+    pub fn tia() -> Self {
+        Self {
+            kind: ArchKind::Tia,
+            exec: ExecPolicy::DestinationOnly,
+            routing: RoutingPolicy::TurnModelAdaptive,
+            trigger_latency: 1,
+            ..Self::nexus()
+        }
+    }
+
+    /// TIA-Valiant: TIA with Valiant randomized minimal-path routing.
+    pub fn tia_valiant() -> Self {
+        Self {
+            kind: ArchKind::TiaValiant,
+            exec: ExecPolicy::DestinationOnly,
+            routing: RoutingPolicy::Valiant,
+            trigger_latency: 1,
+            ..Self::nexus()
+        }
+    }
+
+    /// Configuration for an `n x n` array (Fig 17 scalability sweeps).
+    pub fn with_array(mut self, width: usize, height: usize) -> Self {
+        self.width = width;
+        self.height = height;
+        self
+    }
+
+    /// Override the per-PE data memory (Fig 16 SRAM sweeps). `bytes` is the
+    /// per-PE SRAM size in bytes; words are u16.
+    pub fn with_dmem_bytes(mut self, bytes: usize) -> Self {
+        self.dmem_words = bytes / 2;
+        self
+    }
+
+    /// Override the aggregate off-chip bandwidth in bytes/cycle.
+    pub fn with_axi_bandwidth(mut self, bytes_per_cycle: f64) -> Self {
+        self.axi_bytes_per_cycle = bytes_per_cycle;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Number of PEs in the fabric.
+    #[inline]
+    pub fn num_pes(&self) -> usize {
+        self.width * self.height
+    }
+
+    /// Total on-chip data SRAM in bytes across the array.
+    pub fn total_dmem_bytes(&self) -> usize {
+        self.num_pes() * self.dmem_words * 2
+    }
+
+    /// PE id for mesh coordinates.
+    #[inline]
+    pub fn pe_id(&self, x: usize, y: usize) -> usize {
+        y * self.width + x
+    }
+
+    /// Mesh coordinates for a PE id.
+    #[inline]
+    pub fn pe_xy(&self, id: usize) -> (usize, usize) {
+        (id % self.width, id / self.width)
+    }
+
+    /// Validate internal consistency; returns a human-readable error.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.width == 0 || self.height == 0 {
+            return Err("array dimensions must be nonzero".into());
+        }
+        if self.router_buf_depth < 2 {
+            return Err("router buffers need >= 2 slots for the bubble rule".into());
+        }
+        if self.t_on <= self.t_off {
+            return Err("T_on must exceed T_off for hysteresis".into());
+        }
+        if self.t_on > self.router_buf_depth {
+            return Err("T_on cannot exceed buffer depth".into());
+        }
+        if self.config_entries == 0 || self.config_entries > 16 {
+            return Err("config entries must be in 1..=16 (4-bit N_PC)".into());
+        }
+        if self.num_pes() > 256 {
+            return Err("destination fields are 8-bit; at most 256 PEs".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults() {
+        let c = ArchConfig::nexus();
+        assert_eq!(c.num_pes(), 16);
+        assert_eq!(c.dmem_words * 2, 1024); // 1KB per PE
+        assert_eq!(c.total_dmem_bytes(), 16 * 1024); // 16KB overall
+        assert_eq!(c.am_queue_entries, 114);
+        assert_eq!(c.router_buf_depth, 3);
+        assert_eq!(c.t_off, 1);
+        assert_eq!(c.t_on, 2);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn variant_flags() {
+        assert_eq!(ArchConfig::nexus().exec, ExecPolicy::EnRoute);
+        assert_eq!(ArchConfig::tia().exec, ExecPolicy::DestinationOnly);
+        assert_eq!(ArchConfig::tia_valiant().routing, RoutingPolicy::Valiant);
+        ArchConfig::tia().validate().unwrap();
+        ArchConfig::tia_valiant().validate().unwrap();
+    }
+
+    #[test]
+    fn xy_roundtrip() {
+        let c = ArchConfig::nexus().with_array(5, 3);
+        for id in 0..c.num_pes() {
+            let (x, y) = c.pe_xy(id);
+            assert_eq!(c.pe_id(x, y), id);
+        }
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(ArchConfig::nexus().with_array(0, 4).validate().is_err());
+        let mut c = ArchConfig::nexus();
+        c.t_on = 1; // == t_off
+        assert!(c.validate().is_err());
+        let mut c = ArchConfig::nexus();
+        c.router_buf_depth = 1;
+        assert!(c.validate().is_err());
+        assert!(ArchConfig::nexus().with_array(20, 20).validate().is_err());
+    }
+}

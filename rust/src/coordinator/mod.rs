@@ -1,0 +1,256 @@
+//! Experiment coordinator: runs the (architecture × workload) evaluation
+//! matrix across OS threads and renders every figure/table of §5 as an
+//! aligned text report (and CSV for plotting).
+//!
+//! Each figure has a `figNN` function that returns the report as a
+//! `String`; the `nexus` CLI and the criterion benches print them, and the
+//! integration tests assert their headline shapes (who wins, by roughly
+//! what factor).
+
+pub mod ablation;
+pub mod report;
+
+use crate::baselines::{roster, RunResult};
+use crate::config::ArchConfig;
+use crate::workloads::suite;
+use std::sync::Mutex;
+
+/// Run every architecture on every suite workload, in parallel across
+/// workloads. Returns results grouped by workload (suite order), each with
+/// the roster's architectures in order (None where not executable).
+pub fn run_matrix(seed: u64) -> Matrix {
+    let specs = suite(seed);
+    let archs = roster();
+    let results: Mutex<Vec<(usize, Vec<Option<RunResult>>)>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for (wi, spec) in specs.iter().enumerate() {
+            let archs = &archs;
+            let results = &results;
+            scope.spawn(move || {
+                let row: Vec<Option<RunResult>> = archs.iter().map(|a| a.run(spec)).collect();
+                results.lock().unwrap().push((wi, row));
+            });
+        }
+    });
+    let mut rows = results.into_inner().unwrap();
+    rows.sort_by_key(|(wi, _)| *wi);
+    Matrix {
+        workloads: specs.iter().map(|s| s.name()).collect(),
+        classes: specs.iter().map(|s| s.class()).collect(),
+        arch_names: arch_names(),
+        rows: rows.into_iter().map(|(_, r)| r).collect(),
+    }
+}
+
+pub fn arch_names() -> Vec<&'static str> {
+    vec!["Systolic", "GenericCGRA", "TIA", "TIA-Valiant", "Nexus"]
+}
+
+/// The full evaluation matrix: `rows[workload][arch]`.
+pub struct Matrix {
+    pub workloads: Vec<String>,
+    pub classes: Vec<&'static str>,
+    pub arch_names: Vec<&'static str>,
+    pub rows: Vec<Vec<Option<RunResult>>>,
+}
+
+impl Matrix {
+    /// Result for (workload index, arch name).
+    pub fn get(&self, wi: usize, arch: &str) -> Option<&RunResult> {
+        let ai = self.arch_names.iter().position(|a| *a == arch)?;
+        self.rows[wi][ai].as_ref()
+    }
+
+    /// Normalized performance of `arch` vs `base` on workload `wi`
+    /// (useful-ops/cycle ratio), if both ran it.
+    pub fn speedup(&self, wi: usize, arch: &str, base: &str) -> Option<f64> {
+        let a = self.get(wi, arch)?;
+        let b = self.get(wi, base)?;
+        if b.perf() == 0.0 {
+            return None;
+        }
+        Some(a.perf() / b.perf())
+    }
+
+    /// Geometric-mean speedup of `arch` over `base` across a workload
+    /// class (or all workloads when `class` is `None`).
+    pub fn geomean_speedup(&self, arch: &str, base: &str, class: Option<&str>) -> f64 {
+        let mut v = Vec::new();
+        for wi in 0..self.workloads.len() {
+            if let Some(c) = class {
+                if self.classes[wi] != c {
+                    continue;
+                }
+            }
+            if let Some(s) = self.speedup(wi, arch, base) {
+                v.push(s);
+            }
+        }
+        crate::util::geomean(&v)
+    }
+}
+
+/// One-shot validation of the full suite on a fabric configuration: every
+/// workload's fabric output must equal its reference. Returns per-workload
+/// (name, cycles) on success.
+pub fn validate_suite(cfg: &ArchConfig, seed: u64) -> Result<Vec<(String, u64)>, String> {
+    let specs = suite(seed);
+    let results: Mutex<Vec<(usize, Result<(String, u64), String>)>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for (wi, spec) in specs.iter().enumerate() {
+            let results = &results;
+            let cfg = cfg.clone();
+            scope.spawn(move || {
+                let built = spec.build(&cfg);
+                let mut f = crate::fabric::NexusFabric::new(cfg);
+                let r = crate::workloads::validate_on_fabric(&mut f, &built)
+                    .map(|_| (built.name.clone(), f.stats.cycles));
+                results.lock().unwrap().push((wi, r));
+            });
+        }
+    });
+    let mut rows = results.into_inner().unwrap();
+    rows.sort_by_key(|(wi, _)| *wi);
+    rows.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Fig 16 data point: one (sparsity, SRAM size) cell of the bandwidth
+/// trade-off sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct BandwidthPoint {
+    pub sparsity: f64,
+    pub total_sram_bytes: usize,
+    pub tiles: usize,
+    /// Required off-chip bandwidth, bytes per *compute* cycle, to sustain
+    /// the achieved throughput.
+    pub bytes_per_cycle: f64,
+    /// Useful ops per compute cycle (throughput).
+    pub ops_per_cycle: f64,
+}
+
+/// Run the Fig 16 sweep: SpMSpM at several sparsities × on-chip SRAM
+/// capacities, measuring off-chip traffic per cycle.
+pub fn bandwidth_sweep(seed: u64) -> Vec<BandwidthPoint> {
+    let sparsities = [0.3, 0.5, 0.7, 0.85, 0.95];
+    let per_pe_bytes = [512usize, 1024, 2048, 4096, 8192, 16384, 32768];
+    let points: Mutex<Vec<BandwidthPoint>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for &sp in &sparsities {
+            for &bytes in &per_pe_bytes {
+                let points = &points;
+                scope.spawn(move || {
+                    let mut rng = crate::util::SplitMix64::new(seed ^ (bytes as u64));
+                    let n = 96;
+                    let a = crate::tensor::gen::skewed_csr(&mut rng, n, n, 1.0 - sp);
+                    let b = crate::tensor::gen::random_csr(&mut rng, n, n, 1.0 - sp);
+                    let cfg = ArchConfig::nexus().with_dmem_bytes(bytes);
+                    let built =
+                        crate::workloads::spmspm::build_tiled("fig16", &a, &b, &cfg);
+                    let ntiles = match &built.tiles {
+                        crate::workloads::Tiles::Static(t) => t.len(),
+                        _ => unreachable!(),
+                    };
+                    let mut f = crate::fabric::NexusFabric::new(cfg.clone());
+                    crate::workloads::run_on_fabric(&mut f, &built).expect("fig16 run");
+                    let s = &f.stats;
+                    let compute_cycles = (s.cycles - s.load_cycles).max(1);
+                    points.lock().unwrap().push(BandwidthPoint {
+                        sparsity: sp,
+                        total_sram_bytes: bytes * cfg.num_pes(),
+                        tiles: ntiles,
+                        bytes_per_cycle: s.offchip_bytes as f64 / compute_cycles as f64,
+                        ops_per_cycle: (s.alu_ops + s.mem_ops) as f64 / compute_cycles as f64,
+                    });
+                });
+            }
+        }
+    });
+    let mut v = points.into_inner().unwrap();
+    v.sort_by(|a, b| {
+        a.sparsity
+            .partial_cmp(&b.sparsity)
+            .unwrap()
+            .then(a.total_sram_bytes.cmp(&b.total_sram_bytes))
+    });
+    v
+}
+
+/// Fig 17 data point: one (array size, workload) cell.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub dim: usize,
+    pub workload: String,
+    pub perf: f64,
+    pub utilization: f64,
+}
+
+/// Run the Fig 17 scalability sweep over array sizes.
+pub fn scalability_sweep(seed: u64, dims: &[usize]) -> Vec<ScalePoint> {
+    let points: Mutex<Vec<ScalePoint>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for &d in dims {
+            let points = &points;
+            scope.spawn(move || {
+                let cfg = ArchConfig::nexus().with_array(d, d);
+                // A representative subset: sparse, dense, graph.
+                let specs = suite(seed);
+                for spec in specs.iter().filter(|s| {
+                    let n = s.name();
+                    n.starts_with("SpMV")
+                        || n.starts_with("SpMSpM-S1")
+                        || n == "MatMul"
+                        || n == "BFS"
+                }) {
+                    let built = spec.build(&cfg);
+                    let mut f = crate::fabric::NexusFabric::new(cfg.clone());
+                    crate::workloads::run_on_fabric(&mut f, &built).expect("fig17 run");
+                    points.lock().unwrap().push(ScalePoint {
+                        dim: d,
+                        workload: spec.name(),
+                        perf: built.work_ops as f64 / f.stats.cycles.max(1) as f64,
+                        utilization: f.stats.utilization(),
+                    });
+                }
+            });
+        }
+    });
+    let mut v = points.into_inner().unwrap();
+    v.sort_by(|a, b| a.dim.cmp(&b.dim).then(a.workload.cmp(&b.workload)));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_suite_passes_on_all_fabric_variants() {
+        for cfg in [
+            ArchConfig::nexus(),
+            ArchConfig::tia(),
+            ArchConfig::tia_valiant(),
+        ] {
+            let rows = validate_suite(&cfg, 1).unwrap();
+            assert_eq!(rows.len(), 13);
+            assert!(rows.iter().all(|(_, c)| *c > 0));
+        }
+    }
+
+    #[test]
+    fn matrix_headline_shapes_hold() {
+        let m = run_matrix(1);
+        // Nexus beats Generic CGRA on sparse+graph (paper: ~1.9x average).
+        let sparse = m.geomean_speedup("Nexus", "GenericCGRA", Some("sparse"));
+        let graph = m.geomean_speedup("Nexus", "GenericCGRA", Some("graph"));
+        assert!(sparse > 1.0, "Nexus/CGRA sparse geomean {sparse}");
+        assert!(graph > 1.0, "Nexus/CGRA graph geomean {graph}");
+        // Nexus >= TIA overall; TIA-Valiant between TIA and Nexus-ish.
+        let vs_tia = m.geomean_speedup("Nexus", "TIA", None);
+        assert!(vs_tia > 1.0, "Nexus/TIA geomean {vs_tia}");
+        // Systolic wins dense MatMul.
+        let mm = m.workloads.iter().position(|w| w == "MatMul").unwrap();
+        let sys = m.get(mm, "Systolic").unwrap().perf();
+        let nexus = m.get(mm, "Nexus").unwrap().perf();
+        assert!(sys > nexus, "systolic should win dense MatMul");
+    }
+}

@@ -1,0 +1,400 @@
+//! Report renderers: one function per paper figure/table, producing the
+//! same rows/series the paper plots, as aligned text.
+
+use super::{BandwidthPoint, Matrix, ScalePoint};
+use crate::power::{area::area_of, perf_per_watt, EnergyModel};
+
+const FREQ_MHZ: f64 = 588.0;
+
+fn header(title: &str) -> String {
+    format!("{}\n{}\n", title, "=".repeat(title.len()))
+}
+
+/// Fig 11: normalized performance vs baselines + % in-network compute.
+pub fn fig11(m: &Matrix) -> String {
+    let mut s = header("Fig 11 — Normalized performance (vs Generic CGRA) + % in-network");
+    s += &format!("{:<14}", "workload");
+    for a in &m.arch_names {
+        s += &format!("{a:>13}");
+    }
+    s += &format!("{:>12}\n", "in-net %");
+    for wi in 0..m.workloads.len() {
+        s += &format!("{:<14}", m.workloads[wi]);
+        for a in &m.arch_names {
+            match m.speedup(wi, a, "GenericCGRA") {
+                Some(x) => s += &format!("{x:>12.2}x"),
+                None => s += &format!("{:>13}", "n/a"),
+            }
+        }
+        let innet = m
+            .get(wi, "Nexus")
+            .map(|r| r.in_network_frac * 100.0)
+            .unwrap_or(0.0);
+        s += &format!("{innet:>11.1}%\n");
+    }
+    s += &format!(
+        "\ngeomean Nexus/CGRA: sparse {:.2}x  dense {:.2}x  graph {:.2}x  all {:.2}x\n",
+        m.geomean_speedup("Nexus", "GenericCGRA", Some("sparse")),
+        m.geomean_speedup("Nexus", "GenericCGRA", Some("dense")),
+        m.geomean_speedup("Nexus", "GenericCGRA", Some("graph")),
+        m.geomean_speedup("Nexus", "GenericCGRA", None),
+    );
+    s += &format!(
+        "geomean Nexus/TIA: {:.2}x   Nexus/TIA-Valiant: {:.2}x\n",
+        m.geomean_speedup("Nexus", "TIA", None),
+        m.geomean_speedup("Nexus", "TIA-Valiant", None),
+    );
+    s
+}
+
+/// Fig 12: normalized performance-per-watt.
+pub fn fig12(m: &Matrix) -> String {
+    let model = EnergyModel::cal22nm();
+    let mut s = header("Fig 12 — Performance per watt (MOPS/mW), normalized to Generic CGRA");
+    s += &format!("{:<14}", "workload");
+    for a in &m.arch_names {
+        s += &format!("{a:>13}");
+    }
+    s += "\n";
+    for wi in 0..m.workloads.len() {
+        s += &format!("{:<14}", m.workloads[wi]);
+        let base = m.get(wi, "GenericCGRA").map(|r| {
+            let p = model.power(r.arch, &r.events, FREQ_MHZ).total();
+            perf_per_watt(r.work_ops, r.cycles, p, FREQ_MHZ)
+        });
+        for a in &m.arch_names {
+            match (m.get(wi, a), base) {
+                (Some(r), Some(b)) if b > 0.0 => {
+                    let p = model.power(r.arch, &r.events, FREQ_MHZ).total();
+                    let ppw = perf_per_watt(r.work_ops, r.cycles, p, FREQ_MHZ);
+                    s += &format!("{:>12.2}x", ppw / b);
+                }
+                _ => s += &format!("{:>13}", "n/a"),
+            }
+        }
+        s += "\n";
+    }
+    s
+}
+
+/// Fig 13: fabric utilization (%).
+pub fn fig13(m: &Matrix) -> String {
+    let mut s = header("Fig 13 — Fabric utilization (%)");
+    s += &format!("{:<14}", "workload");
+    for a in &m.arch_names {
+        s += &format!("{a:>13}");
+    }
+    s += "\n";
+    let mut sums = vec![(0.0f64, 0usize); m.arch_names.len()];
+    for wi in 0..m.workloads.len() {
+        s += &format!("{:<14}", m.workloads[wi]);
+        for (ai, a) in m.arch_names.iter().enumerate() {
+            match m.get(wi, a) {
+                Some(r) => {
+                    s += &format!("{:>12.1}%", r.utilization * 100.0);
+                    sums[ai].0 += r.utilization;
+                    sums[ai].1 += 1;
+                }
+                None => s += &format!("{:>13}", "n/a"),
+            }
+        }
+        s += "\n";
+    }
+    s += &format!("{:<14}", "mean");
+    for (sum, n) in &sums {
+        s += &format!("{:>12.1}%", 100.0 * sum / (*n).max(1) as f64);
+    }
+    s += "\n";
+    s
+}
+
+/// Fig 14: per-input-port congestion, Nexus vs TIA, sparse + graph only.
+pub fn fig14(m: &Matrix) -> String {
+    let mut s = header("Fig 14 — NoC congestion per input port (blocked fraction), Nexus vs TIA");
+    s += &format!(
+        "{:<14}{:>8}{:>8}{:>8}{:>8}{:>8}   {:>8}{:>8}{:>8}{:>8}{:>8}\n",
+        "workload", "NIC", "N", "E", "S", "W", "NIC", "N", "E", "S", "W"
+    );
+    s += &format!("{:<14}{:^40}   {:^40}\n", "", "Nexus", "TIA");
+    for wi in 0..m.workloads.len() {
+        if m.classes[wi] == "dense" {
+            continue; // "dense workloads are omitted" (Fig 14 caption)
+        }
+        let (Some(nx), Some(tia)) = (m.get(wi, "Nexus"), m.get(wi, "TIA")) else {
+            continue;
+        };
+        s += &format!("{:<14}", m.workloads[wi]);
+        for c in nx.congestion {
+            s += &format!("{:>8.3}", c);
+        }
+        s += "   ";
+        for c in tia.congestion {
+            s += &format!("{:>8.3}", c);
+        }
+        s += "\n";
+    }
+    // Mean congestion comparison (the figure's takeaway).
+    let mean = |arch: &str| {
+        let mut v = Vec::new();
+        for wi in 0..m.workloads.len() {
+            if m.classes[wi] == "dense" {
+                continue;
+            }
+            if let Some(r) = m.get(wi, arch) {
+                v.extend(r.congestion.iter().copied());
+            }
+        }
+        crate::util::mean(&v)
+    };
+    s += &format!(
+        "\nmean congestion: Nexus {:.3}  TIA {:.3}\n",
+        mean("Nexus"),
+        mean("TIA")
+    );
+    s
+}
+
+/// Fig 10: power ablation/breakdown vs baselines at iso-workload activity.
+pub fn fig10(m: &Matrix) -> String {
+    let model = EnergyModel::cal22nm();
+    let mut s = header("Fig 10 — Power breakdown (mW) at suite-average activity");
+    // Use the workload-summed event counts per architecture.
+    s += &format!(
+        "{:<13}{:>8}{:>9}{:>11}{:>8}{:>8}{:>10}{:>9}{:>9}\n",
+        "arch", "ALU", "DataMem", "ConfigMem", "NoC", "NIC", "Scanners", "Control", "TOTAL"
+    );
+    for a in &m.arch_names {
+        let mut ev = crate::power::EnergyEvents::default();
+        let mut n = 0u64;
+        for wi in 0..m.workloads.len() {
+            if let Some(r) = m.get(wi, a) {
+                let e = &r.events;
+                ev.alu_ops += e.alu_ops;
+                ev.dmem_accesses += e.dmem_accesses;
+                ev.bank_accesses += e.bank_accesses;
+                ev.config_reads += e.config_reads;
+                ev.noc_hops += e.noc_hops;
+                ev.buf_writes += e.buf_writes;
+                ev.scanner_ops += e.scanner_ops;
+                ev.trigger_checks += e.trigger_checks;
+                ev.cycles += e.cycles;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            continue;
+        }
+        let p = model.power(a, &ev, FREQ_MHZ);
+        s += &format!(
+            "{:<13}{:>8.2}{:>9.2}{:>11.2}{:>8.2}{:>8.2}{:>10.2}{:>9.2}{:>9.2}\n",
+            a, p.alu, p.data_mem, p.config_mem, p.noc, p.nic, p.scanners, p.control,
+            p.total()
+        );
+    }
+    // The paper's headline ratios.
+    let total = |arch: &str| {
+        let mut ev = crate::power::EnergyEvents::default();
+        for wi in 0..m.workloads.len() {
+            if let Some(r) = m.get(wi, arch) {
+                let e = &r.events;
+                ev.alu_ops += e.alu_ops;
+                ev.dmem_accesses += e.dmem_accesses;
+                ev.bank_accesses += e.bank_accesses;
+                ev.config_reads += e.config_reads;
+                ev.noc_hops += e.noc_hops;
+                ev.buf_writes += e.buf_writes;
+                ev.scanner_ops += e.scanner_ops;
+                ev.trigger_checks += e.trigger_checks;
+                ev.cycles += e.cycles;
+            }
+        }
+        model.power(arch, &ev, FREQ_MHZ).total()
+    };
+    s += &format!(
+        "\nNexus/CGRA power: {:.2}x (paper ~1.17x)   Nexus/TIA: {:.2}x (paper <1: config-path savings)\n",
+        total("Nexus") / total("GenericCGRA"),
+        total("Nexus") / total("TIA"),
+    );
+    s
+}
+
+/// Fig 15: area breakdown.
+pub fn fig15() -> String {
+    let mut s = header("Fig 15 — Area breakdown (normalized, Generic CGRA = 100)");
+    s += &format!(
+        "{:<13}{:>7}{:>9}{:>11}{:>7}{:>9}{:>10}{:>13}{:>9}{:>9}\n",
+        "arch", "ALU", "DataMem", "ConfigMem", "NoC", "AMQueue", "Scanners", "Comparators",
+        "Control", "TOTAL"
+    );
+    for arch in ["GenericCGRA", "TIA", "Nexus"] {
+        let a = area_of(arch);
+        s += &format!(
+            "{:<13}{:>7.1}{:>9.1}{:>11.1}{:>7.1}{:>9.1}{:>10.1}{:>13.1}{:>9.1}{:>9.1}\n",
+            arch,
+            a.alu,
+            a.data_mem,
+            a.config_mem,
+            a.noc,
+            a.am_queue,
+            a.scanners,
+            a.comparators,
+            a.control,
+            a.total()
+        );
+    }
+    let (n, c, t) = (
+        area_of("Nexus").total(),
+        area_of("GenericCGRA").total(),
+        area_of("TIA").total(),
+    );
+    s += &format!(
+        "\nNexus vs CGRA: +{:.1}% (paper +17.3%)   Nexus vs TIA: +{:.1}% (paper +5.2%)\n",
+        100.0 * (n / c - 1.0),
+        100.0 * (n / t - 1.0)
+    );
+    s
+}
+
+/// Fig 16: off-chip bandwidth vs on-chip SRAM across sparsities.
+pub fn fig16(points: &[BandwidthPoint]) -> String {
+    let mut s = header("Fig 16 — Off-chip bandwidth (B/cycle) to sustain throughput vs on-chip SRAM");
+    s += &format!(
+        "{:<10}{:>12}{:>8}{:>14}{:>14}\n",
+        "sparsity", "SRAM(KB)", "tiles", "BW (B/cyc)", "ops/cycle"
+    );
+    for p in points {
+        s += &format!(
+            "{:<10.2}{:>12}{:>8}{:>14.2}{:>14.2}\n",
+            p.sparsity,
+            p.total_sram_bytes / 1024,
+            p.tiles,
+            p.bytes_per_cycle,
+            p.ops_per_cycle
+        );
+    }
+    s
+}
+
+/// Fig 17: scalability across array sizes.
+pub fn fig17(points: &[ScalePoint]) -> String {
+    let mut s = header("Fig 17 — Scalability across array sizes (ops/cycle, utilization)");
+    s += &format!(
+        "{:<8}{:<14}{:>12}{:>14}\n",
+        "array", "workload", "perf", "utilization"
+    );
+    for p in points {
+        s += &format!(
+            "{}x{:<6}{:<14}{:>12.3}{:>13.1}%\n",
+            p.dim,
+            p.dim,
+            p.workload,
+            p.perf,
+            p.utilization * 100.0
+        );
+    }
+    s
+}
+
+/// Table 2: SOTA comparison. Published rows are reproduced verbatim; the
+/// Nexus and TIA rows are measured on this simulator + energy model.
+pub fn table2(m: &Matrix) -> String {
+    let model = EnergyModel::cal22nm();
+    let mut s = header("Table 2 — Comparison with state-of-the-art edge CGRAs");
+    s += &format!(
+        "{:<22}{:>10}{:>12}{:>12}{:>16}\n",
+        "design", "power mW", "MOPS", "MOPS/mW", "source"
+    );
+    s += &format!(
+        "{:<22}{:>10}{:>12}{:>12}{:>16}\n",
+        "UE-CGRA [47]", "14.0", "625", "45", "published"
+    );
+    s += &format!(
+        "{:<22}{:>10}{:>12}{:>12}{:>16}\n",
+        "Pipestitch [44]", "3.33", "558", "167", "published"
+    );
+    for arch in ["TIA", "Nexus"] {
+        // Peak-throughput operating point: best *useful* MOPS across the
+        // suite (work_ops/cycle, the cross-design comparable metric).
+        let mut best_mops = 0.0f64;
+        let mut power = 0.0f64;
+        for wi in 0..m.workloads.len() {
+            if let Some(r) = m.get(wi, arch) {
+                let ops_mops = r.mops(FREQ_MHZ);
+                if ops_mops > best_mops {
+                    best_mops = ops_mops;
+                    power = model.power(arch, &r.events, FREQ_MHZ).total();
+                }
+            }
+        }
+        s += &format!(
+            "{:<22}{:>10.3}{:>12.0}{:>12.0}{:>16}\n",
+            format!("{arch} (ours)"),
+            power,
+            best_mops,
+            best_mops / power,
+            "measured"
+        );
+    }
+    s += "\npaper anchors: TIA 4.626 mW / 490 MOPS / 106 MOPS/mW; Nexus 3.865 mW / 748 MOPS / 194 MOPS/mW\n";
+    s
+}
+
+/// Table 1: architectural parameters (from the live ArchConfig).
+pub fn table1() -> String {
+    let c = crate::config::ArchConfig::nexus();
+    let mut s = header("Table 1 — Nexus Machine architectural parameters");
+    s += &format!("Array          {}x{} INT16 PEs\n", c.width, c.height);
+    s += &format!(
+        "SRAM           {}B per PE; {}KB overall\n",
+        c.dmem_words * 2,
+        c.total_dmem_bytes() / 1024
+    );
+    s += &format!(
+        "AM Queue       1KB FIFO, 70b entries ({} on-chip window entries)\n",
+        c.am_queue_entries
+    );
+    s += &format!("Config memory  {} entries per PE (replicated)\n", c.config_entries);
+    s += &format!(
+        "Router         {} flit buffers/port, T_off={}, T_on={}\n",
+        c.router_buf_depth, c.t_off, c.t_on
+    );
+    s += &format!(
+        "Main memory    {:.1} GB/s AXI4 ({} B/cycle @ {} MHz)\n",
+        c.axi_bytes_per_cycle * c.freq_mhz * 1e6 / 1e9,
+        c.axi_bytes_per_cycle,
+        c.freq_mhz
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_matrix;
+
+    #[test]
+    fn fig15_and_table1_render() {
+        let s = fig15();
+        assert!(s.contains("Nexus vs CGRA"));
+        let t = table1();
+        assert!(t.contains("4x4"));
+        assert!(t.contains("T_off=1"));
+    }
+
+    #[test]
+    fn full_reports_render_with_expected_shapes() {
+        let m = run_matrix(1);
+        let f11 = fig11(&m);
+        assert!(f11.contains("geomean Nexus/CGRA"));
+        let f13 = fig13(&m);
+        assert!(f13.contains("%"));
+        let f14 = fig14(&m);
+        assert!(!f14.contains("MatMul"), "dense omitted from Fig 14");
+        let t2 = table2(&m);
+        assert!(t2.contains("Pipestitch"));
+        let f10 = fig10(&m);
+        assert!(f10.contains("TOTAL"));
+        let f12 = fig12(&m);
+        assert!(f12.contains("workload"));
+    }
+}

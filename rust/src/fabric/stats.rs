@@ -1,0 +1,157 @@
+//! Fabric-wide statistics: the raw event counts every figure is derived
+//! from (performance, utilization, congestion, energy, bandwidth).
+
+use crate::noc::router::{PortStats, NUM_PORTS};
+
+/// Aggregated run statistics for one fabric execution (possibly multi-tile).
+#[derive(Debug, Clone, Default)]
+pub struct FabricStats {
+    /// Total execution cycles (including inter-tile data-load cycles).
+    pub cycles: u64,
+    /// Cycles spent purely on inter-tile off-chip data loading (§3.3.3:
+    /// AM-queue streaming overlaps execution; data-memory loading does not).
+    pub load_cycles: u64,
+    /// ALU operations (local + en-route). The "useful ops" numerator for
+    /// MOPS and utilization.
+    pub alu_ops: u64,
+    /// ALU operations executed en-route on intermediate PEs (Fig 11 right
+    /// axis: % of computations in-network).
+    pub enroute_ops: u64,
+    /// Memory operations executed by decode units.
+    pub mem_ops: u64,
+    /// Dynamic AMs emitted by streaming decodes.
+    pub stream_emissions: u64,
+    /// Static AMs injected.
+    pub static_injections: u64,
+    /// Total messages that ever existed (conservation checks).
+    pub msgs_created: u64,
+    /// Messages that completed (died after their terminal op).
+    pub msgs_retired: u64,
+    /// Flit-hops: router-to-router link traversals (energy + congestion).
+    pub flit_hops: u64,
+    /// Router buffer writes (energy accounting).
+    pub buf_writes: u64,
+    /// Data-memory reads/writes.
+    pub dmem_reads: u64,
+    pub dmem_writes: u64,
+    /// Config-memory reads (each message morph/advance).
+    pub config_reads: u64,
+    /// Scanner operations (stream element decodes, §3.3.4).
+    pub scanner_ops: u64,
+    /// TIA trigger/tag-match checks (0 for Nexus).
+    pub trigger_checks: u64,
+    /// Bytes moved over the off-chip AXI interface (AM streams + data
+    /// loads + writebacks) — Fig 16's bandwidth numerator.
+    pub offchip_bytes: u64,
+    /// Per-PE busy-cycle counts: cycles each PE did useful work on any
+    /// unit (ALU or decode) — utilization (Fig 13) + load-balance CV.
+    pub per_pe_busy_cycles: Vec<u64>,
+    /// Per-input-port congestion aggregated over all routers (Fig 14),
+    /// indexed by port class (NIC, N, E, S, W).
+    pub port: [PortStats; NUM_PORTS],
+}
+
+impl FabricStats {
+    /// Cycles spent executing (total minus off-chip load/writeback phases).
+    pub fn compute_cycles(&self) -> u64 {
+        self.cycles.saturating_sub(self.load_cycles).max(1)
+    }
+
+    /// Fabric utilization in `[0,1]`: mean fraction of *compute* cycles each
+    /// PE was busy (ALU or decode unit) — Fig 13's metric. Load phases are
+    /// excluded for every architecture alike.
+    pub fn utilization(&self) -> f64 {
+        let n = self.per_pe_busy_cycles.len();
+        if n == 0 || self.cycles == 0 {
+            return 0.0;
+        }
+        let busy: u64 = self.per_pe_busy_cycles.iter().sum();
+        (busy as f64 / (n as u64 * self.compute_cycles()) as f64).min(1.0)
+    }
+
+    /// Fraction of ALU ops executed in-network (Fig 11 right axis).
+    pub fn in_network_fraction(&self) -> f64 {
+        if self.alu_ops == 0 {
+            0.0
+        } else {
+            self.enroute_ops as f64 / self.alu_ops as f64
+        }
+    }
+
+    /// Load-imbalance metric: coefficient of variation of per-PE busy
+    /// cycles (0 = perfectly balanced; Fig 3's bottom panels).
+    pub fn load_cv(&self) -> f64 {
+        let v: Vec<f64> = self.per_pe_busy_cycles.iter().map(|&c| c as f64).collect();
+        crate::util::cv(&v)
+    }
+
+    /// Useful operations per cycle across the fabric.
+    pub fn ops_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            (self.alu_ops + self.mem_ops) as f64 / self.cycles as f64
+        }
+    }
+
+    /// Throughput in MOPS at the given clock (Table 2).
+    pub fn mops(&self, freq_mhz: f64) -> f64 {
+        self.ops_per_cycle() * freq_mhz
+    }
+
+    /// Average off-chip bandwidth in bytes/cycle actually consumed.
+    pub fn avg_offchip_bytes_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.offchip_bytes as f64 / self.cycles as f64
+        }
+    }
+
+    /// Mean congestion (blocked fraction of occupied cycles) for one port
+    /// class — Fig 14's y-axis.
+    pub fn port_congestion(&self, port: usize) -> f64 {
+        let p = &self.port[port];
+        if p.occupied_cycles == 0 {
+            0.0
+        } else {
+            p.blocked_cycles as f64 / p.occupied_cycles as f64
+        }
+    }
+
+    /// Merge per-router port stats into the aggregate (called at run end).
+    pub fn absorb_port(&mut self, port: usize, s: &PortStats) {
+        self.port[port].occupied_cycles += s.occupied_cycles;
+        self.port[port].blocked_cycles += s.blocked_cycles;
+        self.port[port].flits_in += s.flits_in;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_bounds() {
+        let mut s = FabricStats::default();
+        s.cycles = 100;
+        s.per_pe_busy_cycles = vec![50, 100, 0, 50];
+        let u = s.utilization();
+        assert!((u - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn in_network_fraction_zero_when_no_ops() {
+        let s = FabricStats::default();
+        assert_eq!(s.in_network_fraction(), 0.0);
+    }
+
+    #[test]
+    fn mops_scales_with_frequency() {
+        let mut s = FabricStats::default();
+        s.cycles = 1000;
+        s.alu_ops = 500;
+        s.mem_ops = 500;
+        assert!((s.mops(588.0) - 588.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,194 @@
+//! Golden-model cross-validation: fabric (INT16 cycle-accurate) vs the
+//! AOT-compiled XLA artifacts (f32, lowered from JAX + Pallas by
+//! `python/compile/aot.py`).
+//!
+//! Three-way agreement per kernel:
+//!
+//! 1. software reference (`tensor::*`, wrapping INT16) —
+//! 2. XLA golden model (`artifacts/<name>.hlo.txt` via PJRT) —
+//! 3. the Nexus fabric itself.
+//!
+//! Workload values are generated small (|v| <= 4, short reductions) so the
+//! INT16 and f32 computations are exactly equal after rounding; any
+//! disagreement is a real functional bug in one of the layers.
+//!
+//! Artifact shapes are fixed at AOT time (XLA requires static shapes):
+//!
+//! | artifact    | shapes                                   |
+//! |-------------|------------------------------------------|
+//! | `spmv_ell`  | values `f32[64,32]`, colidx `f32[64,32]`, x `f32[64]` |
+//! | `sddmm`     | mask `f32[32,32]`, a `f32[32,16]`, b `f32[16,32]`     |
+//! | `matmul`    | a `f32[24,24]`, b `f32[24,24]`               |
+//! | `spmadd`    | a `f32[64,64]`, b `f32[64,64]`               |
+
+use crate::config::ArchConfig;
+use crate::fabric::NexusFabric;
+use crate::runtime::GoldenRuntime;
+use crate::tensor::{gen, Csr, Ell};
+use crate::util::SplitMix64;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Fixed artifact shapes (must match `python/compile/aot.py`).
+pub const SPMV_ROWS: usize = 64;
+pub const SPMV_COLS: usize = 64;
+pub const SPMV_ELL_WIDTH: usize = 32;
+pub const SDDMM_M: usize = 32;
+pub const SDDMM_K: usize = 16;
+pub const SDDMM_N: usize = 32;
+pub const MATMUL_N: usize = 24;
+pub const SPMADD_N: usize = 64;
+
+fn to_f32(v: &[i16]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+fn cmp_f32_i16(xla: &[f32], reference: &[i16], what: &str) -> Result<()> {
+    if xla.len() != reference.len() {
+        bail!("{what}: length {} vs {}", xla.len(), reference.len());
+    }
+    for (i, (x, r)) in xla.iter().zip(reference).enumerate() {
+        if (x - *r as f32).abs() > 0.5 {
+            bail!("{what}: mismatch at [{i}]: xla {x} vs reference {r}");
+        }
+    }
+    Ok(())
+}
+
+/// Run all golden checks. Each row is (kernel, status). Kernels whose
+/// artifact is missing are reported as skipped rather than failing, so the
+/// simulator test-suite stays runnable before `make artifacts`.
+pub fn check_all(dir: &Path, seed: u64) -> Result<Vec<(String, String)>> {
+    let mut rt = GoldenRuntime::new(dir)?;
+    let mut rows = Vec::new();
+    for (name, f) in [
+        ("spmv_ell", check_spmv as fn(&mut GoldenRuntime, u64) -> Result<()>),
+        ("sddmm", check_sddmm),
+        ("matmul", check_matmul),
+        ("spmadd", check_spmadd),
+    ] {
+        if !rt.has_artifact(name) {
+            rows.push((name.to_string(), "SKIPPED (no artifact)".to_string()));
+            continue;
+        }
+        f(&mut rt, seed).with_context(|| format!("golden check {name}"))?;
+        rows.push((
+            name.to_string(),
+            "OK (reference == XLA == fabric)".to_string(),
+        ));
+    }
+    Ok(rows)
+}
+
+fn check_spmv(rt: &mut GoldenRuntime, seed: u64) -> Result<()> {
+    let mut rng = SplitMix64::new(seed ^ 0x51);
+    let a = gen::random_csr(&mut rng, SPMV_ROWS, SPMV_COLS, 0.2);
+    let x = gen::random_vec(&mut rng, SPMV_COLS, 3);
+    let reference = a.spmv(&x);
+    // XLA golden model over the ELL padding.
+    let ell = Ell::from_csr_exact(&a, SPMV_ELL_WIDTH)
+        .map_err(|e| anyhow::anyhow!("{e} (reseed the generator)"))?;
+    let colidx_f32: Vec<f32> = ell.colidx.iter().map(|&c| c as f32).collect();
+    let out = rt.run(
+        "spmv_ell",
+        &[
+            (&ell.values_f32(), &[SPMV_ROWS, SPMV_ELL_WIDTH][..]),
+            (&colidx_f32, &[SPMV_ROWS, SPMV_ELL_WIDTH][..]),
+            (&to_f32(&x), &[SPMV_COLS][..]),
+        ],
+    )?;
+    cmp_f32_i16(&out[0], &reference, "spmv: xla vs reference")?;
+    // Fabric.
+    let cfg = ArchConfig::nexus();
+    let built = crate::workloads::spmv::build("spmv", &a, &x, &cfg);
+    let mut f = NexusFabric::new(cfg);
+    let fab = crate::workloads::run_on_fabric(&mut f, &built)
+        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    cmp_f32_i16(&out[0], &fab, "spmv: xla vs fabric")?;
+    Ok(())
+}
+
+fn check_sddmm(rt: &mut GoldenRuntime, seed: u64) -> Result<()> {
+    let mut rng = SplitMix64::new(seed ^ 0x52);
+    let mask = crate::workloads::binary_mask(&mut rng, SDDMM_M, SDDMM_N, 0.3);
+    let a = gen::random_dense(&mut rng, SDDMM_M, SDDMM_K, 3);
+    let b = gen::random_dense(&mut rng, SDDMM_K, SDDMM_N, 3);
+    let mask_dense = mask.to_dense();
+    let out = rt.run(
+        "sddmm",
+        &[
+            (&to_f32(&mask_dense.data), &[SDDMM_M, SDDMM_N][..]),
+            (&to_f32(&a.data), &[SDDMM_M, SDDMM_K][..]),
+            (&to_f32(&b.data), &[SDDMM_K, SDDMM_N][..]),
+        ],
+    )?;
+    // XLA emits the dense masked product; reference/fabric report values at
+    // mask positions in row-major order.
+    let reference = mask.sddmm(&a, &b).to_dense();
+    cmp_f32_i16(&out[0], &reference.data, "sddmm: xla vs reference")?;
+    let cfg = ArchConfig::nexus();
+    let built = crate::workloads::sddmm::build(&mask, &a, &b, &cfg);
+    let mut f = NexusFabric::new(cfg);
+    let fab = crate::workloads::run_on_fabric(&mut f, &built)
+        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let mut nz = 0usize;
+    for i in 0..mask.rows {
+        for (j, _) in mask.row(i) {
+            let want = out[0][i * SDDMM_N + j];
+            if (want - fab[nz] as f32).abs() > 0.5 {
+                bail!("sddmm: xla vs fabric at ({i},{j}): {want} vs {}", fab[nz]);
+            }
+            nz += 1;
+        }
+    }
+    Ok(())
+}
+
+fn check_matmul(rt: &mut GoldenRuntime, seed: u64) -> Result<()> {
+    let mut rng = SplitMix64::new(seed ^ 0x53);
+    let a = gen::random_dense(&mut rng, MATMUL_N, MATMUL_N, 3);
+    let b = gen::random_dense(&mut rng, MATMUL_N, MATMUL_N, 3);
+    let reference = a.matmul(&b);
+    let out = rt.run(
+        "matmul",
+        &[
+            (&to_f32(&a.data), &[MATMUL_N, MATMUL_N][..]),
+            (&to_f32(&b.data), &[MATMUL_N, MATMUL_N][..]),
+        ],
+    )?;
+    cmp_f32_i16(&out[0], &reference.data, "matmul: xla vs reference")?;
+    let cfg = ArchConfig::nexus();
+    let built = crate::workloads::spmspm::build(
+        "matmul",
+        &Csr::from_dense(&a),
+        &Csr::from_dense(&b),
+        &cfg,
+    );
+    let mut f = NexusFabric::new(cfg);
+    let fab = crate::workloads::run_on_fabric(&mut f, &built)
+        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    cmp_f32_i16(&out[0], &fab, "matmul: xla vs fabric")?;
+    Ok(())
+}
+
+fn check_spmadd(rt: &mut GoldenRuntime, seed: u64) -> Result<()> {
+    let mut rng = SplitMix64::new(seed ^ 0x54);
+    let a = gen::random_csr(&mut rng, SPMADD_N, SPMADD_N, 0.3);
+    let b = gen::random_csr(&mut rng, SPMADD_N, SPMADD_N, 0.3);
+    let out = rt.run(
+        "spmadd",
+        &[
+            (&to_f32(&a.to_dense().data), &[SPMADD_N, SPMADD_N][..]),
+            (&to_f32(&b.to_dense().data), &[SPMADD_N, SPMADD_N][..]),
+        ],
+    )?;
+    let reference = a.spadd(&b).to_dense();
+    cmp_f32_i16(&out[0], &reference.data, "spmadd: xla vs reference")?;
+    let cfg = ArchConfig::nexus();
+    let built = crate::workloads::spadd::build(&a, &b, &cfg);
+    let mut f = NexusFabric::new(cfg);
+    let fab = crate::workloads::run_on_fabric(&mut f, &built)
+        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    cmp_f32_i16(&out[0], &fab, "spmadd: xla vs fabric")?;
+    Ok(())
+}

@@ -1,0 +1,292 @@
+//! The Nexus Machine instruction set carried inside Active Messages.
+//!
+//! An AM carries a single opcode to perform at its next execution site
+//! (Fig 7). Opcodes fall into two classes:
+//!
+//! - **ALU class** — pure INT16 arithmetic/logic on the message's operand
+//!   values. These may execute *en-route* on any idle PE (opportunistic
+//!   execution, §3.1.3) once both operands are values.
+//! - **Memory class** — touch a PE-local data memory (dereference loads,
+//!   streaming loads, stores, read-modify-write accumulations). These must
+//!   execute at the PE that owns the addressed data, i.e. the message's head
+//!   destination.
+//!
+//! After an opcode executes, the PE's (replicated) configuration memory is
+//! indexed by the message's `N_PC` field to obtain the next
+//! [`ConfigEntry`], morphing the message into the next dynamic AM (§3.1).
+
+/// Operation carried by an Active Message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Opcode {
+    /// No-op / message termination.
+    Halt = 0,
+    // --- ALU class (en-route eligible) -----------------------------------
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    /// Set-less-than: op1 = (op1 < op2) as u16 (signed INT16 compare).
+    Slt,
+    // --- Memory class (execute at owner PE) ------------------------------
+    /// Dereference load: `op2 <- dmem[op2]` (op2 field held an address).
+    Load,
+    /// Dereference load into op1: `op1 <- dmem[op1]`.
+    LoadOp1,
+    /// Streaming load (§3.3.1 decode streaming mode): walk `count = result`
+    /// elements starting at base address `op2`, emitting one dynamic AM per
+    /// element. Element records are (value, aux) pairs; see `pe/decode.rs`.
+    Stream,
+    /// Store: `dmem[result] <- op1`; terminal.
+    Store,
+    /// Accumulate: `dmem[result] += op1` (wrapping INT16); terminal.
+    Accum,
+    /// Min-update: if `op1 < dmem[result]` then write and *trigger* the next
+    /// config entry (conditional re-emission — BFS/SSSP relaxation); else the
+    /// message dies (early termination, §5.1).
+    AccMin,
+}
+
+impl Opcode {
+    /// True for opcodes an idle intermediate PE may execute en-route.
+    #[inline]
+    pub fn is_alu(self) -> bool {
+        matches!(
+            self,
+            Opcode::Add
+                | Opcode::Sub
+                | Opcode::Mul
+                | Opcode::Div
+                | Opcode::Min
+                | Opcode::Max
+                | Opcode::And
+                | Opcode::Or
+                | Opcode::Xor
+                | Opcode::Shl
+                | Opcode::Shr
+                | Opcode::Slt
+        )
+    }
+
+    /// True for opcodes that must execute at the data-owner PE.
+    #[inline]
+    pub fn is_memory(self) -> bool {
+        matches!(
+            self,
+            Opcode::Load
+                | Opcode::LoadOp1
+                | Opcode::Stream
+                | Opcode::Store
+                | Opcode::Accum
+                | Opcode::AccMin
+        )
+    }
+
+    /// True for terminal opcodes (message dies after execution unless the
+    /// config chain re-triggers, as `AccMin` may).
+    #[inline]
+    pub fn is_terminal(self) -> bool {
+        matches!(self, Opcode::Store | Opcode::Accum | Opcode::Halt)
+    }
+
+    /// Stable numeric encoding used by the packed AM format (5 bits; the
+    /// paper's base format allocates 3 bits and notes extension modes).
+    #[inline]
+    pub fn encode(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`Opcode::encode`].
+    pub fn decode(v: u8) -> Option<Opcode> {
+        use Opcode::*;
+        Some(match v {
+            0 => Halt,
+            1 => Add,
+            2 => Sub,
+            3 => Mul,
+            4 => Div,
+            5 => Min,
+            6 => Max,
+            7 => And,
+            8 => Or,
+            9 => Xor,
+            10 => Shl,
+            11 => Shr,
+            12 => Slt,
+            13 => Load,
+            14 => LoadOp1,
+            15 => Stream,
+            16 => Store,
+            17 => Accum,
+            18 => AccMin,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        use Opcode::*;
+        match self {
+            Halt => "HALT",
+            Add => "ADD",
+            Sub => "SUB",
+            Mul => "MUL",
+            Div => "DIV",
+            Min => "MIN",
+            Max => "MAX",
+            And => "AND",
+            Or => "OR",
+            Xor => "XOR",
+            Shl => "SHL",
+            Shr => "SHR",
+            Slt => "SLT",
+            Load => "LOAD",
+            LoadOp1 => "LOAD1",
+            Stream => "STREAM",
+            Store => "STORE",
+            Accum => "ACCUM",
+            AccMin => "ACCMIN",
+        }
+    }
+}
+
+/// Execute an ALU-class opcode on INT16 operands (wrapping semantics, as in
+/// the paper's 16-bit compute unit). Division by zero yields 0, the usual
+/// convention for accelerator ALUs without trap support.
+#[inline]
+pub fn alu_eval(op: Opcode, a: u16, b: u16) -> u16 {
+    let (sa, sb) = (a as i16, b as i16);
+    match op {
+        Opcode::Add => sa.wrapping_add(sb) as u16,
+        Opcode::Sub => sa.wrapping_sub(sb) as u16,
+        Opcode::Mul => sa.wrapping_mul(sb) as u16,
+        Opcode::Div => {
+            if sb == 0 {
+                0
+            } else {
+                sa.wrapping_div(sb) as u16
+            }
+        }
+        Opcode::Min => sa.min(sb) as u16,
+        Opcode::Max => sa.max(sb) as u16,
+        Opcode::And => a & b,
+        Opcode::Or => a | b,
+        Opcode::Xor => a ^ b,
+        Opcode::Shl => a.wrapping_shl((b & 15) as u32),
+        Opcode::Shr => a.wrapping_shr((b & 15) as u32),
+        Opcode::Slt => u16::from(sa < sb),
+        _ => panic!("alu_eval on non-ALU opcode {op:?}"),
+    }
+}
+
+/// One entry of the per-PE configuration memory (§3.3.1: 10 bits wide, up to
+/// 8 configurations). Configuration memories are *replicated* across PEs
+/// (paper Fig 10 attributes +8% power to this replication) so a message can
+/// be advanced by any PE it traverses — the enabler for en-route execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConfigEntry {
+    /// Opcode the morphed (next) dynamic AM will carry.
+    pub opcode: Opcode,
+    /// Next value of the message's `N_PC` field.
+    pub next_pc: u8,
+    /// Res_c of the next dynamic AM: result field holds an address.
+    pub res_is_addr: bool,
+    /// Op1_c of the next dynamic AM.
+    pub op1_is_addr: bool,
+    /// Op2_c of the next dynamic AM.
+    pub op2_is_addr: bool,
+}
+
+impl ConfigEntry {
+    pub const HALT: ConfigEntry = ConfigEntry {
+        opcode: Opcode::Halt,
+        next_pc: 0,
+        res_is_addr: false,
+        op1_is_addr: false,
+        op2_is_addr: false,
+    };
+
+    pub fn new(opcode: Opcode, next_pc: u8) -> Self {
+        ConfigEntry {
+            opcode,
+            next_pc,
+            res_is_addr: false,
+            op1_is_addr: false,
+            op2_is_addr: false,
+        }
+    }
+
+    pub fn res_addr(mut self) -> Self {
+        self.res_is_addr = true;
+        self
+    }
+
+    pub fn op1_addr(mut self) -> Self {
+        self.op1_is_addr = true;
+        self
+    }
+
+    pub fn op2_addr(mut self) -> Self {
+        self.op2_is_addr = true;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcode_encode_roundtrip() {
+        for v in 0..32u8 {
+            if let Some(op) = Opcode::decode(v) {
+                assert_eq!(op.encode(), v);
+            }
+        }
+        // All named opcodes roundtrip.
+        use Opcode::*;
+        for op in [
+            Halt, Add, Sub, Mul, Div, Min, Max, And, Or, Xor, Shl, Shr, Slt, Load, LoadOp1,
+            Stream, Store, Accum, AccMin,
+        ] {
+            assert_eq!(Opcode::decode(op.encode()), Some(op));
+        }
+    }
+
+    #[test]
+    fn class_partition() {
+        use Opcode::*;
+        for op in [
+            Halt, Add, Sub, Mul, Div, Min, Max, And, Or, Xor, Shl, Shr, Slt, Load, LoadOp1,
+            Stream, Store, Accum, AccMin,
+        ] {
+            // No opcode is both ALU- and memory-class.
+            assert!(!(op.is_alu() && op.is_memory()), "{op:?}");
+        }
+        assert!(Mul.is_alu() && !Mul.is_memory());
+        assert!(Load.is_memory() && !Load.is_alu());
+        assert!(Accum.is_terminal());
+        assert!(!AccMin.is_terminal()); // may re-trigger
+    }
+
+    #[test]
+    fn alu_semantics() {
+        assert_eq!(alu_eval(Opcode::Add, 3, 4), 7);
+        assert_eq!(alu_eval(Opcode::Sub, 3, 4), (-1i16) as u16);
+        assert_eq!(alu_eval(Opcode::Mul, 300, 300), (90000i32 as i16) as u16); // wraps
+        assert_eq!(alu_eval(Opcode::Div, 12, 5), 2);
+        assert_eq!(alu_eval(Opcode::Div, 12, 0), 0);
+        assert_eq!(alu_eval(Opcode::Min, (-5i16) as u16, 3), (-5i16) as u16);
+        assert_eq!(alu_eval(Opcode::Max, (-5i16) as u16, 3), 3);
+        assert_eq!(alu_eval(Opcode::Slt, (-5i16) as u16, 3), 1);
+        assert_eq!(alu_eval(Opcode::Slt, 3, 3), 0);
+        assert_eq!(alu_eval(Opcode::Shl, 1, 4), 16);
+        assert_eq!(alu_eval(Opcode::Shr, 16, 4), 1);
+    }
+}

@@ -1,0 +1,47 @@
+//! # Nexus Machine
+//!
+//! A production-quality reproduction of *Nexus Machine: An Active Message
+//! Inspired Reconfigurable Architecture for Irregular Workloads* (Juneja,
+//! Dangi, Bandara, Mitra, Peh — NUS, 2025).
+//!
+//! The crate contains, from the bottom up:
+//!
+//! - [`util`] — deterministic PRNG, a mini property-testing harness, stats.
+//! - [`config`] — Table 1 architectural parameters and ablation presets.
+//! - [`isa`] — the opcode set carried inside Active Messages.
+//! - [`am`] — the 70-bit Active Message format (Fig 7) and its packed form.
+//! - [`tensor`] — CSR/ELL/dense formats, sparsity generators, graphs.
+//! - [`noc`] — mesh routers, turn-model/XY/Valiant routing, On/Off control.
+//! - [`pe`] — per-PE state: data memory, decode unit, AM NIC.
+//! - [`fabric`] — the cycle-accurate simulator: Data-Driven execution and
+//!   In-Network (en-route) computing, the paper's contribution.
+//! - [`compiler`] — DFG scheduling, Algorithm-1 dissimilarity-aware data
+//!   partitioning, static-AM codegen.
+//! - [`workloads`] — the twelve evaluation kernels (sparse, dense, graph).
+//! - [`baselines`] — systolic array, Generic CGRA, TIA, TIA-Valiant.
+//! - [`power`] — 22nm-calibrated area/energy models (Figs 10/15, Table 2).
+//! - [`runtime`] — PJRT golden-model runtime (loads `artifacts/*.hlo.txt`).
+//! - [`coordinator`] — threaded experiment sweeps and report printers.
+//!
+//! Python (JAX + Pallas) appears only at build time: `make artifacts` lowers
+//! the golden models to HLO text which [`runtime`] loads; the `nexus` binary
+//! is self-contained.
+
+pub mod am;
+pub mod baselines;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod fabric;
+pub mod golden;
+pub mod isa;
+pub mod noc;
+pub mod pe;
+pub mod power;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod workloads;
+
+pub use config::{ArchConfig, ArchKind};
+pub use fabric::NexusFabric;

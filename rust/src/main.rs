@@ -1,0 +1,174 @@
+//! `nexus` — the Nexus Machine evaluation CLI.
+//!
+//! Regenerates every figure and table of the paper's evaluation (§5) from
+//! the cycle-accurate simulator, validates the fabric against software
+//! references and the XLA golden models, and exposes one-off runs.
+
+use nexus::config::ArchConfig;
+use nexus::coordinator::{self, report};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let seed = args
+        .iter()
+        .position(|a| a == "--seed")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1u64);
+
+    match cmd {
+        "validate" => validate(seed),
+        "golden" => golden(seed),
+        "fig10" => with_matrix(seed, report::fig10),
+        "fig11" => with_matrix(seed, report::fig11),
+        "fig12" => with_matrix(seed, report::fig12),
+        "fig13" => with_matrix(seed, report::fig13),
+        "fig14" => with_matrix(seed, report::fig14),
+        "fig15" => println!("{}", report::fig15()),
+        "fig16" => {
+            let pts = coordinator::bandwidth_sweep(seed);
+            println!("{}", report::fig16(&pts));
+        }
+        "fig17" => {
+            let pts = coordinator::scalability_sweep(seed, &[2, 4, 6, 8]);
+            println!("{}", report::fig17(&pts));
+        }
+        "table1" | "config" => println!("{}", report::table1()),
+        "ablate" => println!("{}", coordinator::ablation::report(seed)),
+        "fig3" => fig3(seed),
+        "table2" => with_matrix(seed, report::table2),
+        "compile-time" => compile_time(seed),
+        "all" => {
+            validate(seed);
+            let m = coordinator::run_matrix(seed);
+            println!("{}", report::fig10(&m));
+            println!("{}", report::fig11(&m));
+            println!("{}", report::fig12(&m));
+            println!("{}", report::fig13(&m));
+            println!("{}", report::fig14(&m));
+            println!("{}", report::fig15());
+            let pts = coordinator::bandwidth_sweep(seed);
+            println!("{}", report::fig16(&pts));
+            let pts = coordinator::scalability_sweep(seed, &[2, 4, 6, 8]);
+            println!("{}", report::fig17(&pts));
+            println!("{}", report::table1());
+            println!("{}", report::table2(&m));
+        }
+        _ => {
+            println!(
+                "nexus — Nexus Machine reproduction CLI\n\n\
+                 usage: nexus <command> [--seed N]\n\n\
+                 commands:\n\
+                 \x20 validate      run the 13-workload suite on Nexus/TIA/TIA-Valiant,\n\
+                 \x20               checking fabric outputs against software references\n\
+                 \x20 golden        additionally check against the XLA/PJRT golden models\n\
+                 \x20               (requires `make artifacts`)\n\
+                 \x20 fig10..fig17  regenerate the corresponding paper figure\n\
+                 \x20 table1 table2 regenerate the corresponding paper table\n\
+                 \x20 ablate        design-choice ablations (routing, buffers, placement)\n\
+                 \x20 fig3          per-PE load-balance heatmaps (Nexus vs TIA)\n\
+                 \x20 compile-time  Nexus vs Generic-CGRA compile-path timing (§4)\n\
+                 \x20 all           everything above in sequence"
+            );
+        }
+    }
+}
+
+fn with_matrix(seed: u64, f: impl Fn(&coordinator::Matrix) -> String) {
+    let m = coordinator::run_matrix(seed);
+    println!("{}", f(&m));
+}
+
+fn validate(seed: u64) {
+    for cfg in [
+        ArchConfig::nexus(),
+        ArchConfig::tia(),
+        ArchConfig::tia_valiant(),
+    ] {
+        let kind = cfg.kind.name();
+        match coordinator::validate_suite(&cfg, seed) {
+            Ok(rows) => {
+                println!("[{kind}] all {} workloads validated:", rows.len());
+                for (name, cycles) in rows {
+                    println!("  {name:<14} {cycles:>9} cycles  OK");
+                }
+            }
+            Err(e) => {
+                eprintln!("[{kind}] VALIDATION FAILED: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// Validate the fabric against the XLA golden models (L2 artifacts).
+fn golden(seed: u64) {
+    let dir = nexus::runtime::artifacts_dir();
+    println!("artifacts: {}", dir.display());
+    match nexus::golden::check_all(&dir, seed) {
+        Ok(rows) => {
+            for (name, status) in rows {
+                println!("  {name:<14} {status}");
+            }
+        }
+        Err(e) => {
+            eprintln!("golden validation failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Fig 3's bottom panels: per-PE busy-cycle heatmaps on SpMV, showing the
+/// load imbalance of data-local execution (TIA) vs the uniform balance of
+/// en-route execution (Nexus).
+fn fig3(seed: u64) {
+    let specs = nexus::workloads::suite(seed);
+    let spec = specs.iter().find(|s| s.name().starts_with("SpMV")).unwrap();
+    for cfg in [ArchConfig::tia(), ArchConfig::nexus()] {
+        let kind = cfg.kind.name();
+        let built = spec.build(&cfg);
+        let mut f = nexus::fabric::NexusFabric::new(cfg.clone());
+        nexus::workloads::run_on_fabric(&mut f, &built).expect("fig3 run");
+        let busy = &f.stats.per_pe_busy_cycles;
+        let max = *busy.iter().max().unwrap() as f64;
+        println!("[{kind}] per-PE busy cycles (load CV {:.3}):", f.stats.load_cv());
+        for y in 0..cfg.height {
+            print!("  ");
+            for x in 0..cfg.width {
+                let b = busy[cfg.pe_id(x, y)] as f64;
+                let shade = [" .", " -", " =", " #", " @"][(4.0 * b / max.max(1.0)) as usize % 5];
+                print!("{shade}{:>5}", busy[cfg.pe_id(x, y)]);
+            }
+            println!();
+        }
+    }
+}
+
+/// §4's compile-time comparison: the Nexus compile path (partition +
+/// static-AM codegen; routing is dynamic in hardware) vs the Generic CGRA
+/// path (modulo schedule + full static route/trace resolution).
+fn compile_time(seed: u64) {
+    use std::time::Instant;
+    let specs = nexus::workloads::suite(seed);
+    let cfg = ArchConfig::nexus();
+    let t0 = Instant::now();
+    for s in &specs {
+        let _ = s.build(&cfg);
+    }
+    let nexus_t = t0.elapsed();
+    let t1 = Instant::now();
+    for s in &specs {
+        let dfg = s.dfg();
+        let (trace, bytes) = nexus::baselines::cgra::mem_trace(s);
+        let _ = nexus::baselines::cgra::GenericCgra::default().simulate(&dfg, &trace, bytes);
+    }
+    let cgra_t = t1.elapsed();
+    println!(
+        "compile path, full suite: Nexus {:.3}s (dynamic routing in hw)  vs  \
+         Generic CGRA {:.3}s (static route resolution)\n\
+         paper anchors: 0.55s vs 7.22s",
+        nexus_t.as_secs_f64(),
+        cgra_t.as_secs_f64()
+    );
+}

@@ -1,0 +1,10 @@
+//! Network-on-Chip substrate: mesh geometry, routing functions (west-first
+//! turn model with congestion-aware adaptivity, XY, Valiant), and the
+//! five-port router of §3.3.2 with 3-flit input buffers, a separable
+//! allocator, a 6x5 crossbar abstraction, and On/Off congestion control.
+
+pub mod router;
+pub mod routing;
+
+pub use router::{Router, PORT_E, PORT_LOCAL, PORT_N, PORT_S, PORT_W};
+pub use routing::{route_ports, Dir};

@@ -1,0 +1,333 @@
+//! The five-port mesh router of §3.3.2.
+//!
+//! Each router has five input ports (Local/injection, N, E, S, W) and five
+//! output ports (Local/ejection, N, E, S, W). Every input port buffers up to
+//! `depth` (default 3) single-flit messages — "each input port has a buffer
+//! comprising three registers", chosen to minimize power. Route computation
+//! compares the head flit's target with the router's position; a separable
+//! allocator (input-first then output arbitration with rotating priority)
+//! resolves conflicts; winners traverse the crossbar.
+//!
+//! **On/Off congestion control** (§3.3.2): a port advertises OFF when its
+//! free space drops to `T_off = 1` and ON again at `T_on = 2`; upstream
+//! routers only forward to ON ports. The hysteresis state is updated at
+//! cycle commit and consumed the next cycle, modeling one cycle of signal
+//! latency.
+//!
+//! **Bubble rule** (§3.4): new injections from the AM NIC must leave one
+//! buffer slot free (injection requires 2 free slots; transit needs 1), the
+//! bubble-flow-control condition that keeps the ring of buffer dependencies
+//! from ever filling completely.
+
+use crate::am::Message;
+
+pub const PORT_LOCAL: usize = 0;
+pub const PORT_N: usize = 1;
+pub const PORT_E: usize = 2;
+pub const PORT_S: usize = 3;
+pub const PORT_W: usize = 4;
+pub const NUM_PORTS: usize = 5;
+
+/// Port names for reports (Fig 14's x-axis categories).
+pub const PORT_NAMES: [&str; NUM_PORTS] = ["NIC", "North", "East", "South", "West"];
+
+/// Maximum supported buffer depth (fixed-capacity ring, no heap in the hot
+/// loop). Config depth must be <= this.
+pub const MAX_DEPTH: usize = 8;
+
+/// Fixed-capacity message ring buffer (one per input port).
+#[derive(Debug, Clone)]
+pub struct FlitBuf {
+    slots: [Option<Message>; MAX_DEPTH],
+    head: usize,
+    len: usize,
+    depth: usize,
+}
+
+impl FlitBuf {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth >= 1 && depth <= MAX_DEPTH);
+        FlitBuf {
+            slots: [None; MAX_DEPTH],
+            head: 0,
+            len: 0,
+            depth,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn free(&self) -> usize {
+        self.depth - self.len
+    }
+
+    #[inline]
+    pub fn push(&mut self, m: Message) -> bool {
+        if self.len == self.depth {
+            return false;
+        }
+        let tail = (self.head + self.len) % self.depth;
+        self.slots[tail] = Some(m);
+        self.len += 1;
+        true
+    }
+
+    #[inline]
+    pub fn head_msg(&self) -> Option<&Message> {
+        if self.len == 0 {
+            None
+        } else {
+            self.slots[self.head].as_ref()
+        }
+    }
+
+    #[inline]
+    pub fn head_msg_mut(&mut self) -> Option<&mut Message> {
+        if self.len == 0 {
+            None
+        } else {
+            self.slots[self.head].as_mut()
+        }
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<Message> {
+        if self.len == 0 {
+            return None;
+        }
+        let m = self.slots[self.head].take();
+        self.head = (self.head + 1) % self.depth;
+        self.len -= 1;
+        m
+    }
+
+    /// Iterate over buffered messages (head first) — used by conservation
+    /// checks and the termination detector.
+    pub fn iter(&self) -> impl Iterator<Item = &Message> {
+        (0..self.len).map(move |i| {
+            self.slots[(self.head + i) % self.depth]
+                .as_ref()
+                .expect("ring invariant")
+        })
+    }
+}
+
+/// Per-input-port congestion counters (Fig 14).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PortStats {
+    /// Cycles in which this port held at least one flit.
+    pub occupied_cycles: u64,
+    /// Cycles in which the head flit failed to win allocation (or its
+    /// downstream was OFF/full) — the congestion signal of Fig 14.
+    pub blocked_cycles: u64,
+    /// Flits accepted into this port.
+    pub flits_in: u64,
+}
+
+/// One mesh router.
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// Input buffers indexed by port (PORT_LOCAL..PORT_W).
+    pub inputs: [FlitBuf; NUM_PORTS],
+    /// On/Off state advertised to upstream for each *input* port, as sampled
+    /// at the end of the previous cycle. `true` = ON (may receive).
+    pub on_state: [bool; NUM_PORTS],
+    /// Rotating-priority pointer for output arbitration (separable
+    /// allocator's second stage).
+    pub rr_ptr: [usize; NUM_PORTS],
+    /// Staged incoming flits (one per input port) applied at commit — links
+    /// deliver at most one flit per cycle.
+    pub staging: [Option<Message>; NUM_PORTS],
+    /// Per-port congestion stats.
+    pub stats: [PortStats; NUM_PORTS],
+    /// Head-of-line flit locked this cycle by en-route execution (port id).
+    pub locked_port: Option<usize>,
+    /// Occupancy changed since the last commit (push or pop); lets commit
+    /// skip the hysteresis scan for quiescent routers (EXPERIMENTS.md §Perf).
+    pub dirty: bool,
+    /// On/Off thresholds from the config.
+    t_off: usize,
+    t_on: usize,
+}
+
+impl Router {
+    pub fn new(depth: usize, t_off: usize, t_on: usize) -> Self {
+        Router {
+            inputs: std::array::from_fn(|_| FlitBuf::new(depth)),
+            on_state: [true; NUM_PORTS],
+            rr_ptr: [0; NUM_PORTS],
+            staging: [None; NUM_PORTS],
+            stats: [PortStats::default(); NUM_PORTS],
+            locked_port: None,
+            dirty: false,
+            t_off,
+            t_on,
+        }
+    }
+
+    /// Effective free space of an input port including its staged flit.
+    #[inline]
+    pub fn effective_free(&self, port: usize) -> usize {
+        self.inputs[port].free() - usize::from(self.staging[port].is_some())
+    }
+
+    /// Can a neighbor forward a flit into `port` this cycle? Requires the
+    /// advertised ON state and physical space (link delivers one per cycle).
+    #[inline]
+    pub fn can_accept(&self, port: usize) -> bool {
+        self.on_state[port] && self.staging[port].is_none() && self.inputs[port].free() >= 1
+    }
+
+    /// Can the AM NIC inject this cycle? Bubble rule: keep one slot free
+    /// after injection.
+    #[inline]
+    pub fn can_inject(&self) -> bool {
+        self.staging[PORT_LOCAL].is_none() && self.inputs[PORT_LOCAL].free() >= 2
+    }
+
+    /// Stage a flit arriving on `port` (from a neighbor or the NIC).
+    /// Caller must have checked `can_accept` / `can_inject`.
+    #[inline]
+    pub fn stage(&mut self, port: usize, m: Message) {
+        debug_assert!(self.staging[port].is_none());
+        self.staging[port] = Some(m);
+        self.dirty = true;
+    }
+
+    /// Pop the head flit of an input port, marking the router dirty so the
+    /// next commit refreshes the On/Off hysteresis. Always use this (not
+    /// `inputs[p].pop()`) when dequeuing.
+    #[inline]
+    pub fn pop_port(&mut self, port: usize) -> Option<Message> {
+        let m = self.inputs[port].pop();
+        if m.is_some() {
+            self.dirty = true;
+        }
+        m
+    }
+
+    /// Commit staged flits into buffers and refresh the On/Off hysteresis
+    /// for the next cycle. Called once per cycle by the fabric.
+    pub fn commit(&mut self) {
+        if !self.dirty {
+            self.locked_port = None;
+            return;
+        }
+        self.dirty = false;
+        for port in 0..NUM_PORTS {
+            if let Some(m) = self.staging[port].take() {
+                let ok = self.inputs[port].push(m);
+                debug_assert!(ok, "staging over full buffer");
+                self.stats[port].flits_in += 1;
+            }
+            // Hysteresis: OFF when free <= T_off, ON when free >= T_on.
+            let free = self.inputs[port].free();
+            if free <= self.t_off {
+                self.on_state[port] = false;
+            } else if free >= self.t_on {
+                self.on_state[port] = true;
+            }
+        }
+        self.locked_port = None;
+    }
+
+    /// Total flits currently buffered (for termination detection).
+    pub fn occupancy(&self) -> usize {
+        self.inputs.iter().map(|b| b.len()).sum::<usize>()
+            + self.staging.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Record per-port occupancy/blocked stats for this cycle. `moved[p]`
+    /// is true if port p's head flit departed this cycle.
+    pub fn sample_stats(&mut self, moved: &[bool; NUM_PORTS]) {
+        for port in 0..NUM_PORTS {
+            if !self.inputs[port].is_empty() {
+                self.stats[port].occupied_cycles += 1;
+                if !moved[port] {
+                    self.stats[port].blocked_cycles += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::Message;
+
+    fn msg(id: u64) -> Message {
+        Message {
+            id,
+            ..Message::new()
+        }
+    }
+
+    #[test]
+    fn flitbuf_fifo_order() {
+        let mut b = FlitBuf::new(3);
+        assert!(b.push(msg(1)));
+        assert!(b.push(msg(2)));
+        assert!(b.push(msg(3)));
+        assert!(!b.push(msg(4)), "over capacity");
+        assert_eq!(b.pop().unwrap().id, 1);
+        assert!(b.push(msg(4)));
+        assert_eq!(b.pop().unwrap().id, 2);
+        assert_eq!(b.pop().unwrap().id, 3);
+        assert_eq!(b.pop().unwrap().id, 4);
+        assert!(b.pop().is_none());
+    }
+
+    #[test]
+    fn on_off_hysteresis() {
+        let mut r = Router::new(3, 1, 2);
+        assert!(r.can_accept(PORT_N));
+        // Fill to 2 occupied (free = 1 <= T_off) => OFF after commit.
+        r.stage(PORT_N, msg(1));
+        r.commit();
+        r.stage(PORT_N, msg(2));
+        r.commit();
+        assert_eq!(r.inputs[PORT_N].free(), 1);
+        assert!(!r.on_state[PORT_N], "must advertise OFF at free=1");
+        assert!(!r.can_accept(PORT_N));
+        // Drain one (free = 2 >= T_on) => ON after commit.
+        r.pop_port(PORT_N);
+        r.commit();
+        assert!(r.on_state[PORT_N]);
+        assert!(r.can_accept(PORT_N));
+    }
+
+    #[test]
+    fn bubble_rule_for_injection() {
+        let mut r = Router::new(3, 1, 2);
+        assert!(r.can_inject());
+        r.stage(PORT_LOCAL, msg(1));
+        assert!(!r.can_inject(), "one staged flit per cycle");
+        r.commit();
+        assert!(r.can_inject()); // 1 occupied, 2 free
+        r.stage(PORT_LOCAL, msg(2));
+        r.commit();
+        // 2 occupied, 1 free: transit could still enter, injection cannot.
+        assert!(!r.can_inject(), "bubble rule: need 2 free slots");
+    }
+
+    #[test]
+    fn occupancy_counts_staging() {
+        let mut r = Router::new(3, 1, 2);
+        r.stage(PORT_E, msg(1));
+        assert_eq!(r.occupancy(), 1);
+        r.commit();
+        assert_eq!(r.occupancy(), 1);
+        r.pop_port(PORT_E);
+        assert_eq!(r.occupancy(), 0);
+    }
+}

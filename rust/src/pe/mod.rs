@@ -1,0 +1,216 @@
+//! Processing Element state (§3.3.1, Fig 8b): data memory, decode unit with
+//! dereference + streaming modes, Input Network Interface (inbox), and the
+//! AM Network Interface (AM-queue window + dynamic-AM output queue).
+//!
+//! The PE's per-cycle *behaviour* lives in `fabric/mod.rs` (it needs
+//! whole-fabric context: router buffers for en-route claims, the replicated
+//! config memory, global stats); this module owns the per-PE data.
+
+pub mod scanner;
+
+use crate::am::Message;
+use std::collections::VecDeque;
+
+/// Emission mode of a stream element — how the decode unit assembles the
+/// outgoing dynamic AM from the element record and the triggering message.
+/// See `fabric::NexusFabric::start_stream` for the exact field mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamMode {
+    /// SpMSpM-style (Gustavson): `result = msg.result + aux` (output row
+    /// base + column index), `op2 = value`, destinations inherited from the
+    /// triggering message.
+    OffsetResult,
+    /// Graph-style (BFS/SSSP/PageRank/Conv): each element names its own
+    /// destination PE and address: `dests = [dest_pe]`, `result = aux`,
+    /// `op2 = value`.
+    PerDest,
+    /// SDDMM-style: `op1 = msg.op1 + aux` becomes an *address* into the next
+    /// destination's memory (dense A-row base + k), `op2 = value`,
+    /// `result = msg.result`, destinations inherited.
+    OffsetOp1,
+}
+
+/// One element record walked by the decode unit's streaming mode. In
+/// hardware these are (value, metadata) pairs in the PE's SRAM decoded with
+/// scanner assistance (§3.3.4); the simulator stores them unpacked.
+/// Capacity accounting charges [`STREAM_ELEM_WORDS`] SRAM words per element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamElem {
+    /// Data word (INT16 fabric value).
+    pub value: i16,
+    /// Mode-dependent metadata: column index, target address, …
+    pub aux: u16,
+    /// Destination PE for `PerDest` mode (ignored otherwise).
+    pub dest_pe: u8,
+    pub mode: StreamMode,
+}
+
+/// SRAM words charged per stream element (value + aux + packed pe/mode).
+pub const STREAM_ELEM_WORDS: usize = 3;
+
+/// An in-progress streaming decode (§3.3.1 streaming mode): walks
+/// `count` elements from `base`, emitting one dynamic AM per cycle.
+#[derive(Debug, Clone)]
+pub struct ActiveStream {
+    /// Start index into `stream_mem`.
+    pub base: u32,
+    /// Elements remaining.
+    pub remaining: u16,
+    /// Current position (index into `stream_mem`).
+    pub pos: u32,
+    /// The triggering message after config advance: supplies carried fields
+    /// (op1, result, remaining destinations) and the opcode/flags/PC that
+    /// every emitted AM starts with.
+    pub template: Message,
+}
+
+/// Capacity of the dynamic-AM output queue in the AM NIC. Small, as in the
+/// paper's NIC (the backpressure it exerts on the decode unit is part of
+/// the flow-control story).
+pub const OUTQ_CAP: usize = 4;
+
+/// Per-PE statistics (fabric utilization, load-balance heatmaps).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PeStats {
+    /// Cycles the PE did useful work on any unit (ALU op local or en-route,
+    /// decode-unit memory op, or stream emission) — Fig 13's utilization
+    /// numerator.
+    pub busy_cycles: u64,
+    /// Cycles the ALU performed an operation (local or en-route claimed).
+    pub alu_busy_cycles: u64,
+    /// ALU operations executed for messages in transit (en-route).
+    pub enroute_ops: u64,
+    /// Memory operations (loads/stores/accumulates) performed locally.
+    pub mem_ops: u64,
+    /// Dynamic AMs emitted by streaming decode.
+    pub stream_emissions: u64,
+    /// Static AMs injected from this PE's AM queue.
+    pub static_injected: u64,
+    /// Data-memory reads/writes (energy accounting).
+    pub dmem_reads: u64,
+    pub dmem_writes: u64,
+    /// Config-memory reads (every morph/advance reads one entry).
+    pub config_reads: u64,
+}
+
+/// Processing element state.
+#[derive(Debug, Clone)]
+pub struct Pe {
+    /// Data memory (u16 words; Table 1: 1KB = 512 words).
+    pub dmem: Vec<u16>,
+    /// Stream element records (charged against the same SRAM budget).
+    pub stream_mem: Vec<StreamElem>,
+    /// Trigger table: maps a dmem address to a (base, count) stream descriptor.
+    /// Used by `Stream` ops (keyed by op2) and by `AccMin` conditional
+    /// re-emission (keyed by result). Sparse; None for non-trigger addresses.
+    pub trigger: Vec<Option<(u32, u16)>>,
+    /// Input Network Interface: single-message inbox from the router's
+    /// LOCAL output port.
+    pub inbox: Option<Message>,
+    /// Message whose next (local) operation executes next cycle — the
+    /// decode/ALU handoff inside a PE.
+    pub local_redo: Option<Message>,
+    /// TIA trigger-scheduler countdown before `inbox` may be processed.
+    pub trigger_wait: u64,
+    /// AM NIC: dynamic AMs awaiting injection.
+    pub outq: VecDeque<Message>,
+    /// AM NIC: on-chip window of the static-AM queue (refilled from
+    /// "off-chip" by the AXI model).
+    pub am_window: VecDeque<Message>,
+    /// Active streaming decode, if any.
+    pub stream: Option<ActiveStream>,
+    /// Streams waiting for the stream engine (a second `Stream` trigger or
+    /// an `AccMin` re-emission arriving while one is active). Draining the
+    /// inbox every cycle — instead of stalling it on a busy stream engine —
+    /// keeps the ejection port live and breaks the NIC↔stream-engine
+    /// deadlock cycle (§3.4 scenario 3).
+    pub stream_q: VecDeque<ActiveStream>,
+    /// ALU claimed this cycle (local work or en-route execution).
+    pub alu_busy: bool,
+    /// Decode unit performed a memory op or stream emission this cycle.
+    pub decode_busy: bool,
+    pub stats: PeStats,
+}
+
+impl Pe {
+    pub fn new(dmem_words: usize) -> Self {
+        Pe {
+            dmem: vec![0; dmem_words],
+            stream_mem: Vec::new(),
+            trigger: Vec::new(),
+            inbox: None,
+            local_redo: None,
+            trigger_wait: 0,
+            outq: VecDeque::with_capacity(OUTQ_CAP),
+            am_window: VecDeque::new(),
+            stream: None,
+            stream_q: VecDeque::new(),
+            alu_busy: false,
+            decode_busy: false,
+            stats: PeStats::default(),
+        }
+    }
+
+    /// Messages currently held by this PE (for termination/conservation).
+    pub fn held_messages(&self) -> usize {
+        usize::from(self.inbox.is_some())
+            + usize::from(self.local_redo.is_some())
+            + usize::from(self.stream.is_some())
+            + self.stream_q.len()
+            + self.outq.len()
+    }
+
+    /// True when the PE has no pending work at all (termination detector
+    /// input; the AM window is tracked separately by the fabric).
+    pub fn is_idle(&self) -> bool {
+        self.held_messages() == 0 && self.am_window.is_empty()
+    }
+
+    /// SRAM words used by the loaded image (capacity checks, Fig 16).
+    pub fn sram_words_used(&self) -> usize {
+        self.dmem.len() + self.stream_mem.len() * STREAM_ELEM_WORDS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_pe_is_idle() {
+        let pe = Pe::new(512);
+        assert!(pe.is_idle());
+        assert_eq!(pe.held_messages(), 0);
+        assert_eq!(pe.dmem.len(), 512);
+    }
+
+    #[test]
+    fn held_messages_counts_all_stations() {
+        let mut pe = Pe::new(16);
+        pe.inbox = Some(Message::new());
+        pe.outq.push_back(Message::new());
+        pe.stream = Some(ActiveStream {
+            base: 0,
+            remaining: 1,
+            pos: 0,
+            template: Message::new(),
+        });
+        assert_eq!(pe.held_messages(), 3);
+        assert!(!pe.is_idle());
+    }
+
+    #[test]
+    fn sram_accounting_includes_stream_elems() {
+        let mut pe = Pe::new(100);
+        pe.stream_mem = vec![
+            StreamElem {
+                value: 0,
+                aux: 0,
+                dest_pe: 0,
+                mode: StreamMode::PerDest,
+            };
+            10
+        ];
+        assert_eq!(pe.sram_words_used(), 100 + 30);
+    }
+}

@@ -1,0 +1,267 @@
+//! 22nm-calibrated area and power models (Figs 10, 12, 15; Table 2).
+//!
+//! Per DESIGN.md's substitution table, Cadence Genus + SRAM-compiler
+//! characterization is replaced by an **event-energy accounting model**:
+//! the simulator's event counters (ALU ops, SRAM accesses, router hops,
+//! config reads, scanner/trigger activity) are multiplied by per-event
+//! energies, plus per-component leakage, with the constants calibrated so
+//! the *published* anchors hold — Table 2's absolute figures (Nexus
+//! 3.865 mW / 748 MOPS / 194 MOPS/mW at 588 MHz; TIA 4.626 mW) and the
+//! Fig 10/15 relative breakdowns (Nexus ≈ +17% power / +17.3% area over
+//! the Generic CGRA; TIA pays comparators, Nexus pays AM queues +
+//! scanners; both pay dynamic routers).
+
+pub mod area;
+
+use crate::config::ArchKind;
+use crate::fabric::stats::FabricStats;
+
+/// Event counts feeding the energy model, normalized across architectures.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyEvents {
+    pub alu_ops: u64,
+    /// Local (distributed) SRAM accesses — Nexus/TIA data memories.
+    pub dmem_accesses: u64,
+    /// Shared edge-bank accesses — CGRA/systolic global SPM.
+    pub bank_accesses: u64,
+    pub config_reads: u64,
+    /// Dynamic-router hops (Nexus/TIA) or static-NoC word moves (CGRA,
+    /// systolic shifts).
+    pub noc_hops: u64,
+    pub buf_writes: u64,
+    pub scanner_ops: u64,
+    pub trigger_checks: u64,
+    pub stream_emissions: u64,
+    pub offchip_bytes: u64,
+    pub cycles: u64,
+}
+
+impl EnergyEvents {
+    /// Extract events from a fabric run.
+    pub fn from_fabric(s: &FabricStats, _kind: ArchKind) -> Self {
+        EnergyEvents {
+            alu_ops: s.alu_ops,
+            dmem_accesses: s.dmem_reads + s.dmem_writes,
+            bank_accesses: 0,
+            config_reads: s.config_reads,
+            noc_hops: s.flit_hops,
+            buf_writes: s.buf_writes,
+            scanner_ops: s.scanner_ops,
+            trigger_checks: s.trigger_checks,
+            stream_emissions: s.stream_emissions,
+            offchip_bytes: s.offchip_bytes,
+            cycles: s.cycles,
+        }
+    }
+}
+
+/// Power breakdown by component, in mW (Fig 10's categories).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PowerBreakdown {
+    pub alu: f64,
+    pub data_mem: f64,
+    pub config_mem: f64,
+    pub noc: f64,
+    /// AM NIC (queues + injection logic) for Nexus; trigger
+    /// scheduler/comparators for TIA; zero for CGRA.
+    pub nic: f64,
+    pub scanners: f64,
+    pub control: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.alu + self.data_mem + self.config_mem + self.noc + self.nic + self.scanners
+            + self.control
+    }
+
+    pub fn components(&self) -> [(&'static str, f64); 7] {
+        [
+            ("ALU", self.alu),
+            ("DataMem", self.data_mem),
+            ("ConfigMem", self.config_mem),
+            ("NoC", self.noc),
+            ("NIC", self.nic),
+            ("Scanners", self.scanners),
+            ("Control", self.control),
+        ]
+    }
+}
+
+/// Per-event energies (pJ) and per-component leakage (mW), 22nm FDSOI
+/// calibration. One model instance serves all architectures; architecture
+/// identity selects which leakage terms apply.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    // Dynamic energies, pJ/event.
+    pub e_alu: f64,
+    pub e_dmem: f64,
+    pub e_bank: f64, // shared edge banks: longer wires, bigger arrays
+    pub e_config: f64,
+    pub e_hop_dynamic: f64,
+    pub e_hop_static: f64,
+    pub e_buf: f64,
+    pub e_scanner: f64,
+    pub e_trigger: f64,
+    // Leakage / clock-tree, mW per component (whole fabric).
+    pub l_alu: f64,
+    pub l_dmem: f64,
+    pub l_config_replicated: f64,
+    pub l_config_central: f64,
+    pub l_noc_dynamic: f64,
+    pub l_noc_static: f64,
+    pub l_nic: f64,
+    pub l_comparators: f64,
+    pub l_scanners: f64,
+    pub l_control: f64,
+}
+
+impl EnergyModel {
+    /// The 22nm calibration (see module docs for anchors).
+    pub fn cal22nm() -> Self {
+        EnergyModel {
+            e_alu: 0.30,
+            e_dmem: 0.22,
+            e_bank: 0.75,
+            e_config: 0.18,
+            e_hop_dynamic: 0.18,
+            e_hop_static: 0.12,
+            e_buf: 0.08,
+            e_scanner: 0.30,
+            e_trigger: 0.35,
+            l_alu: 0.20,
+            l_dmem: 0.35,
+            l_config_replicated: 0.40,
+            l_config_central: 0.30,
+            l_noc_dynamic: 0.30,
+            l_noc_static: 0.18,
+            l_nic: 0.30,
+            l_comparators: 2.00,
+            l_scanners: 0.02,
+            l_control: 0.30,
+        }
+    }
+
+    /// Power breakdown for an architecture's run. `freq_mhz` converts
+    /// events/cycle into watts: `P_dyn = (pJ/event) * events/cycle * f`.
+    pub fn power(&self, arch: &str, ev: &EnergyEvents, freq_mhz: f64) -> PowerBreakdown {
+        let cyc = ev.cycles.max(1) as f64;
+        // pJ/cycle * MHz = microW... : pJ * 1e-12 J * f(1e6/s) = 1e-6 W = mW*1e-3.
+        let to_mw = freq_mhz * 1e-6 * 1e3; // pJ/cycle -> mW
+        let dyn_mw = |events: u64, pj: f64| (events as f64 / cyc) * pj * to_mw;
+        let is_fabric = matches!(arch, "Nexus" | "TIA" | "TIA-Valiant");
+        let is_tia = matches!(arch, "TIA" | "TIA-Valiant");
+        let mut p = PowerBreakdown::default();
+        p.alu = self.l_alu + dyn_mw(ev.alu_ops, self.e_alu);
+        p.data_mem = self.l_dmem
+            + dyn_mw(ev.dmem_accesses, self.e_dmem)
+            + dyn_mw(ev.bank_accesses, self.e_bank);
+        p.config_mem = if is_fabric && !is_tia {
+            // Nexus: replicated config memories, but no comparators.
+            self.l_config_replicated + dyn_mw(ev.config_reads, self.e_config)
+        } else if is_tia {
+            // TIA: replicated config + tag-match comparators (the +12%
+            // config-path power Nexus saves, §5.2).
+            self.l_config_replicated
+                + self.l_comparators
+                + dyn_mw(ev.config_reads, self.e_config)
+                + dyn_mw(ev.trigger_checks, self.e_trigger)
+        } else {
+            self.l_config_central + dyn_mw(ev.config_reads, self.e_config)
+        };
+        p.noc = if is_fabric {
+            self.l_noc_dynamic
+                + dyn_mw(ev.noc_hops, self.e_hop_dynamic)
+                + dyn_mw(ev.buf_writes, self.e_buf)
+        } else {
+            self.l_noc_static + dyn_mw(ev.noc_hops, self.e_hop_static)
+        };
+        p.nic = if arch == "Nexus" { self.l_nic } else { 0.0 };
+        p.scanners = if arch == "Nexus" {
+            self.l_scanners + dyn_mw(ev.scanner_ops, self.e_scanner)
+        } else {
+            0.0
+        };
+        p.control = self.l_control * if is_fabric { 1.15 } else { 1.0 };
+        p
+    }
+}
+
+/// Performance-per-watt (Fig 12): useful MOPS / mW.
+pub fn perf_per_watt(work_ops: u64, cycles: u64, power_mw: f64, freq_mhz: f64) -> f64 {
+    if cycles == 0 || power_mw <= 0.0 {
+        return 0.0;
+    }
+    let mops = work_ops as f64 / cycles as f64 * freq_mhz;
+    mops / power_mw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy_events(n: u64) -> EnergyEvents {
+        EnergyEvents {
+            alu_ops: n,
+            dmem_accesses: n,
+            config_reads: n,
+            noc_hops: n / 2,
+            buf_writes: n / 2,
+            scanner_ops: n / 8,
+            cycles: n,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn nexus_total_power_lands_near_table2() {
+        let m = EnergyModel::cal22nm();
+        // Representative peak activity: ~1.3 useful ops/cycle fabric-wide.
+        let ev = busy_events(100_000);
+        let p = m.power("Nexus", &ev, 588.0);
+        let total = p.total();
+        assert!(
+            (1.5..6.0).contains(&total),
+            "Nexus power {total} mW should be in Table 2's neighborhood"
+        );
+    }
+
+    #[test]
+    fn tia_pays_comparators_nexus_pays_queues() {
+        let m = EnergyModel::cal22nm();
+        let mut ev = busy_events(100_000);
+        ev.trigger_checks = 50_000;
+        let tia = m.power("TIA", &ev, 588.0);
+        ev.trigger_checks = 0;
+        let nexus = m.power("Nexus", &ev, 588.0);
+        // §5.2: Nexus benefits from a config-path power reduction vs TIA.
+        assert!(nexus.config_mem < tia.config_mem);
+        // Nexus carries NIC + scanners that TIA lacks.
+        assert!(nexus.nic > 0.0 && tia.nic == 0.0);
+    }
+
+    #[test]
+    fn fabric_power_exceeds_cgra_modestly() {
+        let m = EnergyModel::cal22nm();
+        let ev_fab = busy_events(100_000);
+        let mut ev_cgra = busy_events(100_000);
+        ev_cgra.bank_accesses = ev_cgra.dmem_accesses;
+        ev_cgra.dmem_accesses = 0;
+        let nexus = m.power("Nexus", &ev_fab, 588.0).total();
+        let cgra = m.power("GenericCGRA", &ev_cgra, 588.0).total();
+        let ratio = nexus / cgra;
+        // Fig 10: ~+17% power at iso-activity; allow a band.
+        assert!(
+            (0.95..1.45).contains(&ratio),
+            "Nexus/CGRA power ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn perf_per_watt_scales() {
+        let a = perf_per_watt(1000, 1000, 4.0, 588.0);
+        let b = perf_per_watt(2000, 1000, 4.0, 588.0);
+        assert!((b / a - 2.0).abs() < 1e-9);
+        assert_eq!(perf_per_watt(1000, 0, 4.0, 588.0), 0.0);
+    }
+}

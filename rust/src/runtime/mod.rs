@@ -1,0 +1,128 @@
+//! Golden-model runtime: loads AOT-compiled XLA artifacts (HLO text produced
+//! by `python/compile/aot.py`) and executes them on the PJRT CPU client.
+//!
+//! This is the only place the repository touches XLA at run time. Python is
+//! never on the request path: `make artifacts` lowers the JAX/Pallas golden
+//! models once, and this module loads the resulting `artifacts/*.hlo.txt`
+//! files, compiles them with PJRT, and executes them with concrete inputs.
+//!
+//! The simulator (the paper's contribution) computes in INT16 on the fabric;
+//! the golden model computes the same workload in f32 on XLA. The
+//! [`GoldenRuntime`] provides f32 in/out; callers are responsible for keeping
+//! inputs small enough that the two agree exactly after rounding.
+//!
+//! Interchange format is HLO *text*, not serialized `HloModuleProto`:
+//! jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled XLA executable wrapper for one golden model artifact.
+pub struct GoldenModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact path, for error messages.
+    pub path: PathBuf,
+}
+
+impl GoldenModel {
+    /// Execute the model on f32 inputs. Each input is a `(data, shape)` pair;
+    /// shapes use row-major layout. Returns every output of the (tupled)
+    /// result, flattened to `Vec<f32>` each.
+    pub fn run(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .with_context(|| format!("reshape input to {dims:?}"))?;
+            literals.push(lit);
+        }
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.path.display()))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True, so outputs are always a tuple.
+        let tuple = result.decompose_tuple()?;
+        let mut outs = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            outs.push(lit.to_vec::<f32>()?);
+        }
+        Ok(outs)
+    }
+}
+
+/// Loads and caches golden models from an artifacts directory.
+pub struct GoldenRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, GoldenModel>,
+}
+
+impl GoldenRuntime {
+    /// Create a runtime backed by the PJRT CPU client, loading artifacts from
+    /// `dir` (usually `artifacts/`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Platform name of the underlying PJRT client (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (and cache) the artifact `<dir>/<name>.hlo.txt`.
+    pub fn load(&mut self, name: &str) -> Result<&GoldenModel> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", path.display()))?;
+            self.cache
+                .insert(name.to_string(), GoldenModel { exe, path });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Convenience: load `name` and run it in one call.
+    pub fn run(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        self.cache[name].run(inputs)
+    }
+
+    /// True if the artifact file for `name` exists on disk.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+}
+
+/// Locate the artifacts directory: `$NEXUS_ARTIFACTS` if set, else
+/// `artifacts/` relative to the workspace root (walking up from cwd).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("NEXUS_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}

@@ -1,0 +1,356 @@
+//! Compressed Sparse Row matrices over i16 values (the fabric's INT16 word),
+//! plus the pure-software reference kernels the simulator is validated
+//! against (SpMV, SpGEMM via Gustavson, SpADD, SDDMM).
+
+use super::dense::Dense;
+
+/// CSR sparse matrix. Values are i16 (fabric word); all reference kernels
+/// use wrapping INT16 arithmetic so they agree bit-for-bit with the fabric.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointer array, length `rows + 1`.
+    pub rowptr: Vec<usize>,
+    /// Column indices of nonzeros, row-major-concatenated.
+    pub colidx: Vec<usize>,
+    /// Nonzero values, aligned with `colidx`.
+    pub values: Vec<i16>,
+}
+
+impl Csr {
+    /// Empty matrix with no nonzeros.
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        Csr {
+            rows,
+            cols,
+            rowptr: vec![0; rows + 1],
+            colidx: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Build from COO triplets (row, col, value). Duplicates are summed
+    /// (wrapping); explicit zeros are dropped.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: impl IntoIterator<Item = (usize, usize, i16)>,
+    ) -> Self {
+        let mut per_row: Vec<Vec<(usize, i16)>> = vec![Vec::new(); rows];
+        for (r, c, v) in triplets {
+            assert!(r < rows && c < cols, "triplet out of bounds ({r},{c})");
+            per_row[r].push((c, v));
+        }
+        let mut rowptr = Vec::with_capacity(rows + 1);
+        let mut colidx = Vec::new();
+        let mut values = Vec::new();
+        rowptr.push(0);
+        for row in &mut per_row {
+            row.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < row.len() {
+                let c = row[i].0;
+                let mut v = 0i16;
+                while i < row.len() && row[i].0 == c {
+                    v = v.wrapping_add(row[i].1);
+                    i += 1;
+                }
+                if v != 0 {
+                    colidx.push(c);
+                    values.push(v);
+                }
+            }
+            rowptr.push(colidx.len());
+        }
+        Csr {
+            rows,
+            cols,
+            rowptr,
+            colidx,
+            values,
+        }
+    }
+
+    /// Build from a dense row-major matrix, dropping zeros.
+    pub fn from_dense(d: &Dense) -> Self {
+        let mut trip = Vec::new();
+        for r in 0..d.rows {
+            for c in 0..d.cols {
+                let v = d.get(r, c);
+                if v != 0 {
+                    trip.push((r, c, v));
+                }
+            }
+        }
+        Csr::from_triplets(d.rows, d.cols, trip)
+    }
+
+    /// Materialize to dense.
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zero(self.rows, self.cols);
+        for r in 0..self.rows {
+            for k in self.rowptr[r]..self.rowptr[r + 1] {
+                d.set(r, self.colidx[k], self.values[k]);
+            }
+        }
+        d
+    }
+
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Nonzeros in row `r`.
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.rowptr[r + 1] - self.rowptr[r]
+    }
+
+    /// (colidx, value) pairs of row `r`.
+    pub fn row(&self, r: usize) -> impl Iterator<Item = (usize, i16)> + '_ {
+        (self.rowptr[r]..self.rowptr[r + 1]).map(move |k| (self.colidx[k], self.values[k]))
+    }
+
+    /// Density = nnz / (rows*cols).
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.rows * self.cols) as f64
+        }
+    }
+
+    /// Sparsity = 1 - density (the paper reports sparsity percentages).
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+
+    /// Transpose (CSR of the transpose).
+    pub fn transpose(&self) -> Csr {
+        let mut trip = Vec::with_capacity(self.nnz());
+        for r in 0..self.rows {
+            for (c, v) in self.row(r) {
+                trip.push((c, r, v));
+            }
+        }
+        Csr::from_triplets(self.cols, self.rows, trip)
+    }
+
+    /// Check structural invariants (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rowptr.len() != self.rows + 1 {
+            return Err("rowptr length".into());
+        }
+        if *self.rowptr.last().unwrap() != self.nnz() {
+            return Err("rowptr tail != nnz".into());
+        }
+        if self.colidx.len() != self.values.len() {
+            return Err("colidx/values length".into());
+        }
+        for r in 0..self.rows {
+            if self.rowptr[r] > self.rowptr[r + 1] {
+                return Err(format!("rowptr not monotonic at {r}"));
+            }
+            let mut prev = None;
+            for k in self.rowptr[r]..self.rowptr[r + 1] {
+                if self.colidx[k] >= self.cols {
+                    return Err(format!("colidx out of range at row {r}"));
+                }
+                if let Some(p) = prev {
+                    if self.colidx[k] <= p {
+                        return Err(format!("colidx not strictly increasing in row {r}"));
+                    }
+                }
+                prev = Some(self.colidx[k]);
+            }
+        }
+        Ok(())
+    }
+
+    // --- reference kernels (wrapping INT16, matching the fabric) ---------
+
+    /// SpMV: `y = A * x` (Fig 4's kernel).
+    pub fn spmv(&self, x: &[i16]) -> Vec<i16> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0i16; self.rows];
+        for r in 0..self.rows {
+            let mut acc = 0i16;
+            for (c, v) in self.row(r) {
+                acc = acc.wrapping_add(v.wrapping_mul(x[c]));
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// SpGEMM via Gustavson's row-wise algorithm (§4.2: "We implement this
+    /// using Gustavson's algorithm"): `C[i,:] = sum_k A[i,k] * B[k,:]`.
+    pub fn spgemm(&self, b: &Csr) -> Csr {
+        assert_eq!(self.cols, b.rows);
+        let mut acc = vec![0i16; b.cols];
+        let mut touched: Vec<usize> = Vec::new();
+        let mut trip = Vec::new();
+        for i in 0..self.rows {
+            for (k, av) in self.row(i) {
+                for (j, bv) in b.row(k) {
+                    if acc[j] == 0 && !touched.contains(&j) {
+                        touched.push(j);
+                    }
+                    acc[j] = acc[j].wrapping_add(av.wrapping_mul(bv));
+                }
+            }
+            for &j in &touched {
+                if acc[j] != 0 {
+                    trip.push((i, j, acc[j]));
+                }
+                acc[j] = 0;
+            }
+            touched.clear();
+        }
+        Csr::from_triplets(self.rows, b.cols, trip)
+    }
+
+    /// Element-wise sparse addition (SpM+SpM, §4.2).
+    pub fn spadd(&self, b: &Csr) -> Csr {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        let mut trip = Vec::with_capacity(self.nnz() + b.nnz());
+        for r in 0..self.rows {
+            for (c, v) in self.row(r) {
+                trip.push((r, c, v));
+            }
+            for (c, v) in b.row(r) {
+                trip.push((r, c, v));
+            }
+        }
+        Csr::from_triplets(self.rows, self.cols, trip)
+    }
+
+    /// SDDMM: `C[i,j] = mask[i,j] != 0 ? (A[i,:] . B[:,j]) * mask[i,j] : 0`
+    /// where `self` is the sparse mask and A, B are dense (§4.2: "computes
+    /// products only at sparse locations").
+    pub fn sddmm(&self, a: &Dense, b: &Dense) -> Csr {
+        assert_eq!(self.rows, a.rows);
+        assert_eq!(self.cols, b.cols);
+        assert_eq!(a.cols, b.rows);
+        let mut trip = Vec::with_capacity(self.nnz());
+        for r in 0..self.rows {
+            for (c, m) in self.row(r) {
+                let mut dot = 0i16;
+                for k in 0..a.cols {
+                    dot = dot.wrapping_add(a.get(r, k).wrapping_mul(b.get(k, c)));
+                }
+                let v = dot.wrapping_mul(m);
+                if v != 0 {
+                    trip.push((r, c, v));
+                }
+            }
+        }
+        Csr::from_triplets(self.rows, self.cols, trip)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gen;
+    use crate::util::prop::{ensure, forall};
+
+    #[test]
+    fn from_triplets_sums_duplicates_drops_zeros() {
+        let m = Csr::from_triplets(2, 2, vec![(0, 0, 3), (0, 0, 4), (1, 1, 5), (1, 0, 0)]);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.to_dense().get(0, 0), 7);
+        assert_eq!(m.to_dense().get(1, 1), 5);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn dense_roundtrip_property() {
+        forall(100, |rng| {
+            let r = 1 + rng.below_usize(12);
+            let c = 1 + rng.below_usize(12);
+            let m = gen::random_csr(rng, r, c, 0.4);
+            m.validate().map_err(|e| e.to_string())?;
+            let back = Csr::from_dense(&m.to_dense());
+            ensure(back == m, || "dense roundtrip mismatch".into())
+        });
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        forall(100, |rng| {
+            let r = 1 + rng.below_usize(16);
+            let c = 1 + rng.below_usize(16);
+            let m = gen::random_csr(rng, r, c, 0.3);
+            let x: Vec<i16> = (0..c).map(|_| rng.range_i64(-4, 4) as i16).collect();
+            let y = m.spmv(&x);
+            let yd = m.to_dense().matvec(&x);
+            ensure(y == yd, || "spmv != dense matvec".into())
+        });
+    }
+
+    #[test]
+    fn spgemm_matches_dense() {
+        forall(60, |rng| {
+            let m = 1 + rng.below_usize(10);
+            let k = 1 + rng.below_usize(10);
+            let n = 1 + rng.below_usize(10);
+            let a = gen::random_csr(rng, m, k, 0.4);
+            let b = gen::random_csr(rng, k, n, 0.4);
+            let c = a.spgemm(&b);
+            c.validate().map_err(|e| e.to_string())?;
+            let cd = a.to_dense().matmul(&b.to_dense());
+            ensure(c.to_dense() == cd, || "spgemm != dense matmul".into())
+        });
+    }
+
+    #[test]
+    fn spadd_matches_dense() {
+        forall(60, |rng| {
+            let r = 1 + rng.below_usize(12);
+            let c = 1 + rng.below_usize(12);
+            let a = gen::random_csr(rng, r, c, 0.3);
+            let b = gen::random_csr(rng, r, c, 0.3);
+            let s = a.spadd(&b);
+            s.validate().map_err(|e| e.to_string())?;
+            let sd = a.to_dense().add(&b.to_dense());
+            ensure(s.to_dense() == sd, || "spadd != dense add".into())
+        });
+    }
+
+    #[test]
+    fn sddmm_matches_dense_definition() {
+        forall(40, |rng| {
+            let m = 1 + rng.below_usize(8);
+            let k = 1 + rng.below_usize(8);
+            let n = 1 + rng.below_usize(8);
+            let mask = gen::random_csr(rng, m, n, 0.3);
+            let a = gen::random_dense(rng, m, k, 4);
+            let b = gen::random_dense(rng, k, n, 4);
+            let c = mask.sddmm(&a, &b);
+            let full = a.matmul(&b);
+            for r in 0..m {
+                for (j, mv) in mask.row(r) {
+                    let want = full.get(r, j).wrapping_mul(mv);
+                    if want != c.to_dense().get(r, j) {
+                        return Err(format!("sddmm mismatch at ({r},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        forall(60, |rng| {
+            let r = 1 + rng.below_usize(10);
+            let c = 1 + rng.below_usize(10);
+            let m = gen::random_csr(rng, r, c, 0.4);
+            ensure(m.transpose().transpose() == m, || "transpose^2 != id".into())
+        });
+    }
+}

@@ -1,0 +1,140 @@
+//! Dense row-major i16 matrices and reference dense kernels (MatMul, MV,
+//! Conv) matching the fabric's wrapping INT16 arithmetic.
+
+/// Dense row-major matrix of i16.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dense {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i16>,
+}
+
+impl Dense {
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        Dense {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<i16>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Dense { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i16 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i16) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// `C = self * other` with wrapping INT16 accumulate.
+    pub fn matmul(&self, other: &Dense) -> Dense {
+        assert_eq!(self.cols, other.rows);
+        let mut c = Dense::zero(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a == 0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    let v = c.get(i, j).wrapping_add(a.wrapping_mul(other.get(k, j)));
+                    c.set(i, j, v);
+                }
+            }
+        }
+        c
+    }
+
+    /// `y = self * x`.
+    pub fn matvec(&self, x: &[i16]) -> Vec<i16> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0i16; self.rows];
+        for r in 0..self.rows {
+            let mut acc = 0i16;
+            for c in 0..self.cols {
+                acc = acc.wrapping_add(self.get(r, c).wrapping_mul(x[c]));
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// Element-wise addition.
+    pub fn add(&self, other: &Dense) -> Dense {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a.wrapping_add(*b))
+            .collect();
+        Dense::from_vec(self.rows, self.cols, data)
+    }
+
+    /// 2D valid convolution (single channel): `out[h,w] = sum_{i,j}
+    /// input[h+i, w+j] * filter[i,j]`. This is the reference for the Conv
+    /// workload; the fabric executes it by replicating the filter across PEs
+    /// (§5.1: "Nexus Machine efficiently handles Conv by replicating filters
+    /// across PEs"), without im2col.
+    pub fn conv2d_valid(&self, filter: &Dense) -> Dense {
+        assert!(filter.rows <= self.rows && filter.cols <= self.cols);
+        let oh = self.rows - filter.rows + 1;
+        let ow = self.cols - filter.cols + 1;
+        let mut out = Dense::zero(oh, ow);
+        for h in 0..oh {
+            for w in 0..ow {
+                let mut acc = 0i16;
+                for i in 0..filter.rows {
+                    for j in 0..filter.cols {
+                        acc = acc
+                            .wrapping_add(self.get(h + i, w + j).wrapping_mul(filter.get(i, j)));
+                    }
+                }
+                out.set(h, w, acc);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Dense::from_vec(2, 2, vec![1, 2, 3, 4]);
+        let id = Dense::from_vec(2, 2, vec![1, 0, 0, 1]);
+        assert_eq!(a.matmul(&id), a);
+        assert_eq!(id.matmul(&a), a);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = Dense::from_vec(2, 3, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(a.matvec(&[1, 1, 1]), vec![6, 15]);
+    }
+
+    #[test]
+    fn conv2d_known() {
+        // 3x3 input, 2x2 filter of ones => 2x2 output of window sums.
+        let x = Dense::from_vec(3, 3, vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        let f = Dense::from_vec(2, 2, vec![1, 1, 1, 1]);
+        let y = x.conv2d_valid(&f);
+        assert_eq!(y.data, vec![12, 16, 24, 28]);
+    }
+
+    #[test]
+    fn add_wraps() {
+        let a = Dense::from_vec(1, 1, vec![i16::MAX]);
+        let b = Dense::from_vec(1, 1, vec![1]);
+        assert_eq!(a.add(&b).get(0, 0), i16::MIN);
+    }
+}

@@ -1,0 +1,141 @@
+//! ELLPACK (ELL) padded sparse format.
+//!
+//! The XLA/Pallas golden models need static shapes, so the CSR matrices the
+//! fabric executes are padded to ELL — a fixed `width` of (value, colidx)
+//! slots per row — before being fed to the AOT artifacts. See DESIGN.md
+//! §Hardware-Adaptation: on a TPU the CSR gather becomes a dense
+//! `take`-and-reduce over the ELL slabs, which vectorizes on the VPU.
+
+use super::csr::Csr;
+
+/// ELL-padded matrix: `rows x width` slabs of values and column indices.
+/// Padding slots carry value 0 and column index 0 (harmless under
+/// multiply-accumulate since the value is 0).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Ell {
+    pub rows: usize,
+    pub cols: usize,
+    /// Slots per row (>= max row nnz of the source matrix).
+    pub width: usize,
+    /// Row-major `rows x width` values (f32-convertible i16).
+    pub values: Vec<i16>,
+    /// Row-major `rows x width` column indices.
+    pub colidx: Vec<u32>,
+}
+
+impl Ell {
+    /// Pad a CSR matrix to ELL with at least `min_width` slots per row
+    /// (the artifact shapes fix the width at AOT time).
+    /// Panics if any row has more nonzeros than the chosen width allows —
+    /// callers pick `min_width >= max_row_nnz`.
+    pub fn from_csr(m: &Csr, min_width: usize) -> Self {
+        let max_nnz = (0..m.rows).map(|r| m.row_nnz(r)).max().unwrap_or(0);
+        let width = min_width.max(max_nnz);
+        let mut values = vec![0i16; m.rows * width];
+        let mut colidx = vec![0u32; m.rows * width];
+        for r in 0..m.rows {
+            for (slot, (c, v)) in m.row(r).enumerate() {
+                values[r * width + slot] = v;
+                colidx[r * width + slot] = c as u32;
+            }
+        }
+        Ell {
+            rows: m.rows,
+            cols: m.cols,
+            width,
+            values,
+            colidx,
+        }
+    }
+
+    /// Exact-width variant for fixed artifact shapes. Errors if a row
+    /// overflows `width`.
+    pub fn from_csr_exact(m: &Csr, width: usize) -> Result<Self, String> {
+        let max_nnz = (0..m.rows).map(|r| m.row_nnz(r)).max().unwrap_or(0);
+        if max_nnz > width {
+            return Err(format!(
+                "row nnz {max_nnz} exceeds ELL width {width}; regenerate with lower density"
+            ));
+        }
+        let mut e = Self::from_csr(m, width);
+        e.width = width;
+        // from_csr may have chosen a smaller natural width; re-pad.
+        if e.values.len() != m.rows * width {
+            let mut values = vec![0i16; m.rows * width];
+            let mut colidx = vec![0u32; m.rows * width];
+            for r in 0..m.rows {
+                for (slot, (c, v)) in m.row(r).enumerate() {
+                    values[r * width + slot] = v;
+                    colidx[r * width + slot] = c as u32;
+                }
+            }
+            e.values = values;
+            e.colidx = colidx;
+        }
+        Ok(e)
+    }
+
+    /// SpMV reference over the padded form (must equal the CSR SpMV).
+    pub fn spmv(&self, x: &[i16]) -> Vec<i16> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0i16; self.rows];
+        for r in 0..self.rows {
+            let mut acc = 0i16;
+            for s in 0..self.width {
+                let v = self.values[r * self.width + s];
+                let c = self.colidx[r * self.width + s] as usize;
+                acc = acc.wrapping_add(v.wrapping_mul(x[c]));
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// Values as f32 (for feeding the XLA golden model).
+    pub fn values_f32(&self) -> Vec<f32> {
+        self.values.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Column indices as f32 (the artifact takes indices as i32; PJRT input
+    /// helpers here use f32 buffers + cast inside the graph when needed).
+    pub fn colidx_i32(&self) -> Vec<i32> {
+        self.colidx.iter().map(|&c| c as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gen;
+    use crate::util::prop::{ensure, forall};
+
+    #[test]
+    fn ell_spmv_matches_csr_spmv() {
+        forall(100, |rng| {
+            let r = 1 + rng.below_usize(16);
+            let c = 1 + rng.below_usize(16);
+            let m = gen::random_csr(rng, r, c, 0.4);
+            let e = Ell::from_csr(&m, 4);
+            let x: Vec<i16> = (0..c).map(|_| rng.range_i64(-3, 3) as i16).collect();
+            ensure(e.spmv(&x) == m.spmv(&x), || "ELL spmv != CSR spmv".into())
+        });
+    }
+
+    #[test]
+    fn exact_width_rejects_overflow() {
+        let m = Csr::from_triplets(1, 8, (0..5).map(|c| (0usize, c, 1i16)));
+        assert!(Ell::from_csr_exact(&m, 4).is_err());
+        let e = Ell::from_csr_exact(&m, 8).unwrap();
+        assert_eq!(e.width, 8);
+        assert_eq!(e.values.len(), 8);
+    }
+
+    #[test]
+    fn padding_is_zero_valued() {
+        let m = Csr::from_triplets(2, 4, vec![(0, 1, 5)]);
+        let e = Ell::from_csr(&m, 3);
+        assert_eq!(e.width, 3);
+        assert_eq!(&e.values[..3], &[5, 0, 0]);
+        assert_eq!(&e.values[3..], &[0, 0, 0]);
+    }
+}

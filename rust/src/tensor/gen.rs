@@ -1,0 +1,182 @@
+//! Reproducible workload generators.
+//!
+//! The paper evaluates on pruned+fine-tuned ResNet-50 layer matrices with
+//! controlled sparsification (§4.2) and the infect-dublin contact graph. We
+//! have neither the trained weights nor the dataset in this environment, so
+//! (per DESIGN.md §3 substitutions) we generate:
+//!
+//! - unstructured-sparsity matrices at the paper's density bands, with
+//!   values drawn small enough that INT16 arithmetic never saturates in the
+//!   validation comparisons;
+//! - the S1–S4 SpMSpM sparsity regimes of §4.2;
+//! - ResNet-50-like layer shapes scaled to the fabric's SRAM;
+//! - a synthetic contact graph with infect-dublin's published size
+//!   (410 vertices / 2765 edges) and heavy-tailed degree skew.
+//!
+//! Everything is driven by an explicit [`SplitMix64`] seed.
+
+use super::csr::Csr;
+use super::dense::Dense;
+use crate::util::SplitMix64;
+
+/// Small nonzero value in `[-4, 4] \ {0}` — keeps INT16 results exact for
+/// golden-model comparison at our workload sizes.
+fn small_value(rng: &mut SplitMix64) -> i16 {
+    loop {
+        let v = rng.range_i64(-4, 4) as i16;
+        if v != 0 {
+            return v;
+        }
+    }
+}
+
+/// Random CSR with i.i.d. Bernoulli(density) nonzeros.
+pub fn random_csr(rng: &mut SplitMix64, rows: usize, cols: usize, density: f64) -> Csr {
+    let mut trip = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if rng.chance(density) {
+                trip.push((r, c, small_value(rng)));
+            }
+        }
+    }
+    Csr::from_triplets(rows, cols, trip)
+}
+
+/// Random CSR with a *skewed* (power-law-ish) row-nnz distribution: a few
+/// heavy rows and many light rows. This is the shape that creates the load
+/// imbalance of Fig 3(b) on data-local architectures.
+pub fn skewed_csr(rng: &mut SplitMix64, rows: usize, cols: usize, density: f64) -> Csr {
+    let target_nnz = ((rows * cols) as f64 * density).round() as usize;
+    // Zipf-like row weights.
+    let weights: Vec<f64> = (0..rows).map(|r| 1.0 / (1.0 + r as f64)).collect();
+    let wsum: f64 = weights.iter().sum();
+    let mut order: Vec<usize> = (0..rows).collect();
+    rng.shuffle(&mut order);
+    let mut trip = Vec::new();
+    for (rank, &r) in order.iter().enumerate() {
+        let quota =
+            ((weights[rank] / wsum) * target_nnz as f64).round() as usize;
+        let quota = quota.min(cols);
+        for c in rng.sample_indices(cols, quota) {
+            trip.push((r, c, small_value(rng)));
+        }
+    }
+    Csr::from_triplets(rows, cols, trip)
+}
+
+/// Random dense matrix with entries in `[-amp, amp]`.
+pub fn random_dense(rng: &mut SplitMix64, rows: usize, cols: usize, amp: i64) -> Dense {
+    let data = (0..rows * cols)
+        .map(|_| rng.range_i64(-amp, amp) as i16)
+        .collect();
+    Dense::from_vec(rows, cols, data)
+}
+
+/// Random dense vector.
+pub fn random_vec(rng: &mut SplitMix64, n: usize, amp: i64) -> Vec<i16> {
+    (0..n).map(|_| rng.range_i64(-amp, amp) as i16).collect()
+}
+
+/// §4.2 SpMSpM sparsity regimes. Sparsity = fraction of *zeros*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparsityRegime {
+    /// S1: both matrices moderately sparse (30–60% sparsity).
+    S1,
+    /// S2: A highly sparse (60–90%), B moderately sparse.
+    S2,
+    /// S3: A moderately sparse, B highly sparse.
+    S3,
+    /// S4: both highly sparse.
+    S4,
+}
+
+impl SparsityRegime {
+    pub fn name(self) -> &'static str {
+        match self {
+            SparsityRegime::S1 => "S1",
+            SparsityRegime::S2 => "S2",
+            SparsityRegime::S3 => "S3",
+            SparsityRegime::S4 => "S4",
+        }
+    }
+
+    /// Representative (sparsity_A, sparsity_B) midpoints of each band.
+    pub fn sparsities(self) -> (f64, f64) {
+        match self {
+            SparsityRegime::S1 => (0.45, 0.45),
+            SparsityRegime::S2 => (0.75, 0.45),
+            SparsityRegime::S3 => (0.45, 0.75),
+            SparsityRegime::S4 => (0.75, 0.75),
+        }
+    }
+
+    pub fn all() -> [SparsityRegime; 4] {
+        [
+            SparsityRegime::S1,
+            SparsityRegime::S2,
+            SparsityRegime::S3,
+            SparsityRegime::S4,
+        ]
+    }
+}
+
+/// Generate the (A, B) pair for an SpMSpM regime at the given square size.
+pub fn spmspm_pair(rng: &mut SplitMix64, n: usize, regime: SparsityRegime) -> (Csr, Csr) {
+    let (sa, sb) = regime.sparsities();
+    let a = skewed_csr(rng, n, n, 1.0 - sa);
+    let b = random_csr(rng, n, n, 1.0 - sb);
+    (a, b)
+}
+
+/// A pruned-ResNet-50-like layer matrix: 64x64 at the requested sparsity,
+/// with skewed rows (structured pruning leaves uneven row occupancy). 64x64
+/// INT16 tiles are what fit the 16KB fabric after partitioning, mirroring
+/// how the paper tiles ResNet-50 GEMMs onto the array (§3.1.1).
+pub fn resnet_like_layer(rng: &mut SplitMix64, sparsity: f64) -> Csr {
+    skewed_csr(rng, 64, 64, 1.0 - sparsity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+
+    #[test]
+    fn random_csr_density_tracks_request() {
+        let mut rng = SplitMix64::new(1);
+        let m = random_csr(&mut rng, 64, 64, 0.3);
+        let d = m.density();
+        assert!((d - 0.3).abs() < 0.06, "density {d}");
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn skewed_csr_is_skewed() {
+        let mut rng = SplitMix64::new(2);
+        let m = skewed_csr(&mut rng, 64, 64, 0.3);
+        let nnzs: Vec<f64> = (0..m.rows).map(|r| m.row_nnz(r) as f64).collect();
+        let cv = crate::util::cv(&nnzs);
+        assert!(cv > 0.5, "expected heavy skew, cv={cv}");
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn regimes_order_sparsities() {
+        let (a1, b1) = SparsityRegime::S1.sparsities();
+        let (a2, _) = SparsityRegime::S2.sparsities();
+        let (_, b3) = SparsityRegime::S3.sparsities();
+        assert!(a2 > a1);
+        assert!(b3 > b1);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        forall(10, |rng| {
+            let seed = rng.next_u64();
+            let a = random_csr(&mut SplitMix64::new(seed), 16, 16, 0.4);
+            let b = random_csr(&mut SplitMix64::new(seed), 16, 16, 0.4);
+            ensure(a == b, || "same seed must give same matrix".into())
+        });
+    }
+}

@@ -1,0 +1,320 @@
+//! Graph substrate for the analytics workloads (BFS, SSSP, PageRank):
+//! weighted adjacency-list graphs, a synthetic infect-dublin-like contact
+//! graph, reference algorithms, and a METIS-like balanced partitioner
+//! (greedy BFS-grow — see `DESIGN.md` §3 substitutions).
+
+use crate::util::SplitMix64;
+
+/// Distance value used as "unreached" (fits INT16 with headroom for +w).
+pub const INF: i16 = i16::MAX / 2;
+
+/// Directed weighted graph in adjacency-list form.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub num_vertices: usize,
+    /// `adj[v]` = list of (neighbor, weight).
+    pub adj: Vec<Vec<(usize, i16)>>,
+}
+
+impl Graph {
+    pub fn new(num_vertices: usize) -> Self {
+        Graph {
+            num_vertices,
+            adj: vec![Vec::new(); num_vertices],
+        }
+    }
+
+    pub fn add_edge(&mut self, u: usize, v: usize, w: i16) {
+        assert!(u < self.num_vertices && v < self.num_vertices);
+        self.adj[u].push((v, w));
+    }
+
+    /// Add edges in both directions (contact graphs are undirected).
+    pub fn add_undirected(&mut self, u: usize, v: usize, w: i16) {
+        self.add_edge(u, v, w);
+        self.add_edge(v, u, w);
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum()
+    }
+
+    pub fn out_degree(&self, v: usize) -> usize {
+        self.adj[v].len()
+    }
+
+    /// Synthetic stand-in for the infect-dublin contact network \[41\]:
+    /// 410 vertices, ~2765 undirected contact edges. Construction: a ring
+    /// lattice (small-world backbone, contacts are locally clustered) plus
+    /// preferential-attachment shortcuts to a few hub individuals (the
+    /// heavy-tailed contact distribution typical of face-to-face datasets).
+    /// Weights are small positive "contact duration" integers.
+    pub fn infect_dublin_like(rng: &mut SplitMix64) -> Graph {
+        Self::synthetic_contact(rng, 410, 2765)
+    }
+
+    /// General synthetic contact graph with `n` vertices and ~`target_edges`
+    /// directed edges (counting both directions of each contact).
+    pub fn synthetic_contact(rng: &mut SplitMix64, n: usize, target_edges: usize) -> Graph {
+        let mut g = Graph::new(n);
+        let mut seen = std::collections::HashSet::new();
+        let add = |g: &mut Graph,
+                       seen: &mut std::collections::HashSet<(usize, usize)>,
+                       rng: &mut SplitMix64,
+                       u: usize,
+                       v: usize| {
+            if u == v {
+                return;
+            }
+            let key = (u.min(v), u.max(v));
+            if seen.insert(key) {
+                let w = 1 + rng.below(7) as i16;
+                g.add_undirected(u, v, w);
+            }
+        };
+        // Ring lattice: each vertex contacts its 2 nearest neighbors.
+        for u in 0..n {
+            add(&mut g, &mut seen, rng, u, (u + 1) % n);
+            add(&mut g, &mut seen, rng, u, (u + 2) % n);
+        }
+        // Hubs: 5% of vertices attract preferential shortcuts.
+        let hubs: Vec<usize> = rng.sample_indices(n, (n / 20).max(1));
+        while g.num_edges() < target_edges {
+            let u = rng.below_usize(n);
+            let v = if rng.chance(0.4) {
+                hubs[rng.below_usize(hubs.len())]
+            } else {
+                rng.below_usize(n)
+            };
+            add(&mut g, &mut seen, rng, u, v);
+        }
+        g
+    }
+
+    // --- reference algorithms --------------------------------------------
+
+    /// BFS levels from `src` (INF for unreachable).
+    pub fn bfs(&self, src: usize) -> Vec<i16> {
+        let mut level = vec![INF; self.num_vertices];
+        level[src] = 0;
+        let mut frontier = std::collections::VecDeque::from([src]);
+        while let Some(u) = frontier.pop_front() {
+            for &(v, _) in &self.adj[u] {
+                if level[v] == INF {
+                    level[v] = level[u] + 1;
+                    frontier.push_back(v);
+                }
+            }
+        }
+        level
+    }
+
+    /// Single-source shortest paths (Bellman-Ford style; weights are
+    /// positive small ints so this matches Dijkstra).
+    pub fn sssp(&self, src: usize) -> Vec<i16> {
+        let mut dist = vec![INF; self.num_vertices];
+        dist[src] = 0;
+        // Worklist relaxation, the same fixpoint the fabric computes.
+        let mut work = std::collections::VecDeque::from([src]);
+        while let Some(u) = work.pop_front() {
+            for &(v, w) in &self.adj[u] {
+                let nd = dist[u].saturating_add(w).min(INF);
+                if nd < dist[v] {
+                    dist[v] = nd;
+                    work.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    /// Fixed-point integer PageRank: `iters` synchronous iterations of
+    /// `rank'[v] = base + sum_{u->v} rank[u] / deg(u)` with ranks scaled by
+    /// `SCALE` — integer arithmetic matching the INT16 fabric exactly.
+    pub fn pagerank_int(&self, iters: usize) -> Vec<i16> {
+        const SCALE: i32 = 4096; // fixed-point 1.0
+        let n = self.num_vertices as i32;
+        // damping 0.5 keeps everything well inside i16 at our graph sizes
+        // while preserving the convergence structure.
+        let base = (SCALE / 2) / n.max(1);
+        let mut rank: Vec<i16> = vec![(SCALE / n.max(1)) as i16; self.num_vertices];
+        for _ in 0..iters {
+            let mut next = vec![base as i16; self.num_vertices];
+            for u in 0..self.num_vertices {
+                let deg = self.out_degree(u) as i16;
+                if deg == 0 {
+                    continue;
+                }
+                let contrib = (rank[u] / deg) / 2; // damping 0.5
+                for &(v, _) in &self.adj[u] {
+                    next[v] = next[v].wrapping_add(contrib);
+                }
+            }
+            rank = next;
+        }
+        rank
+    }
+
+    // --- partitioning ------------------------------------------------------
+
+    /// METIS-like balanced partitioner (substitution per DESIGN.md): greedy
+    /// BFS-grow. Picks seed vertices spread across the graph, grows each
+    /// part by BFS until it reaches `ceil(n/parts)` vertices, assigning
+    /// leftover vertices round-robin. Returns `part[v] in [0, parts)`.
+    pub fn partition(&self, parts: usize, rng: &mut SplitMix64) -> Vec<usize> {
+        let n = self.num_vertices;
+        let cap = crate::util::ceil_div(n, parts);
+        let mut part = vec![usize::MAX; n];
+        let mut sizes = vec![0usize; parts];
+        let seeds = rng.sample_indices(n, parts.min(n));
+        let mut frontiers: Vec<std::collections::VecDeque<usize>> = seeds
+            .iter()
+            .map(|&s| std::collections::VecDeque::from([s]))
+            .collect();
+        // Round-robin BFS growth keeps parts balanced and connected-ish.
+        let mut progress = true;
+        while progress {
+            progress = false;
+            for p in 0..frontiers.len() {
+                if sizes[p] >= cap {
+                    continue;
+                }
+                while let Some(v) = frontiers[p].pop_front() {
+                    if part[v] != usize::MAX {
+                        continue;
+                    }
+                    part[v] = p;
+                    sizes[p] += 1;
+                    for &(u, _) in &self.adj[v] {
+                        if part[u] == usize::MAX {
+                            frontiers[p].push_back(u);
+                        }
+                    }
+                    progress = true;
+                    break;
+                }
+            }
+        }
+        // Disconnected leftovers: round-robin into the lightest parts.
+        for v in 0..n {
+            if part[v] == usize::MAX {
+                let p = (0..parts).min_by_key(|&p| sizes[p]).unwrap();
+                part[v] = p;
+                sizes[p] += 1;
+            }
+        }
+        part
+    }
+
+    /// Edge-cut of a partition (diagnostics / partitioner quality tests).
+    pub fn edge_cut(&self, part: &[usize]) -> usize {
+        let mut cut = 0;
+        for u in 0..self.num_vertices {
+            for &(v, _) in &self.adj[u] {
+                if part[u] != part[v] {
+                    cut += 1;
+                }
+            }
+        }
+        cut
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+
+    #[test]
+    fn infect_dublin_like_matches_published_size() {
+        let mut rng = SplitMix64::new(41);
+        let g = Graph::infect_dublin_like(&mut rng);
+        assert_eq!(g.num_vertices, 410);
+        // 2765 contacts => ~5530 directed edges; builder may slightly
+        // overshoot by one contact.
+        assert!(g.num_edges() >= 2765, "edges {}", g.num_edges());
+    }
+
+    #[test]
+    fn bfs_levels_on_path() {
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1, 1);
+        g.add_edge(1, 2, 1);
+        g.add_edge(2, 3, 1);
+        assert_eq!(g.bfs(0), vec![0, 1, 2, 3]);
+        assert_eq!(g.bfs(3), vec![INF, INF, INF, 0]);
+    }
+
+    #[test]
+    fn sssp_prefers_lighter_path() {
+        let mut g = Graph::new(3);
+        g.add_edge(0, 2, 10);
+        g.add_edge(0, 1, 1);
+        g.add_edge(1, 2, 2);
+        assert_eq!(g.sssp(0), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn sssp_triangle_inequality_property() {
+        forall(30, |rng| {
+            let g = Graph::synthetic_contact(rng, 40, 150);
+            let dist = g.sssp(0);
+            for u in 0..g.num_vertices {
+                if dist[u] >= INF {
+                    continue;
+                }
+                for &(v, w) in &g.adj[u] {
+                    if dist[v] > dist[u].saturating_add(w) {
+                        return Err(format!("relax violated at {u}->{v}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pagerank_conserves_positivity() {
+        let mut rng = SplitMix64::new(5);
+        let g = Graph::synthetic_contact(&mut rng, 64, 300);
+        let r = g.pagerank_int(5);
+        assert!(r.iter().all(|&x| x >= 0));
+        assert!(r.iter().any(|&x| x > 0));
+    }
+
+    #[test]
+    fn partition_is_balanced_and_total() {
+        forall(20, |rng| {
+            let g = Graph::synthetic_contact(rng, 100, 400);
+            let parts = 16;
+            let part = g.partition(parts, rng);
+            ensure(part.iter().all(|&p| p < parts), || "part id range".into())?;
+            let mut sizes = vec![0usize; parts];
+            for &p in &part {
+                sizes[p] += 1;
+            }
+            let cap = crate::util::ceil_div(100, parts);
+            ensure(sizes.iter().all(|&s| s <= cap + 1), || {
+                format!("unbalanced: {sizes:?}")
+            })
+        });
+    }
+
+    #[test]
+    fn partition_beats_random_cut() {
+        let mut rng = SplitMix64::new(77);
+        let g = Graph::synthetic_contact(&mut rng, 200, 800);
+        let part = g.partition(16, &mut rng);
+        let cut = g.edge_cut(&part);
+        // Random assignment cuts ~15/16 of edges; BFS-grow must do better.
+        let mut rand_part = vec![0usize; 200];
+        for p in rand_part.iter_mut() {
+            *p = rng.below_usize(16);
+        }
+        let rand_cut = g.edge_cut(&rand_part);
+        assert!(
+            cut < rand_cut,
+            "BFS-grow cut {cut} should beat random {rand_cut}"
+        );
+    }
+}

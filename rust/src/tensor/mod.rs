@@ -1,0 +1,14 @@
+//! Tensor substrate: sparse/dense matrix formats, reference kernels,
+//! reproducible sparsity generators, ELL padding for the XLA golden models,
+//! and graph structures for the analytics workloads.
+
+pub mod csr;
+pub mod dense;
+pub mod ell;
+pub mod gen;
+pub mod graph;
+
+pub use csr::Csr;
+pub use dense::Dense;
+pub use ell::Ell;
+pub use graph::Graph;

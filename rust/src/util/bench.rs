@@ -1,0 +1,52 @@
+//! Minimal benchmark support for the `cargo bench` targets.
+//!
+//! The offline build environment vendors no `criterion`, so the bench
+//! binaries (`rust/benches/*.rs`, `harness = false`) use this helper: it
+//! runs a closure a warmup + N measured iterations and prints
+//! median/mean/min wall-times in criterion-like format.
+
+use std::time::Instant;
+
+/// Measure `f` over `iters` runs (after one warmup) and print a summary
+/// line. Returns the median seconds per run.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean: f64 = times.iter().sum::<f64>() / times.len() as f64;
+    println!(
+        "bench {name:<28} median {:>10.3} ms  mean {:>10.3} ms  min {:>10.3} ms  ({iters} runs)",
+        median * 1e3,
+        mean * 1e3,
+        times[0] * 1e3
+    );
+    median
+}
+
+/// Format a throughput line (items per second).
+pub fn throughput(name: &str, items: u64, secs: f64) {
+    println!(
+        "bench {name:<28} throughput {:>12.0} items/s ({items} items in {:.3} ms)",
+        items as f64 / secs,
+        secs * 1e3
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_positive_median() {
+        let m = bench("noop", 3, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(m >= 0.0);
+    }
+}

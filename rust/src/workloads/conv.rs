@@ -1,0 +1,139 @@
+//! Conv: single-channel 2-D valid convolution.
+//!
+//! §5.1: "Nexus Machine efficiently handles Conv by replicating filters
+//! across PEs with minimal overhead" — no im2col. Each input pixel's owner
+//! PE holds a *tap table*: the filter coefficients paired with the output
+//! pixels that this input contributes to (the filter is thereby replicated
+//! in every PE's local memory). A pixel's static AM triggers a PerDest
+//! streaming decode that fans `MUL(pixel, f[i,j])` AMs out to the owners
+//! of the affected outputs, where they accumulate.
+
+use super::{Built, Tiles};
+use crate::am::Message;
+use crate::compiler::{partition, ProgramBuilder};
+use crate::config::ArchConfig;
+use crate::isa::{ConfigEntry, Opcode};
+use crate::pe::{StreamElem, StreamMode};
+use crate::tensor::Dense;
+
+pub fn build(input: &Dense, filter: &Dense, cfg: &ArchConfig) -> Built {
+    assert!(filter.rows <= input.rows && filter.cols <= input.cols);
+    let oh = input.rows - filter.rows + 1;
+    let ow = input.cols - filter.cols + 1;
+    let p = cfg.num_pes();
+    let inrow_part = partition::uniform_blocks(input.rows, p);
+    let outrow_part = partition::uniform_blocks(oh, p);
+
+    let mut b = ProgramBuilder::new("conv", cfg);
+
+    // Output pixels, dense rows at their owners.
+    let mut out_addr = vec![0u16; oh * ow];
+    for h in 0..oh {
+        let base = b.place(outrow_part[h], &vec![0i16; ow]);
+        for w in 0..ow {
+            out_addr[h * ow + w] = base + w as u16;
+        }
+    }
+
+    // Config chain: Stream(static) -> MUL -> ACCUM.
+    let pc_acc = b.config(ConfigEntry::new(Opcode::Accum, 0).res_addr());
+    let pc_mul = b.config(ConfigEntry::new(Opcode::Mul, pc_acc));
+
+    // Tap tables + one static AM per input pixel.
+    let mut work_taps = 0u64;
+    for h in 0..input.rows {
+        for w in 0..input.cols {
+            let mut taps = Vec::new();
+            for i in 0..filter.rows {
+                for j in 0..filter.cols {
+                    // input(h,w) contributes to out(h-i, w-j) when valid.
+                    let (Some(ohh), Some(oww)) = (h.checked_sub(i), w.checked_sub(j)) else {
+                        continue;
+                    };
+                    if ohh >= oh || oww >= ow {
+                        continue;
+                    }
+                    taps.push(StreamElem {
+                        value: filter.get(i, j),
+                        aux: out_addr[ohh * ow + oww],
+                        dest_pe: outrow_part[ohh] as u8,
+                        mode: StreamMode::PerDest,
+                    });
+                }
+            }
+            if taps.is_empty() {
+                continue;
+            }
+            work_taps += taps.len() as u64;
+            let pe = inrow_part[h];
+            let base = b.stream(pe, &taps);
+            let key = b.keyed_trigger(pe, base, taps.len() as u16);
+            let mut am = Message::new();
+            am.opcode = Opcode::Stream;
+            am.n_pc = pc_mul;
+            am.op1 = input.get(h, w) as u16; // the pixel value rides along
+            am.op2 = key;
+            am.op2_is_addr = true;
+            am.res_is_addr = true; // emitted AMs' result is an address
+            am.push_dest(pe as u8); // stream decodes locally
+            b.static_am(pe, am);
+        }
+    }
+
+    for h in 0..oh {
+        for w in 0..ow {
+            b.output(outrow_part[h], out_addr[h * ow + w]);
+        }
+    }
+
+    Built {
+        name: "conv".into(),
+        tiles: Tiles::Static(vec![b.build()]),
+        expected: input.conv2d_valid(filter).data,
+        work_ops: 2 * work_taps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::NexusFabric;
+    use crate::tensor::gen;
+    use crate::util::SplitMix64;
+    use crate::workloads::validate_on_fabric;
+
+    #[test]
+    fn conv_matches_reference() {
+        let mut rng = SplitMix64::new(41);
+        let input = gen::random_dense(&mut rng, 10, 10, 3);
+        let filter = gen::random_dense(&mut rng, 3, 3, 2);
+        let cfg = ArchConfig::nexus();
+        let built = build(&input, &filter, &cfg);
+        let mut f = NexusFabric::new(cfg);
+        validate_on_fabric(&mut f, &built).unwrap();
+        f.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn conv_identity_filter_is_copy() {
+        let mut rng = SplitMix64::new(42);
+        let input = gen::random_dense(&mut rng, 8, 8, 3);
+        let filter = Dense::from_vec(1, 1, vec![1]);
+        let cfg = ArchConfig::nexus();
+        let built = build(&input, &filter, &cfg);
+        assert_eq!(built.expected, input.data);
+        let mut f = NexusFabric::new(cfg);
+        validate_on_fabric(&mut f, &built).unwrap();
+    }
+
+    #[test]
+    fn conv_on_tia() {
+        let mut rng = SplitMix64::new(43);
+        let input = gen::random_dense(&mut rng, 9, 9, 3);
+        let filter = gen::random_dense(&mut rng, 2, 2, 2);
+        let cfg = ArchConfig::tia();
+        let built = build(&input, &filter, &cfg);
+        let mut f = NexusFabric::new(cfg);
+        validate_on_fabric(&mut f, &built).unwrap();
+    }
+}

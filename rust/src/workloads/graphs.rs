@@ -1,0 +1,299 @@
+//! Graph analytics: BFS, SSSP, PageRank (§4.2), on adjacency lists
+//! partitioned with the METIS-substitute BFS-grow partitioner.
+//!
+//! BFS and SSSP use the fabric's *conditional re-emission* path: every
+//! vertex's distance word carries a trigger descriptor pointing at its
+//! out-edge stream table. An `ACCMIN` AM that improves `dist[v]` re-fires
+//! the stream, fanning `ADD(dist, w)` AMs to the neighbors' owners
+//! (PerDest mode); failed relaxations die silently — the asynchronous,
+//! data-driven fixpoint the paper's execution model is built for.
+//!
+//! PageRank is host-iterated (§3.1.4 tile synchronization): each iteration
+//! is a tile whose static AMs carry one edge's contribution
+//! `rank[u] / (2·deg(u))` into `next[v]`, with ranks reloaded from the
+//! previous tile's output by the lightweight runtime manager.
+
+use super::{Built, Tiles};
+use crate::am::Message;
+use crate::compiler::{Program, ProgramBuilder};
+use crate::config::ArchConfig;
+use crate::isa::{ConfigEntry, Opcode};
+use crate::pe::{StreamElem, StreamMode};
+use crate::tensor::graph::INF;
+use crate::tensor::Graph;
+use crate::util::SplitMix64;
+
+/// Shared BFS/SSSP builder: BFS is SSSP with unit weights.
+fn build_relax(name: &str, g: &Graph, src: usize, unit_weights: bool, cfg: &ArchConfig) -> Built {
+    let p = cfg.num_pes();
+    let mut rng = SplitMix64::new(cfg.seed ^ 0x9A4B);
+    let part = g.partition(p, &mut rng);
+
+    let mut b = ProgramBuilder::new(name, cfg);
+    // dist[v] at its owner, INF-initialized, with the out-edge trigger.
+    let mut dist_addr = vec![0u16; g.num_vertices];
+    for v in 0..g.num_vertices {
+        dist_addr[v] = b.place(part[v], &[INF]);
+    }
+    for u in 0..g.num_vertices {
+        let elems: Vec<StreamElem> = g.adj[u]
+            .iter()
+            .map(|&(v, w)| StreamElem {
+                value: if unit_weights { 1 } else { w },
+                aux: dist_addr[v],
+                dest_pe: part[v] as u8,
+                mode: StreamMode::PerDest,
+            })
+            .collect();
+        if elems.is_empty() {
+            continue;
+        }
+        let base = b.stream(part[u], &elems);
+        b.trigger(part[u], dist_addr[u], base, elems.len() as u16);
+    }
+
+    // Config ring: ACCMIN improvement -> stream emits ADD -> ACCMIN -> ...
+    let pc_min = b.config(ConfigEntry::new(Opcode::AccMin, 0).res_addr());
+    let pc_add = b.config(ConfigEntry::new(Opcode::Add, pc_min));
+
+    // Seed AM: relax dist[src] to 0.
+    let mut am = Message::new();
+    am.opcode = Opcode::AccMin;
+    am.n_pc = pc_add;
+    am.op1 = 0;
+    am.result = dist_addr[src];
+    am.res_is_addr = true;
+    am.push_dest(part[src] as u8);
+    b.static_am(part[src], am);
+
+    for v in 0..g.num_vertices {
+        b.output(part[v], dist_addr[v]);
+    }
+    let mut prog = b.build();
+    // Close the config ring: AccMin's next entry is the ADD the re-fired
+    // stream emits. (Entries were interned before the ring closed.)
+    prog.config[pc_min as usize] = ConfigEntry::new(Opcode::AccMin, pc_add).res_addr();
+
+    let expected = if unit_weights { g.bfs(src) } else { g.sssp(src) };
+    Built {
+        name: name.to_string(),
+        tiles: Tiles::Static(vec![prog]),
+        expected,
+        work_ops: relaxation_work(g, src, unit_weights),
+    }
+}
+
+/// Algorithmic work of the asynchronous relaxation: one ADD + one compare
+/// per edge relaxation attempt in the reference worklist algorithm.
+pub fn relaxation_work(g: &Graph, src: usize, unit_weights: bool) -> u64 {
+    let mut dist = vec![INF; g.num_vertices];
+    dist[src] = 0;
+    let mut work = std::collections::VecDeque::from([src]);
+    let mut attempts = 0u64;
+    while let Some(u) = work.pop_front() {
+        for &(v, w) in &g.adj[u] {
+            attempts += 1;
+            let w = if unit_weights { 1 } else { w };
+            let nd = dist[u].saturating_add(w).min(INF);
+            if nd < dist[v] {
+                dist[v] = nd;
+                work.push_back(v);
+            }
+        }
+    }
+    2 * attempts
+}
+
+pub fn build_bfs(g: &Graph, src: usize, cfg: &ArchConfig) -> Built {
+    build_relax("bfs", g, src, true, cfg)
+}
+
+pub fn build_sssp(g: &Graph, src: usize, cfg: &ArchConfig) -> Built {
+    build_relax("sssp", g, src, false, cfg)
+}
+
+/// Fixed-point integer PageRank, `iters` host-synchronized tiles.
+pub fn build_pagerank(g: &Graph, iters: usize, cfg: &ArchConfig) -> Built {
+    const SCALE: i32 = 4096;
+    let n = g.num_vertices as i32;
+    let base = ((SCALE / 2) / n.max(1)) as i16;
+    let init = vec![(SCALE / n.max(1)) as i16; g.num_vertices];
+
+    let p = cfg.num_pes();
+    let mut rng = SplitMix64::new(cfg.seed ^ 0x77C1);
+    let part = g.partition(p, &mut rng);
+
+    // Pre-compute degrees; vertices with deg 0 contribute nothing.
+    let deg: Vec<u16> = (0..g.num_vertices).map(|u| g.out_degree(u) as u16).collect();
+
+    let g = g.clone();
+    let cfg2 = cfg.clone();
+    let gen = move |prev: &[i16], _iter: usize| -> Program {
+        let rank: &[i16] = if prev.is_empty() { &init } else { prev };
+        let mut b = ProgramBuilder::new("pagerank", &cfg2);
+        // rank[u] and next[v] at the partition owners.
+        let mut rank_addr = vec![0u16; g.num_vertices];
+        let mut next_addr = vec![0u16; g.num_vertices];
+        for v in 0..g.num_vertices {
+            rank_addr[v] = b.place(part[v], &[rank[v]]);
+        }
+        for v in 0..g.num_vertices {
+            next_addr[v] = b.place(part[v], &[base]);
+        }
+        // Config chain: LOAD1(static) -> DIV -> ACCUM.
+        let pc_acc = b.config(ConfigEntry::new(Opcode::Accum, 0).res_addr());
+        let pc_div = b.config(ConfigEntry::new(Opcode::Div, pc_acc));
+        for u in 0..g.num_vertices {
+            if deg[u] == 0 {
+                continue;
+            }
+            for &(v, _) in &g.adj[u] {
+                let mut am = Message::new();
+                am.opcode = Opcode::LoadOp1; // op1 <- rank[u]
+                am.n_pc = pc_div;
+                am.op1 = rank_addr[u];
+                am.op1_is_addr = true;
+                am.op2 = 2 * deg[u]; // damping 0.5: divide by 2*deg
+                am.result = next_addr[v];
+                am.res_is_addr = true;
+                am.push_dest(part[u] as u8);
+                am.push_dest(part[v] as u8);
+                b.static_am(part[u], am);
+            }
+        }
+        for v in 0..g.num_vertices {
+            b.output(part[v], next_addr[v]);
+        }
+        b.build()
+    };
+
+    let expected = g_ref_pagerank(&gen, iters);
+    // 1 DIV + 1 add per edge per iteration.
+    let edges: u64 = expected_edges(&gen);
+    Built {
+        name: "pagerank".into(),
+        tiles: Tiles::Iterative {
+            iters,
+            gen: Box::new(gen),
+        },
+        expected,
+        work_ops: 2 * edges * iters as u64,
+    }
+}
+
+/// Reference PageRank via the same generator shapes (avoids re-deriving the
+/// graph): runs `Graph::pagerank_int` on a reconstructed graph is not
+/// possible from the closure, so this helper just replays the integer
+/// recurrence the tiles encode. Kept separate for clarity.
+fn g_ref_pagerank(
+    gen: &(dyn Fn(&[i16], usize) -> Program + Send + Sync),
+    iters: usize,
+) -> Vec<i16> {
+    // Execute the tiles *functionally*: interpret each program's static AMs
+    // directly (LOAD1 -> DIV -> ACCUM is a pure reduction).
+    let mut prev: Vec<i16> = Vec::new();
+    for i in 0..iters {
+        let prog = gen(&prev, i);
+        // Collect per-(pe,addr) memory images.
+        let mut mem: std::collections::HashMap<(usize, u16), i16> = std::collections::HashMap::new();
+        for (pe, img) in prog.pes.iter().enumerate() {
+            for &(addr, val) in &img.dmem_init {
+                mem.insert((pe, addr), val as i16);
+            }
+        }
+        for (_pe, img) in prog.pes.iter().enumerate() {
+            for am in &img.static_ams {
+                // LOAD1 at dest[0], DIV by op2, ACCUM at dest[1]/result.
+                let rank = mem[&(am.dests[0] as usize, am.op1)];
+                let contrib = if am.op2 == 0 { 0 } else { rank / am.op2 as i16 };
+                let key = (am.dests[1] as usize, am.result);
+                *mem.get_mut(&key).unwrap() = mem[&key].wrapping_add(contrib);
+            }
+        }
+        prev = prog
+            .outputs
+            .iter()
+            .map(|&(pe, addr)| mem[&(pe, addr)])
+            .collect();
+    }
+    prev
+}
+
+fn expected_edges(gen: &(dyn Fn(&[i16], usize) -> Program + Send + Sync)) -> u64 {
+    gen(&[], 0).num_static_ams() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::NexusFabric;
+    use crate::workloads::{run_on_fabric, validate_on_fabric};
+
+    fn small_graph(seed: u64, n: usize, contacts: usize) -> Graph {
+        let mut rng = SplitMix64::new(seed);
+        Graph::synthetic_contact(&mut rng, n, contacts)
+    }
+
+    #[test]
+    fn bfs_matches_reference() {
+        let g = small_graph(51, 48, 180);
+        let cfg = ArchConfig::nexus();
+        let built = build_bfs(&g, 0, &cfg);
+        let mut f = NexusFabric::new(cfg);
+        validate_on_fabric(&mut f, &built).unwrap();
+        f.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn sssp_matches_reference() {
+        let g = small_graph(52, 48, 180);
+        let cfg = ArchConfig::nexus();
+        let built = build_sssp(&g, 3, &cfg);
+        let mut f = NexusFabric::new(cfg);
+        validate_on_fabric(&mut f, &built).unwrap();
+    }
+
+    #[test]
+    fn sssp_on_tia_matches() {
+        let g = small_graph(53, 32, 120);
+        let cfg = ArchConfig::tia();
+        let built = build_sssp(&g, 0, &cfg);
+        let mut f = NexusFabric::new(cfg);
+        validate_on_fabric(&mut f, &built).unwrap();
+    }
+
+    #[test]
+    fn bfs_unreachable_vertices_stay_inf() {
+        // Two disconnected cliques: vertices in the far clique keep INF.
+        let mut g = Graph::new(8);
+        for u in 0..4 {
+            for v in (u + 1)..4 {
+                g.add_undirected(u, v, 1);
+                g.add_undirected(u + 4, v + 4, 1);
+            }
+        }
+        let cfg = ArchConfig::nexus();
+        let built = build_bfs(&g, 0, &cfg);
+        let mut f = NexusFabric::new(cfg);
+        let out = run_on_fabric(&mut f, &built).unwrap();
+        assert!(out[4..].iter().all(|&d| d == INF));
+        assert_eq!(out[0], 0);
+    }
+
+    #[test]
+    fn pagerank_matches_reference_integer_recurrence() {
+        let g = small_graph(54, 40, 150);
+        let cfg = ArchConfig::nexus();
+        let built = build_pagerank(&g, 2, &cfg);
+        // Cross-check the functional reference against Graph::pagerank_int.
+        assert_eq!(built.expected, g.pagerank_int(2));
+        let mut f = NexusFabric::new(cfg);
+        validate_on_fabric(&mut f, &built).unwrap();
+    }
+
+    #[test]
+    fn relaxation_work_positive_on_connected_graph() {
+        let g = small_graph(55, 24, 100);
+        assert!(relaxation_work(&g, 0, true) > 0);
+    }
+}

@@ -1,0 +1,288 @@
+//! The evaluation workloads (§4.2): sparse (SpMV, SpMSpM S1–S4, SpM+SpM,
+//! SDDMM), dense (MatMul, MV, Conv), and graph (BFS, SSSP, PageRank).
+//!
+//! Each workload module is the paper's *lightweight runtime manager* (§3.6)
+//! for that kernel: it walks the partitioned tensors and emits one static AM
+//! per element of the first operand, together with the per-PE data images,
+//! stream tables, trigger descriptors, and the replicated config-memory
+//! chain that the dynamic AMs morph through.
+//!
+//! A [`Spec`] describes a workload instance (the tensors); [`Spec::build`]
+//! compiles it for a fabric configuration into a [`Built`] program-with-
+//! expected-output; [`run_on_fabric`] executes and returns the outputs.
+
+pub mod conv;
+pub mod graphs;
+pub mod sddmm;
+pub mod spadd;
+pub mod spmspm;
+pub mod spmv;
+
+use crate::compiler::{Program, ProgramBuilder};
+use crate::config::ArchConfig;
+use crate::fabric::{DeadlockError, NexusFabric};
+use crate::tensor::gen::SparsityRegime;
+use crate::tensor::{Csr, Dense, Graph};
+use crate::util::SplitMix64;
+
+/// Tile sequence of a compiled workload.
+pub enum Tiles {
+    /// Independent tiles, executed in order (most workloads: one tile).
+    Static(Vec<Program>),
+    /// Host-managed iterative tiles (PageRank): the runtime manager
+    /// regenerates tile `i` from tile `i-1`'s output — §3.1.4's "data tiles
+    /// are executed sequentially in a global synchronized manner".
+    Iterative {
+        iters: usize,
+        gen: Box<dyn Fn(&[i16], usize) -> Program + Send + Sync>,
+    },
+}
+
+/// A workload compiled for one fabric configuration.
+pub struct Built {
+    pub name: String,
+    pub tiles: Tiles,
+    /// Reference output (the simulator must match this bit-for-bit).
+    pub expected: Vec<i16>,
+    /// Algorithmic useful operations (multiplies + adds + compares the
+    /// *kernel* requires), identical across architectures — the numerator
+    /// for normalized performance and MOPS comparisons.
+    pub work_ops: u64,
+}
+
+/// Execute a built workload on a fabric, returning the final outputs.
+pub fn run_on_fabric(f: &mut NexusFabric, built: &Built) -> Result<Vec<i16>, DeadlockError> {
+    match &built.tiles {
+        Tiles::Static(tiles) => {
+            let mut out = Vec::new();
+            for t in tiles {
+                out.extend(f.run_program(t)?);
+            }
+            Ok(out)
+        }
+        Tiles::Iterative { iters, gen } => {
+            let mut prev: Vec<i16> = Vec::new();
+            for i in 0..*iters {
+                let p = gen(&prev, i);
+                prev = f.run_program(&p)?;
+            }
+            Ok(prev)
+        }
+    }
+}
+
+/// Execute and validate against the reference output.
+pub fn validate_on_fabric(f: &mut NexusFabric, built: &Built) -> Result<(), String> {
+    let out = run_on_fabric(f, built).map_err(|e| e.to_string())?;
+    if out.len() != built.expected.len() {
+        return Err(format!(
+            "{}: output length {} != expected {}",
+            built.name,
+            out.len(),
+            built.expected.len()
+        ));
+    }
+    for (i, (a, e)) in out.iter().zip(&built.expected).enumerate() {
+        if a != e {
+            return Err(format!(
+                "{}: mismatch at [{i}]: fabric {a}, reference {e}",
+                built.name
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// A workload instance: the kernel plus its concrete tensors.
+pub enum Spec {
+    Spmv { a: Csr, x: Vec<i16> },
+    SpMSpM { a: Csr, b: Csr, regime: SparsityRegime },
+    SpAdd { a: Csr, b: Csr },
+    Sddmm { mask: Csr, a: Dense, b: Dense },
+    MatMul { a: Dense, b: Dense },
+    Mv { a: Dense, x: Vec<i16> },
+    Conv { input: Dense, filter: Dense },
+    Bfs { g: Graph, src: usize },
+    Sssp { g: Graph, src: usize },
+    PageRank { g: Graph, iters: usize },
+}
+
+impl Spec {
+    /// Display name, with the sparsity annotation of Fig 11's x-axis.
+    pub fn name(&self) -> String {
+        match self {
+            Spec::Spmv { a, .. } => format!("SpMV({:.0}%)", a.sparsity() * 100.0),
+            Spec::SpMSpM { regime, .. } => format!("SpMSpM-{}", regime.name()),
+            Spec::SpAdd { a, .. } => format!("SpM+SpM({:.0}%)", a.sparsity() * 100.0),
+            Spec::Sddmm { mask, .. } => format!("SDDMM({:.0}%)", mask.sparsity() * 100.0),
+            Spec::MatMul { .. } => "MatMul".into(),
+            Spec::Mv { .. } => "MV".into(),
+            Spec::Conv { .. } => "Conv".into(),
+            Spec::Bfs { .. } => "BFS".into(),
+            Spec::Sssp { .. } => "SSSP".into(),
+            Spec::PageRank { .. } => "PageRank".into(),
+        }
+    }
+
+    /// Workload class (sparse / dense / graph) for report grouping.
+    pub fn class(&self) -> &'static str {
+        match self {
+            Spec::Spmv { .. } | Spec::SpMSpM { .. } | Spec::SpAdd { .. } | Spec::Sddmm { .. } => {
+                "sparse"
+            }
+            Spec::MatMul { .. } | Spec::Mv { .. } | Spec::Conv { .. } => "dense",
+            Spec::Bfs { .. } | Spec::Sssp { .. } | Spec::PageRank { .. } => "graph",
+        }
+    }
+
+    /// Compile for a fabric configuration.
+    pub fn build(&self, cfg: &ArchConfig) -> Built {
+        match self {
+            Spec::Spmv { a, x } => spmv::build("spmv", a, x, cfg),
+            Spec::SpMSpM { a, b, regime } => {
+                spmspm::build_tiled(&format!("spmspm-{}", regime.name()), a, b, cfg)
+            }
+            Spec::SpAdd { a, b } => spadd::build(a, b, cfg),
+            Spec::Sddmm { mask, a, b } => sddmm::build(mask, a, b, cfg),
+            Spec::MatMul { a, b } => {
+                spmspm::build_tiled("matmul", &Csr::from_dense(a), &Csr::from_dense(b), cfg)
+            }
+            Spec::Mv { a, x } => spmv::build("mv", &Csr::from_dense(a), x, cfg),
+            Spec::Conv { input, filter } => conv::build(input, filter, cfg),
+            Spec::Bfs { g, src } => graphs::build_bfs(g, *src, cfg),
+            Spec::Sssp { g, src } => graphs::build_sssp(g, *src, cfg),
+            Spec::PageRank { g, iters } => graphs::build_pagerank(g, *iters, cfg),
+        }
+    }
+
+    /// The loop-body dataflow graph (feeds the Generic-CGRA baseline model
+    /// and the compile-time experiment).
+    pub fn dfg(&self) -> crate::compiler::dfg::Dfg {
+        use crate::compiler::dfg;
+        match self {
+            Spec::Spmv { .. } | Spec::Mv { .. } => dfg::spmv_dfg(),
+            Spec::SpMSpM { .. } | Spec::MatMul { .. } => dfg::spmspm_dfg(),
+            Spec::SpAdd { .. } => dfg::spadd_dfg(),
+            Spec::Sddmm { .. } => dfg::sddmm_dfg(),
+            Spec::Conv { .. } => dfg::conv_dfg(),
+            Spec::Bfs { .. } | Spec::Sssp { .. } => dfg::relax_dfg(),
+            Spec::PageRank { .. } => dfg::pagerank_dfg(),
+        }
+    }
+}
+
+/// The full Fig 11 evaluation suite at fabric-sized workloads: SpMSpM
+/// S1–S4, SpMV, SpM+SpM, SDDMM, MatMul, MV, Conv, BFS, SSSP, PageRank.
+/// Deterministic in `seed`.
+pub fn suite(seed: u64) -> Vec<Spec> {
+    let mut rng = SplitMix64::new(seed);
+    let mut v = Vec::new();
+    for regime in SparsityRegime::all() {
+        let (a, b) = crate::tensor::gen::spmspm_pair(&mut rng, 48, regime);
+        v.push(Spec::SpMSpM { a, b, regime });
+    }
+    // SpMV on a pruned-ResNet-50-like layer (80% sparsity).
+    let a = crate::tensor::gen::skewed_csr(&mut rng, 64, 64, 0.2);
+    let x = crate::tensor::gen::random_vec(&mut rng, 64, 3);
+    v.push(Spec::Spmv { a, x });
+    // SpM+SpM at 70% sparsity.
+    let a = crate::tensor::gen::random_csr(&mut rng, 64, 64, 0.3);
+    let b = crate::tensor::gen::random_csr(&mut rng, 64, 64, 0.3);
+    v.push(Spec::SpAdd { a, b });
+    // SDDMM with a ViTCoD-like 70%-sparse binary mask.
+    let mask = binary_mask(&mut rng, 32, 32, 0.3);
+    let a = crate::tensor::gen::random_dense(&mut rng, 32, 16, 3);
+    let b = crate::tensor::gen::random_dense(&mut rng, 16, 32, 3);
+    v.push(Spec::Sddmm { mask, a, b });
+    // Dense: MatMul, MV, Conv.
+    let a = crate::tensor::gen::random_dense(&mut rng, 24, 24, 3);
+    let b = crate::tensor::gen::random_dense(&mut rng, 24, 24, 3);
+    v.push(Spec::MatMul { a, b });
+    let a = crate::tensor::gen::random_dense(&mut rng, 48, 48, 3);
+    let x = crate::tensor::gen::random_vec(&mut rng, 48, 3);
+    v.push(Spec::Mv { a, x });
+    let input = crate::tensor::gen::random_dense(&mut rng, 12, 12, 3);
+    let filter = crate::tensor::gen::random_dense(&mut rng, 3, 3, 2);
+    v.push(Spec::Conv { input, filter });
+    // Graph analytics on an infect-dublin-like contact graph scaled to the
+    // fabric's distributed SRAM.
+    let g = Graph::synthetic_contact(&mut rng, 96, 420);
+    v.push(Spec::Bfs { g: g.clone(), src: 0 });
+    v.push(Spec::Sssp { g: g.clone(), src: 0 });
+    v.push(Spec::PageRank { g, iters: 2 });
+    v
+}
+
+/// Random binary (all-ones) sparse mask — SDDMM masks are sparsity
+/// *patterns* (ViTCoD-style attention masks), not weighted values.
+pub fn binary_mask(rng: &mut SplitMix64, rows: usize, cols: usize, density: f64) -> Csr {
+    let mut trip = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if rng.chance(density) {
+                trip.push((r, c, 1i16));
+            }
+        }
+    }
+    Csr::from_triplets(rows, cols, trip)
+}
+
+/// Place one element per index of a logical 1-D tensor across PEs:
+/// `part[i]` names the owner PE. Returns the (pe, dmem address) of every
+/// element.
+pub struct Placed {
+    pub pe: Vec<usize>,
+    pub addr: Vec<u16>,
+}
+
+pub fn place_vector(b: &mut ProgramBuilder, part: &[usize], values: &[i16]) -> Placed {
+    assert_eq!(part.len(), values.len());
+    let mut pe = Vec::with_capacity(values.len());
+    let mut addr = Vec::with_capacity(values.len());
+    for (i, &v) in values.iter().enumerate() {
+        pe.push(part[i]);
+        addr.push(b.place(part[i], &[v]));
+    }
+    Placed { pe, addr }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_thirteen_workloads() {
+        let s = suite(1);
+        assert_eq!(s.len(), 13);
+        let names: Vec<String> = s.iter().map(|w| w.name()).collect();
+        assert!(names.iter().any(|n| n.starts_with("SpMSpM-S1")));
+        assert!(names.iter().any(|n| n.starts_with("SpMSpM-S4")));
+        assert!(names.iter().any(|n| n == "MatMul"));
+        assert!(names.iter().any(|n| n == "PageRank"));
+    }
+
+    #[test]
+    fn suite_is_deterministic() {
+        let a = suite(7);
+        let b = suite(7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name(), y.name());
+        }
+    }
+
+    #[test]
+    fn binary_mask_values_are_one() {
+        let mut rng = SplitMix64::new(3);
+        let m = binary_mask(&mut rng, 16, 16, 0.4);
+        assert!(m.values.iter().all(|&v| v == 1));
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn classes_cover_three_groups() {
+        let s = suite(1);
+        for class in ["sparse", "dense", "graph"] {
+            assert!(s.iter().any(|w| w.class() == class), "missing {class}");
+        }
+    }
+}

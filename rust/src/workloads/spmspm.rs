@@ -1,0 +1,290 @@
+//! SpMSpM: `C = A * B`, both sparse, via Gustavson's row-wise algorithm
+//! (§4.2): `C[i,:] += A[i,k] * B[k,:]` for every nonzero `A[i,k]`.
+//!
+//! Choreography: each `A[i,k]` becomes a static AM carrying the value and
+//! targeting the PE that owns **B row k**, where it triggers a *streaming
+//! decode* (§3.3.1) of that row. Each streamed element `B[k,j]` produces a
+//! dynamic AM `MUL(A[i,k], B[k,j])` addressed at `C[i,j]` (OffsetResult
+//! mode: output-row base + column index), executed en-route, and finally
+//! accumulated at C row i's owner.
+//!
+//! Empty B rows emit nothing — the "AMs terminate early when they do not
+//! find corresponding elements in the other matrices" effect that makes
+//! performance *improve* with B's sparsity (§5.1).
+//!
+//! Output rows are held dense (Gustavson's row accumulator) and written
+//! back at tile end. [`build_tiled`] splits A's rows into tiles whose
+//! footprint (full B stream tables + the tile's C rows) fits the per-PE
+//! SRAM — the Fig 16 capacity/bandwidth trade-off.
+
+use super::{Built, Tiles};
+use crate::am::Message;
+use crate::compiler::{partition, Program, ProgramBuilder};
+use crate::config::ArchConfig;
+use crate::isa::{ConfigEntry, Opcode};
+use crate::pe::{StreamElem, StreamMode};
+use crate::tensor::Csr;
+
+/// Build single-tile SpMSpM (also used for dense MatMul via dense-as-CSR).
+/// Panics if the instance does not fit the fabric — use [`build_tiled`]
+/// for capacity-adaptive compilation.
+pub fn build(name: &str, a: &Csr, b_mat: &Csr, cfg: &ArchConfig) -> Built {
+    let tiles = vec![build_tile(name, a, 0..a.rows, b_mat, cfg)];
+    let pairs: u64 = (0..a.rows)
+        .flat_map(|i| a.row(i))
+        .map(|(k, _)| b_mat.row_nnz(k) as u64)
+        .sum();
+    Built {
+        name: name.to_string(),
+        tiles: Tiles::Static(tiles),
+        expected: a.spgemm(b_mat).to_dense().data,
+        work_ops: 2 * pairs,
+    }
+}
+
+/// Build SpMSpM split into 2-D (A-row × B-column) tiles sized to the
+/// per-PE SRAM (§3.1.1: "for large tensors exceeding local capacity,
+/// tiling decomposes the computation into smaller sub-tensors").
+///
+/// Column tiling keeps each tile self-contained — `C[rc, jc] = A[rc,:] ·
+/// B[:, jc]` needs no cross-tile partial sums — while the per-tile reload
+/// of B's column block is exactly the off-chip-traffic term Fig 16 sweeps
+/// against on-chip capacity. Outputs (and `expected`) are emitted in tile
+/// order: column blocks outermost, row blocks inner, row-major inside.
+pub fn build_tiled(name: &str, a: &Csr, b_mat: &Csr, cfg: &ArchConfig) -> Built {
+    // Choose the column-block width: halve until B's column block leaves
+    // at least half the SRAM for A's rows and C, or a single column left.
+    let mut width = b_mat.cols;
+    let budget_words = cfg.num_pes() * cfg.dmem_words;
+    loop {
+        let bblock_words = 3 * (b_mat.nnz() * width).div_ceil(b_mat.cols) + b_mat.rows;
+        if bblock_words * 2 <= budget_words || width == 1 {
+            break;
+        }
+        width = width.div_ceil(2);
+    }
+
+    let mut tiles = Vec::new();
+    let mut expected = Vec::new();
+    let c_full = a.spgemm(b_mat).to_dense();
+    let mut jc = 0usize;
+    while jc < b_mat.cols {
+        let jend = (jc + width).min(b_mat.cols);
+        // B column block, columns remapped to 0..(jend-jc).
+        let b_block = Csr::from_triplets(
+            b_mat.rows,
+            jend - jc,
+            (0..b_mat.rows).flat_map(|k| {
+                b_mat
+                    .row(k)
+                    .filter(move |&(j, _)| j >= jc && j < jend)
+                    .map(move |(j, v)| (k, j - jc, v))
+            }),
+        );
+        // Grow A-row tiles until validation would overflow a PE's SRAM.
+        let mut start = 0usize;
+        while start < a.rows {
+            let mut end = start + 1;
+            let mut last_good: Option<(usize, Program)> = None;
+            while end <= a.rows {
+                let probe = try_build_tile(name, a, start..end, &b_block, cfg);
+                if let Some(p) = probe.filter(|p| p.validate(cfg).is_ok()) {
+                    let step = ((end - start) / 2).max(1);
+                    last_good = Some((end, p));
+                    end += step;
+                } else {
+                    break;
+                }
+            }
+            let (end, prog) = last_good.unwrap_or_else(|| {
+                panic!(
+                    "{name}: one A row with a {}-column B block overflows \
+                     {}B/PE SRAM; fabric too small for this workload",
+                    jend - jc,
+                    cfg.dmem_words * 2
+                )
+            });
+            for i in start..end {
+                for j in jc..jend {
+                    expected.push(c_full.get(i, j));
+                }
+            }
+            tiles.push(prog);
+            start = end;
+        }
+        jc = jend;
+    }
+
+    // One MUL + one add per (A[i,k], B[k,j]) pair.
+    let pairs: u64 = (0..a.rows)
+        .flat_map(|i| a.row(i))
+        .map(|(k, _)| b_mat.row_nnz(k) as u64)
+        .sum();
+    Built {
+        name: name.to_string(),
+        tiles: Tiles::Static(tiles),
+        expected,
+        work_ops: 2 * pairs,
+    }
+}
+
+/// Compile the rows `rows` of A against the whole of B into one tile.
+/// Panics on SRAM overflow; use [`try_build_tile`] when probing capacity.
+fn build_tile(
+    name: &str,
+    a: &Csr,
+    rows: std::ops::Range<usize>,
+    b_mat: &Csr,
+    cfg: &ArchConfig,
+) -> Program {
+    try_build_tile(name, a, rows, b_mat, cfg)
+        .unwrap_or_else(|| panic!("{name}: tile overflows the fabric SRAM"))
+}
+
+/// Fallible tile compiler: `None` when the tile's data does not fit.
+fn try_build_tile(
+    name: &str,
+    a: &Csr,
+    rows: std::ops::Range<usize>,
+    b_mat: &Csr,
+    cfg: &ArchConfig,
+) -> Option<Program> {
+    assert_eq!(a.cols, b_mat.rows);
+    let p = cfg.num_pes();
+    // A (and C, aligned with it) by dissimilarity-aware mapping over the
+    // tile's rows; B rows nnz-balanced so stream tables spread evenly.
+    let a_tile = Csr::from_triplets(
+        rows.len(),
+        a.cols,
+        rows.clone()
+            .flat_map(|r| a.row(r).map(move |(c, v)| (r - rows.start, c, v))),
+    );
+    let arow_part = partition::dissimilarity_aware(&a_tile, p, 8);
+    let brow_part = partition::nnz_balanced(b_mat, p);
+
+    let mut b = ProgramBuilder::new(name, cfg);
+
+    // C rows: dense accumulators at A's owners.
+    let mut c_base = vec![0u16; rows.len()];
+    for i in 0..rows.len() {
+        c_base[i] = b.try_place(arow_part[i], &vec![0i16; b_mat.cols])?;
+    }
+    // B rows: stream tables at their owners, with a trigger key each.
+    let mut b_key = vec![0u16; b_mat.rows];
+    for k in 0..b_mat.rows {
+        let elems: Vec<StreamElem> = b_mat
+            .row(k)
+            .map(|(j, v)| StreamElem {
+                value: v,
+                aux: j as u16,
+                dest_pe: 0,
+                mode: StreamMode::OffsetResult,
+            })
+            .collect();
+        let base = b.stream(brow_part[k], &elems);
+        let key = b.try_alloc(brow_part[k], 1)?;
+        b_key[k] = b.trigger(brow_part[k], key, base, elems.len() as u16);
+    }
+
+    // Config chain: Stream(static) -> MUL -> ACCUM.
+    let pc_acc = b.config(ConfigEntry::new(Opcode::Accum, 0).res_addr());
+    let pc_mul = b.config(ConfigEntry::new(Opcode::Mul, pc_acc));
+
+    for i in 0..rows.len() {
+        for (k, av) in a_tile.row(i) {
+            let mut am = Message::new();
+            am.opcode = Opcode::Stream;
+            am.n_pc = pc_mul; // emitted AMs carry MUL
+            am.op1 = av as u16; // A value rides along
+            am.op2 = b_key[k];
+            am.op2_is_addr = true;
+            am.result = c_base[i]; // output row base; emission adds j
+            am.res_is_addr = true;
+            am.push_dest(brow_part[k] as u8);
+            am.push_dest(arow_part[i] as u8); // C row owner
+            b.static_am(arow_part[i], am);
+        }
+    }
+    for i in 0..rows.len() {
+        for j in 0..b_mat.cols {
+            b.output(arow_part[i], c_base[i] + j as u16);
+        }
+    }
+    Some(b.build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::NexusFabric;
+    use crate::tensor::gen::{self, SparsityRegime};
+    use crate::util::prop::forall;
+    use crate::util::SplitMix64;
+    use crate::workloads::validate_on_fabric;
+
+    #[test]
+    fn spmspm_matches_reference_all_regimes() {
+        for (i, regime) in SparsityRegime::all().into_iter().enumerate() {
+            let mut rng = SplitMix64::new(100 + i as u64);
+            let (a, b) = gen::spmspm_pair(&mut rng, 24, regime);
+            let cfg = ArchConfig::nexus();
+            let built = build("spmspm", &a, &b, &cfg);
+            let mut f = NexusFabric::new(cfg);
+            validate_on_fabric(&mut f, &built).unwrap();
+            f.check_conservation().unwrap();
+        }
+    }
+
+    #[test]
+    fn spmspm_on_tia_matches_too() {
+        let mut rng = SplitMix64::new(5);
+        let (a, b) = gen::spmspm_pair(&mut rng, 20, SparsityRegime::S1);
+        let cfg = ArchConfig::tia();
+        let built = build("spmspm", &a, &b, &cfg);
+        let mut f = NexusFabric::new(cfg);
+        validate_on_fabric(&mut f, &built).unwrap();
+    }
+
+    #[test]
+    fn dense_matmul_via_spmspm() {
+        let mut rng = SplitMix64::new(6);
+        let a = gen::random_dense(&mut rng, 12, 12, 3);
+        let b = gen::random_dense(&mut rng, 12, 12, 3);
+        let cfg = ArchConfig::nexus();
+        let built = build(
+            "matmul",
+            &Csr::from_dense(&a),
+            &Csr::from_dense(&b),
+            &cfg,
+        );
+        let mut f = NexusFabric::new(cfg);
+        let out = crate::workloads::run_on_fabric(&mut f, &built).unwrap();
+        assert_eq!(out, a.matmul(&b).data);
+    }
+
+    #[test]
+    fn tiled_matches_single_tile_output() {
+        let mut rng = SplitMix64::new(8);
+        let (a, b) = gen::spmspm_pair(&mut rng, 32, SparsityRegime::S1);
+        // Force tiling with a small SRAM.
+        let cfg = ArchConfig::nexus().with_dmem_bytes(700);
+        let built = build_tiled("spmspm-tiled", &a, &b, &cfg);
+        if let Tiles::Static(ts) = &built.tiles {
+            assert!(ts.len() > 1, "expected multiple tiles");
+        }
+        let mut f = NexusFabric::new(cfg);
+        validate_on_fabric(&mut f, &built).unwrap();
+    }
+
+    #[test]
+    fn empty_b_rows_terminate_early() {
+        forall(6, |rng| {
+            let a = gen::random_csr(rng, 16, 16, 0.4);
+            let b = gen::random_csr(rng, 16, 16, 0.08); // mostly empty rows
+            let cfg = ArchConfig::nexus();
+            let built = build("spmspm", &a, &b, &cfg);
+            let mut f = NexusFabric::new(cfg);
+            validate_on_fabric(&mut f, &built)
+        });
+    }
+}

@@ -1,0 +1,134 @@
+//! SpMV: `y = A * x` with sparse A (Fig 4/Fig 5's running example).
+//!
+//! Choreography (the three tasks of Fig 4a):
+//!
+//! - **T1** is folded into the static AM itself: the compiler has already
+//!   paired each matrix nonzero `A[r,c]` (carried as `Op1`) with the
+//!   location of `x[c]` (R1 + `Op2` address) and of `y[r]` (R2 + `Result`
+//!   address), exactly as §3.6 describes.
+//! - **T2**: at `x[c]`'s owner the decode unit dereferences `Op2`; the AM
+//!   morphs to `MUL` and is sent toward `y[r]`, executing *en-route* on the
+//!   first idle ALU (§3.1.3).
+//! - **T3**: at `y[r]`'s owner the decode unit performs the local
+//!   aggregation (`ACCUM`).
+
+use super::{place_vector, Built, Tiles};
+use crate::am::Message;
+use crate::compiler::{partition, ProgramBuilder};
+use crate::config::ArchConfig;
+use crate::isa::{ConfigEntry, Opcode};
+use crate::tensor::Csr;
+
+/// Build SpMV (or dense MV via a dense-as-CSR matrix; `name` labels it).
+pub fn build(name: &str, a: &Csr, x: &[i16], cfg: &ArchConfig) -> Built {
+    assert_eq!(x.len(), a.cols);
+    let p = cfg.num_pes();
+    // Primary tensor: dissimilarity-aware row mapping (Algorithm 1); the
+    // 1-D tensors partition correspondingly (§3.1.1).
+    let row_part = partition::dissimilarity_aware(a, p, 8);
+    let col_part = partition::uniform_blocks(a.cols, p);
+
+    let mut b = ProgramBuilder::new(name, cfg);
+    let xs = place_vector(&mut b, &col_part, x);
+    let ys = place_vector(&mut b, &row_part[..a.rows], &vec![0i16; a.rows]);
+
+    // Config chain: Load(static AM) -> MUL -> ACCUM.
+    let pc_acc = b.config(ConfigEntry::new(Opcode::Accum, 0).res_addr());
+    let pc_mul = b.config(ConfigEntry::new(Opcode::Mul, pc_acc));
+
+    for r in 0..a.rows {
+        for (c, v) in a.row(r) {
+            let mut am = Message::new();
+            am.opcode = Opcode::Load; // T2's dereference at x[c]'s owner
+            am.n_pc = pc_mul;
+            am.op1 = v as u16;
+            am.op2 = xs.addr[c];
+            am.op2_is_addr = true;
+            am.result = ys.addr[r];
+            am.res_is_addr = true;
+            am.push_dest(xs.pe[c] as u8);
+            am.push_dest(ys.pe[r] as u8);
+            b.static_am(row_part[r], am);
+        }
+    }
+    for r in 0..a.rows {
+        b.output(ys.pe[r], ys.addr[r]);
+    }
+
+    let expected = a.spmv(x);
+    let work_ops = 2 * a.nnz() as u64; // one MUL + one add per nonzero
+    Built {
+        name: name.to_string(),
+        tiles: Tiles::Static(vec![b.build()]),
+        expected,
+        work_ops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::NexusFabric;
+    use crate::tensor::gen;
+    use crate::util::prop::forall;
+    use crate::util::SplitMix64;
+    use crate::workloads::validate_on_fabric;
+
+    #[test]
+    fn spmv_matches_reference_on_nexus() {
+        let mut rng = SplitMix64::new(11);
+        let a = gen::skewed_csr(&mut rng, 32, 32, 0.25);
+        let x = gen::random_vec(&mut rng, 32, 3);
+        let cfg = ArchConfig::nexus();
+        let built = build("spmv", &a, &x, &cfg);
+        let mut f = NexusFabric::new(cfg);
+        validate_on_fabric(&mut f, &built).unwrap();
+        f.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn spmv_matches_reference_on_tia_and_valiant() {
+        let mut rng = SplitMix64::new(12);
+        let a = gen::random_csr(&mut rng, 24, 24, 0.3);
+        let x = gen::random_vec(&mut rng, 24, 3);
+        for cfg in [ArchConfig::tia(), ArchConfig::tia_valiant()] {
+            let built = build("spmv", &a, &x, &cfg);
+            let mut f = NexusFabric::new(cfg);
+            validate_on_fabric(&mut f, &built).unwrap();
+        }
+    }
+
+    #[test]
+    fn spmv_property_random_instances() {
+        forall(8, |rng| {
+            let rows = 4 + rng.below_usize(24);
+            let cols = 4 + rng.below_usize(24);
+            let density = 0.2 + rng.f64() * 0.3;
+            let a = gen::random_csr(rng, rows, cols, density);
+            let x = gen::random_vec(rng, cols, 3);
+            let cfg = ArchConfig::nexus();
+            let built = build("spmv", &a, &x, &cfg);
+            let mut f = NexusFabric::new(cfg);
+            validate_on_fabric(&mut f, &built)
+        });
+    }
+
+    #[test]
+    fn empty_matrix_yields_zero_vector() {
+        let a = Csr::zero(8, 8);
+        let x = vec![1i16; 8];
+        let cfg = ArchConfig::nexus();
+        let built = build("spmv", &a, &x, &cfg);
+        let mut f = NexusFabric::new(cfg);
+        validate_on_fabric(&mut f, &built).unwrap();
+        assert_eq!(built.expected, vec![0i16; 8]);
+    }
+
+    #[test]
+    fn spmv_counts_work_ops() {
+        let mut rng = SplitMix64::new(13);
+        let a = gen::random_csr(&mut rng, 16, 16, 0.3);
+        let built = build("spmv", &a, &gen::random_vec(&mut rng, 16, 3), &ArchConfig::nexus());
+        assert_eq!(built.work_ops, 2 * a.nnz() as u64);
+    }
+}

@@ -1,0 +1,31 @@
+//! Golden-model integration: fabric vs AOT-compiled XLA artifacts via PJRT.
+//! Requires `make artifacts`; skips (with a notice) when artifacts are
+//! absent so `cargo test` works on a fresh checkout.
+
+use nexus::runtime::artifacts_dir;
+
+#[test]
+fn three_way_agreement_reference_xla_fabric() {
+    let dir = artifacts_dir();
+    if !dir.join("spmv_ell.hlo.txt").exists() {
+        eprintln!("skipping golden checks: run `make artifacts` first");
+        return;
+    }
+    let rows = nexus::golden::check_all(&dir, 1).expect("golden checks");
+    assert_eq!(rows.len(), 4);
+    for (name, status) in rows {
+        assert!(status.starts_with("OK"), "{name}: {status}");
+    }
+}
+
+#[test]
+fn golden_checks_hold_for_multiple_seeds() {
+    let dir = artifacts_dir();
+    if !dir.join("spmv_ell.hlo.txt").exists() {
+        eprintln!("skipping golden checks: run `make artifacts` first");
+        return;
+    }
+    for seed in [7, 1234] {
+        nexus::golden::check_all(&dir, seed).expect("golden checks");
+    }
+}

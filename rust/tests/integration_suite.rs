@@ -1,0 +1,211 @@
+//! Integration tests: the full evaluation pipeline end to end — suite
+//! validation on every fabric variant, the architecture roster, and the
+//! headline shapes of the paper's figures.
+
+use nexus::config::ArchConfig;
+use nexus::coordinator::{self, report};
+use nexus::fabric::NexusFabric;
+use nexus::workloads::{run_on_fabric, suite, validate_on_fabric};
+
+#[test]
+fn full_suite_validates_on_all_fabric_variants() {
+    for cfg in [
+        ArchConfig::nexus(),
+        ArchConfig::tia(),
+        ArchConfig::tia_valiant(),
+    ] {
+        let rows = coordinator::validate_suite(&cfg, 1).unwrap();
+        assert_eq!(rows.len(), 13, "{:?}", cfg.kind);
+    }
+}
+
+#[test]
+fn suite_validates_under_different_seeds() {
+    // Different data, same choreography: the compiler must be correct for
+    // arbitrary instances, not one lucky seed.
+    for seed in [2, 3] {
+        coordinator::validate_suite(&ArchConfig::nexus(), seed).unwrap();
+    }
+}
+
+#[test]
+fn fig11_headline_shapes() {
+    let m = coordinator::run_matrix(1);
+    // Paper §5: ~1.9x over Generic CGRA on irregular workloads.
+    let sparse = m.geomean_speedup("Nexus", "GenericCGRA", Some("sparse"));
+    assert!(
+        (1.3..3.0).contains(&sparse),
+        "sparse geomean {sparse} out of the paper's band"
+    );
+    let graph = m.geomean_speedup("Nexus", "GenericCGRA", Some("graph"));
+    assert!(graph > 1.0, "graph geomean {graph}");
+    // TIA-Valiant sits between TIA and Nexus on average.
+    let val_vs_tia = m.geomean_speedup("TIA-Valiant", "TIA", None);
+    assert!(val_vs_tia > 0.9, "Valiant should not lose badly to TIA: {val_vs_tia}");
+    let nexus_vs_val = m.geomean_speedup("Nexus", "TIA-Valiant", None);
+    assert!(nexus_vs_val > 1.0, "Nexus must beat TIA-Valiant: {nexus_vs_val}");
+    // Systolic wins dense MatMul, loses Conv and deep sparsity (S4).
+    let mm = m.workloads.iter().position(|w| w == "MatMul").unwrap();
+    assert!(m.speedup(mm, "Systolic", "Nexus").unwrap() > 1.0);
+    let conv = m.workloads.iter().position(|w| w == "Conv").unwrap();
+    assert!(m.speedup(conv, "Nexus", "Systolic").unwrap() > 1.0, "im2col penalty");
+    let s4 = m.workloads.iter().position(|w| w.contains("S4")).unwrap();
+    assert!(m.speedup(s4, "Nexus", "Systolic").unwrap() > 1.0);
+}
+
+#[test]
+fn fig13_utilization_shape() {
+    let m = coordinator::run_matrix(1);
+    let mean_util = |arch: &str| {
+        let mut v = Vec::new();
+        for wi in 0..m.workloads.len() {
+            if let Some(r) = m.get(wi, arch) {
+                v.push(r.utilization);
+            }
+        }
+        nexus::util::mean(&v)
+    };
+    let nexus = mean_util("Nexus");
+    let tia = mean_util("TIA");
+    // Paper: ~1.7x higher fabric utilization than the data-local SOTA.
+    assert!(
+        nexus / tia > 1.3,
+        "Nexus {nexus:.3} should clearly beat TIA {tia:.3}"
+    );
+}
+
+#[test]
+fn fig14_congestion_shape() {
+    let m = coordinator::run_matrix(1);
+    // Nexus's adaptive AM routing reduces mean congestion vs TIA on the
+    // irregular (sparse+graph) workloads.
+    let mean_cong = |arch: &str| {
+        let mut v = Vec::new();
+        for wi in 0..m.workloads.len() {
+            if m.classes[wi] == "dense" {
+                continue;
+            }
+            if let Some(r) = m.get(wi, arch) {
+                v.extend(r.congestion.iter().copied());
+            }
+        }
+        nexus::util::mean(&v)
+    };
+    let nexus = mean_cong("Nexus");
+    let tia = mean_cong("TIA");
+    assert!(
+        nexus <= tia * 1.05,
+        "Nexus congestion {nexus:.3} should not exceed TIA {tia:.3}"
+    );
+}
+
+#[test]
+fn spmspm_sparsity_trends_match_section_5_1() {
+    // §5.1: sparser A (same B) hurts; sparser B (same A) helps (early AM
+    // termination). Compare per-useful-op efficiency is already captured by
+    // normalized perf; here check absolute cycle trends on matched sizes.
+    let m = coordinator::run_matrix(1);
+    let perf = |tag: &str| {
+        let wi = m.workloads.iter().position(|w| w.contains(tag)).unwrap();
+        m.get(wi, "Nexus").unwrap().perf()
+    };
+    // S3 (B sparser than S1) must not be slower per useful op than S1 by
+    // much; S2 (A sparser) tends lower. We assert the paired ordering that
+    // defines the trend: within fixed A sparsity, sparser B helps cycles.
+    let m1 = coordinator::run_matrix(1);
+    let cyc = |tag: &str| {
+        let wi = m1.workloads.iter().position(|w| w.contains(tag)).unwrap();
+        m1.get(wi, "Nexus").unwrap().cycles
+    };
+    assert!(cyc("S3") < cyc("S1"), "sparser B must cut cycles (early termination)");
+    assert!(cyc("S4") < cyc("S2"), "sparser B must cut cycles (early termination)");
+    let _ = perf; // perf-based variants covered by fig11 shapes
+}
+
+#[test]
+fn in_network_fraction_is_majority_for_alu_heavy_sparse() {
+    let specs = suite(1);
+    let spec = specs.iter().find(|s| s.name().starts_with("SpMSpM-S1")).unwrap();
+    let cfg = ArchConfig::nexus();
+    let built = spec.build(&cfg);
+    let mut f = NexusFabric::new(cfg);
+    run_on_fabric(&mut f, &built).unwrap();
+    assert!(
+        f.stats.in_network_fraction() > 0.5,
+        "most MULs should run en-route: {}",
+        f.stats.in_network_fraction()
+    );
+}
+
+#[test]
+fn reports_render_for_all_figures() {
+    let m = coordinator::run_matrix(1);
+    for s in [
+        report::fig10(&m),
+        report::fig11(&m),
+        report::fig12(&m),
+        report::fig13(&m),
+        report::fig14(&m),
+        report::fig15(),
+        report::table1(),
+        report::table2(&m),
+    ] {
+        assert!(s.len() > 100, "report suspiciously short:\n{s}");
+    }
+}
+
+#[test]
+fn scalability_sweep_scales() {
+    let pts = coordinator::scalability_sweep(1, &[2, 4]);
+    // 4x4 beats 2x2 on every covered workload (Fig 17 near-linear claim at
+    // small scale).
+    for w in ["MatMul", "BFS"] {
+        let p2 = pts.iter().find(|p| p.dim == 2 && p.workload == w).unwrap();
+        let p4 = pts.iter().find(|p| p.dim == 4 && p.workload == w).unwrap();
+        assert!(
+            p4.perf > p2.perf,
+            "{w}: 4x4 ({}) should beat 2x2 ({})",
+            p4.perf,
+            p2.perf
+        );
+    }
+}
+
+#[test]
+fn larger_sram_reduces_bandwidth_need() {
+    // Two points of the Fig 16 curve: more on-chip SRAM => fewer tiles =>
+    // less off-chip traffic per compute cycle.
+    use nexus::tensor::gen;
+    use nexus::util::SplitMix64;
+    let mut rng = SplitMix64::new(99);
+    let a = gen::skewed_csr(&mut rng, 96, 96, 0.3);
+    let b = gen::random_csr(&mut rng, 96, 96, 0.3);
+    let run = |bytes: usize| {
+        let cfg = ArchConfig::nexus().with_dmem_bytes(bytes);
+        let built = nexus::workloads::spmspm::build_tiled("f16", &a, &b, &cfg);
+        let mut f = NexusFabric::new(cfg);
+        run_on_fabric(&mut f, &built).unwrap();
+        f.stats.offchip_bytes as f64 / f.stats.compute_cycles() as f64
+    };
+    let small = run(1024);
+    let large = run(16384);
+    assert!(
+        large < small,
+        "16KB/PE ({large:.2} B/cyc) must need less BW than 1KB/PE ({small:.2})"
+    );
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let cfg = ArchConfig::nexus();
+    let specs = suite(5);
+    let spec = specs.iter().find(|s| s.name() == "BFS").unwrap();
+    let built = spec.build(&cfg);
+    let mut cycles = Vec::new();
+    for _ in 0..2 {
+        let mut f = NexusFabric::new(cfg.clone());
+        validate_on_fabric(&mut f, &built).unwrap();
+        cycles.push(f.stats.cycles);
+    }
+    assert_eq!(cycles[0], cycles[1], "simulation must be deterministic");
+}

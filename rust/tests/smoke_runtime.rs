@@ -1,0 +1,19 @@
+//! Smoke test for the PJRT golden runtime against a known artifact.
+use nexus::runtime::GoldenRuntime;
+
+#[test]
+fn load_and_run_pallas_artifact() {
+    let dir = std::env::var("SMOKE_ART_DIR").unwrap_or_else(|_| "/tmp/artcheck".into());
+    if !std::path::Path::new(&dir).join("fn.hlo.txt").exists() {
+        eprintln!("skipping: no smoke artifact");
+        return;
+    }
+    let mut rt = GoldenRuntime::new(&dir).unwrap();
+    let x = [1f32, 2., 3., 4.];
+    let y = [1f32, 1., 1., 1.];
+    let outs = rt
+        .run("fn", &[(&x[..], &[2, 2][..]), (&y[..], &[2, 2][..])])
+        .unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0], vec![5f32, 5., 9., 9.]);
+}
