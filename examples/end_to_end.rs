@@ -14,6 +14,7 @@
 
 use nexus::baselines::{roster, RunResult};
 use nexus::coordinator;
+use nexus::machine::{ExecError, Machine};
 use nexus::workloads::suite;
 
 fn main() {
@@ -29,10 +30,11 @@ fn main() {
         println!("== stage 1 skipped: run `make artifacts` for golden models ==");
     }
 
-    // Stage 2 — the sparse-inference block on all five architectures.
+    // Stage 2 — the sparse-inference block on all five architectures, each
+    // behind a reusable Machine session.
     println!("\n== stage 2: pruned-ResNet-50-like block, 5-architecture roster ==");
     let specs = suite(1);
-    let archs = roster();
+    let mut machines: Vec<Machine> = roster().into_iter().map(Machine::from_backend).collect();
     let block: Vec<_> = specs
         .iter()
         .filter(|s| {
@@ -47,18 +49,21 @@ fn main() {
     );
     let mut per_arch: std::collections::HashMap<&str, Vec<RunResult>> = Default::default();
     for spec in &block {
-        for arch in &archs {
-            if let Some(r) = arch.run(spec) {
-                println!(
-                    "{:<14}{:>12}{:>12}{:>13.3}{:>12.1}%",
-                    r.workload,
-                    r.arch,
-                    r.cycles,
-                    r.perf(),
-                    r.utilization * 100.0
-                );
-                per_arch.entry(r.arch).or_default().push(r);
-            }
+        for m in &mut machines {
+            let r = match m.run(spec) {
+                Ok(e) => e.result,
+                Err(ExecError::Unsupported { .. }) => continue,
+                Err(e) => panic!("{e}"),
+            };
+            println!(
+                "{:<14}{:>12}{:>12}{:>13.3}{:>12.1}%",
+                r.workload,
+                r.arch,
+                r.cycles,
+                r.perf(),
+                r.utilization * 100.0
+            );
+            per_arch.entry(r.arch).or_default().push(r);
         }
     }
 

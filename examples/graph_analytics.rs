@@ -4,17 +4,18 @@
 //! published size at fabric scale) is traced with BFS (infection waves),
 //! SSSP (weighted contact durations) and PageRank (super-spreader ranking),
 //! all executing as asynchronous AM relaxations with conditional
-//! re-emission on the Nexus fabric.
+//! re-emission on one reusable fabric `Machine` (reset between kernels,
+//! never reallocated).
 //!
 //! ```sh
 //! cargo run --release --example graph_analytics
 //! ```
 
 use nexus::config::ArchConfig;
-use nexus::fabric::NexusFabric;
+use nexus::machine::Machine;
 use nexus::tensor::{graph::INF, Graph};
 use nexus::util::SplitMix64;
-use nexus::workloads::{graphs, run_on_fabric};
+use nexus::workloads::Spec;
 
 fn main() {
     let mut rng = SplitMix64::new(2026);
@@ -24,45 +25,45 @@ fn main() {
         g.num_vertices,
         g.num_edges()
     );
-    let cfg = ArchConfig::nexus();
+    let mut machine = Machine::new(ArchConfig::nexus());
 
     // BFS: how many contact hops until the whole component is reached?
-    let built = graphs::build_bfs(&g, 0, &cfg);
-    let mut f = NexusFabric::new(cfg.clone());
-    let levels = run_on_fabric(&mut f, &built).expect("bfs");
-    assert_eq!(levels, built.expected);
+    let exec = machine
+        .run(&Spec::Bfs { g: g.clone(), src: 0 })
+        .expect("bfs");
+    let levels = &exec.outputs;
+    let s = exec.stats.as_ref().expect("fabric stats");
     let reached = levels.iter().filter(|&&l| l < INF).count();
     let waves = levels.iter().filter(|&&l| l < INF).max().unwrap();
     println!(
         "BFS     patient zero reaches {reached}/{} people in {waves} waves \
          ({} cycles, {:.1}% util, {:.0}% in-network)",
         g.num_vertices,
-        f.stats.cycles,
-        100.0 * f.stats.utilization(),
-        100.0 * f.stats.in_network_fraction()
+        s.cycles,
+        100.0 * s.utilization(),
+        100.0 * s.in_network_fraction()
     );
 
-    // SSSP: weighted by contact duration.
-    let built = graphs::build_sssp(&g, 0, &cfg);
-    let mut f = NexusFabric::new(cfg.clone());
-    let dist = run_on_fabric(&mut f, &built).expect("sssp");
-    assert_eq!(dist, built.expected);
-    let far = dist.iter().filter(|&&d| d < INF).max().unwrap();
+    // SSSP: weighted by contact duration (same machine, fabric reset).
+    let exec = machine
+        .run(&Spec::Sssp { g: g.clone(), src: 0 })
+        .expect("sssp");
+    let far = exec.outputs.iter().filter(|&&d| d < INF).max().unwrap();
     println!(
         "SSSP    farthest weighted distance {far} ({} cycles, relaxations settle asynchronously)",
-        f.stats.cycles
+        exec.cycles()
     );
 
     // PageRank: who are the super-spreaders?
-    let built = graphs::build_pagerank(&g, 3, &cfg);
-    let mut f = NexusFabric::new(cfg);
-    let rank = run_on_fabric(&mut f, &built).expect("pagerank");
-    assert_eq!(rank, built.expected);
+    let exec = machine
+        .run(&Spec::PageRank { g: g.clone(), iters: 3 })
+        .expect("pagerank");
+    let rank = &exec.outputs;
     let mut order: Vec<usize> = (0..g.num_vertices).collect();
     order.sort_by_key(|&v| std::cmp::Reverse(rank[v]));
     println!(
         "PageRank top-5 super-spreaders: {:?} ({} cycles, 3 host-synchronized tiles)",
         &order[..5],
-        f.stats.cycles
+        exec.cycles()
     );
 }

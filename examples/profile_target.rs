@@ -1,11 +1,19 @@
+//! Profiling target: the full suite compiled once, executed ten times on
+//! one reusable `Machine` — the compile-cache + fabric-reset hot path.
+
+use nexus::machine::Machine;
+
 fn main() {
     let specs = nexus::workloads::suite(1);
     let cfg = nexus::config::ArchConfig::nexus();
-    let built: Vec<_> = specs.iter().map(|s| s.build(&cfg)).collect();
+    let mut machine = Machine::new(cfg);
+    let compiled: Vec<_> = specs
+        .iter()
+        .map(|s| machine.compile(s).expect("compile"))
+        .collect();
     for _ in 0..10 {
-        for b in &built {
-            let mut f = nexus::fabric::NexusFabric::new(cfg.clone());
-            nexus::workloads::run_on_fabric(&mut f, b).expect("run");
+        for c in &compiled {
+            machine.execute(c).expect("run");
         }
     }
 }

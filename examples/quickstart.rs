@@ -1,42 +1,47 @@
 //! Quickstart: compile one sparse workload for the Nexus Machine and run it
-//! on the cycle-accurate fabric.
+//! on the cycle-accurate fabric through the unified `Machine` API.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use nexus::config::ArchConfig;
-use nexus::fabric::NexusFabric;
+use nexus::machine::Machine;
 use nexus::tensor::gen;
 use nexus::util::SplitMix64;
-use nexus::workloads::{run_on_fabric, spmv};
+use nexus::workloads::Spec;
 
 fn main() {
     // 1. A sparse matrix and a dense vector (INT16, like the fabric).
     let mut rng = SplitMix64::new(42);
     let a = gen::skewed_csr(&mut rng, 32, 32, 0.25); // 75% sparse, skewed rows
     let x = gen::random_vec(&mut rng, 32, 3);
+    let nnz = a.nnz();
 
     // 2. The Table 1 architecture: 4x4 INT16 PEs, 1KB SRAM + 1KB AM queue
-    //    per PE, west-first adaptive mesh, en-route execution enabled.
-    let cfg = ArchConfig::nexus();
+    //    per PE, west-first adaptive mesh, en-route execution enabled. The
+    //    machine owns one reusable fabric instance.
+    let mut machine = Machine::new(ArchConfig::nexus());
 
     // 3. Compile: partition tensors (Algorithm 1), generate static AMs, and
-    //    the replicated config-memory chain LOAD -> MUL -> ACCUM.
-    let built = spmv::build("quickstart-spmv", &a, &x, &cfg);
+    //    the replicated config-memory chain LOAD -> MUL -> ACCUM. Compiles
+    //    are cached: re-running this workload skips this step.
+    let compiled = machine
+        .compile(&Spec::Spmv { a, x })
+        .expect("compile spmv");
     println!(
         "compiled {} static AMs for {} nonzeros",
-        a.nnz(),
-        a.nnz()
+        compiled.static_am_count(),
+        nnz
     );
 
-    // 4. Execute to drain and check against the software reference.
-    let mut fabric = NexusFabric::new(cfg);
-    let y = run_on_fabric(&mut fabric, &built).expect("fabric run");
-    assert_eq!(y, built.expected, "fabric output must match reference");
+    // 4. Execute to drain; the machine validates the outputs against the
+    //    software reference (mismatches surface as typed ExecErrors).
+    let exec = machine.execute(&compiled).expect("fabric run");
+    assert!(exec.validated(), "fabric output must match reference");
 
-    let s = &fabric.stats;
-    println!("y[0..8] = {:?}", &y[..8]);
+    let s = exec.stats.as_ref().expect("fabric stats");
+    println!("y[0..8] = {:?}", &exec.outputs[..8]);
     println!("cycles            {}", s.cycles);
     println!("ALU ops           {} ({} executed en-route, {:.1}%)",
         s.alu_ops, s.enroute_ops, 100.0 * s.in_network_fraction());

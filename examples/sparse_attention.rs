@@ -9,7 +9,8 @@
 //! cargo run --release --example sparse_attention
 //! ```
 
-use nexus::baselines::{systolic::Systolic, Architecture, FabricArch};
+use nexus::baselines::{systolic::Systolic, FabricArch};
+use nexus::machine::{Backend, Machine};
 use nexus::tensor::gen;
 use nexus::util::SplitMix64;
 use nexus::workloads::{binary_mask, Spec};
@@ -31,17 +32,22 @@ fn main() {
         "{:<14}{:>10}{:>14}{:>14}{:>12}",
         "arch", "cycles", "ops/cycle", "utilization", "in-net %"
     );
-    let archs: Vec<Box<dyn Architecture>> = vec![
+    let backends: Vec<Box<dyn Backend>> = vec![
         Box::new(Systolic::default()),
         Box::new(FabricArch::tia()),
         Box::new(FabricArch::tia_valiant()),
         Box::new(FabricArch::nexus()),
     ];
     let mut base = None;
-    for arch in &archs {
-        let r = arch.run(&spec).expect("sddmm runs everywhere");
-        if arch.name() == "TIA" {
-            base = Some(r.perf());
+    let mut nexus_perf = None;
+    for backend in backends {
+        let mut m = Machine::from_backend(backend);
+        let e = m.run(&spec).expect("sddmm runs everywhere");
+        let r = &e.result;
+        match m.name() {
+            "TIA" => base = Some(r.perf()),
+            "Nexus" => nexus_perf = Some(r.perf()),
+            _ => {}
         }
         println!(
             "{:<14}{:>10}{:>14.3}{:>13.1}%{:>11.1}%",
@@ -54,9 +60,8 @@ fn main() {
     }
     // The headline mechanism: en-route execution converts NoC transit into
     // compute, beating the data-local TIA on the same fabric.
-    let nexus = FabricArch::nexus().run(&spec).unwrap();
     println!(
         "\nNexus vs TIA speedup: {:.2}x (mask-position dot products, same ALU count)",
-        nexus.perf() / base.unwrap()
+        nexus_perf.unwrap() / base.unwrap()
     );
 }

@@ -1,25 +1,31 @@
 //! `cargo bench --bench hotpath` — the simulator's own performance: PE-cycle
-//! throughput of `NexusFabric::step()` on a saturated fabric, plus the §4
-//! compile-path timing comparison. This is the EXPERIMENTS.md §Perf probe.
+//! throughput of `NexusFabric::step()` on a saturated fabric, the
+//! compile-cache + fabric-reset hot path of the `Machine` session API, plus
+//! the §4 compile-path timing comparison. This is the EXPERIMENTS.md §Perf
+//! probe.
 
 use nexus::baselines::cgra::{mem_trace, GenericCgra};
 use nexus::config::ArchConfig;
-use nexus::fabric::NexusFabric;
+use nexus::machine::Machine;
 use nexus::util::bench::{bench, throughput};
 use std::time::Instant;
 
 fn main() {
-    // Hot path: full suite on the Nexus fabric, measured in PE-cycles/s.
+    // Compile the full suite once on a reusable session machine.
     let specs = nexus::workloads::suite(1);
     let cfg = ArchConfig::nexus();
-    let built: Vec<_> = specs.iter().map(|s| s.build(&cfg)).collect();
+    let mut machine = Machine::new(cfg.clone());
+    let compiled: Vec<_> = specs
+        .iter()
+        .map(|s| machine.compile(s).expect("compile"))
+        .collect();
 
+    // Hot path: full suite on the Nexus fabric, measured in PE-cycles/s.
     let mut total_cycles = 0u64;
     let t0 = Instant::now();
-    for b in &built {
-        let mut f = NexusFabric::new(cfg.clone());
-        nexus::workloads::run_on_fabric(&mut f, b).expect("run");
-        total_cycles += f.stats.cycles;
+    for c in &compiled {
+        let e = machine.execute(c).expect("run");
+        total_cycles += e.result.cycles;
     }
     let dt = t0.elapsed().as_secs_f64();
     throughput(
@@ -28,17 +34,33 @@ fn main() {
         dt,
     );
 
-    bench("suite end-to-end (nexus)", 5, || {
-        for b in &built {
-            let mut f = NexusFabric::new(cfg.clone());
-            nexus::workloads::run_on_fabric(&mut f, b).expect("run");
+    // Repeated same-workload runs: a fresh machine (fabric allocation) per
+    // workload — the seed's shape — vs one session machine (fabric reset,
+    // cached programs). The session path must be no slower.
+    let fresh = bench("suite end-to-end (fresh fabric)", 5, || {
+        for c in &compiled {
+            Machine::new(cfg.clone()).execute(c).expect("run");
         }
     });
+    let reused = bench("suite end-to-end (reset+cache)", 5, || {
+        for c in &compiled {
+            machine.execute(c).expect("run");
+        }
+    });
+    println!(
+        "reset+cache vs fresh-fabric: {:.2}x",
+        fresh / reused.max(1e-12)
+    );
 
     // Compile paths (§4: 0.55 s Nexus vs 7.22 s CGRA on the authors' setup).
     bench("compile path: nexus", 5, || {
         for s in &specs {
             std::hint::black_box(s.build(&cfg));
+        }
+    });
+    bench("compile path: cached (Machine)", 5, || {
+        for s in &specs {
+            std::hint::black_box(machine.compile(s).expect("compile"));
         }
     });
     bench("compile path: generic CGRA", 5, || {

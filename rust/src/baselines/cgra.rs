@@ -11,8 +11,9 @@
 //! drains. This reproduces exactly the Fig 3(a) pathology: irregular index
 //! streams produce conflict storms, regular streams do not.
 
-use super::{Architecture, RunResult};
+use super::RunResult;
 use crate::compiler::dfg::Dfg;
+use crate::machine::{Artifact, Backend, Compiled, ExecError, Execution};
 use crate::power::EnergyEvents;
 use crate::tensor::{Csr, Dense, Graph};
 use crate::workloads::Spec;
@@ -128,12 +129,10 @@ pub struct CgraOutcome {
     pub load_cycles: u64,
 }
 
-impl Architecture for GenericCgra {
-    fn name(&self) -> &'static str {
-        "GenericCGRA"
-    }
-
-    fn run(&self, spec: &Spec) -> Option<RunResult> {
+impl GenericCgra {
+    /// Evaluate the analytical model for one workload (the CGRA maps every
+    /// suite kernel, so this never refuses).
+    pub fn model(&self, spec: &Spec) -> RunResult {
         let dfg = spec.dfg();
         let (trace, data_bytes) = mem_trace(spec);
         // Regular kernels map at MII; indirection costs one extra II slot
@@ -157,8 +156,8 @@ impl Architecture for GenericCgra {
         events.noc_hops = total_ops; // static NoC word movements
         events.offchip_bytes = data_bytes;
         events.cycles = o.cycles;
-        Some(RunResult {
-            arch: self.name(),
+        RunResult {
+            arch: "GenericCGRA",
             workload: spec.name(),
             cycles: o.cycles,
             work_ops: spec.build_work_ops(),
@@ -168,6 +167,30 @@ impl Architecture for GenericCgra {
             offchip_bytes: data_bytes,
             events,
             validated: true,
+        }
+    }
+}
+
+impl Backend for GenericCgra {
+    fn name(&self) -> &'static str {
+        "GenericCGRA"
+    }
+
+    fn compile(&self, spec: &Spec) -> Result<Artifact, ExecError> {
+        Ok(Artifact::Report(Box::new(self.model(spec))))
+    }
+
+    fn execute(&mut self, compiled: &Compiled) -> Result<Execution, ExecError> {
+        let Artifact::Report(r) = compiled.artifact() else {
+            return Err(ExecError::ArtifactMismatch {
+                backend: self.name(),
+                workload: compiled.workload().to_string(),
+            });
+        };
+        Ok(Execution {
+            outputs: Vec::new(),
+            stats: None,
+            result: (**r).clone(),
         })
     }
 }
@@ -425,7 +448,7 @@ mod tests {
     fn cgra_runs_every_suite_workload() {
         let cgra = GenericCgra::default();
         for spec in suite(3) {
-            let r = cgra.run(&spec).unwrap();
+            let r = cgra.model(&spec);
             assert!(r.cycles > 0, "{}", spec.name());
             assert!(r.work_ops > 0);
             assert!(r.utilization > 0.0 && r.utilization <= 1.0);

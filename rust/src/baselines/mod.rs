@@ -1,23 +1,25 @@
-//! The four baseline architectures of §4.1, behind one [`Architecture`]
-//! trait so the coordinator can sweep them uniformly:
+//! The baseline architectures of §4.1, each a [`Backend`] behind the
+//! unified [`crate::machine::Machine`] execution API so the coordinator can
+//! sweep them uniformly:
 //!
 //! - **Nexus Machine / TIA / TIA-Valiant** — the same cycle-accurate fabric
-//!   with the paper's ablation flags ([`crate::config::ArchKind`]).
+//!   with the paper's ablation flags, behind
+//!   [`FabricArch`](crate::machine::FabricArch) (re-exported here).
 //! - **Generic CGRA** — an analytical modulo-scheduling model (HyCube-like,
 //!   8 shared edge banks) driven by the workload's *actual* memory trace,
 //!   so bank conflicts emerge from real access patterns ([`cgra`]).
 //! - **Systolic array** — a TPU-like weight-stationary dense model that
-//!   cannot exploit sparsity and pays im2col for Conv ([`systolic`]).
+//!   cannot exploit sparsity, pays im2col for Conv, and reports graph
+//!   analytics as [`crate::machine::ExecError::Unsupported`] ([`systolic`]).
 
 pub mod cgra;
 pub mod systolic;
 
-use crate::config::ArchConfig;
-use crate::fabric::NexusFabric;
+pub use crate::machine::{Backend, FabricArch};
 use crate::power::EnergyEvents;
-use crate::workloads::{run_on_fabric, Spec};
 
-/// Outcome of running one workload on one architecture.
+/// Outcome of running one workload on one architecture — the normalized
+/// unit the evaluation matrix and the report renderers consume.
 #[derive(Debug, Clone)]
 pub struct RunResult {
     pub arch: &'static str,
@@ -59,83 +61,10 @@ impl RunResult {
     }
 }
 
-/// An architecture that can execute evaluation workloads.
-pub trait Architecture: Sync {
-    fn name(&self) -> &'static str;
-    /// Run a workload. `None` when the architecture cannot execute it
-    /// (systolic arrays cannot run graph analytics).
-    fn run(&self, spec: &Spec) -> Option<RunResult>;
-}
-
-/// Fabric-backed architecture (Nexus, TIA, TIA-Valiant).
-pub struct FabricArch {
-    pub name: &'static str,
-    pub cfg: ArchConfig,
-}
-
-impl FabricArch {
-    pub fn nexus() -> Self {
-        FabricArch {
-            name: "Nexus",
-            cfg: ArchConfig::nexus(),
-        }
-    }
-
-    pub fn tia() -> Self {
-        FabricArch {
-            name: "TIA",
-            cfg: ArchConfig::tia(),
-        }
-    }
-
-    pub fn tia_valiant() -> Self {
-        FabricArch {
-            name: "TIA-Valiant",
-            cfg: ArchConfig::tia_valiant(),
-        }
-    }
-
-    /// All three fabric variants.
-    pub fn variants() -> Vec<FabricArch> {
-        vec![Self::nexus(), Self::tia(), Self::tia_valiant()]
-    }
-}
-
-impl Architecture for FabricArch {
-    fn name(&self) -> &'static str {
-        self.name
-    }
-
-    fn run(&self, spec: &Spec) -> Option<RunResult> {
-        let built = spec.build(&self.cfg);
-        let mut f = NexusFabric::new(self.cfg.clone());
-        let out = run_on_fabric(&mut f, &built).expect("fabric deadlock");
-        let validated = out == built.expected;
-        assert!(
-            validated,
-            "{} produced wrong output for {}",
-            self.name,
-            built.name
-        );
-        let s = &f.stats;
-        Some(RunResult {
-            arch: self.name,
-            workload: spec.name(),
-            cycles: s.cycles,
-            work_ops: built.work_ops,
-            utilization: s.utilization(),
-            in_network_frac: s.in_network_fraction(),
-            congestion: std::array::from_fn(|p| s.port_congestion(p)),
-            offchip_bytes: s.offchip_bytes,
-            events: EnergyEvents::from_fabric(s, self.cfg.kind),
-            validated,
-        })
-    }
-}
-
 /// The full evaluation roster: systolic, Generic CGRA, TIA, TIA-Valiant,
-/// Nexus — the order the paper's figures present them in.
-pub fn roster() -> Vec<Box<dyn Architecture>> {
+/// Nexus — the order the paper's figures present them in. Wrap each entry
+/// in a [`crate::machine::Machine`] to execute workloads.
+pub fn roster() -> Vec<Box<dyn Backend>> {
     vec![
         Box::new(systolic::Systolic::default()),
         Box::new(cgra::GenericCgra::default()),
@@ -148,6 +77,8 @@ pub fn roster() -> Vec<Box<dyn Architecture>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ArchConfig;
+    use crate::machine::Machine;
     use crate::workloads::suite;
 
     #[test]
@@ -158,10 +89,11 @@ mod tests {
             .find(|s| s.name().starts_with("SpMV"))
             .unwrap();
         for arch in FabricArch::variants() {
-            let r = arch.run(spmv).unwrap();
-            assert!(r.validated);
-            assert!(r.cycles > 0);
-            assert!(r.perf() > 0.0);
+            let mut m = Machine::from_backend(Box::new(arch));
+            let e = m.run(spmv).unwrap();
+            assert!(e.validated());
+            assert!(e.cycles() > 0);
+            assert!(e.perf() > 0.0);
         }
     }
 
@@ -174,15 +106,24 @@ mod tests {
             .iter()
             .find(|s| s.name().starts_with("SpMV"))
             .unwrap();
-        let nexus = FabricArch::nexus().run(spmv).unwrap();
-        let tia = FabricArch::tia().run(spmv).unwrap();
+        let nexus = Machine::new(ArchConfig::nexus()).run(spmv).unwrap();
+        let tia = Machine::new(ArchConfig::tia()).run(spmv).unwrap();
         assert!(
             nexus.perf() > tia.perf(),
             "Nexus {} vs TIA {}",
             nexus.perf(),
             tia.perf()
         );
-        assert!(nexus.in_network_frac > 0.0);
-        assert_eq!(tia.in_network_frac, 0.0);
+        assert!(nexus.result.in_network_frac > 0.0);
+        assert_eq!(tia.result.in_network_frac, 0.0);
+    }
+
+    #[test]
+    fn roster_names_are_unique_and_ordered() {
+        let names: Vec<&str> = roster().iter().map(|b| b.name()).collect();
+        assert_eq!(
+            names,
+            vec!["Systolic", "GenericCGRA", "TIA", "TIA-Valiant", "Nexus"]
+        );
     }
 }

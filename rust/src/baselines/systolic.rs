@@ -8,9 +8,11 @@
 //!   rises.
 //! - Conv: "inefficient ... due to im2col overhead and cannot execute Conv
 //!   natively" (§5.1) — it pays the im2col expansion's memory traffic.
-//! - Graph analytics: not executable (`run` returns `None`).
+//! - Graph analytics: not executable — [`Backend::compile`] reports
+//!   [`ExecError::Unsupported`].
 
-use super::{Architecture, RunResult};
+use super::RunResult;
+use crate::machine::{Artifact, Backend, Compiled, ExecError, Execution};
 use crate::power::EnergyEvents;
 use crate::workloads::Spec;
 
@@ -73,12 +75,10 @@ impl Systolic {
     }
 }
 
-impl Architecture for Systolic {
-    fn name(&self) -> &'static str {
-        "Systolic"
-    }
-
-    fn run(&self, spec: &Spec) -> Option<RunResult> {
+impl Systolic {
+    /// Evaluate the analytical model for one workload. `None` when a
+    /// systolic dataflow cannot express it (graph analytics).
+    pub fn model(&self, spec: &Spec) -> Option<RunResult> {
         let o = match spec {
             // Sparse executed as dense (no sparsity support).
             Spec::Spmv { a, .. } => self.gemm(a.rows, a.cols, 1, 0),
@@ -115,7 +115,7 @@ impl Architecture for Systolic {
         events.offchip_bytes = o.load_bytes;
         events.cycles = o.cycles;
         Some(RunResult {
-            arch: self.name(),
+            arch: "Systolic",
             workload: spec.name(),
             cycles: o.cycles,
             work_ops: spec.build_work_ops(),
@@ -125,6 +125,36 @@ impl Architecture for Systolic {
             offchip_bytes: o.load_bytes,
             events,
             validated: true,
+        })
+    }
+}
+
+impl Backend for Systolic {
+    fn name(&self) -> &'static str {
+        "Systolic"
+    }
+
+    fn compile(&self, spec: &Spec) -> Result<Artifact, ExecError> {
+        match self.model(spec) {
+            Some(r) => Ok(Artifact::Report(Box::new(r))),
+            None => Err(ExecError::Unsupported {
+                arch: self.name(),
+                workload: spec.name(),
+            }),
+        }
+    }
+
+    fn execute(&mut self, compiled: &Compiled) -> Result<Execution, ExecError> {
+        let Artifact::Report(r) = compiled.artifact() else {
+            return Err(ExecError::ArtifactMismatch {
+                backend: self.name(),
+                workload: compiled.workload().to_string(),
+            });
+        };
+        Ok(Execution {
+            outputs: Vec::new(),
+            stats: None,
+            result: (**r).clone(),
         })
     }
 }
@@ -142,13 +172,13 @@ mod tests {
         let a = gen::random_dense(&mut rng, 24, 24, 3);
         let b = gen::random_dense(&mut rng, 24, 24, 3);
         let dense = sys
-            .run(&Spec::MatMul { a, b })
+            .model(&Spec::MatMul { a, b })
             .unwrap();
         // 90%-sparse SpMSpM: same dense dims, tiny useful work.
         let sa = gen::random_csr(&mut rng, 24, 24, 0.1);
         let sb = gen::random_csr(&mut rng, 24, 24, 0.1);
         let sparse = sys
-            .run(&Spec::SpMSpM {
+            .model(&Spec::SpMSpM {
                 a: sa,
                 b: sb,
                 regime: crate::tensor::gen::SparsityRegime::S4,
@@ -167,8 +197,8 @@ mod tests {
         let sys = Systolic::default();
         let mut rng = SplitMix64::new(21);
         let g = crate::tensor::Graph::synthetic_contact(&mut rng, 32, 120);
-        assert!(sys.run(&Spec::Bfs { g: g.clone(), src: 0 }).is_none());
-        assert!(sys.run(&Spec::PageRank { g, iters: 2 }).is_none());
+        assert!(sys.model(&Spec::Bfs { g: g.clone(), src: 0 }).is_none());
+        assert!(sys.model(&Spec::PageRank { g, iters: 2 }).is_none());
     }
 
     #[test]
@@ -177,7 +207,7 @@ mod tests {
         let mut rng = SplitMix64::new(22);
         let a = gen::random_dense(&mut rng, 48, 48, 3);
         let x = gen::random_vec(&mut rng, 48, 3);
-        let r = sys.run(&Spec::Mv { a, x }).unwrap();
+        let r = sys.model(&Spec::Mv { a, x }).unwrap();
         // Single output column keeps most of the grid idle.
         assert!(r.utilization < 0.5, "utilization {}", r.utilization);
     }
@@ -189,7 +219,7 @@ mod tests {
         let input = gen::random_dense(&mut rng, 12, 12, 3);
         let filter = gen::random_dense(&mut rng, 3, 3, 2);
         let spec = Spec::Conv { input, filter };
-        let r = sys.run(&spec).unwrap();
+        let r = sys.model(&spec).unwrap();
         // im2col traffic: off-chip bytes exceed the raw tensor footprint.
         let raw = 2 * (12 * 12 + 9 + 10 * 10) as u64;
         assert!(r.offchip_bytes > raw, "{} <= {raw}", r.offchip_bytes);

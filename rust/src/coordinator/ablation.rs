@@ -7,9 +7,8 @@
 //! Regenerate with `nexus ablate` or `cargo bench --bench ablations`.
 
 use crate::config::{ArchConfig, ExecPolicy, RoutingPolicy};
-use crate::fabric::NexusFabric;
-use crate::workloads::{run_on_fabric, suite, Spec};
-use std::sync::Mutex;
+use crate::machine::{Machine, MachinePool};
+use crate::workloads::{suite, Spec};
 
 /// One ablation point: a named configuration delta and its suite outcome.
 #[derive(Debug, Clone)]
@@ -26,26 +25,22 @@ pub struct AblationPoint {
 
 /// Run the irregular (sparse + graph) suite under one configuration.
 fn run_config(cfg: &ArchConfig, specs: &[Spec]) -> (f64, f64, f64) {
-    let results: Mutex<Vec<(f64, f64, f64)>> = Mutex::new(Vec::new());
-    std::thread::scope(|scope| {
-        for spec in specs.iter().filter(|s| s.class() != "dense") {
-            let results = &results;
-            let cfg = cfg.clone();
-            scope.spawn(move || {
-                let built = spec.build(&cfg);
-                let mut f = NexusFabric::new(cfg);
-                run_on_fabric(&mut f, &built).expect("ablation run");
-                let s = &f.stats;
-                let cong: f64 = (0..5).map(|p| s.port_congestion(p)).sum::<f64>() / 5.0;
-                results.lock().unwrap().push((
-                    built.work_ops as f64 / s.cycles.max(1) as f64,
-                    s.utilization(),
-                    cong,
-                ));
-            });
-        }
-    });
-    let v = results.into_inner().unwrap();
+    let irregular: Vec<&Spec> = specs.iter().filter(|s| s.class() != "dense").collect();
+    let pool = MachinePool::new();
+    let v = pool.run_batch_with(
+        || Machine::new(cfg.clone()),
+        &irregular,
+        |m, spec| {
+            let e = m.run(spec).expect("ablation run");
+            let r = &e.result;
+            let cong: f64 = r.congestion.iter().sum::<f64>() / 5.0;
+            (
+                r.work_ops as f64 / r.cycles.max(1) as f64,
+                r.utilization,
+                cong,
+            )
+        },
+    );
     let perfs: Vec<f64> = v.iter().map(|r| r.0).collect();
     let utils: Vec<f64> = v.iter().map(|r| r.1).collect();
     let congs: Vec<f64> = v.iter().map(|r| r.2).collect();
@@ -155,11 +150,19 @@ pub fn placement_ablation(seed: u64) -> (u64, u64) {
     };
 
     let run = |row_part: &[usize]| {
-        let prog = build_with(row_part);
-        let mut f = NexusFabric::new(cfg.clone());
-        let out = f.run_program(&prog).expect("placement run");
-        assert_eq!(out, a.spmv(&x), "placement must not change results");
-        f.stats.cycles
+        // Wrap the hand-built program as a compiled artifact; the machine
+        // validates the outputs against the software reference.
+        let built = crate::workloads::Built {
+            name: "placement".into(),
+            tiles: crate::workloads::Tiles::Static(vec![build_with(row_part)]),
+            expected: a.spmv(&x),
+            work_ops: 2 * a.nnz() as u64,
+        };
+        let mut m = Machine::new(cfg.clone());
+        let e = m
+            .execute(&crate::machine::Compiled::from_built(built))
+            .expect("placement must not change results");
+        e.result.cycles
     };
 
     let dis = run(&partition::dissimilarity_aware(&a, cfg.num_pes(), 8));

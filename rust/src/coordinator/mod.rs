@@ -1,9 +1,14 @@
 //! Experiment coordinator: runs the (architecture × workload) evaluation
-//! matrix across OS threads and renders every figure/table of §5 as an
-//! aligned text report (and CSV for plotting).
+//! matrix and renders every figure/table of §5 as an aligned text report
+//! (and CSV for plotting).
+//!
+//! All sweeps fan out through one [`MachinePool`]: each worker owns a
+//! reusable [`Machine`] (or one per roster architecture), so fabric
+//! allocations and compile caches persist across the jobs a worker runs —
+//! no per-run simulator construction, no hand-rolled thread plumbing.
 //!
 //! Each figure has a `figNN` function that returns the report as a
-//! `String`; the `nexus` CLI and the criterion benches print them, and the
+//! `String`; the `nexus` CLI and the bench binaries print them, and the
 //! integration tests assert their headline shapes (who wins, by roughly
 //! what factor).
 
@@ -12,38 +17,46 @@ pub mod report;
 
 use crate::baselines::{roster, RunResult};
 use crate::config::ArchConfig;
+use crate::machine::{Compiled, ExecError, Machine, MachinePool};
 use crate::workloads::suite;
-use std::sync::Mutex;
 
-/// Run every architecture on every suite workload, in parallel across
-/// workloads. Returns results grouped by workload (suite order), each with
-/// the roster's architectures in order (None where not executable).
+/// Run every architecture on every suite workload, fanned out across the
+/// pool. Returns results grouped by workload (suite order), each with the
+/// roster's architectures in order (`None` where not executable).
 pub fn run_matrix(seed: u64) -> Matrix {
     let specs = suite(seed);
-    let archs = roster();
-    let results: Mutex<Vec<(usize, Vec<Option<RunResult>>)>> = Mutex::new(Vec::new());
-    std::thread::scope(|scope| {
-        for (wi, spec) in specs.iter().enumerate() {
-            let archs = &archs;
-            let results = &results;
-            scope.spawn(move || {
-                let row: Vec<Option<RunResult>> = archs.iter().map(|a| a.run(spec)).collect();
-                results.lock().unwrap().push((wi, row));
-            });
-        }
-    });
-    let mut rows = results.into_inner().unwrap();
-    rows.sort_by_key(|(wi, _)| *wi);
+    let pool = MachinePool::new();
+    let rows = pool.run_batch_with(
+        || {
+            roster()
+                .into_iter()
+                .map(Machine::from_backend)
+                .collect::<Vec<Machine>>()
+        },
+        &specs,
+        |machines, spec| {
+            machines
+                .iter_mut()
+                .map(|m| match m.run(spec) {
+                    Ok(e) => Some(e.result),
+                    Err(ExecError::Unsupported { .. }) => None,
+                    Err(e) => panic!("{} on {}: {e}", m.name(), spec.name()),
+                })
+                .collect::<Vec<Option<RunResult>>>()
+        },
+    );
     Matrix {
         workloads: specs.iter().map(|s| s.name()).collect(),
         classes: specs.iter().map(|s| s.class()).collect(),
         arch_names: arch_names(),
-        rows: rows.into_iter().map(|(_, r)| r).collect(),
+        rows,
     }
 }
 
+/// Roster architecture names, in roster order — derived from
+/// [`roster`] itself so the list can never drift from it.
 pub fn arch_names() -> Vec<&'static str> {
-    vec!["Systolic", "GenericCGRA", "TIA", "TIA-Valiant", "Nexus"]
+    roster().iter().map(|b| b.name()).collect()
 }
 
 /// The full evaluation matrix: `rows[workload][arch]`.
@@ -92,26 +105,26 @@ impl Matrix {
 
 /// One-shot validation of the full suite on a fabric configuration: every
 /// workload's fabric output must equal its reference. Returns per-workload
-/// (name, cycles) on success.
-pub fn validate_suite(cfg: &ArchConfig, seed: u64) -> Result<Vec<(String, u64)>, String> {
+/// (program name, cycles) on success, the first typed failure otherwise.
+pub fn validate_suite(cfg: &ArchConfig, seed: u64) -> Result<Vec<(String, u64)>, ExecError> {
     let specs = suite(seed);
-    let results: Mutex<Vec<(usize, Result<(String, u64), String>)>> = Mutex::new(Vec::new());
-    std::thread::scope(|scope| {
-        for (wi, spec) in specs.iter().enumerate() {
-            let results = &results;
-            let cfg = cfg.clone();
-            scope.spawn(move || {
-                let built = spec.build(&cfg);
-                let mut f = crate::fabric::NexusFabric::new(cfg);
-                let r = crate::workloads::validate_on_fabric(&mut f, &built)
-                    .map(|_| (built.name.clone(), f.stats.cycles));
-                results.lock().unwrap().push((wi, r));
-            });
-        }
-    });
-    let mut rows = results.into_inner().unwrap();
-    rows.sort_by_key(|(wi, _)| *wi);
-    rows.into_iter().map(|(_, r)| r).collect()
+    let pool = MachinePool::new();
+    pool.run_batch_with(
+        || Machine::new(cfg.clone()),
+        &specs,
+        |m, spec| -> Result<(String, u64), ExecError> {
+            let compiled = match m.compile(spec) {
+                Ok(c) => c,
+                Err(e) => return Err(ExecError::in_workload(spec.name(), e)),
+            };
+            match m.execute(&compiled) {
+                Ok(exec) => Ok((compiled.program_name().to_string(), exec.result.cycles)),
+                Err(e) => Err(ExecError::in_workload(spec.name(), e)),
+            }
+        },
+    )
+    .into_iter()
+    .collect()
 }
 
 /// Fig 16 data point: one (sparsity, SRAM size) cell of the bandwidth
@@ -133,39 +146,32 @@ pub struct BandwidthPoint {
 pub fn bandwidth_sweep(seed: u64) -> Vec<BandwidthPoint> {
     let sparsities = [0.3, 0.5, 0.7, 0.85, 0.95];
     let per_pe_bytes = [512usize, 1024, 2048, 4096, 8192, 16384, 32768];
-    let points: Mutex<Vec<BandwidthPoint>> = Mutex::new(Vec::new());
-    std::thread::scope(|scope| {
-        for &sp in &sparsities {
-            for &bytes in &per_pe_bytes {
-                let points = &points;
-                scope.spawn(move || {
-                    let mut rng = crate::util::SplitMix64::new(seed ^ (bytes as u64));
-                    let n = 96;
-                    let a = crate::tensor::gen::skewed_csr(&mut rng, n, n, 1.0 - sp);
-                    let b = crate::tensor::gen::random_csr(&mut rng, n, n, 1.0 - sp);
-                    let cfg = ArchConfig::nexus().with_dmem_bytes(bytes);
-                    let built =
-                        crate::workloads::spmspm::build_tiled("fig16", &a, &b, &cfg);
-                    let ntiles = match &built.tiles {
-                        crate::workloads::Tiles::Static(t) => t.len(),
-                        _ => unreachable!(),
-                    };
-                    let mut f = crate::fabric::NexusFabric::new(cfg.clone());
-                    crate::workloads::run_on_fabric(&mut f, &built).expect("fig16 run");
-                    let s = &f.stats;
-                    let compute_cycles = (s.cycles - s.load_cycles).max(1);
-                    points.lock().unwrap().push(BandwidthPoint {
-                        sparsity: sp,
-                        total_sram_bytes: bytes * cfg.num_pes(),
-                        tiles: ntiles,
-                        bytes_per_cycle: s.offchip_bytes as f64 / compute_cycles as f64,
-                        ops_per_cycle: (s.alu_ops + s.mem_ops) as f64 / compute_cycles as f64,
-                    });
-                });
-            }
+    let jobs: Vec<(f64, usize)> = sparsities
+        .iter()
+        .flat_map(|&sp| per_pe_bytes.iter().map(move |&b| (sp, b)))
+        .collect();
+    let pool = MachinePool::new();
+    let mut v = pool.run_batch(&jobs, |&(sp, bytes)| {
+        let mut rng = crate::util::SplitMix64::new(seed ^ (bytes as u64));
+        let n = 96;
+        let a = crate::tensor::gen::skewed_csr(&mut rng, n, n, 1.0 - sp);
+        let b = crate::tensor::gen::random_csr(&mut rng, n, n, 1.0 - sp);
+        let cfg = ArchConfig::nexus().with_dmem_bytes(bytes);
+        let compiled = Compiled::from_built(crate::workloads::spmspm::build_tiled(
+            "fig16", &a, &b, &cfg,
+        ));
+        let mut m = Machine::new(cfg.clone());
+        let exec = m.execute(&compiled).expect("fig16 run");
+        let s = exec.stats.as_ref().expect("fabric stats");
+        let compute_cycles = (s.cycles - s.load_cycles).max(1);
+        BandwidthPoint {
+            sparsity: sp,
+            total_sram_bytes: bytes * cfg.num_pes(),
+            tiles: compiled.tile_count(),
+            bytes_per_cycle: s.offchip_bytes as f64 / compute_cycles as f64,
+            ops_per_cycle: (s.alu_ops + s.mem_ops) as f64 / compute_cycles as f64,
         }
     });
-    let mut v = points.into_inner().unwrap();
     v.sort_by(|a, b| {
         a.sparsity
             .partial_cmp(&b.sparsity)
@@ -186,35 +192,28 @@ pub struct ScalePoint {
 
 /// Run the Fig 17 scalability sweep over array sizes.
 pub fn scalability_sweep(seed: u64, dims: &[usize]) -> Vec<ScalePoint> {
-    let points: Mutex<Vec<ScalePoint>> = Mutex::new(Vec::new());
-    std::thread::scope(|scope| {
-        for &d in dims {
-            let points = &points;
-            scope.spawn(move || {
-                let cfg = ArchConfig::nexus().with_array(d, d);
-                // A representative subset: sparse, dense, graph.
-                let specs = suite(seed);
-                for spec in specs.iter().filter(|s| {
-                    let n = s.name();
-                    n.starts_with("SpMV")
-                        || n.starts_with("SpMSpM-S1")
-                        || n == "MatMul"
-                        || n == "BFS"
-                }) {
-                    let built = spec.build(&cfg);
-                    let mut f = crate::fabric::NexusFabric::new(cfg.clone());
-                    crate::workloads::run_on_fabric(&mut f, &built).expect("fig17 run");
-                    points.lock().unwrap().push(ScalePoint {
-                        dim: d,
-                        workload: spec.name(),
-                        perf: built.work_ops as f64 / f.stats.cycles.max(1) as f64,
-                        utilization: f.stats.utilization(),
-                    });
-                }
+    let pool = MachinePool::new();
+    let rows = pool.run_batch(dims, |&d| {
+        let cfg = ArchConfig::nexus().with_array(d, d);
+        let mut m = Machine::new(cfg);
+        // A representative subset: sparse, dense, graph.
+        let specs = suite(seed);
+        let mut pts = Vec::new();
+        for spec in specs.iter().filter(|s| {
+            let n = s.name();
+            n.starts_with("SpMV") || n.starts_with("SpMSpM-S1") || n == "MatMul" || n == "BFS"
+        }) {
+            let exec = m.run(spec).expect("fig17 run");
+            pts.push(ScalePoint {
+                dim: d,
+                workload: spec.name(),
+                perf: exec.result.work_ops as f64 / exec.result.cycles.max(1) as f64,
+                utilization: exec.result.utilization,
             });
         }
+        pts
     });
-    let mut v = points.into_inner().unwrap();
+    let mut v: Vec<ScalePoint> = rows.into_iter().flatten().collect();
     v.sort_by(|a, b| a.dim.cmp(&b.dim).then(a.workload.cmp(&b.workload)));
     v
 }
@@ -252,5 +251,14 @@ mod tests {
         let sys = m.get(mm, "Systolic").unwrap().perf();
         let nexus = m.get(mm, "Nexus").unwrap().perf();
         assert!(sys > nexus, "systolic should win dense MatMul");
+    }
+
+    #[test]
+    fn arch_names_match_roster_order() {
+        assert_eq!(
+            arch_names(),
+            roster().iter().map(|b| b.name()).collect::<Vec<_>>()
+        );
+        assert_eq!(arch_names().len(), 5);
     }
 }

@@ -122,6 +122,33 @@ impl NexusFabric {
         self.cycle
     }
 
+    /// Reset the fabric to its just-constructed state, reusing allocations,
+    /// so one instance can execute many programs back to back. A reset
+    /// fabric behaves bit-identically to a freshly constructed one: the
+    /// cycle counter, message ids, AXI round-robin pointer, RNG, and all
+    /// statistics return to their initial values (per-tile PE/router state
+    /// is rebuilt by `load_tile` anyway). [`crate::machine::Machine`] calls
+    /// this before every execution instead of building a new fabric.
+    pub fn reset(&mut self) {
+        self.cycle = 0;
+        self.next_msg_id = 1;
+        self.rng = SplitMix64::new(self.cfg.seed);
+        self.axi_credit = 0.0;
+        self.axi_rr = 0;
+        self.pending_remaining = 0;
+        for q in &mut self.pending_static {
+            q.clear();
+        }
+        self.config_mem.clear();
+        // Reset every counter but keep the per-PE vector's allocation.
+        let mut per_pe = std::mem::take(&mut self.stats.per_pe_busy_cycles);
+        per_pe.fill(0);
+        self.stats = FabricStats {
+            per_pe_busy_cycles: per_pe,
+            ..FabricStats::default()
+        };
+    }
+
     /// Run one tile: load its images (charging AXI load cycles), execute to
     /// drain + idle-tree latency, write back outputs. Returns the output
     /// tensor in the program's logical order.
@@ -1163,6 +1190,22 @@ mod tests {
         assert!(r.is_err(), "expected timeout error");
         let e = r.unwrap_err();
         assert!(e.in_flight >= 1, "stuck message should be reported");
+    }
+
+    #[test]
+    fn reset_fabric_is_bit_identical_to_fresh() {
+        let cfg = nexus();
+        let prog = mac_program(&cfg);
+        let mut fresh = NexusFabric::new(cfg.clone());
+        let out_fresh = fresh.run_program(&prog).unwrap();
+        let mut reused = NexusFabric::new(cfg);
+        // Dirty the instance with a different program first, then reset.
+        let store = store_program(&reused.cfg, 0, 15, -7);
+        reused.run_program(&store).unwrap();
+        reused.reset();
+        let out_reused = reused.run_program(&prog).unwrap();
+        assert_eq!(out_fresh, out_reused);
+        assert_eq!(fresh.stats, reused.stats);
     }
 
     #[test]

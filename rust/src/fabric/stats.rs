@@ -4,7 +4,9 @@
 use crate::noc::router::{PortStats, NUM_PORTS};
 
 /// Aggregated run statistics for one fabric execution (possibly multi-tile).
-#[derive(Debug, Clone, Default)]
+/// `PartialEq` lets tests assert that a reset fabric reproduces a fresh
+/// fabric's counters bit for bit.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FabricStats {
     /// Total execution cycles (including inter-tile data-load cycles).
     pub cycles: u64,

@@ -22,11 +22,11 @@
 //! | `spmadd`    | a `f32[64,64]`, b `f32[64,64]`               |
 
 use crate::config::ArchConfig;
-use crate::fabric::NexusFabric;
-use crate::runtime::GoldenRuntime;
+use crate::machine::{Compiled, Machine};
+use crate::runtime::{GoldenRuntime, Result};
 use crate::tensor::{gen, Csr, Ell};
 use crate::util::SplitMix64;
-use anyhow::{bail, Context, Result};
+use crate::workloads::Built;
 use std::path::Path;
 
 /// Fixed artifact shapes (must match `python/compile/aot.py`).
@@ -45,19 +45,30 @@ fn to_f32(v: &[i16]) -> Vec<f32> {
 
 fn cmp_f32_i16(xla: &[f32], reference: &[i16], what: &str) -> Result<()> {
     if xla.len() != reference.len() {
-        bail!("{what}: length {} vs {}", xla.len(), reference.len());
+        return Err(format!("{what}: length {} vs {}", xla.len(), reference.len()).into());
     }
     for (i, (x, r)) in xla.iter().zip(reference).enumerate() {
         if (x - *r as f32).abs() > 0.5 {
-            bail!("{what}: mismatch at [{i}]: xla {x} vs reference {r}");
+            return Err(format!("{what}: mismatch at [{i}]: xla {x} vs reference {r}").into());
         }
     }
     Ok(())
 }
 
+/// Execute a fabric program through the `Machine` API, returning its
+/// validated outputs.
+fn run_fabric(cfg: ArchConfig, built: Built) -> Result<Vec<i16>> {
+    let mut m = Machine::new(cfg);
+    let exec = m
+        .execute(&Compiled::from_built(built))
+        .map_err(|e| e.to_string())?;
+    Ok(exec.outputs)
+}
+
 /// Run all golden checks. Each row is (kernel, status). Kernels whose
-/// artifact is missing are reported as skipped rather than failing, so the
-/// simulator test-suite stays runnable before `make artifacts`.
+/// artifact is missing — or whose runtime is the feature-gated stub — are
+/// reported as skipped rather than failing, so the simulator test-suite
+/// stays runnable before `make artifacts` and without the `pjrt` feature.
 pub fn check_all(dir: &Path, seed: u64) -> Result<Vec<(String, String)>> {
     let mut rt = GoldenRuntime::new(dir)?;
     let mut rows = Vec::new();
@@ -71,7 +82,14 @@ pub fn check_all(dir: &Path, seed: u64) -> Result<Vec<(String, String)>> {
             rows.push((name.to_string(), "SKIPPED (no artifact)".to_string()));
             continue;
         }
-        f(&mut rt, seed).with_context(|| format!("golden check {name}"))?;
+        if !rt.available() {
+            rows.push((
+                name.to_string(),
+                "SKIPPED (built without the `pjrt` feature)".to_string(),
+            ));
+            continue;
+        }
+        f(&mut rt, seed).map_err(|e| format!("golden check {name}: {e}"))?;
         rows.push((
             name.to_string(),
             "OK (reference == XLA == fabric)".to_string(),
@@ -87,7 +105,7 @@ fn check_spmv(rt: &mut GoldenRuntime, seed: u64) -> Result<()> {
     let reference = a.spmv(&x);
     // XLA golden model over the ELL padding.
     let ell = Ell::from_csr_exact(&a, SPMV_ELL_WIDTH)
-        .map_err(|e| anyhow::anyhow!("{e} (reseed the generator)"))?;
+        .map_err(|e| format!("{e} (reseed the generator)"))?;
     let colidx_f32: Vec<f32> = ell.colidx.iter().map(|&c| c as f32).collect();
     let out = rt.run(
         "spmv_ell",
@@ -101,9 +119,7 @@ fn check_spmv(rt: &mut GoldenRuntime, seed: u64) -> Result<()> {
     // Fabric.
     let cfg = ArchConfig::nexus();
     let built = crate::workloads::spmv::build("spmv", &a, &x, &cfg);
-    let mut f = NexusFabric::new(cfg);
-    let fab = crate::workloads::run_on_fabric(&mut f, &built)
-        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let fab = run_fabric(cfg, built)?;
     cmp_f32_i16(&out[0], &fab, "spmv: xla vs fabric")?;
     Ok(())
 }
@@ -128,15 +144,15 @@ fn check_sddmm(rt: &mut GoldenRuntime, seed: u64) -> Result<()> {
     cmp_f32_i16(&out[0], &reference.data, "sddmm: xla vs reference")?;
     let cfg = ArchConfig::nexus();
     let built = crate::workloads::sddmm::build(&mask, &a, &b, &cfg);
-    let mut f = NexusFabric::new(cfg);
-    let fab = crate::workloads::run_on_fabric(&mut f, &built)
-        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let fab = run_fabric(cfg, built)?;
     let mut nz = 0usize;
     for i in 0..mask.rows {
         for (j, _) in mask.row(i) {
             let want = out[0][i * SDDMM_N + j];
             if (want - fab[nz] as f32).abs() > 0.5 {
-                bail!("sddmm: xla vs fabric at ({i},{j}): {want} vs {}", fab[nz]);
+                return Err(
+                    format!("sddmm: xla vs fabric at ({i},{j}): {want} vs {}", fab[nz]).into(),
+                );
             }
             nz += 1;
         }
@@ -164,9 +180,7 @@ fn check_matmul(rt: &mut GoldenRuntime, seed: u64) -> Result<()> {
         &Csr::from_dense(&b),
         &cfg,
     );
-    let mut f = NexusFabric::new(cfg);
-    let fab = crate::workloads::run_on_fabric(&mut f, &built)
-        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let fab = run_fabric(cfg, built)?;
     cmp_f32_i16(&out[0], &fab, "matmul: xla vs fabric")?;
     Ok(())
 }
@@ -186,9 +200,7 @@ fn check_spmadd(rt: &mut GoldenRuntime, seed: u64) -> Result<()> {
     cmp_f32_i16(&out[0], &reference.data, "spmadd: xla vs reference")?;
     let cfg = ArchConfig::nexus();
     let built = crate::workloads::spadd::build(&a, &b, &cfg);
-    let mut f = NexusFabric::new(cfg);
-    let fab = crate::workloads::run_on_fabric(&mut f, &built)
-        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let fab = run_fabric(cfg, built)?;
     cmp_f32_i16(&out[0], &fab, "spmadd: xla vs fabric")?;
     Ok(())
 }

@@ -4,6 +4,37 @@
 //! Inspired Reconfigurable Architecture for Irregular Workloads* (Juneja,
 //! Dangi, Bandara, Mitra, Peh — NUS, 2025).
 //!
+//! ## Quickstart: the `Machine` session API
+//!
+//! All execution goes through [`machine::Machine`] — compile once, run
+//! many, every failure typed:
+//!
+//! ```no_run
+//! use nexus::machine::Machine;
+//! use nexus::workloads::Spec;
+//! use nexus::{ArchConfig, tensor::gen, util::SplitMix64};
+//!
+//! let mut rng = SplitMix64::new(42);
+//! let a = gen::skewed_csr(&mut rng, 32, 32, 0.25);
+//! let x = gen::random_vec(&mut rng, 32, 3);
+//!
+//! // One reusable fabric session (Table 1 configuration).
+//! let mut machine = Machine::new(ArchConfig::nexus());
+//! // Compile (cached): tensors partitioned, static AMs generated.
+//! let compiled = machine.compile(&Spec::Spmv { a, x })?;
+//! println!("{} static AMs", compiled.static_am_count());
+//! // Execute on the reset (not reallocated) fabric; outputs validated.
+//! let exec = machine.execute(&compiled)?;
+//! println!("{} cycles, {:.2} ops/cycle", exec.cycles(), exec.perf());
+//! # Ok::<(), nexus::machine::ExecError>(())
+//! ```
+//!
+//! Sweeps fan out with [`machine::MachinePool`], which gives each worker a
+//! reusable `Machine`; deadlocks, unsupported (arch, workload) pairs, and
+//! reference mismatches surface as [`machine::ExecError`] values.
+//!
+//! ## Module map
+//!
 //! The crate contains, from the bottom up:
 //!
 //! - [`util`] — deterministic PRNG, a mini property-testing harness, stats.
@@ -17,11 +48,17 @@
 //!   In-Network (en-route) computing, the paper's contribution.
 //! - [`compiler`] — DFG scheduling, Algorithm-1 dissimilarity-aware data
 //!   partitioning, static-AM codegen.
-//! - [`workloads`] — the twelve evaluation kernels (sparse, dense, graph).
+//! - [`workloads`] — the twelve evaluation kernels (sparse, dense, graph),
+//!   compiled to programs by [`workloads::Spec::build`].
 //! - [`baselines`] — systolic array, Generic CGRA, TIA, TIA-Valiant.
+//! - [`machine`] — the unified execution API: [`machine::Machine`]
+//!   sessions (compile-once/run-many over any [`machine::Backend`]), typed
+//!   [`machine::ExecError`]s, and the [`machine::MachinePool`] batch
+//!   executor every sweep fans out through.
 //! - [`power`] — 22nm-calibrated area/energy models (Figs 10/15, Table 2).
-//! - [`runtime`] — PJRT golden-model runtime (loads `artifacts/*.hlo.txt`).
-//! - [`coordinator`] — threaded experiment sweeps and report printers.
+//! - [`runtime`] — PJRT golden-model runtime (loads `artifacts/*.hlo.txt`;
+//!   the XLA client is gated behind the `pjrt` cargo feature).
+//! - [`coordinator`] — pooled experiment sweeps and report printers.
 //!
 //! Python (JAX + Pallas) appears only at build time: `make artifacts` lowers
 //! the golden models to HLO text which [`runtime`] loads; the `nexus` binary
@@ -35,6 +72,7 @@ pub mod coordinator;
 pub mod fabric;
 pub mod golden;
 pub mod isa;
+pub mod machine;
 pub mod noc;
 pub mod pe;
 pub mod power;
@@ -45,3 +83,4 @@ pub mod workloads;
 
 pub use config::{ArchConfig, ArchKind};
 pub use fabric::NexusFabric;
+pub use machine::{Compiled, ExecError, Execution, Machine, MachinePool};

@@ -1,0 +1,193 @@
+//! The [`Backend`] trait — one execution contract for every architecture —
+//! and [`FabricArch`], the cycle-accurate fabric backend behind the Nexus,
+//! TIA and TIA-Valiant roster entries.
+//!
+//! A backend separates *compilation* (spec → [`Artifact`]) from *execution*
+//! (artifact → [`Execution`]) so that sweeps which rerun a workload pay the
+//! compile cost once. Fabric backends compile to a real [`Built`] program
+//! and execute it on a reusable [`NexusFabric`] (reset between runs, not
+//! reallocated); analytical backends (systolic array, Generic CGRA) evaluate
+//! their closed-form model at compile time and replay the report at execute
+//! time.
+
+use super::{Compiled, ExecError, Execution};
+use crate::baselines::RunResult;
+use crate::compiler::Program;
+use crate::config::{ArchConfig, ArchKind};
+use crate::fabric::NexusFabric;
+use crate::power::EnergyEvents;
+use crate::workloads::{Built, Spec, Tiles};
+
+/// What a backend's compile step produces.
+pub enum Artifact {
+    /// A compiled fabric program together with its reference output
+    /// (cycle-accurate backends).
+    Program(Box<Built>),
+    /// Analytical backends evaluate their model at compile time; execution
+    /// replays the report.
+    Report(Box<RunResult>),
+}
+
+/// An architecture that can compile and execute evaluation workloads.
+pub trait Backend: Send {
+    /// Roster display name ("Nexus", "TIA", "Systolic", …) — also the key
+    /// the power/area models and [`crate::coordinator::Matrix`] use.
+    fn name(&self) -> &'static str;
+
+    /// Compile a workload spec into an executable artifact.
+    fn compile(&self, spec: &Spec) -> Result<Artifact, ExecError>;
+
+    /// Execute a previously compiled artifact.
+    fn execute(&mut self, compiled: &Compiled) -> Result<Execution, ExecError>;
+}
+
+/// Execute a built workload on a fabric, returning the final outputs in the
+/// program's logical order. This is the only place in the crate that drives
+/// `NexusFabric` with a [`Built`] program.
+pub(crate) fn run_built(f: &mut NexusFabric, built: &Built) -> Result<Vec<i16>, ExecError> {
+    match &built.tiles {
+        Tiles::Static(tiles) => {
+            let mut out = Vec::new();
+            for t in tiles {
+                out.extend(run_tile(f, t)?);
+            }
+            Ok(out)
+        }
+        Tiles::Iterative { iters, gen } => {
+            let mut prev: Vec<i16> = Vec::new();
+            for i in 0..*iters {
+                let p = gen(&prev, i);
+                prev = run_tile(f, &p)?;
+            }
+            Ok(prev)
+        }
+    }
+}
+
+/// Run one tile, turning a program/architecture mismatch (e.g. an artifact
+/// compiled under a different `ArchConfig`) into a typed error instead of
+/// the fabric's internal panic.
+fn run_tile(f: &mut NexusFabric, prog: &Program) -> Result<Vec<i16>, ExecError> {
+    prog.validate(&f.cfg)
+        .map_err(|reason| ExecError::IncompatibleProgram { reason })?;
+    f.run_program(prog).map_err(ExecError::Deadlock)
+}
+
+/// Compare fabric outputs against the reference, as a typed error.
+pub(crate) fn validate_outputs(out: &[i16], expected: &[i16]) -> Result<(), ExecError> {
+    if out.len() != expected.len() {
+        return Err(ExecError::OutputLength {
+            got: out.len(),
+            expected: expected.len(),
+        });
+    }
+    for (index, (&got, &expected)) in out.iter().zip(expected).enumerate() {
+        if got != expected {
+            return Err(ExecError::ValidationMismatch {
+                index,
+                got,
+                expected,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Fabric-backed architecture (Nexus, TIA, TIA-Valiant): a thin [`Backend`]
+/// over one reusable [`NexusFabric`] instance, constructed lazily on the
+/// first execution so that name-only uses of the roster (e.g.
+/// `coordinator::arch_names`) stay allocation-free.
+pub struct FabricArch {
+    name: &'static str,
+    cfg: ArchConfig,
+    fabric: Option<NexusFabric>,
+}
+
+impl FabricArch {
+    /// Wrap a fabric configuration under an explicit roster name.
+    pub fn new(name: &'static str, cfg: ArchConfig) -> Self {
+        cfg.validate().expect("invalid ArchConfig");
+        FabricArch {
+            name,
+            cfg,
+            fabric: None,
+        }
+    }
+
+    /// Derive the roster name from the config's [`ArchKind`].
+    pub fn from_config(cfg: ArchConfig) -> Self {
+        let name = match cfg.kind {
+            ArchKind::Nexus => "Nexus",
+            ArchKind::Tia => "TIA",
+            ArchKind::TiaValiant => "TIA-Valiant",
+        };
+        Self::new(name, cfg)
+    }
+
+    pub fn nexus() -> Self {
+        Self::from_config(ArchConfig::nexus())
+    }
+
+    pub fn tia() -> Self {
+        Self::from_config(ArchConfig::tia())
+    }
+
+    pub fn tia_valiant() -> Self {
+        Self::from_config(ArchConfig::tia_valiant())
+    }
+
+    /// All three fabric variants.
+    pub fn variants() -> Vec<FabricArch> {
+        vec![Self::nexus(), Self::tia(), Self::tia_valiant()]
+    }
+
+    /// The architectural configuration this fabric models.
+    pub fn cfg(&self) -> &ArchConfig {
+        &self.cfg
+    }
+}
+
+impl Backend for FabricArch {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn compile(&self, spec: &Spec) -> Result<Artifact, ExecError> {
+        Ok(Artifact::Program(Box::new(spec.build(&self.cfg))))
+    }
+
+    fn execute(&mut self, compiled: &Compiled) -> Result<Execution, ExecError> {
+        let Artifact::Program(built) = compiled.artifact() else {
+            return Err(ExecError::ArtifactMismatch {
+                backend: self.name,
+                workload: compiled.workload().to_string(),
+            });
+        };
+        // First execution builds the fabric; afterwards it is reset (not
+        // reallocated), which is bit-identical to a fresh instance.
+        let fabric = self
+            .fabric
+            .get_or_insert_with(|| NexusFabric::new(self.cfg.clone()));
+        fabric.reset();
+        let outputs = run_built(fabric, built)?;
+        validate_outputs(&outputs, &built.expected)?;
+        let s = &fabric.stats;
+        let result = RunResult {
+            arch: self.name,
+            workload: compiled.workload().to_string(),
+            cycles: s.cycles,
+            work_ops: built.work_ops,
+            utilization: s.utilization(),
+            in_network_frac: s.in_network_fraction(),
+            congestion: std::array::from_fn(|p| s.port_congestion(p)),
+            offchip_bytes: s.offchip_bytes,
+            events: EnergyEvents::from_fabric(s, self.cfg.kind),
+            validated: true,
+        };
+        Ok(Execution {
+            outputs,
+            stats: Some(s.clone()),
+            result,
+        })
+    }
+}

@@ -1,0 +1,105 @@
+//! Typed execution errors for the [`crate::machine`] API.
+//!
+//! Every failure mode that used to surface as a `panic!`, an `Option`, or a
+//! stringly `Result<_, String>` is a variant here, so sweep harnesses can
+//! report, count, and retry per-workload failures instead of dying.
+
+use crate::fabric::DeadlockError;
+use std::fmt;
+
+/// Failure of a [`crate::machine::Machine`] compile or execute step.
+#[derive(Debug, Clone)]
+pub enum ExecError {
+    /// The fabric did not drain within its cycle budget (`max_cycles`).
+    /// Carries the full per-PE / per-port forensic report.
+    Deadlock(DeadlockError),
+    /// The backend cannot express this workload at all — e.g. a systolic
+    /// array asked to run graph analytics.
+    Unsupported {
+        arch: &'static str,
+        workload: String,
+    },
+    /// An output element disagreed with the software reference.
+    ValidationMismatch {
+        index: usize,
+        got: i16,
+        expected: i16,
+    },
+    /// The output tensor had the wrong number of elements.
+    OutputLength { got: usize, expected: usize },
+    /// A [`crate::machine::Compiled`] artifact was handed to a backend of a
+    /// different kind than the one that produced it (e.g. an analytical
+    /// report executed on a fabric machine).
+    ArtifactMismatch {
+        backend: &'static str,
+        workload: String,
+    },
+    /// A fabric program does not fit the executing machine's architecture
+    /// (different mesh geometry, SRAM size, config-memory capacity, …) —
+    /// typically a [`crate::machine::Compiled`] compiled under one
+    /// `ArchConfig` and executed under another.
+    IncompatibleProgram { reason: String },
+    /// A failure annotated with the workload it occurred in — sweep
+    /// harnesses attach this so batch errors stay localizable.
+    InWorkload {
+        workload: String,
+        source: Box<ExecError>,
+    },
+}
+
+impl ExecError {
+    /// Wrap an error with the workload it occurred in.
+    pub fn in_workload(workload: impl Into<String>, source: ExecError) -> Self {
+        ExecError::InWorkload {
+            workload: workload.into(),
+            source: Box::new(source),
+        }
+    }
+}
+
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecError::Deadlock(e) => write!(f, "{e}"),
+            ExecError::Unsupported { arch, workload } => {
+                write!(f, "{arch} cannot execute {workload}")
+            }
+            ExecError::ValidationMismatch {
+                index,
+                got,
+                expected,
+            } => write!(
+                f,
+                "output mismatch at [{index}]: fabric {got}, reference {expected}"
+            ),
+            ExecError::OutputLength { got, expected } => {
+                write!(f, "output length {got} != expected {expected}")
+            }
+            ExecError::ArtifactMismatch { backend, workload } => write!(
+                f,
+                "{backend} cannot execute the {workload} artifact: it was \
+                 compiled by a different backend kind"
+            ),
+            ExecError::IncompatibleProgram { reason } => {
+                write!(f, "program/architecture mismatch: {reason}")
+            }
+            ExecError::InWorkload { workload, source } => write!(f, "{workload}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ExecError::Deadlock(e) => Some(e),
+            ExecError::InWorkload { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<DeadlockError> for ExecError {
+    fn from(e: DeadlockError) -> Self {
+        ExecError::Deadlock(e)
+    }
+}

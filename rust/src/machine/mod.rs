@@ -1,0 +1,482 @@
+//! The unified execution API: **compile once, run many**.
+//!
+//! Everything in the crate that executes a workload — the CLI, the
+//! coordinator sweeps, the examples, the benches — goes through a
+//! [`Machine`]:
+//!
+//! ```text
+//! Machine::new(ArchConfig)              // owns one reusable NexusFabric
+//! Machine::from_backend(Box<dyn Backend>) // or any roster architecture
+//!   .compile(&Spec)  -> Compiled        // cached: recompiles are free
+//!   .execute(&Compiled) -> Execution    // outputs + stats + energy events
+//! ```
+//!
+//! A [`Machine`] owns a [`Backend`] (a reusable simulator instance or an
+//! analytical model) plus a compile cache keyed by workload, so sweeps that
+//! rerun a workload skip recompilation and fabric executions reuse the
+//! fabric's allocations via [`NexusFabric::reset`](crate::fabric::NexusFabric::reset)
+//! instead of rebuilding a simulator per run. Every failure mode is a typed
+//! [`ExecError`] — deadlocks surface as `Err`, not `panic!`; unsupported
+//! (architecture, workload) pairs as [`ExecError::Unsupported`]; reference
+//! mismatches as [`ExecError::ValidationMismatch`].
+//!
+//! Batch fan-out lives in [`MachinePool`]: one worker pool with per-worker
+//! reusable `Machine`s replaces the coordinator's four hand-rolled
+//! `Mutex` + `thread::scope` patterns.
+
+mod backend;
+mod error;
+mod pool;
+
+pub use backend::{Artifact, Backend, FabricArch};
+pub use error::ExecError;
+pub use pool::MachinePool;
+
+use crate::baselines::RunResult;
+use crate::config::ArchConfig;
+use crate::fabric::stats::FabricStats;
+use crate::workloads::{Built, Spec, Tiles};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A workload compiled by (and executable on) one backend. Cheap to clone:
+/// the artifact is shared behind an [`Arc`], which is how the compile cache
+/// hands the same program to many executions.
+#[derive(Clone)]
+pub struct Compiled {
+    workload: String,
+    artifact: Arc<Artifact>,
+}
+
+impl Compiled {
+    pub(crate) fn new(workload: String, artifact: Artifact) -> Self {
+        Compiled {
+            workload,
+            artifact: Arc::new(artifact),
+        }
+    }
+
+    /// Wrap an already-built fabric program (escape hatch for hand-built
+    /// programs: the workload compilers' own tests, custom sweeps). The
+    /// program must target the same [`ArchConfig`] as the machine that
+    /// executes it.
+    pub fn from_built(built: Built) -> Self {
+        Compiled::new(built.name.clone(), Artifact::Program(Box::new(built)))
+    }
+
+    /// Display name of the workload this artifact computes.
+    pub fn workload(&self) -> &str {
+        &self.workload
+    }
+
+    /// Name of the underlying compiled program (fabric artifacts carry the
+    /// compiler's program name, e.g. `spmspm-S1`; analytical artifacts fall
+    /// back to the workload name).
+    pub fn program_name(&self) -> &str {
+        match self.artifact() {
+            Artifact::Program(b) => &b.name,
+            Artifact::Report(_) => &self.workload,
+        }
+    }
+
+    pub(crate) fn artifact(&self) -> &Artifact {
+        &self.artifact
+    }
+
+    /// Algorithmic useful operations of the compiled workload.
+    pub fn work_ops(&self) -> u64 {
+        match self.artifact() {
+            Artifact::Program(b) => b.work_ops,
+            Artifact::Report(r) => r.work_ops,
+        }
+    }
+
+    /// Number of static AMs the compiler emitted across all tiles (0 for
+    /// analytical artifacts, which have no AM program). Iterative workloads
+    /// report tile 0's count.
+    pub fn static_am_count(&self) -> usize {
+        match self.artifact() {
+            Artifact::Program(b) => match &b.tiles {
+                Tiles::Static(tiles) => tiles.iter().map(|t| t.num_static_ams()).sum(),
+                Tiles::Iterative { gen, .. } => gen(&[], 0).num_static_ams(),
+            },
+            Artifact::Report(_) => 0,
+        }
+    }
+
+    /// Number of execution tiles (iterative workloads count iterations).
+    pub fn tile_count(&self) -> usize {
+        match self.artifact() {
+            Artifact::Program(b) => match &b.tiles {
+                Tiles::Static(tiles) => tiles.len(),
+                Tiles::Iterative { iters, .. } => *iters,
+            },
+            Artifact::Report(_) => 1,
+        }
+    }
+
+    /// Reference output the execution is validated against (fabric
+    /// artifacts only).
+    pub fn expected(&self) -> Option<&[i16]> {
+        match self.artifact() {
+            Artifact::Program(b) => Some(&b.expected),
+            Artifact::Report(_) => None,
+        }
+    }
+}
+
+/// Outcome of one [`Machine::execute`]: the output tensor, the normalized
+/// per-run report (cycles, utilization, congestion, energy events, the
+/// validated flag), and — for fabric backends — the full cycle-accurate
+/// counter set.
+#[derive(Clone)]
+pub struct Execution {
+    /// Final outputs in the program's logical order (empty for analytical
+    /// backends, which model timing but compute no values).
+    pub outputs: Vec<i16>,
+    /// Normalized per-run report, the unit the evaluation matrix collects.
+    pub result: RunResult,
+    /// Full cycle-accurate counters (fabric backends only).
+    pub stats: Option<FabricStats>,
+}
+
+impl Execution {
+    pub fn cycles(&self) -> u64 {
+        self.result.cycles
+    }
+
+    /// Useful operations per cycle.
+    pub fn perf(&self) -> f64 {
+        self.result.perf()
+    }
+
+    /// True when the outputs were checked against the software reference.
+    pub fn validated(&self) -> bool {
+        self.result.validated
+    }
+}
+
+/// A reusable execution session for one architecture: a [`Backend`] plus a
+/// compile cache. See the [module docs](self) for the API shape.
+pub struct Machine {
+    backend: Box<dyn Backend>,
+    cache: HashMap<(String, u64), Compiled>,
+}
+
+impl Machine {
+    /// A machine over the cycle-accurate fabric configured by `cfg`
+    /// (Nexus / TIA / TIA-Valiant by [`crate::config::ArchKind`]).
+    pub fn new(cfg: ArchConfig) -> Self {
+        Self::from_backend(Box::new(FabricArch::from_config(cfg)))
+    }
+
+    /// A machine over any backend — fabric variants or the analytical
+    /// systolic / Generic-CGRA models.
+    pub fn from_backend(backend: Box<dyn Backend>) -> Self {
+        Machine {
+            backend,
+            cache: HashMap::new(),
+        }
+    }
+
+    /// Roster name of the underlying architecture.
+    pub fn name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Compile `spec` for this machine's architecture. Results are cached
+    /// by (workload name, tensor-content fingerprint): recompiling the same
+    /// workload instance returns the cached artifact, while equal-named
+    /// specs with different data never collide.
+    pub fn compile(&mut self, spec: &Spec) -> Result<Compiled, ExecError> {
+        let key = (spec.name(), fingerprint(spec));
+        if let Some(c) = self.cache.get(&key) {
+            return Ok(c.clone());
+        }
+        let artifact = self.backend.compile(spec)?;
+        let compiled = Compiled::new(key.0.clone(), artifact);
+        self.cache.insert(key, compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Execute a compiled artifact. Fabric machines reset (not reallocate)
+    /// their fabric, run to drain, and validate outputs against the
+    /// reference; analytical machines replay their model report.
+    pub fn execute(&mut self, compiled: &Compiled) -> Result<Execution, ExecError> {
+        self.backend.execute(compiled)
+    }
+
+    /// Compile-and-execute in one step (still hits the compile cache).
+    pub fn run(&mut self, spec: &Spec) -> Result<Execution, ExecError> {
+        let compiled = self.compile(spec)?;
+        self.execute(&compiled)
+    }
+
+    /// Number of distinct programs held by the compile cache.
+    pub fn cached_programs(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Order-sensitive FNV-1a content fingerprint of a spec's tensors — the
+/// compile-cache key, so two specs that share a display name but carry
+/// different data never alias each other's programs.
+fn fingerprint(spec: &Spec) -> u64 {
+    struct Fp(u64);
+    impl Fp {
+        fn u(&mut self, v: u64) {
+            self.0 = (self.0 ^ v).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        fn i16s(&mut self, v: &[i16]) {
+            self.u(v.len() as u64);
+            for &x in v {
+                self.u(x as u16 as u64);
+            }
+        }
+        fn idxs(&mut self, v: &[usize]) {
+            self.u(v.len() as u64);
+            for &x in v {
+                self.u(x as u64);
+            }
+        }
+        fn csr(&mut self, c: &crate::tensor::Csr) {
+            self.u(c.rows as u64);
+            self.u(c.cols as u64);
+            self.idxs(&c.rowptr);
+            self.idxs(&c.colidx);
+            self.i16s(&c.values);
+        }
+        fn dense(&mut self, d: &crate::tensor::Dense) {
+            self.u(d.rows as u64);
+            self.u(d.cols as u64);
+            self.i16s(&d.data);
+        }
+        fn graph(&mut self, g: &crate::tensor::Graph) {
+            self.u(g.num_vertices as u64);
+            for edges in &g.adj {
+                self.u(edges.len() as u64);
+                for &(v, w) in edges {
+                    self.u(v as u64);
+                    self.u(w as u16 as u64);
+                }
+            }
+        }
+    }
+    let mut h = Fp(0xcbf2_9ce4_8422_2325);
+    match spec {
+        Spec::Spmv { a, x } => {
+            h.u(1);
+            h.csr(a);
+            h.i16s(x);
+        }
+        Spec::SpMSpM { a, b, regime } => {
+            h.u(2);
+            h.csr(a);
+            h.csr(b);
+            for byte in regime.name().bytes() {
+                h.u(byte as u64);
+            }
+        }
+        Spec::SpAdd { a, b } => {
+            h.u(3);
+            h.csr(a);
+            h.csr(b);
+        }
+        Spec::Sddmm { mask, a, b } => {
+            h.u(4);
+            h.csr(mask);
+            h.dense(a);
+            h.dense(b);
+        }
+        Spec::MatMul { a, b } => {
+            h.u(5);
+            h.dense(a);
+            h.dense(b);
+        }
+        Spec::Mv { a, x } => {
+            h.u(6);
+            h.dense(a);
+            h.i16s(x);
+        }
+        Spec::Conv { input, filter } => {
+            h.u(7);
+            h.dense(input);
+            h.dense(filter);
+        }
+        Spec::Bfs { g, src } => {
+            h.u(8);
+            h.graph(g);
+            h.u(*src as u64);
+        }
+        Spec::Sssp { g, src } => {
+            h.u(9);
+            h.graph(g);
+            h.u(*src as u64);
+        }
+        Spec::PageRank { g, iters } => {
+            h.u(10);
+            h.graph(g);
+            h.u(*iters as u64);
+        }
+    }
+    h.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::Message;
+    use crate::compiler::ProgramBuilder;
+    use crate::isa::{ConfigEntry, Opcode};
+    use crate::workloads::suite;
+
+    /// One static AM that stores `val` at a remote PE, as a `Built`.
+    fn store_built(cfg: &ArchConfig, val: i16, expected: Vec<i16>) -> Built {
+        let mut b = ProgramBuilder::new("store1", cfg);
+        let addr = b.alloc(15, 1);
+        let mut am = Message::new();
+        am.opcode = Opcode::Store;
+        am.op1 = val as u16;
+        am.result = addr;
+        am.res_is_addr = true;
+        am.push_dest(15);
+        b.static_am(0, am);
+        b.output(15, addr);
+        Built {
+            name: "store1".into(),
+            tiles: Tiles::Static(vec![b.build()]),
+            expected,
+            work_ops: 1,
+        }
+    }
+
+    #[test]
+    fn execute_validates_and_returns_outputs() {
+        let cfg = ArchConfig::nexus();
+        let built = store_built(&cfg, -7, vec![-7]);
+        let mut m = Machine::new(cfg);
+        let e = m.execute(&Compiled::from_built(built)).unwrap();
+        assert_eq!(e.outputs, vec![-7]);
+        assert!(e.validated());
+        assert!(e.cycles() > 0);
+        assert!(e.stats.is_some());
+    }
+
+    #[test]
+    fn validation_mismatch_is_typed() {
+        let cfg = ArchConfig::nexus();
+        let built = store_built(&cfg, -7, vec![9]);
+        let mut m = Machine::new(cfg);
+        match m.execute(&Compiled::from_built(built)) {
+            Err(ExecError::ValidationMismatch {
+                index,
+                got,
+                expected,
+            }) => {
+                assert_eq!((index, got, expected), (0, -7, 9));
+            }
+            other => panic!("expected ValidationMismatch, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn output_length_mismatch_is_typed() {
+        let cfg = ArchConfig::nexus();
+        let built = store_built(&cfg, 1, vec![1, 2]);
+        let mut m = Machine::new(cfg);
+        assert!(matches!(
+            m.execute(&Compiled::from_built(built)),
+            Err(ExecError::OutputLength {
+                got: 1,
+                expected: 2
+            })
+        ));
+    }
+
+    #[test]
+    fn deadlock_surfaces_as_err_not_panic() {
+        // A config chain that self-loops (MUL whose next entry is itself)
+        // never becomes terminal: `execute` must return the typed error.
+        let mut cfg = ArchConfig::nexus();
+        cfg.max_cycles = 500;
+        let mut b = ProgramBuilder::new("livelock", &cfg);
+        let pc = b.config(ConfigEntry::new(Opcode::Mul, 0));
+        let mut am = Message::new();
+        am.opcode = Opcode::Mul;
+        am.n_pc = pc;
+        am.op1 = 1;
+        am.op2 = 1;
+        am.push_dest(15);
+        b.static_am(0, am);
+        let built = Built {
+            name: "livelock".into(),
+            tiles: Tiles::Static(vec![b.build()]),
+            expected: Vec::new(),
+            work_ops: 0,
+        };
+        let mut m = Machine::new(cfg);
+        match m.execute(&Compiled::from_built(built)) {
+            Err(ExecError::Deadlock(e)) => assert!(e.in_flight >= 1),
+            other => panic!("expected Deadlock, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn cross_config_artifact_is_a_typed_error() {
+        // A program compiled for the 4x4 fabric executed on an 8x8 machine
+        // must surface as IncompatibleProgram, not a panic.
+        let nexus = ArchConfig::nexus();
+        let built = store_built(&nexus, 1, vec![1]);
+        let mut big = Machine::new(ArchConfig::nexus().with_array(8, 8));
+        match big.execute(&Compiled::from_built(built)) {
+            Err(ExecError::IncompatibleProgram { reason }) => {
+                assert!(!reason.is_empty());
+            }
+            other => panic!("expected IncompatibleProgram, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn compile_cache_returns_shared_artifact() {
+        let specs = suite(1);
+        let spmv = specs.iter().find(|s| s.name().starts_with("SpMV")).unwrap();
+        let mut m = Machine::new(ArchConfig::nexus());
+        let a = m.compile(spmv).unwrap();
+        let b = m.compile(spmv).unwrap();
+        assert!(Arc::ptr_eq(&a.artifact, &b.artifact), "second compile must hit the cache");
+        assert_eq!(m.cached_programs(), 1);
+        // And the cached artifact executes fine, twice.
+        m.execute(&a).unwrap();
+        m.execute(&b).unwrap();
+    }
+
+    #[test]
+    fn compile_cache_distinguishes_same_name_different_data() {
+        // Two SpMV instances with the same matrix (same display name, same
+        // work-ops) but different vectors must not alias in the cache: the
+        // second run has to compute A*x2, not replay A*x1.
+        let mut rng = crate::util::SplitMix64::new(77);
+        let a = crate::tensor::gen::random_csr(&mut rng, 16, 16, 0.3);
+        let x1 = crate::tensor::gen::random_vec(&mut rng, 16, 3);
+        let mut x2 = x1.clone();
+        x2[0] = x2[0].wrapping_add(1);
+        let mut m = Machine::new(ArchConfig::nexus());
+        let e1 = m.run(&Spec::Spmv { a: a.clone(), x: x1.clone() }).unwrap();
+        let e2 = m.run(&Spec::Spmv { a: a.clone(), x: x2.clone() }).unwrap();
+        assert_eq!(m.cached_programs(), 2, "distinct data must compile twice");
+        assert_eq!(e1.outputs, a.spmv(&x1));
+        assert_eq!(e2.outputs, a.spmv(&x2));
+    }
+
+    #[test]
+    fn static_am_count_matches_program() {
+        let specs = suite(1);
+        let spmv = specs.iter().find(|s| s.name().starts_with("SpMV")).unwrap();
+        let mut m = Machine::new(ArchConfig::nexus());
+        let c = m.compile(spmv).unwrap();
+        assert!(c.static_am_count() > 0);
+        assert!(c.tile_count() >= 1);
+        assert!(c.work_ops() > 0);
+        assert!(c.expected().is_some());
+    }
+}

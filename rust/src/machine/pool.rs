@@ -1,0 +1,141 @@
+//! [`MachinePool`] — the one threaded fan-out for every experiment sweep.
+//!
+//! The coordinator used to hand-roll four identical `Mutex` +
+//! `thread::scope` patterns (matrix, suite validation, bandwidth sweep,
+//! scalability sweep), each spawning one OS thread per job and each
+//! allocating a fresh fabric per run. The pool replaces them with a fixed
+//! worker count and per-worker reusable state (typically a
+//! [`crate::machine::Machine`], so fabric allocations and compile caches
+//! survive across the jobs a worker executes). Results always come back in
+//! job order, independent of scheduling, which keeps sweeps deterministic.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A fixed-size worker pool for batch execution of independent jobs.
+pub struct MachinePool {
+    workers: usize,
+}
+
+impl MachinePool {
+    /// Pool sized to the host's available parallelism.
+    pub fn new() -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Self::with_workers(workers)
+    }
+
+    /// Pool with an explicit worker count (min 1).
+    pub fn with_workers(workers: usize) -> Self {
+        MachinePool {
+            workers: workers.max(1),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f` over every job, fanning out across the pool's workers.
+    /// Returns one result per job, in job order.
+    pub fn run_batch<J, R, F>(&self, jobs: &[J], f: F) -> Vec<R>
+    where
+        J: Sync,
+        R: Send,
+        F: Fn(&J) -> R + Sync,
+    {
+        self.run_batch_with(|| (), jobs, |_, job| f(job))
+    }
+
+    /// As [`MachinePool::run_batch`], with one reusable per-worker state
+    /// created by `init` and threaded through every job the worker executes
+    /// — e.g. a `Machine` whose fabric and compile cache are reused across
+    /// a whole sweep.
+    pub fn run_batch_with<S, J, R, I, F>(&self, init: I, jobs: &[J], f: F) -> Vec<R>
+    where
+        J: Sync,
+        R: Send,
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, &J) -> R + Sync,
+    {
+        if jobs.is_empty() {
+            return Vec::new();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<R>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+        let workers = self.workers.min(jobs.len());
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    let mut state = init();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        let r = f(&mut state, &jobs[i]);
+                        *slots[i].lock().unwrap() = Some(r);
+                    }
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner()
+                    .unwrap()
+                    .expect("pool worker exited before filling its slot")
+            })
+            .collect()
+    }
+}
+
+impl Default for MachinePool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_preserve_job_order() {
+        let jobs: Vec<usize> = (0..100).collect();
+        let out = MachinePool::with_workers(7).run_batch(&jobs, |&j| j * 2);
+        assert_eq!(out, (0..100).map(|j| j * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn per_worker_state_is_reused() {
+        // Each worker counts the jobs it ran; the counts must sum to the
+        // batch size (every job ran exactly once, on some worker's state).
+        let total = AtomicUsize::new(0);
+        let jobs: Vec<u32> = (0..64).collect();
+        let out = MachinePool::with_workers(4).run_batch_with(
+            || 0usize,
+            &jobs,
+            |count, &j| {
+                *count += 1;
+                total.fetch_add(1, Ordering::Relaxed);
+                j
+            },
+        );
+        assert_eq!(out, jobs);
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn empty_batch_returns_empty() {
+        let out = MachinePool::new().run_batch(&[] as &[u8], |_| 0u8);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_jobs_is_fine() {
+        let out = MachinePool::with_workers(32).run_batch(&[1, 2, 3], |&j| j + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+}

@@ -127,12 +127,12 @@ fn fig3(seed: u64) {
     let spec = specs.iter().find(|s| s.name().starts_with("SpMV")).unwrap();
     for cfg in [ArchConfig::tia(), ArchConfig::nexus()] {
         let kind = cfg.kind.name();
-        let built = spec.build(&cfg);
-        let mut f = nexus::fabric::NexusFabric::new(cfg.clone());
-        nexus::workloads::run_on_fabric(&mut f, &built).expect("fig3 run");
-        let busy = &f.stats.per_pe_busy_cycles;
+        let mut m = nexus::machine::Machine::new(cfg.clone());
+        let exec = m.run(spec).expect("fig3 run");
+        let stats = exec.stats.expect("fabric stats");
+        let busy = &stats.per_pe_busy_cycles;
         let max = *busy.iter().max().unwrap() as f64;
-        println!("[{kind}] per-PE busy cycles (load CV {:.3}):", f.stats.load_cv());
+        println!("[{kind}] per-PE busy cycles (load CV {:.3}):", stats.load_cv());
         for y in 0..cfg.height {
             print!("  ");
             for x in 0..cfg.width {

@@ -122,7 +122,7 @@ impl FlitBuf {
 }
 
 /// Per-input-port congestion counters (Fig 14).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PortStats {
     /// Cycles in which this port held at least one flit.
     pub occupied_cycles: u64,

@@ -11,103 +11,183 @@
 //! [`GoldenRuntime`] provides f32 in/out; callers are responsible for keeping
 //! inputs small enough that the two agree exactly after rounding.
 //!
+//! ## The `pjrt` feature
+//!
+//! The default build is offline and dependency-free, so the PJRT-backed
+//! implementation is gated behind the `pjrt` cargo feature; enabling it
+//! requires adding the external `xla` crate (and its `xla_extension` C++
+//! distribution) to `rust/Cargo.toml`. Without the feature, a stub
+//! [`GoldenRuntime`] with the same API reports artifacts on disk but
+//! returns a descriptive error from [`GoldenRuntime::run`], and the golden
+//! checks skip exactly as they do when artifacts are absent.
+//!
 //! Interchange format is HLO *text*, not serialized `HloModuleProto`:
 //! jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
 
-use anyhow::{Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-/// A compiled XLA executable wrapper for one golden model artifact.
-pub struct GoldenModel {
-    exe: xla::PjRtLoadedExecutable,
-    /// Artifact path, for error messages.
-    pub path: PathBuf,
-}
+/// Boxed error used across the golden-model path (keeps the default build
+/// free of external error-handling crates).
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+pub type Result<T> = std::result::Result<T, Error>;
 
-impl GoldenModel {
-    /// Execute the model on f32 inputs. Each input is a `(data, shape)` pair;
-    /// shapes use row-major layout. Returns every output of the (tupled)
-    /// result, flattened to `Vec<f32>` each.
-    pub fn run(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .with_context(|| format!("reshape input to {dims:?}"))?;
-            literals.push(lit);
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::Result;
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    /// A compiled XLA executable wrapper for one golden model artifact.
+    pub struct GoldenModel {
+        exe: xla::PjRtLoadedExecutable,
+        /// Artifact path, for error messages.
+        pub path: PathBuf,
+    }
+
+    impl GoldenModel {
+        /// Execute the model on f32 inputs. Each input is a `(data, shape)`
+        /// pair; shapes use row-major layout. Returns every output of the
+        /// (tupled) result, flattened to `Vec<f32>` each.
+        pub fn run(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, shape) in inputs {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| format!("reshape input to {dims:?}: {e}"))?;
+                literals.push(lit);
+            }
+            let mut result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| format!("execute {}: {e}", self.path.display()))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| e.to_string())?;
+            // aot.py lowers with return_tuple=True, so outputs are always a
+            // tuple.
+            let tuple = result.decompose_tuple().map_err(|e| e.to_string())?;
+            let mut outs = Vec::with_capacity(tuple.len());
+            for lit in tuple {
+                outs.push(lit.to_vec::<f32>().map_err(|e| e.to_string())?);
+            }
+            Ok(outs)
         }
-        let mut result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("execute {}", self.path.display()))?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True, so outputs are always a tuple.
-        let tuple = result.decompose_tuple()?;
-        let mut outs = Vec::with_capacity(tuple.len());
-        for lit in tuple {
-            outs.push(lit.to_vec::<f32>()?);
+    }
+
+    /// Loads and caches golden models from an artifacts directory.
+    pub struct GoldenRuntime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        cache: HashMap<String, GoldenModel>,
+    }
+
+    impl GoldenRuntime {
+        /// Create a runtime backed by the PJRT CPU client, loading artifacts
+        /// from `dir` (usually `artifacts/`).
+        pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| format!("create PJRT CPU client: {e}"))?;
+            Ok(Self {
+                client,
+                dir: dir.as_ref().to_path_buf(),
+                cache: HashMap::new(),
+            })
         }
-        Ok(outs)
+
+        /// Platform name of the underlying PJRT client (e.g. "cpu").
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// True when a real PJRT client backs this runtime.
+        pub fn available(&self) -> bool {
+            true
+        }
+
+        /// Load (and cache) the artifact `<dir>/<name>.hlo.txt`.
+        pub fn load(&mut self, name: &str) -> Result<&GoldenModel> {
+            if !self.cache.contains_key(name) {
+                let path = self.dir.join(format!("{name}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or("artifact path not utf-8")?,
+                )
+                .map_err(|e| format!("parse HLO text {}: {e}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| format!("compile {}: {e}", path.display()))?;
+                self.cache
+                    .insert(name.to_string(), GoldenModel { exe, path });
+            }
+            Ok(&self.cache[name])
+        }
+
+        /// Convenience: load `name` and run it in one call.
+        pub fn run(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            self.load(name)?;
+            self.cache[name].run(inputs)
+        }
+
+        /// True if the artifact file for `name` exists on disk.
+        pub fn has_artifact(&self, name: &str) -> bool {
+            self.dir.join(format!("{name}.hlo.txt")).exists()
+        }
     }
 }
 
-/// Loads and caches golden models from an artifacts directory.
-pub struct GoldenRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: HashMap<String, GoldenModel>,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{GoldenModel, GoldenRuntime};
 
-impl GoldenRuntime {
-    /// Create a runtime backed by the PJRT CPU client, loading artifacts from
-    /// `dir` (usually `artifacts/`).
-    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Self {
-            client,
-            dir: dir.as_ref().to_path_buf(),
-            cache: HashMap::new(),
-        })
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::Result;
+    use std::path::{Path, PathBuf};
+
+    /// API-compatible stand-in for the PJRT runtime in default (offline)
+    /// builds: artifact presence checks work, execution reports why it
+    /// cannot run.
+    pub struct GoldenRuntime {
+        dir: PathBuf,
     }
 
-    /// Platform name of the underlying PJRT client (e.g. "cpu").
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    impl GoldenRuntime {
+        pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+            Ok(Self {
+                dir: dir.as_ref().to_path_buf(),
+            })
+        }
 
-    /// Load (and cache) the artifact `<dir>/<name>.hlo.txt`.
-    pub fn load(&mut self, name: &str) -> Result<&GoldenModel> {
-        if !self.cache.contains_key(name) {
-            let path = self.dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
+        /// Platform name of the underlying PJRT client.
+        pub fn platform(&self) -> String {
+            "unavailable (built without the `pjrt` feature)".to_string()
+        }
+
+        /// Always false: the stub cannot execute models, so golden checks
+        /// skip instead of failing.
+        pub fn available(&self) -> bool {
+            false
+        }
+
+        /// Execution requires the real PJRT client.
+        pub fn run(&mut self, name: &str, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            Err(format!(
+                "cannot execute golden model {name:?}: built without the `pjrt` \
+                 feature (see rust/src/runtime/mod.rs)"
             )
-            .with_context(|| format!("parse HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compile {}", path.display()))?;
-            self.cache
-                .insert(name.to_string(), GoldenModel { exe, path });
+            .into())
         }
-        Ok(&self.cache[name])
-    }
 
-    /// Convenience: load `name` and run it in one call.
-    pub fn run(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        self.load(name)?;
-        self.cache[name].run(inputs)
-    }
-
-    /// True if the artifact file for `name` exists on disk.
-    pub fn has_artifact(&self, name: &str) -> bool {
-        self.dir.join(format!("{name}.hlo.txt")).exists()
+        /// True if the artifact file for `name` exists on disk.
+        pub fn has_artifact(&self, name: &str) -> bool {
+            self.dir.join(format!("{name}.hlo.txt")).exists()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::GoldenRuntime;
 
 /// Locate the artifacts directory: `$NEXUS_ARTIFACTS` if set, else
 /// `artifacts/` relative to the workspace root (walking up from cwd).

@@ -97,10 +97,9 @@ pub fn build(input: &Dense, filter: &Dense, cfg: &ArchConfig) -> Built {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fabric::NexusFabric;
     use crate::tensor::gen;
     use crate::util::SplitMix64;
-    use crate::workloads::validate_on_fabric;
+    use crate::workloads::testutil::{check_built, exec_built};
 
     #[test]
     fn conv_matches_reference() {
@@ -109,9 +108,7 @@ mod tests {
         let filter = gen::random_dense(&mut rng, 3, 3, 2);
         let cfg = ArchConfig::nexus();
         let built = build(&input, &filter, &cfg);
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
-        f.check_conservation().unwrap();
+        check_built(cfg, built);
     }
 
     #[test]
@@ -122,8 +119,7 @@ mod tests {
         let cfg = ArchConfig::nexus();
         let built = build(&input, &filter, &cfg);
         assert_eq!(built.expected, input.data);
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
+        exec_built(cfg, built).unwrap();
     }
 
     #[test]
@@ -133,7 +129,6 @@ mod tests {
         let filter = gen::random_dense(&mut rng, 2, 2, 2);
         let cfg = ArchConfig::tia();
         let built = build(&input, &filter, &cfg);
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
+        exec_built(cfg, built).unwrap();
     }
 }

@@ -226,8 +226,7 @@ fn expected_edges(gen: &(dyn Fn(&[i16], usize) -> Program + Send + Sync)) -> u64
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fabric::NexusFabric;
-    use crate::workloads::{run_on_fabric, validate_on_fabric};
+    use crate::workloads::testutil::{check_built, exec_built};
 
     fn small_graph(seed: u64, n: usize, contacts: usize) -> Graph {
         let mut rng = SplitMix64::new(seed);
@@ -239,9 +238,7 @@ mod tests {
         let g = small_graph(51, 48, 180);
         let cfg = ArchConfig::nexus();
         let built = build_bfs(&g, 0, &cfg);
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
-        f.check_conservation().unwrap();
+        check_built(cfg, built);
     }
 
     #[test]
@@ -249,8 +246,7 @@ mod tests {
         let g = small_graph(52, 48, 180);
         let cfg = ArchConfig::nexus();
         let built = build_sssp(&g, 3, &cfg);
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
+        exec_built(cfg, built).unwrap();
     }
 
     #[test]
@@ -258,8 +254,7 @@ mod tests {
         let g = small_graph(53, 32, 120);
         let cfg = ArchConfig::tia();
         let built = build_sssp(&g, 0, &cfg);
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
+        exec_built(cfg, built).unwrap();
     }
 
     #[test]
@@ -274,8 +269,7 @@ mod tests {
         }
         let cfg = ArchConfig::nexus();
         let built = build_bfs(&g, 0, &cfg);
-        let mut f = NexusFabric::new(cfg);
-        let out = run_on_fabric(&mut f, &built).unwrap();
+        let out = exec_built(cfg, built).unwrap().outputs;
         assert!(out[4..].iter().all(|&d| d == INF));
         assert_eq!(out[0], 0);
     }
@@ -287,8 +281,7 @@ mod tests {
         let built = build_pagerank(&g, 2, &cfg);
         // Cross-check the functional reference against Graph::pagerank_int.
         assert_eq!(built.expected, g.pagerank_int(2));
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
+        exec_built(cfg, built).unwrap();
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //!
 //! A [`Spec`] describes a workload instance (the tensors); [`Spec::build`]
 //! compiles it for a fabric configuration into a [`Built`] program-with-
-//! expected-output; [`run_on_fabric`] executes and returns the outputs.
+//! expected-output. Execution goes through [`crate::machine::Machine`],
+//! which compiles specs (with caching), runs them on a reusable fabric, and
+//! validates outputs against the reference — this module only *builds*.
 
 pub mod conv;
 pub mod graphs;
@@ -20,7 +22,6 @@ pub mod spmv;
 
 use crate::compiler::{Program, ProgramBuilder};
 use crate::config::ArchConfig;
-use crate::fabric::{DeadlockError, NexusFabric};
 use crate::tensor::gen::SparsityRegime;
 use crate::tensor::{Csr, Dense, Graph};
 use crate::util::SplitMix64;
@@ -48,49 +49,6 @@ pub struct Built {
     /// *kernel* requires), identical across architectures — the numerator
     /// for normalized performance and MOPS comparisons.
     pub work_ops: u64,
-}
-
-/// Execute a built workload on a fabric, returning the final outputs.
-pub fn run_on_fabric(f: &mut NexusFabric, built: &Built) -> Result<Vec<i16>, DeadlockError> {
-    match &built.tiles {
-        Tiles::Static(tiles) => {
-            let mut out = Vec::new();
-            for t in tiles {
-                out.extend(f.run_program(t)?);
-            }
-            Ok(out)
-        }
-        Tiles::Iterative { iters, gen } => {
-            let mut prev: Vec<i16> = Vec::new();
-            for i in 0..*iters {
-                let p = gen(&prev, i);
-                prev = f.run_program(&p)?;
-            }
-            Ok(prev)
-        }
-    }
-}
-
-/// Execute and validate against the reference output.
-pub fn validate_on_fabric(f: &mut NexusFabric, built: &Built) -> Result<(), String> {
-    let out = run_on_fabric(f, built).map_err(|e| e.to_string())?;
-    if out.len() != built.expected.len() {
-        return Err(format!(
-            "{}: output length {} != expected {}",
-            built.name,
-            out.len(),
-            built.expected.len()
-        ));
-    }
-    for (i, (a, e)) in out.iter().zip(&built.expected).enumerate() {
-        if a != e {
-            return Err(format!(
-                "{}: mismatch at [{i}]: fabric {a}, reference {e}",
-                built.name
-            ));
-        }
-    }
-    Ok(())
 }
 
 /// A workload instance: the kernel plus its concrete tensors.
@@ -244,6 +202,35 @@ pub fn place_vector(b: &mut ProgramBuilder, part: &[usize], values: &[i16]) -> P
         addr.push(b.place(part[i], &[v]));
     }
     Placed { pe, addr }
+}
+
+/// Test support: execute hand-built programs through the `Machine` API so
+/// the workload compilers' unit tests exercise the same path as production
+/// callers (no test-only fabric plumbing).
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::Built;
+    use crate::config::ArchConfig;
+    use crate::machine::{Compiled, ExecError, Execution, Machine};
+
+    /// Execute `built` on a fresh fabric machine for `cfg`, validating the
+    /// outputs against the program's reference.
+    pub fn exec_built(cfg: ArchConfig, built: Built) -> Result<Execution, ExecError> {
+        let mut m = Machine::new(cfg);
+        m.execute(&Compiled::from_built(built))
+    }
+
+    /// As [`exec_built`], also asserting message conservation.
+    pub fn check_built(cfg: ArchConfig, built: Built) -> Execution {
+        let e = exec_built(cfg, built).unwrap();
+        let s = e.stats.as_ref().expect("fabric execution has stats");
+        assert_eq!(
+            s.msgs_created, s.msgs_retired,
+            "conservation violated: created {} != retired {}",
+            s.msgs_created, s.msgs_retired
+        );
+        e
+    }
 }
 
 #[cfg(test)]

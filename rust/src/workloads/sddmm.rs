@@ -119,10 +119,10 @@ pub fn build(mask: &Csr, a: &Dense, b_mat: &Dense, cfg: &ArchConfig) -> Built {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fabric::NexusFabric;
     use crate::tensor::gen;
     use crate::util::SplitMix64;
-    use crate::workloads::{binary_mask, validate_on_fabric};
+    use crate::workloads::binary_mask;
+    use crate::workloads::testutil::{check_built, exec_built};
 
     #[test]
     fn sddmm_matches_reference() {
@@ -132,9 +132,7 @@ mod tests {
         let b = gen::random_dense(&mut rng, 8, 16, 3);
         let cfg = ArchConfig::nexus();
         let built = build(&mask, &a, &b, &cfg);
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
-        f.check_conservation().unwrap();
+        check_built(cfg, built);
     }
 
     #[test]
@@ -153,8 +151,7 @@ mod tests {
                 .any(|am| am.ndests == 3);
             assert!(any3, "SDDMM static AMs must carry R1,R2,R3");
         }
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
+        exec_built(cfg, built).unwrap();
     }
 
     #[test]
@@ -165,8 +162,7 @@ mod tests {
         let b = gen::random_dense(&mut rng, 6, 12, 3);
         for cfg in [ArchConfig::tia(), ArchConfig::tia_valiant()] {
             let built = build(&mask, &a, &b, &cfg);
-            let mut f = NexusFabric::new(cfg);
-            validate_on_fabric(&mut f, &built).unwrap();
+            exec_built(cfg, built).unwrap();
         }
     }
 
@@ -178,8 +174,7 @@ mod tests {
         let b = gen::random_dense(&mut rng, 4, 8, 3);
         let cfg = ArchConfig::nexus();
         let built = build(&mask, &a, &b, &cfg);
-        let mut f = NexusFabric::new(cfg);
-        let out = crate::workloads::run_on_fabric(&mut f, &built).unwrap();
+        let out = exec_built(cfg, built).unwrap().outputs;
         assert!(out.is_empty());
     }
 }

@@ -68,11 +68,10 @@ pub fn build(a: &Csr, b_mat: &Csr, cfg: &ArchConfig) -> Built {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fabric::NexusFabric;
     use crate::tensor::gen;
     use crate::util::prop::forall;
     use crate::util::SplitMix64;
-    use crate::workloads::validate_on_fabric;
+    use crate::workloads::testutil::{check_built, exec_built};
 
     #[test]
     fn spadd_matches_reference() {
@@ -81,9 +80,7 @@ mod tests {
         let b = gen::random_csr(&mut rng, 32, 32, 0.3);
         let cfg = ArchConfig::nexus();
         let built = build(&a, &b, &cfg);
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
-        f.check_conservation().unwrap();
+        check_built(cfg, built);
     }
 
     #[test]
@@ -98,9 +95,8 @@ mod tests {
         );
         let cfg = ArchConfig::nexus();
         let built = build(&a, &neg, &cfg);
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
         assert!(built.expected.iter().all(|&v| v == 0));
+        exec_built(cfg, built).unwrap();
     }
 
     #[test]
@@ -112,8 +108,7 @@ mod tests {
             let b = gen::random_csr(rng, r, c, 0.35);
             for cfg in [ArchConfig::nexus(), ArchConfig::tia()] {
                 let built = build(&a, &b, &cfg);
-                let mut f = NexusFabric::new(cfg);
-                validate_on_fabric(&mut f, &built)?;
+                exec_built(cfg, built).map_err(|e| e.to_string())?;
             }
             Ok(())
         });

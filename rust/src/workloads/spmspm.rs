@@ -216,11 +216,10 @@ fn try_build_tile(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fabric::NexusFabric;
     use crate::tensor::gen::{self, SparsityRegime};
     use crate::util::prop::forall;
     use crate::util::SplitMix64;
-    use crate::workloads::validate_on_fabric;
+    use crate::workloads::testutil::{check_built, exec_built};
 
     #[test]
     fn spmspm_matches_reference_all_regimes() {
@@ -229,9 +228,7 @@ mod tests {
             let (a, b) = gen::spmspm_pair(&mut rng, 24, regime);
             let cfg = ArchConfig::nexus();
             let built = build("spmspm", &a, &b, &cfg);
-            let mut f = NexusFabric::new(cfg);
-            validate_on_fabric(&mut f, &built).unwrap();
-            f.check_conservation().unwrap();
+            check_built(cfg, built);
         }
     }
 
@@ -241,8 +238,7 @@ mod tests {
         let (a, b) = gen::spmspm_pair(&mut rng, 20, SparsityRegime::S1);
         let cfg = ArchConfig::tia();
         let built = build("spmspm", &a, &b, &cfg);
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
+        exec_built(cfg, built).unwrap();
     }
 
     #[test]
@@ -257,8 +253,7 @@ mod tests {
             &Csr::from_dense(&b),
             &cfg,
         );
-        let mut f = NexusFabric::new(cfg);
-        let out = crate::workloads::run_on_fabric(&mut f, &built).unwrap();
+        let out = exec_built(cfg, built).unwrap().outputs;
         assert_eq!(out, a.matmul(&b).data);
     }
 
@@ -272,8 +267,7 @@ mod tests {
         if let Tiles::Static(ts) = &built.tiles {
             assert!(ts.len() > 1, "expected multiple tiles");
         }
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
+        exec_built(cfg, built).unwrap();
     }
 
     #[test]
@@ -283,8 +277,9 @@ mod tests {
             let b = gen::random_csr(rng, 16, 16, 0.08); // mostly empty rows
             let cfg = ArchConfig::nexus();
             let built = build("spmspm", &a, &b, &cfg);
-            let mut f = NexusFabric::new(cfg);
-            validate_on_fabric(&mut f, &built)
+            exec_built(cfg, built)
+                .map(|_| ())
+                .map_err(|e| e.to_string())
         });
     }
 }

@@ -68,11 +68,10 @@ pub fn build(name: &str, a: &Csr, x: &[i16], cfg: &ArchConfig) -> Built {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fabric::NexusFabric;
     use crate::tensor::gen;
     use crate::util::prop::forall;
     use crate::util::SplitMix64;
-    use crate::workloads::validate_on_fabric;
+    use crate::workloads::testutil::{check_built, exec_built};
 
     #[test]
     fn spmv_matches_reference_on_nexus() {
@@ -81,9 +80,7 @@ mod tests {
         let x = gen::random_vec(&mut rng, 32, 3);
         let cfg = ArchConfig::nexus();
         let built = build("spmv", &a, &x, &cfg);
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
-        f.check_conservation().unwrap();
+        check_built(cfg, built);
     }
 
     #[test]
@@ -93,8 +90,7 @@ mod tests {
         let x = gen::random_vec(&mut rng, 24, 3);
         for cfg in [ArchConfig::tia(), ArchConfig::tia_valiant()] {
             let built = build("spmv", &a, &x, &cfg);
-            let mut f = NexusFabric::new(cfg);
-            validate_on_fabric(&mut f, &built).unwrap();
+            exec_built(cfg, built).unwrap();
         }
     }
 
@@ -108,8 +104,9 @@ mod tests {
             let x = gen::random_vec(rng, cols, 3);
             let cfg = ArchConfig::nexus();
             let built = build("spmv", &a, &x, &cfg);
-            let mut f = NexusFabric::new(cfg);
-            validate_on_fabric(&mut f, &built)
+            exec_built(cfg, built)
+                .map(|_| ())
+                .map_err(|e| e.to_string())
         });
     }
 
@@ -119,9 +116,8 @@ mod tests {
         let x = vec![1i16; 8];
         let cfg = ArchConfig::nexus();
         let built = build("spmv", &a, &x, &cfg);
-        let mut f = NexusFabric::new(cfg);
-        validate_on_fabric(&mut f, &built).unwrap();
         assert_eq!(built.expected, vec![0i16; 8]);
+        exec_built(cfg, built).unwrap();
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Golden-model integration: fabric vs AOT-compiled XLA artifacts via PJRT.
-//! Requires `make artifacts`; skips (with a notice) when artifacts are
-//! absent so `cargo test` works on a fresh checkout.
+//! Requires `make artifacts` and the `pjrt` feature; skips (with a notice,
+//! or SKIPPED rows) otherwise so `cargo test` works on a fresh checkout.
 
 use nexus::runtime::artifacts_dir;
 
@@ -14,7 +14,13 @@ fn three_way_agreement_reference_xla_fabric() {
     let rows = nexus::golden::check_all(&dir, 1).expect("golden checks");
     assert_eq!(rows.len(), 4);
     for (name, status) in rows {
-        assert!(status.starts_with("OK"), "{name}: {status}");
+        // Without the `pjrt` feature the runtime stub reports SKIPPED rows;
+        // with it, present artifacts must agree three ways.
+        if cfg!(feature = "pjrt") {
+            assert!(status.starts_with("OK"), "{name}: {status}");
+        } else {
+            assert!(status.starts_with("SKIPPED"), "{name}: {status}");
+        }
     }
 }
 

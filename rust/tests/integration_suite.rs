@@ -4,8 +4,8 @@
 
 use nexus::config::ArchConfig;
 use nexus::coordinator::{self, report};
-use nexus::fabric::NexusFabric;
-use nexus::workloads::{run_on_fabric, suite, validate_on_fabric};
+use nexus::machine::{Compiled, Machine};
+use nexus::workloads::suite;
 
 #[test]
 fn full_suite_validates_on_all_fabric_variants() {
@@ -126,14 +126,12 @@ fn spmspm_sparsity_trends_match_section_5_1() {
 fn in_network_fraction_is_majority_for_alu_heavy_sparse() {
     let specs = suite(1);
     let spec = specs.iter().find(|s| s.name().starts_with("SpMSpM-S1")).unwrap();
-    let cfg = ArchConfig::nexus();
-    let built = spec.build(&cfg);
-    let mut f = NexusFabric::new(cfg);
-    run_on_fabric(&mut f, &built).unwrap();
+    let mut m = Machine::new(ArchConfig::nexus());
+    let e = m.run(spec).unwrap();
     assert!(
-        f.stats.in_network_fraction() > 0.5,
+        e.result.in_network_frac > 0.5,
         "most MULs should run en-route: {}",
-        f.stats.in_network_fraction()
+        e.result.in_network_frac
     );
 }
 
@@ -183,9 +181,10 @@ fn larger_sram_reduces_bandwidth_need() {
     let run = |bytes: usize| {
         let cfg = ArchConfig::nexus().with_dmem_bytes(bytes);
         let built = nexus::workloads::spmspm::build_tiled("f16", &a, &b, &cfg);
-        let mut f = NexusFabric::new(cfg);
-        run_on_fabric(&mut f, &built).unwrap();
-        f.stats.offchip_bytes as f64 / f.stats.compute_cycles() as f64
+        let mut m = Machine::new(cfg);
+        let e = m.execute(&Compiled::from_built(built)).unwrap();
+        let s = e.stats.unwrap();
+        s.offchip_bytes as f64 / s.compute_cycles() as f64
     };
     let small = run(1024);
     let large = run(16384);
@@ -200,12 +199,10 @@ fn deterministic_across_runs() {
     let cfg = ArchConfig::nexus();
     let specs = suite(5);
     let spec = specs.iter().find(|s| s.name() == "BFS").unwrap();
-    let built = spec.build(&cfg);
     let mut cycles = Vec::new();
     for _ in 0..2 {
-        let mut f = NexusFabric::new(cfg.clone());
-        validate_on_fabric(&mut f, &built).unwrap();
-        cycles.push(f.stats.cycles);
+        let mut m = Machine::new(cfg.clone());
+        cycles.push(m.run(spec).unwrap().cycles());
     }
     assert_eq!(cycles[0], cycles[1], "simulation must be deterministic");
 }

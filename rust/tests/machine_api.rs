@@ -1,0 +1,110 @@
+//! Integration tests for the unified `Machine` execution API: typed errors
+//! through the public surface, fabric-reset determinism, compile caching,
+//! and pooled batch execution.
+
+use nexus::baselines::systolic::Systolic;
+use nexus::config::ArchConfig;
+use nexus::machine::{ExecError, Machine, MachinePool};
+use nexus::workloads::{suite, Spec};
+
+/// Systolic arrays cannot express graph analytics: the machine reports a
+/// typed `Unsupported` error instead of an `Option` or a panic.
+#[test]
+fn systolic_on_bfs_is_unsupported() {
+    let specs = suite(1);
+    let bfs = specs.iter().find(|s| s.name() == "BFS").unwrap();
+    let mut m = Machine::from_backend(Box::new(Systolic::default()));
+    match m.run(bfs) {
+        Err(ExecError::Unsupported { arch, workload }) => {
+            assert_eq!(arch, "Systolic");
+            assert_eq!(workload, "BFS");
+        }
+        Ok(_) => panic!("systolic must not run BFS"),
+        Err(e) => panic!("expected Unsupported, got {e}"),
+    }
+}
+
+/// The systolic machine still runs everything the roster expects of it.
+#[test]
+fn systolic_supports_the_dense_and_sparse_suite() {
+    let mut m = Machine::from_backend(Box::new(Systolic::default()));
+    for spec in suite(1).iter().filter(|s| s.class() != "graph") {
+        let e = m.run(spec).unwrap_or_else(|err| panic!("{}: {err}", spec.name()));
+        assert!(e.cycles() > 0);
+    }
+}
+
+/// A deadlocking program (cycle budget exhausted) must surface as a typed
+/// `Err` through `Machine::execute`, never as a panic. An undersized
+/// `max_cycles` on a real workload is the simplest public-API reproducer.
+#[test]
+fn deadlock_surfaces_as_err_through_machine_execute() {
+    let specs = suite(1);
+    let spmv = specs.iter().find(|s| s.name().starts_with("SpMV")).unwrap();
+    let mut cfg = ArchConfig::nexus();
+    cfg.max_cycles = 1; // no workload drains in one cycle
+    let mut m = Machine::new(cfg);
+    match m.run(spmv) {
+        Err(ExecError::Deadlock(e)) => {
+            assert!(e.cycle > 0);
+            assert!(!e.detail.is_empty());
+        }
+        Ok(_) => panic!("one cycle cannot drain SpMV"),
+        Err(e) => panic!("expected Deadlock, got {e}"),
+    }
+}
+
+/// `NexusFabric::reset()` reuse must be bit-identical to a freshly
+/// constructed fabric: run two suite workloads back to back on one machine,
+/// then compare outputs *and* full stats against fresh single-use machines.
+#[test]
+fn fabric_reset_matches_fresh_fabric_bit_for_bit() {
+    let specs = suite(1);
+    let picks: Vec<&Spec> = vec![
+        specs.iter().find(|s| s.name().starts_with("SpMV")).unwrap(),
+        specs.iter().find(|s| s.name() == "BFS").unwrap(),
+    ];
+    let cfg = ArchConfig::nexus();
+    let mut session = Machine::new(cfg.clone());
+    // Interleave: SpMV, BFS, then SpMV again from the compile cache.
+    let first = session.run(picks[0]).unwrap();
+    let second = session.run(picks[1]).unwrap();
+    let third = session.run(picks[0]).unwrap();
+    for (spec, reused) in [(picks[0], &first), (picks[1], &second), (picks[0], &third)] {
+        let fresh = Machine::new(cfg.clone()).run(spec).unwrap();
+        assert_eq!(fresh.outputs, reused.outputs, "{}", spec.name());
+        assert_eq!(fresh.stats, reused.stats, "{}", spec.name());
+        assert_eq!(fresh.result.cycles, reused.result.cycles, "{}", spec.name());
+    }
+}
+
+/// Recompiling a workload on the same machine hits the cache.
+#[test]
+fn compile_cache_skips_recompilation() {
+    let specs = suite(1);
+    let spmv = specs.iter().find(|s| s.name().starts_with("SpMV")).unwrap();
+    let mut m = Machine::new(ArchConfig::nexus());
+    m.compile(spmv).unwrap();
+    m.compile(spmv).unwrap();
+    m.run(spmv).unwrap();
+    assert_eq!(m.cached_programs(), 1);
+}
+
+/// Pooled batch execution returns results in job order with per-worker
+/// machine reuse.
+#[test]
+fn pool_runs_suite_batch_in_order() {
+    let specs = suite(1);
+    let cfg = ArchConfig::nexus();
+    let cycles = MachinePool::with_workers(4).run_batch_with(
+        || Machine::new(cfg.clone()),
+        &specs,
+        |m, spec| m.run(spec).unwrap().cycles(),
+    );
+    assert_eq!(cycles.len(), specs.len());
+    // Same batch serially on one machine must agree (order + determinism).
+    let mut serial = Machine::new(cfg);
+    for (spec, &c) in specs.iter().zip(&cycles) {
+        assert_eq!(serial.run(spec).unwrap().cycles(), c, "{}", spec.name());
+    }
+}
