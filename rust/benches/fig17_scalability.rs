@@ -1,14 +1,34 @@
 //! `cargo bench --bench fig17_scalability` — regenerates the paper's fig17 scalability
-//! series from the cycle-accurate simulator, and times the regeneration.
+//! series from the cycle-accurate simulator, times the regeneration under
+//! both simulator scheduling modes, and reports the dense-oracle vs
+//! active-set wall-clock speedup as a machine-readable
+//! `BENCH_STEP_MODE.json` line (the gap grows with the mesh, since the
+//! dense scan pays for every idle PE every cycle).
 
+use nexus::config::{ArchConfig, StepMode};
 use nexus::coordinator::{self, report};
 use nexus::util::bench::bench;
 
 fn main() {
+    let dims = [2usize, 4, 6, 8];
     let mut out = String::new();
-    bench("fig17_scalability", 2, || {
-        let pts = coordinator::scalability_sweep(1, &[2, 4, 6, 8]);
+    let active_s = bench("fig17_scalability (active-set)", 2, || {
+        let pts = coordinator::scalability_sweep(1, &dims);
         out = report::fig17(&pts);
     });
+    let dense_cfg = ArchConfig::nexus().with_step_mode(StepMode::DenseOracle);
+    let mut dense_out = String::new();
+    let dense_s = bench("fig17_scalability (dense-oracle)", 2, || {
+        let pts = coordinator::scalability_sweep_with(&dense_cfg, 1, &dims);
+        dense_out = report::fig17(&pts);
+    });
+    assert_eq!(out, dense_out, "step modes must produce identical figures");
+    println!(
+        "BENCH_STEP_MODE.json {{\"bench\":\"fig17_scalability\",\"dims\":\"2,4,6,8\",\
+         \"dense_s\":{:.6},\"active_s\":{:.6},\"speedup\":{:.3}}}",
+        dense_s,
+        active_s,
+        dense_s / active_s.max(1e-12)
+    );
     println!("{out}");
 }

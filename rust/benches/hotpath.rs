@@ -1,11 +1,12 @@
 //! `cargo bench --bench hotpath` — the simulator's own performance: PE-cycle
 //! throughput of `NexusFabric::step()` on a saturated fabric, the
-//! compile-cache + fabric-reset hot path of the `Machine` session API, plus
-//! the §4 compile-path timing comparison. This is the EXPERIMENTS.md §Perf
-//! probe.
+//! compile-cache + fabric-reset hot path of the `Machine` session API,
+//! active-set vs dense-oracle stepping on a sparse 16×16 mesh (reported as
+//! a machine-readable `BENCH_STEP_MODE.json` line), plus the §4
+//! compile-path timing comparison. This is the EXPERIMENTS.md §Perf probe.
 
 use nexus::baselines::cgra::{mem_trace, GenericCgra};
-use nexus::config::ArchConfig;
+use nexus::config::{ArchConfig, StepMode};
 use nexus::machine::Machine;
 use nexus::util::bench::{bench, throughput};
 use std::time::Instant;
@@ -50,6 +51,34 @@ fn main() {
     println!(
         "reset+cache vs fresh-fabric: {:.2}x",
         fresh / reused.max(1e-12)
+    );
+
+    // Dense-oracle vs active-set stepping on the *sparsest* suite workload
+    // (SpMSpM-S4, 75%/75% sparsity) at 16×16 — the regime where idle-PE
+    // scan overhead dominates the dense scheduler. Both runs validate the
+    // same outputs; only host wall-clock differs.
+    let spec = specs
+        .iter()
+        .find(|s| s.name() == "SpMSpM-S4")
+        .expect("suite must contain SpMSpM-S4");
+    let cfg16 = ArchConfig::nexus().with_array(16, 16);
+    let mut m_active = Machine::new(cfg16.clone());
+    let mut m_dense = Machine::new(cfg16.with_step_mode(StepMode::DenseOracle));
+    let c_active = m_active.compile(spec).expect("compile");
+    let c_dense = m_dense.compile(spec).expect("compile");
+    let active_s = bench("step: active-set 16x16", 3, || {
+        m_active.execute(&c_active).expect("active-set run");
+    });
+    let dense_s = bench("step: dense-oracle 16x16", 3, || {
+        m_dense.execute(&c_dense).expect("dense-oracle run");
+    });
+    println!(
+        "BENCH_STEP_MODE.json {{\"bench\":\"hotpath_step_mode\",\"mesh\":\"16x16\",\
+         \"workload\":\"{}\",\"dense_s\":{:.6},\"active_s\":{:.6},\"speedup\":{:.3}}}",
+        spec.name(),
+        dense_s,
+        active_s,
+        dense_s / active_s.max(1e-12)
     );
 
     // Compile paths (§4: 0.55 s Nexus vs 7.22 s CGRA on the authors' setup).

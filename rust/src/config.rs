@@ -39,6 +39,38 @@ pub enum ExecPolicy {
     DestinationOnly,
 }
 
+/// How the simulator schedules per-cycle work — a *simulator host* choice
+/// with zero architectural meaning: both modes produce bit-identical
+/// outputs, cycle counts, and [`crate::fabric::stats::FabricStats`].
+///
+/// The paper's whole premise (§3) is that irregular workloads leave most
+/// PEs idle most cycles; [`StepMode::ActiveSet`] makes the *simulation*
+/// cost track that activity instead of the mesh size, while
+/// [`StepMode::DenseOracle`] keeps the obviously-correct dense scan around
+/// as the differential-testing reference (`rust/tests/step_equivalence.rs`
+/// asserts the equivalence property-by-property).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StepMode {
+    /// Event-driven scheduling: each cycle visits only PEs/routers on the
+    /// wake-list (woken by message commits, AXI refills, stream emissions,
+    /// trigger-timer cooldowns, and en-route claims). The default.
+    #[default]
+    ActiveSet,
+    /// The original dense scan: every phase visits all `width × height`
+    /// components every cycle. O(PEs · cycles) regardless of activity —
+    /// slow, simple, and the oracle the active-set core is checked against.
+    DenseOracle,
+}
+
+impl StepMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            StepMode::ActiveSet => "active-set",
+            StepMode::DenseOracle => "dense-oracle",
+        }
+    }
+}
+
 /// NoC routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutingPolicy {
@@ -96,6 +128,9 @@ pub struct ArchConfig {
     pub max_cycles: u64,
     /// Seed for any randomized behavior (Valiant intermediate selection).
     pub seed: u64,
+    /// Simulator scheduling mode (host-side only; does not change modeled
+    /// behavior). See [`StepMode`].
+    pub step_mode: StepMode,
 }
 
 impl ArchConfig {
@@ -120,6 +155,7 @@ impl ArchConfig {
             trigger_latency: 0,
             max_cycles: 2_000_000,
             seed: 0xA3C5,
+            step_mode: StepMode::ActiveSet,
         }
     }
 
@@ -170,6 +206,14 @@ impl ArchConfig {
 
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Override the simulator scheduling mode ([`StepMode`]). Both modes are
+    /// bit-identical in outputs, cycles, and stats; `DenseOracle` exists for
+    /// differential testing and debugging of the active-set scheduler.
+    pub fn with_step_mode(mut self, mode: StepMode) -> Self {
+        self.step_mode = mode;
         self
     }
 
@@ -234,6 +278,17 @@ mod tests {
         assert_eq!(c.router_buf_depth, 3);
         assert_eq!(c.t_off, 1);
         assert_eq!(c.t_on, 2);
+        assert_eq!(c.step_mode, StepMode::ActiveSet);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn step_mode_override_is_host_side_only() {
+        let c = ArchConfig::nexus().with_step_mode(StepMode::DenseOracle);
+        assert_eq!(c.step_mode, StepMode::DenseOracle);
+        assert_eq!(c.step_mode.name(), "dense-oracle");
+        // Everything architectural is untouched.
+        assert_eq!(c.num_pes(), 16);
         c.validate().unwrap();
     }
 

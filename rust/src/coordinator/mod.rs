@@ -190,11 +190,20 @@ pub struct ScalePoint {
     pub utilization: f64,
 }
 
-/// Run the Fig 17 scalability sweep over array sizes.
+/// Run the Fig 17 scalability sweep over array sizes (Nexus baseline
+/// configuration, active-set stepping).
 pub fn scalability_sweep(seed: u64, dims: &[usize]) -> Vec<ScalePoint> {
+    scalability_sweep_with(&ArchConfig::nexus(), seed, dims)
+}
+
+/// As [`scalability_sweep`], parameterized over the base configuration —
+/// the fig17 bench uses this to time the sweep under both
+/// [`crate::config::StepMode`]s (the results are bit-identical; only the
+/// host wall-clock differs).
+pub fn scalability_sweep_with(base: &ArchConfig, seed: u64, dims: &[usize]) -> Vec<ScalePoint> {
     let pool = MachinePool::new();
     let rows = pool.run_batch(dims, |&d| {
-        let cfg = ArchConfig::nexus().with_array(d, d);
+        let cfg = base.clone().with_array(d, d);
         let mut m = Machine::new(cfg);
         // A representative subset: sparse, dense, graph.
         let specs = suite(seed);

@@ -1,0 +1,165 @@
+//! The wake-list backing [`crate::config::StepMode::ActiveSet`] stepping.
+//!
+//! A [`WakeList`] tracks which components (PEs or routers) of the fabric
+//! have pending work. Components enter on an activation event (a message
+//! commit into their buffers, an AXI static-AM refill, a stream emission, a
+//! trigger-timer cooldown, an en-route claim) and leave at cycle commit when
+//! they have no pending work, so the scheduler's per-cycle cost is
+//! O(active), not O(mesh).
+//!
+//! Determinism matters more than raw speed here: the fabric rotates its
+//! service order every cycle (`start = cycle % n`) so no component gets
+//! systematic priority, and the Valiant routing policy draws from a single
+//! PRNG in service order. The wake-list therefore iterates members in
+//! *rotated id order* — exactly the order the dense scan visits the same
+//! components — which is what makes active-set stepping bit-identical to
+//! the [`crate::config::StepMode::DenseOracle`] scan. A `BTreeSet` keeps
+//! members sorted (two range scans give the rotation) with O(log n)
+//! wake/sleep; a dense mask gives O(1) membership tests.
+
+use std::collections::BTreeSet;
+
+/// Set of awake component ids with deterministic rotated-order iteration.
+#[derive(Debug, Clone)]
+pub struct WakeList {
+    /// O(1) membership (also guards double-insertion into the set).
+    mask: Vec<bool>,
+    /// Sorted members, for rotated iteration.
+    set: BTreeSet<usize>,
+}
+
+impl WakeList {
+    /// An empty wake-list over component ids `0..n`.
+    pub fn new(n: usize) -> Self {
+        WakeList {
+            mask: vec![false; n],
+            set: BTreeSet::new(),
+        }
+    }
+
+    /// Number of awake components.
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+
+    /// Capacity (total component count the list was built for).
+    pub fn capacity(&self) -> usize {
+        self.mask.len()
+    }
+
+    #[inline]
+    pub fn is_awake(&self, id: usize) -> bool {
+        self.mask[id]
+    }
+
+    /// Mark `id` awake (idempotent).
+    #[inline]
+    pub fn wake(&mut self, id: usize) {
+        if !self.mask[id] {
+            self.mask[id] = true;
+            self.set.insert(id);
+        }
+    }
+
+    /// Mark `id` asleep (idempotent).
+    #[inline]
+    pub fn sleep(&mut self, id: usize) {
+        if self.mask[id] {
+            self.mask[id] = false;
+            self.set.remove(&id);
+        }
+    }
+
+    /// Put every component to sleep.
+    pub fn clear(&mut self) {
+        self.mask.fill(false);
+        self.set.clear();
+    }
+
+    /// Iterate awake ids in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.set.iter().copied()
+    }
+
+    /// Append the awake ids to `out` in ascending order (commit pass).
+    pub fn snapshot_into(&self, out: &mut Vec<usize>) {
+        out.extend(self.set.iter().copied());
+    }
+
+    /// Append the awake ids to `out` in rotated order: `start..`, then
+    /// `..start` — the dense scan's `(start + k) % n` service order
+    /// restricted to awake members.
+    pub fn rotated_into(&self, start: usize, out: &mut Vec<usize>) {
+        out.extend(self.set.range(start..).copied());
+        out.extend(self.set.range(..start).copied());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wake_sleep_roundtrip() {
+        let mut w = WakeList::new(8);
+        assert!(w.is_empty());
+        w.wake(3);
+        w.wake(3); // idempotent
+        w.wake(5);
+        assert_eq!(w.len(), 2);
+        assert!(w.is_awake(3) && w.is_awake(5) && !w.is_awake(4));
+        w.sleep(3);
+        w.sleep(3); // idempotent
+        assert_eq!(w.len(), 1);
+        assert!(!w.is_awake(3));
+        w.clear();
+        assert!(w.is_empty() && !w.is_awake(5));
+    }
+
+    #[test]
+    fn rotated_order_matches_dense_scan_order() {
+        let mut w = WakeList::new(10);
+        for id in [1, 4, 7, 9] {
+            w.wake(id);
+        }
+        // Dense order from start=5 over ids 0..10 is 5,6,7,8,9,0,1,2,3,4;
+        // restricted to awake members: 7, 9, 1, 4.
+        let mut out = Vec::new();
+        w.rotated_into(5, &mut out);
+        assert_eq!(out, vec![7, 9, 1, 4]);
+        out.clear();
+        w.rotated_into(0, &mut out);
+        assert_eq!(out, vec![1, 4, 7, 9]);
+        out.clear();
+        w.rotated_into(9, &mut out);
+        assert_eq!(out, vec![9, 1, 4, 7]);
+    }
+
+    #[test]
+    fn rotation_equivalence_property() {
+        // For every membership pattern and start, rotated_into must equal
+        // the dense scan order filtered by membership.
+        crate::util::prop::forall(128, |rng| {
+            let n = 1 + rng.below_usize(32);
+            let mut w = WakeList::new(n);
+            let mut awake = vec![false; n];
+            for id in 0..n {
+                if rng.chance(0.4) {
+                    w.wake(id);
+                    awake[id] = true;
+                }
+            }
+            let start = rng.below_usize(n);
+            let mut got = Vec::new();
+            w.rotated_into(start, &mut got);
+            let want: Vec<usize> = (0..n).map(|k| (start + k) % n).filter(|&i| awake[i]).collect();
+            crate::util::prop::ensure(got == want, || {
+                format!("n={n} start={start}: got {got:?}, want {want:?}")
+            })
+        });
+    }
+}

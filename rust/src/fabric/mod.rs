@@ -2,23 +2,45 @@
 //! contribution (§3): Data-Driven execution of Active Messages over a mesh
 //! of PEs, with In-Network (en-route, opportunistic) computing on idle ALUs.
 //!
-//! One [`NexusFabric::step`] models one clock cycle in four phases:
+//! One [`NexusFabric::step`] models one clock cycle in four phases, each
+//! visiting only the components on its *wake-list* (see below):
 //!
-//! 1. **PE phase** — each PE processes at most one message locally (ALU op
-//!    on its compute unit, or a memory op on its decode unit), advances its
-//!    streaming decode by one emission, and injects one AM into its router
-//!    (dynamic AMs first, else the next static AM — §3.3.1).
+//! 1. **PE phase** — each awake PE processes at most one message locally
+//!    (ALU op on its compute unit, or a memory op on its decode unit),
+//!    advances its streaming decode by one emission, and injects one AM into
+//!    its router (dynamic AMs first, else the next static AM — §3.3.1).
 //! 2. **En-route phase** (Nexus only) — a PE whose ALU went unused this
 //!    cycle scans its router's input buffers for a head flit whose opcode is
 //!    ALU-class with both operands resolved, executes it *in place*, and
 //!    morphs the message (§3.1.3). The flit is locked for the cycle (one
-//!    ALU latency) and continues toward its destination next cycle.
-//! 3. **Route phase** — per router: west-first turn-model route computation
-//!    with congestion-aware adaptive choice (or XY / Valiant), separable
-//!    allocation with rotating priority, and crossbar traversal into
-//!    neighbor staging registers or the local PE's inbox.
+//!    ALU latency) and continues toward its destination next cycle. Only
+//!    routers holding flits are scanned.
+//! 3. **Route phase** — per occupied router: west-first turn-model route
+//!    computation with congestion-aware adaptive choice (or XY / Valiant),
+//!    separable allocation with rotating priority, and crossbar traversal
+//!    into neighbor staging registers or the local PE's inbox.
 //! 4. **Commit** — staged flits land in buffers; On/Off hysteresis updates
-//!    (§3.3.2: T_off = 1, T_on = 2).
+//!    (§3.3.2: T_off = 1, T_on = 2); busy-cycle statistics latch; components
+//!    with no remaining work leave the wake-lists.
+//!
+//! ## Active-set scheduling
+//!
+//! The paper's premise is that irregular workloads keep most PEs idle most
+//! cycles — so simulating every PE every cycle wastes almost all of the
+//! host's work on no-ops. The fabric therefore keeps two
+//! [`active::WakeList`]s (PEs and routers): a component enters on an
+//! activation event — a flit staged into its buffers, an AXI static-AM
+//! refill, a stream emission or dispatch, a trigger-timer cooldown, an
+//! en-route claim — and leaves at commit when it has no pending work.
+//! Phases iterate the wake-lists in the same rotated service order the
+//! dense scan uses, which (together with commit-time hysteresis) makes the
+//! two schedules **bit-identical**: same outputs, same cycle counts, same
+//! [`FabricStats`], same PRNG draws. The original dense scan survives as
+//! [`StepMode::DenseOracle`] — selectable per [`ArchConfig`] — and
+//! `rust/tests/step_equivalence.rs` property-checks the equivalence across
+//! random meshes, policies, buffer depths, and workload densities.
+//! [`NexusFabric::check_conservation`] additionally asserts the wake-list
+//! invariants (no awake-but-idle leaks, no asleep-but-pending components).
 //!
 //! The same fabric executes the TIA and TIA-Valiant baselines by flag:
 //! [`ExecPolicy::DestinationOnly`] disables phase 2, `trigger_latency`
@@ -29,16 +51,18 @@
 //! memories load before a tile executes (counted as `load_cycles`), while
 //! AM queues stream *during* execution, hiding their latency.
 
+pub mod active;
 pub mod stats;
 
 use crate::am::Message;
 use crate::compiler::Program;
-use crate::config::{ArchConfig, ExecPolicy, RoutingPolicy};
+use crate::config::{ArchConfig, ExecPolicy, RoutingPolicy, StepMode};
 use crate::isa::{alu_eval, ConfigEntry, Opcode};
 use crate::noc::router::{Router, NUM_PORTS, PORT_LOCAL};
 use crate::noc::routing::{route_ports, route_xy, Dir};
 use crate::pe::{ActiveStream, Pe, StreamMode, OUTQ_CAP};
 use crate::util::SplitMix64;
+use active::WakeList;
 use stats::FabricStats;
 use std::collections::VecDeque;
 
@@ -47,6 +71,13 @@ use std::collections::VecDeque;
 pub struct DeadlockError {
     pub cycle: u64,
     pub in_flight: usize,
+    /// Which components still hold work, one entry per non-idle PE/router —
+    /// e.g. `"PE5 inbox=1 outq=2"` or `"R9 occ=3"`. Never empty for a real
+    /// timeout: something must be holding the messages that did not drain.
+    pub culprits: Vec<String>,
+    /// Full forensic dump: conservation counters, per-PE queue occupancy,
+    /// and per-port head-flit routing state (what each stuck head wants and
+    /// what its downstream advertises).
     pub detail: String,
 }
 
@@ -54,8 +85,12 @@ impl std::fmt::Display for DeadlockError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "fabric did not drain by cycle {} ({} messages in flight): {}",
-            self.cycle, self.in_flight, self.detail
+            "fabric did not drain by cycle {} ({} messages in flight; {} culprit components: {}): {}",
+            self.cycle,
+            self.in_flight,
+            self.culprits.len(),
+            self.culprits.join(", "),
+            self.detail
         )
     }
 }
@@ -84,6 +119,14 @@ pub struct NexusFabric {
     /// Global cycle counter (includes inter-tile load cycles).
     cycle: u64,
     next_msg_id: u64,
+    /// PEs with pending work (see [`Pe::has_pending_work`]). Maintained in
+    /// both step modes; consulted by the scheduler only in `ActiveSet`.
+    awake_pes: WakeList,
+    /// Routers holding at least one flit (buffered or staged).
+    awake_routers: WakeList,
+    /// Per-cycle iteration scratch (reused to keep `step()` allocation-free).
+    scratch_pes: Vec<usize>,
+    scratch_routers: Vec<usize>,
     pub stats: FabricStats,
 }
 
@@ -112,6 +155,10 @@ impl NexusFabric {
             rng: SplitMix64::new(cfg.seed),
             cycle: 0,
             next_msg_id: 1,
+            awake_pes: WakeList::new(n),
+            awake_routers: WakeList::new(n),
+            scratch_pes: Vec::with_capacity(n),
+            scratch_routers: Vec::with_capacity(n),
             stats,
             cfg,
         }
@@ -139,6 +186,8 @@ impl NexusFabric {
         for q in &mut self.pending_static {
             q.clear();
         }
+        self.awake_pes.clear();
+        self.awake_routers.clear();
         self.config_mem.clear();
         // Reset every counter but keep the per-PE vector's allocation.
         let mut per_pe = std::mem::take(&mut self.stats.per_pe_busy_cycles);
@@ -153,8 +202,7 @@ impl NexusFabric {
     /// drain + idle-tree latency, write back outputs. Returns the output
     /// tensor in the program's logical order.
     pub fn run_program(&mut self, prog: &Program) -> Result<Vec<i16>, DeadlockError> {
-        prog.validate(&self.cfg).expect("program/arch mismatch");
-        self.load_tile(prog);
+        self.begin_program(prog);
         self.execute()?;
         // Writeback: outputs stream off-chip at AXI bandwidth (Fig 16's
         // "increased output movement" term).
@@ -169,6 +217,18 @@ impl NexusFabric {
             .iter()
             .map(|&(pe, addr)| self.pes[pe].dmem[addr as usize] as i16)
             .collect())
+    }
+
+    /// Validate and load a program's images *without* running it — the
+    /// manual-stepping entry point used by lockstep differential tests and
+    /// debugging harnesses: call [`NexusFabric::step`] to advance one cycle,
+    /// [`NexusFabric::is_drained`] to detect completion, and
+    /// [`NexusFabric::state_digest`] to compare two fabrics cycle by cycle.
+    /// [`NexusFabric::run_program`] remains the normal path (it adds the
+    /// idle-tree drain loop and the off-chip writeback accounting).
+    pub fn begin_program(&mut self, prog: &Program) {
+        prog.validate(&self.cfg).expect("program/arch mismatch");
+        self.load_tile(prog);
     }
 
     /// Reset all per-tile state and load a program's images.
@@ -209,6 +269,16 @@ impl NexusFabric {
         self.stats.offchip_bytes += data_bytes;
         self.axi_credit = 0.0;
         self.pending_remaining = self.pending_static.iter().map(|q| q.len()).sum();
+        // Initial wake-lists: routers start empty; a PE starts awake iff its
+        // on-chip AM window was preloaded (everything else activates later —
+        // AXI refills, message deliveries, stream triggers).
+        self.awake_pes.clear();
+        self.awake_routers.clear();
+        for id in 0..n {
+            if self.pes[id].has_pending_work() {
+                self.awake_pes.wake(id);
+            }
+        }
     }
 
     /// Cycle loop until the global idle detector fires.
@@ -239,6 +309,41 @@ impl NexusFabric {
             "created {} retired {}; ",
             self.stats.msgs_created, self.stats.msgs_retired
         );
+        // One culprit entry per component still holding work, naming exactly
+        // which queues are non-empty (the error's machine-usable form; the
+        // free-text detail below carries the same data plus head-flit
+        // routing forensics).
+        let mut culprits = Vec::new();
+        for (id, pe) in self.pes.iter().enumerate() {
+            let mut parts = Vec::new();
+            if pe.inbox.is_some() {
+                parts.push("inbox=1".to_string());
+            }
+            if pe.local_redo.is_some() {
+                parts.push("redo=1".to_string());
+            }
+            if !pe.outq.is_empty() {
+                parts.push(format!("outq={}", pe.outq.len()));
+            }
+            if pe.stream.is_some() {
+                parts.push("stream=1".to_string());
+            }
+            if !pe.stream_q.is_empty() {
+                parts.push(format!("stream_q={}", pe.stream_q.len()));
+            }
+            if !pe.am_window.is_empty() {
+                parts.push(format!("am_window={}", pe.am_window.len()));
+            }
+            if !self.pending_static[id].is_empty() {
+                parts.push(format!("pending_static={}", self.pending_static[id].len()));
+            }
+            if !parts.is_empty() {
+                culprits.push(format!("PE{id} {}", parts.join(" ")));
+            }
+            if self.routers[id].occupancy() > 0 {
+                culprits.push(format!("R{id} occ={}", self.routers[id].occupancy()));
+            }
+        }
         for (id, pe) in self.pes.iter().enumerate() {
             if !pe.is_idle() || self.routers[id].occupancy() > 0 {
                 detail += &format!(
@@ -293,21 +398,50 @@ impl NexusFabric {
         DeadlockError {
             cycle: self.cycle,
             in_flight,
+            culprits,
             detail,
         }
     }
 
     /// Global idle condition (§3.1.4): all PEs inactive, no messages in
     /// transit, no static AMs left to stream.
+    ///
+    /// In `ActiveSet` mode this is O(active): only wake-list members can
+    /// hold work (every sleeping component is empty by the commit-time sleep
+    /// invariant, which [`NexusFabric::check_wake_consistency`] verifies),
+    /// and off-chip static AMs are tracked by the `pending_remaining`
+    /// counter. `DenseOracle` keeps the full O(PEs) scan as the reference.
     pub fn is_drained(&self) -> bool {
-        self.pending_static.iter().all(|q| q.is_empty())
-            && self.pes.iter().all(|p| p.is_idle())
-            && self.routers.iter().all(|r| r.occupancy() == 0)
+        match self.cfg.step_mode {
+            StepMode::DenseOracle => {
+                self.pending_static.iter().all(|q| q.is_empty())
+                    && self.pes.iter().all(|p| p.is_idle())
+                    && self.routers.iter().all(|r| r.occupancy() == 0)
+            }
+            StepMode::ActiveSet => {
+                // Awake routers always hold flits; an awake PE may be merely
+                // cooling down its trigger timer, which `is_idle` (and the
+                // dense scan) ignores.
+                self.pending_remaining == 0
+                    && self.awake_routers.is_empty()
+                    && self.awake_pes.iter().all(|id| self.pes[id].is_idle())
+            }
+        }
     }
 
-    /// One clock cycle.
+    /// One clock cycle. Dispatches on [`StepMode`]; both schedules are
+    /// bit-identical (see the module docs and `tests/step_equivalence.rs`).
     pub fn step(&mut self) {
         self.axi_refill();
+        match self.cfg.step_mode {
+            StepMode::DenseOracle => self.step_dense(),
+            StepMode::ActiveSet => self.step_active(),
+        }
+        self.cycle += 1;
+    }
+
+    /// The dense oracle: every phase scans all `width × height` components.
+    fn step_dense(&mut self) {
         let n = self.cfg.num_pes();
         // Rotate the PE service order each cycle so no PE gets systematic
         // priority from simulation artifacts.
@@ -324,7 +458,76 @@ impl NexusFabric {
             self.route_phase((start + k) % n);
         }
         for id in 0..n {
-            self.routers[id].commit();
+            self.commit_router(id);
+            self.commit_pe(id);
+        }
+    }
+
+    /// Event-driven scheduling: phases visit wake-list members only, in the
+    /// same rotated service order the dense scan uses. Bit-identity holds
+    /// because every skipped component is one on which the corresponding
+    /// dense phase is a no-op: `pe_phase` does nothing without pending work,
+    /// and the en-route/route phases do nothing on empty routers.
+    fn step_active(&mut self) {
+        let n = self.cfg.num_pes();
+        let start = (self.cycle as usize) % n;
+        // Snapshot the awake PEs: wakes during the cycle (inbox deliveries,
+        // en-route claims) take effect in the commit pass below, matching
+        // the dense scan, where a PE's phase has already run by the time a
+        // later phase hands it new work.
+        let mut pe_order = std::mem::take(&mut self.scratch_pes);
+        pe_order.clear();
+        self.awake_pes.rotated_into(start, &mut pe_order);
+        for &id in &pe_order {
+            self.pe_phase(id);
+        }
+        // Snapshot the awake routers once for both network phases: the set
+        // of routers with *buffered* flits cannot grow mid-cycle (injections
+        // and crossbar traversals only stage; staged flits land at commit),
+        // so a router staged-into this cycle no-ops both phases — exactly
+        // like the dense scan's empty-input fast path.
+        let mut router_order = std::mem::take(&mut self.scratch_routers);
+        router_order.clear();
+        self.awake_routers.rotated_into(start, &mut router_order);
+        if self.cfg.exec == ExecPolicy::EnRoute {
+            for &id in &router_order {
+                self.enroute_phase(id);
+            }
+        }
+        for &id in &router_order {
+            self.route_phase(id);
+        }
+        // Commit runs over the *current* wake-lists — including components
+        // woken this cycle (their staged flits must land, their busy flags
+        // must latch into stats) — and retires anything left with no work.
+        router_order.clear();
+        self.awake_routers.snapshot_into(&mut router_order);
+        for &id in &router_order {
+            self.commit_router(id);
+        }
+        pe_order.clear();
+        self.awake_pes.snapshot_into(&mut pe_order);
+        for &id in &pe_order {
+            self.commit_pe(id);
+        }
+        self.scratch_pes = pe_order;
+        self.scratch_routers = router_order;
+    }
+
+    /// Commit one router and update its wake-list residency.
+    #[inline]
+    fn commit_router(&mut self, id: usize) {
+        self.routers[id].commit();
+        if self.routers[id].occupancy() == 0 {
+            self.awake_routers.sleep(id);
+        }
+    }
+
+    /// Latch one PE's busy flags into its statistics, clear them for the
+    /// next cycle, and update its wake-list residency.
+    #[inline]
+    fn commit_pe(&mut self, id: usize) {
+        {
             let pe = &mut self.pes[id];
             if pe.alu_busy {
                 pe.stats.alu_busy_cycles += 1;
@@ -332,30 +535,36 @@ impl NexusFabric {
             if pe.alu_busy || pe.decode_busy {
                 pe.stats.busy_cycles += 1;
             }
+            pe.alu_busy = false;
+            pe.decode_busy = false;
         }
-        self.cycle += 1;
+        if !self.pes[id].has_pending_work() {
+            self.awake_pes.sleep(id);
+        }
+    }
+
+    /// Wake a PE on an activation event (message delivery, AXI refill,
+    /// stream/dispatch handoff, en-route claim).
+    #[inline]
+    fn wake_pe(&mut self, id: usize) {
+        self.awake_pes.wake(id);
+    }
+
+    /// Wake a router when a flit is staged into it.
+    #[inline]
+    fn wake_router(&mut self, id: usize) {
+        self.awake_routers.wake(id);
     }
 
     // --- phase 1: PE-local work -------------------------------------------
 
     fn pe_phase(&mut self, id: usize) {
-        {
-            // Fast path: fully idle PE (EXPERIMENTS.md §Perf). Flags are
-            // cleared first so an en-route claim from last cycle does not
-            // linger.
-            let pe = &mut self.pes[id];
-            pe.alu_busy = false;
-            pe.decode_busy = false;
-            if pe.local_redo.is_none()
-                && pe.inbox.is_none()
-                && pe.trigger_wait == 0
-                && pe.stream.is_none()
-                && pe.stream_q.is_empty()
-                && pe.outq.is_empty()
-                && pe.am_window.is_empty()
-            {
-                return;
-            }
+        // Fast path: fully idle PE — only reachable from the dense oracle;
+        // the active-set scheduler never visits sleeping PEs. Busy flags are
+        // always clear here: `commit_pe` latched and cleared them at the end
+        // of the previous cycle (so an en-route claim never lingers).
+        if !self.pes[id].has_pending_work() {
+            return;
         }
         // Pick at most one message: the decode/ALU handoff (local_redo) has
         // priority; otherwise the inbox, gated by the TIA trigger scheduler.
@@ -521,6 +730,7 @@ impl NexusFabric {
         } else {
             pe.outq.push_back(m);
         }
+        self.wake_pe(id);
     }
 
     fn retire(&mut self, _m: Message) {
@@ -546,6 +756,7 @@ impl NexusFabric {
         } else {
             pe.stream_q.push_back(s);
         }
+        self.wake_pe(id);
     }
 
     /// Advance the streaming decode by one emission (§3.3.1 streaming mode:
@@ -661,6 +872,7 @@ impl NexusFabric {
             }
         }
         self.routers[id].stage(PORT_LOCAL, m);
+        self.wake_router(id);
         self.stats.buf_writes += 1;
     }
 
@@ -694,6 +906,10 @@ impl NexusFabric {
             m.executed_enroute = true;
             self.routers[id].locked_port = Some(p);
             self.pes[id].alu_busy = true;
+            // The claim must reach this cycle's commit pass (to latch the
+            // busy flag into stats and clear it), so the PE joins the
+            // wake-list even if it holds no messages of its own.
+            self.wake_pe(id);
             self.pes[id].stats.enroute_ops += 1;
             self.stats.alu_ops += 1;
             self.stats.enroute_ops += 1;
@@ -827,9 +1043,11 @@ impl NexusFabric {
             m.hops += 1;
             if out == PORT_LOCAL {
                 self.pes[id].inbox = Some(m);
+                self.wake_pe(id);
             } else {
                 let nbr = self.neighbor(id, dir);
                 self.routers[nbr].stage(dir.opposite_port(), m);
+                self.wake_router(nbr);
                 self.stats.flit_hops += 1;
                 self.stats.buf_writes += 1;
             }
@@ -864,6 +1082,7 @@ impl NexusFabric {
             let m = self.pending_static[id].pop_front().unwrap();
             self.pending_remaining -= 1;
             self.pes[id].am_window.push_back(m);
+            self.wake_pe(id);
             self.axi_credit -= am_bytes;
             self.stats.offchip_bytes += crate::am::packed::AM_BYTES as u64;
         }
@@ -887,7 +1106,9 @@ impl NexusFabric {
         }
     }
 
-    /// Message conservation at drain: everything created was retired.
+    /// Message conservation at drain: everything created was retired — plus
+    /// the wake-list consistency invariants (so every conservation check in
+    /// the test-suite also audits the active-set scheduler).
     pub fn check_conservation(&self) -> Result<(), String> {
         if !self.is_drained() {
             return Err("fabric not drained".into());
@@ -898,7 +1119,133 @@ impl NexusFabric {
                 self.stats.msgs_created, self.stats.msgs_retired
             ));
         }
+        self.check_wake_consistency()
+    }
+
+    /// Audit the wake-lists against a full dense scan. Valid at any cycle
+    /// boundary (between [`NexusFabric::step`] calls), in both step modes
+    /// (the lists are maintained identically; only the scheduler differs):
+    ///
+    /// - **no asleep-but-pending component** — a PE with work or a router
+    ///   with flits missing from its wake-list would never be scheduled
+    ///   again: a simulator-induced deadlock;
+    /// - **no awake-but-idle leak** — a workless component still on a list
+    ///   would erode the O(active) bound back toward O(PEs);
+    /// - **no stale busy flags** — a sleeping PE's flags must be clear, or
+    ///   an en-route claim would be wrongly suppressed and busy-cycle stats
+    ///   double-counted.
+    pub fn check_wake_consistency(&self) -> Result<(), String> {
+        for id in 0..self.cfg.num_pes() {
+            let has = self.pes[id].has_pending_work();
+            let awake = self.awake_pes.is_awake(id);
+            if has && !awake {
+                return Err(format!("PE{id} asleep but has pending work (scheduler deadlock)"));
+            }
+            if awake && !has {
+                return Err(format!("PE{id} awake but idle (wake-list leak)"));
+            }
+            if !awake && (self.pes[id].alu_busy || self.pes[id].decode_busy) {
+                return Err(format!("PE{id} asleep with busy flags set"));
+            }
+            let occ = self.routers[id].occupancy();
+            let r_awake = self.awake_routers.is_awake(id);
+            if occ > 0 && !r_awake {
+                return Err(format!("router {id} asleep holding {occ} flits (scheduler deadlock)"));
+            }
+            if r_awake && occ == 0 {
+                return Err(format!("router {id} awake but empty (wake-list leak)"));
+            }
+        }
         Ok(())
+    }
+
+    /// Number of components currently on the wake-lists, `(PEs, routers)` —
+    /// the quantity active-set stepping is O of. Exposed for benches and
+    /// scheduler tests; not a statistic (identical workloads produce
+    /// identical sequences in both step modes, since the lists are
+    /// maintained identically).
+    pub fn awake_counts(&self) -> (usize, usize) {
+        (self.awake_pes.len(), self.awake_routers.len())
+    }
+
+    /// Order-sensitive FNV-1a digest of the complete mutable simulator
+    /// state: PE memories/queues/flags, router buffers/staging/hysteresis,
+    /// AXI and cycle counters, in-flight message contents. Two fabrics
+    /// executing bit-identically produce equal digests at every cycle
+    /// boundary — the lockstep divergence probe used by
+    /// `tests/step_equivalence.rs` to report the *first diverging cycle* on
+    /// an equivalence failure.
+    pub fn state_digest(&self) -> u64 {
+        #[inline]
+        fn mix(h: &mut u64, v: u64) {
+            *h = (*h ^ v).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        fn mix_msg(h: &mut u64, m: &Message) {
+            mix(
+                h,
+                u64::from_le_bytes([
+                    m.dests[0],
+                    m.dests[1],
+                    m.dests[2],
+                    m.ndests,
+                    m.n_pc,
+                    m.opcode.encode(),
+                    u8::from(m.res_is_addr),
+                    u8::from(m.op1_is_addr) | (u8::from(m.op2_is_addr) << 1),
+                ]),
+            );
+            mix(h, ((m.result as u64) << 32) | ((m.op1 as u64) << 16) | m.op2 as u64);
+            mix(h, m.id);
+            mix(h, m.birth);
+            mix(
+                h,
+                ((m.hops as u64) << 16) | m.valiant_hop.map_or(0xFFFF, |v| 0x100 | v as u64),
+            );
+            mix(h, u64::from(m.executed_enroute));
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        mix(&mut h, self.cycle);
+        mix(&mut h, self.next_msg_id);
+        mix(&mut h, self.pending_remaining as u64);
+        mix(&mut h, self.axi_rr as u64);
+        mix(&mut h, self.axi_credit.to_bits());
+        mix(&mut h, self.rng.clone().next_u64());
+        for (id, pe) in self.pes.iter().enumerate() {
+            mix(&mut h, id as u64);
+            for &w in &pe.dmem {
+                mix(&mut h, w as u64);
+            }
+            mix(&mut h, pe.trigger_wait);
+            mix(&mut h, u64::from(pe.alu_busy) | (u64::from(pe.decode_busy) << 1));
+            for m in pe.inbox.iter().chain(pe.local_redo.iter()) {
+                mix_msg(&mut h, m);
+            }
+            for m in pe.outq.iter().chain(pe.am_window.iter()) {
+                mix_msg(&mut h, m);
+            }
+            for s in pe.stream.iter().chain(pe.stream_q.iter()) {
+                mix(&mut h, s.base as u64);
+                mix(&mut h, s.remaining as u64);
+                mix(&mut h, s.pos as u64);
+                mix_msg(&mut h, &s.template);
+            }
+            mix(&mut h, self.pending_static[id].len() as u64);
+        }
+        for r in &self.routers {
+            for p in 0..NUM_PORTS {
+                mix(&mut h, r.inputs[p].len() as u64);
+                for m in r.inputs[p].iter() {
+                    mix_msg(&mut h, m);
+                }
+                if let Some(m) = &r.staging[p] {
+                    mix_msg(&mut h, m);
+                }
+                mix(&mut h, u64::from(r.on_state[p]));
+                mix(&mut h, r.rr_ptr[p] as u64);
+            }
+            mix(&mut h, r.locked_port.map_or(u64::MAX, |p| p as u64));
+        }
+        h
     }
 }
 
@@ -1190,22 +1537,108 @@ mod tests {
         assert!(r.is_err(), "expected timeout error");
         let e = r.unwrap_err();
         assert!(e.in_flight >= 1, "stuck message should be reported");
+        assert!(
+            !e.culprits.is_empty(),
+            "a timeout must name the components holding work"
+        );
+        assert!(
+            e.culprits.iter().any(|c| c.starts_with("PE") || c.starts_with('R')),
+            "culprits must identify PEs/routers: {:?}",
+            e.culprits
+        );
     }
 
     #[test]
-    fn reset_fabric_is_bit_identical_to_fresh() {
-        let cfg = nexus();
-        let prog = mac_program(&cfg);
-        let mut fresh = NexusFabric::new(cfg.clone());
-        let out_fresh = fresh.run_program(&prog).unwrap();
-        let mut reused = NexusFabric::new(cfg);
-        // Dirty the instance with a different program first, then reset.
-        let store = store_program(&reused.cfg, 0, 15, -7);
-        reused.run_program(&store).unwrap();
-        reused.reset();
-        let out_reused = reused.run_program(&prog).unwrap();
-        assert_eq!(out_fresh, out_reused);
-        assert_eq!(fresh.stats, reused.stats);
+    fn reset_fabric_is_bit_identical_to_fresh_in_both_modes() {
+        for mode in [StepMode::ActiveSet, StepMode::DenseOracle] {
+            let cfg = nexus().with_step_mode(mode);
+            let prog = mac_program(&cfg);
+            let mut fresh = NexusFabric::new(cfg.clone());
+            let out_fresh = fresh.run_program(&prog).unwrap();
+            let mut reused = NexusFabric::new(cfg);
+            // Dirty the instance with a different program first, then reset.
+            let store = store_program(&reused.cfg, 0, 15, -7);
+            reused.run_program(&store).unwrap();
+            reused.reset();
+            let out_reused = reused.run_program(&prog).unwrap();
+            assert_eq!(out_fresh, out_reused, "{mode:?}");
+            assert_eq!(fresh.stats, reused.stats, "{mode:?}");
+            assert_eq!(fresh.state_digest(), reused.state_digest(), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn dense_oracle_matches_active_set_on_fabric_programs() {
+        // The two schedulers must be bit-identical: same outputs, same
+        // cycle counts, same stats. (The broad randomized version lives in
+        // tests/step_equivalence.rs; this is the in-crate smoke check.)
+        let base = nexus();
+        for prog in [
+            store_program(&base, 0, 15, -7),
+            mac_program(&base),
+        ] {
+            let mut fa = NexusFabric::new(base.clone().with_step_mode(StepMode::ActiveSet));
+            let mut fd = NexusFabric::new(base.clone().with_step_mode(StepMode::DenseOracle));
+            let oa = fa.run_program(&prog).unwrap();
+            let od = fd.run_program(&prog).unwrap();
+            assert_eq!(oa, od);
+            assert_eq!(fa.cycles(), fd.cycles());
+            assert_eq!(fa.stats, fd.stats);
+            fa.check_conservation().unwrap();
+            fd.check_conservation().unwrap();
+        }
+    }
+
+    #[test]
+    fn lockstep_digests_agree_cycle_by_cycle() {
+        // Manual-stepping both schedulers over the same program: the full
+        // state digest must match at *every* cycle boundary, and the wake
+        // lists must satisfy their invariants throughout.
+        let base = nexus();
+        let prog = mac_program(&base);
+        let mut fa = NexusFabric::new(base.clone().with_step_mode(StepMode::ActiveSet));
+        let mut fd = NexusFabric::new(base.with_step_mode(StepMode::DenseOracle));
+        fa.begin_program(&prog);
+        fd.begin_program(&prog);
+        assert_eq!(fa.state_digest(), fd.state_digest(), "post-load");
+        for cycle in 0..200 {
+            fa.step();
+            fd.step();
+            assert_eq!(
+                fa.state_digest(),
+                fd.state_digest(),
+                "diverged at cycle {cycle}"
+            );
+            fa.check_wake_consistency().unwrap();
+            fd.check_wake_consistency().unwrap();
+            assert_eq!(fa.is_drained(), fd.is_drained(), "cycle {cycle}");
+            if fa.is_drained() {
+                return;
+            }
+        }
+        panic!("program did not drain within 200 cycles");
+    }
+
+    #[test]
+    fn sleeping_fabric_steps_are_cheap_and_safe() {
+        // After drain the wake-lists empty out; stepping an empty fabric
+        // must stay a no-op in both modes (cycle advances, nothing else).
+        for mode in [StepMode::ActiveSet, StepMode::DenseOracle] {
+            let cfg = nexus().with_step_mode(mode);
+            let prog = store_program(&cfg, 0, 15, 3);
+            let mut f = NexusFabric::new(cfg);
+            f.run_program(&prog).unwrap();
+            let (awake_pes, awake_routers) = f.awake_counts();
+            assert_eq!((awake_pes, awake_routers), (0, 0), "{mode:?}");
+            let before = f.stats.clone();
+            let c0 = f.cycles();
+            for _ in 0..8 {
+                f.step();
+            }
+            assert_eq!(f.cycles(), c0 + 8);
+            assert_eq!(f.stats, before, "{mode:?}: idle steps must not mutate stats");
+            f.check_wake_consistency().unwrap();
+        }
     }
 
     #[test]

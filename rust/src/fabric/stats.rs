@@ -127,6 +127,52 @@ impl FabricStats {
         self.port[port].blocked_cycles += s.blocked_cycles;
         self.port[port].flits_in += s.flits_in;
     }
+
+    /// Field-by-field comparison: `None` when equal, otherwise the name and
+    /// values of the first differing field. The step-equivalence property
+    /// suite uses this so a scheduler divergence names the exact counter
+    /// that split (e.g. `flit_hops: 120 vs 118`) instead of dumping two
+    /// whole structs.
+    pub fn diff(&self, other: &FabricStats) -> Option<String> {
+        macro_rules! check {
+            ($field:ident) => {
+                if self.$field != other.$field {
+                    return Some(format!(
+                        "{}: {:?} vs {:?}",
+                        stringify!($field),
+                        self.$field,
+                        other.$field
+                    ));
+                }
+            };
+        }
+        check!(cycles);
+        check!(load_cycles);
+        check!(alu_ops);
+        check!(enroute_ops);
+        check!(mem_ops);
+        check!(stream_emissions);
+        check!(static_injections);
+        check!(msgs_created);
+        check!(msgs_retired);
+        check!(flit_hops);
+        check!(buf_writes);
+        check!(dmem_reads);
+        check!(dmem_writes);
+        check!(config_reads);
+        check!(scanner_ops);
+        check!(trigger_checks);
+        check!(offchip_bytes);
+        check!(per_pe_busy_cycles);
+        check!(port);
+        // Guard against the field list above going stale: if the structs
+        // still differ, a counter was added to FabricStats without a
+        // matching check! — fail loudly instead of reporting equality.
+        if self != other {
+            return Some("field not covered by FabricStats::diff — update the check! list".into());
+        }
+        None
+    }
 }
 
 #[cfg(test)]
@@ -146,6 +192,18 @@ mod tests {
     fn in_network_fraction_zero_when_no_ops() {
         let s = FabricStats::default();
         assert_eq!(s.in_network_fraction(), 0.0);
+    }
+
+    #[test]
+    fn diff_names_the_first_differing_field() {
+        let mut a = FabricStats::default();
+        let b = FabricStats::default();
+        assert_eq!(a.diff(&b), None);
+        a.flit_hops = 7;
+        let d = a.diff(&b).expect("must differ");
+        assert!(d.contains("flit_hops") && d.contains('7'), "{d}");
+        // diff is consistent with PartialEq.
+        assert_ne!(a, b);
     }
 
     #[test]

@@ -33,6 +33,32 @@
 //! reusable `Machine`; deadlocks, unsupported (arch, workload) pairs, and
 //! reference mismatches surface as [`machine::ExecError`] values.
 //!
+//! ## Simulator performance: `StepMode`
+//!
+//! The cycle-accurate fabric schedules per-cycle work in one of two modes
+//! ([`config::StepMode`], selected per [`ArchConfig`]):
+//!
+//! - **`ActiveSet`** (default) — event-driven stepping over wake-lists:
+//!   each cycle visits only PEs/routers with pending work, so host cost
+//!   tracks fabric *activity* instead of mesh size. This is the mode to use
+//!   everywhere; on the irregular workloads the paper targets (where most
+//!   PEs idle most cycles, §3) it is several times faster than the dense
+//!   scan, and the gap grows with the mesh (Fig 17 sweeps).
+//! - **`DenseOracle`** — the original scan of all `width × height`
+//!   components every cycle. Keep it for differential testing and for
+//!   debugging scheduler suspicions: both modes are **bit-identical** in
+//!   outputs, cycle counts, and [`fabric::stats::FabricStats`], a property
+//!   enforced by the randomized equivalence suite in
+//!   `tests/step_equivalence.rs` (case count tunable via the
+//!   `NEXUS_PROP_CASES` env var) and auditable on any fabric via
+//!   [`fabric::NexusFabric::check_wake_consistency`] /
+//!   [`fabric::NexusFabric::state_digest`].
+//!
+//! `cargo bench --bench hotpath` reports the dense-vs-active wall-clock
+//! ratio on a sparse workload at 16×16 as a `BENCH_STEP_MODE.json` line;
+//! `cargo run --release -- validate --dense-oracle` re-validates the whole
+//! suite under the oracle scheduler.
+//!
 //! ## Module map
 //!
 //! The crate contains, from the bottom up:

@@ -13,7 +13,7 @@
 use super::{Compiled, ExecError, Execution};
 use crate::baselines::RunResult;
 use crate::compiler::Program;
-use crate::config::{ArchConfig, ArchKind};
+use crate::config::{ArchConfig, ArchKind, StepMode};
 use crate::fabric::NexusFabric;
 use crate::power::EnergyEvents;
 use crate::workloads::{Built, Spec, Tiles};
@@ -144,6 +144,22 @@ impl FabricArch {
     /// The architectural configuration this fabric models.
     pub fn cfg(&self) -> &ArchConfig {
         &self.cfg
+    }
+
+    /// Override the simulator scheduling mode ([`StepMode`]) for this
+    /// backend. Host-side only — executions are bit-identical across modes;
+    /// `DenseOracle` exists for differential testing and debugging. Drops
+    /// any fabric built under the previous mode so the next execution
+    /// constructs one with the requested scheduler.
+    pub fn with_step_mode(mut self, mode: StepMode) -> Self {
+        self.cfg.step_mode = mode;
+        self.fabric = None;
+        self
+    }
+
+    /// The simulator scheduling mode this backend's fabric will use.
+    pub fn step_mode(&self) -> StepMode {
+        self.cfg.step_mode
     }
 }
 

@@ -23,6 +23,13 @@
 //! Batch fan-out lives in [`MachinePool`]: one worker pool with per-worker
 //! reusable `Machine`s replaces the coordinator's four hand-rolled
 //! `Mutex` + `thread::scope` patterns.
+//!
+//! The simulator scheduling mode threads through here untouched: a machine
+//! built from an [`ArchConfig`] with
+//! [`StepMode::DenseOracle`](crate::config::StepMode) runs the dense
+//! reference scan, while the default `ActiveSet` mode runs the event-driven
+//! scheduler — bit-identical results either way (see
+//! `tests/step_equivalence.rs`), so sweeps can mix modes freely.
 
 mod backend;
 mod error;
@@ -466,6 +473,20 @@ mod tests {
         assert_eq!(m.cached_programs(), 2, "distinct data must compile twice");
         assert_eq!(e1.outputs, a.spmv(&x1));
         assert_eq!(e2.outputs, a.spmv(&x2));
+    }
+
+    #[test]
+    fn step_modes_are_bit_identical_through_machine() {
+        use crate::config::StepMode;
+        let specs = suite(1);
+        let spmv = specs.iter().find(|s| s.name().starts_with("SpMV")).unwrap();
+        let mut active = Machine::new(ArchConfig::nexus());
+        let mut dense = Machine::new(ArchConfig::nexus().with_step_mode(StepMode::DenseOracle));
+        let ea = active.run(spmv).unwrap();
+        let ed = dense.run(spmv).unwrap();
+        assert_eq!(ea.outputs, ed.outputs);
+        assert_eq!(ea.cycles(), ed.cycles());
+        assert_eq!(ea.stats, ed.stats, "full counter set must match");
     }
 
     #[test]

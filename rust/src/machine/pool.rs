@@ -138,4 +138,32 @@ mod tests {
         let out = MachinePool::with_workers(32).run_batch(&[1, 2, 3], |&j| j + 1);
         assert_eq!(out, vec![2, 3, 4]);
     }
+
+    #[test]
+    fn batch_results_are_identical_across_step_modes() {
+        // The step mode threads through pooled sweeps untouched: a batch of
+        // per-worker Machines in ActiveSet mode and one in DenseOracle mode
+        // must produce identical cycle counts and outputs job for job.
+        use crate::config::{ArchConfig, StepMode};
+        use crate::machine::Machine;
+        let specs: Vec<_> = crate::workloads::suite(1)
+            .into_iter()
+            .filter(|s| {
+                let n = s.name();
+                n.starts_with("SpMV") || n == "BFS"
+            })
+            .collect();
+        assert!(!specs.is_empty());
+        let run_all = |mode: StepMode| {
+            MachinePool::with_workers(2).run_batch_with(
+                || Machine::new(ArchConfig::nexus().with_step_mode(mode)),
+                &specs,
+                |m, spec| {
+                    let e = m.run(spec).expect("pooled run");
+                    (e.outputs.clone(), e.cycles())
+                },
+            )
+        };
+        assert_eq!(run_all(StepMode::ActiveSet), run_all(StepMode::DenseOracle));
+    }
 }

@@ -4,7 +4,7 @@
 //! the cycle-accurate simulator, validates the fabric against software
 //! references and the XLA golden models, and exposes one-off runs.
 
-use nexus::config::ArchConfig;
+use nexus::config::{ArchConfig, StepMode};
 use nexus::coordinator::{self, report};
 
 fn main() {
@@ -16,9 +16,17 @@ fn main() {
         .and_then(|i| args.get(i + 1))
         .and_then(|s| s.parse().ok())
         .unwrap_or(1u64);
+    // Simulator scheduling mode: active-set by default; `--dense-oracle`
+    // re-runs on the dense reference scan (bit-identical, slower) to
+    // cross-check the event-driven scheduler on real workloads.
+    let step_mode = if args.iter().any(|a| a == "--dense-oracle") {
+        StepMode::DenseOracle
+    } else {
+        StepMode::ActiveSet
+    };
 
     match cmd {
-        "validate" => validate(seed),
+        "validate" => validate(seed, step_mode),
         "golden" => golden(seed),
         "fig10" => with_matrix(seed, report::fig10),
         "fig11" => with_matrix(seed, report::fig11),
@@ -40,7 +48,7 @@ fn main() {
         "table2" => with_matrix(seed, report::table2),
         "compile-time" => compile_time(seed),
         "all" => {
-            validate(seed);
+            validate(seed, step_mode);
             let m = coordinator::run_matrix(seed);
             println!("{}", report::fig10(&m));
             println!("{}", report::fig11(&m));
@@ -58,10 +66,12 @@ fn main() {
         _ => {
             println!(
                 "nexus — Nexus Machine reproduction CLI\n\n\
-                 usage: nexus <command> [--seed N]\n\n\
+                 usage: nexus <command> [--seed N] [--dense-oracle]\n\n\
                  commands:\n\
                  \x20 validate      run the 13-workload suite on Nexus/TIA/TIA-Valiant,\n\
                  \x20               checking fabric outputs against software references\n\
+                 \x20               (--dense-oracle: use the dense reference scheduler\n\
+                 \x20               instead of active-set stepping; results are identical)\n\
                  \x20 golden        additionally check against the XLA/PJRT golden models\n\
                  \x20               (requires `make artifacts`)\n\
                  \x20 fig10..fig17  regenerate the corresponding paper figure\n\
@@ -80,16 +90,21 @@ fn with_matrix(seed: u64, f: impl Fn(&coordinator::Matrix) -> String) {
     println!("{}", f(&m));
 }
 
-fn validate(seed: u64) {
+fn validate(seed: u64, step_mode: StepMode) {
     for cfg in [
         ArchConfig::nexus(),
         ArchConfig::tia(),
         ArchConfig::tia_valiant(),
     ] {
+        let cfg = cfg.with_step_mode(step_mode);
         let kind = cfg.kind.name();
         match coordinator::validate_suite(&cfg, seed) {
             Ok(rows) => {
-                println!("[{kind}] all {} workloads validated:", rows.len());
+                println!(
+                    "[{kind}] all {} workloads validated ({} stepping):",
+                    rows.len(),
+                    step_mode.name()
+                );
                 for (name, cycles) in rows {
                     println!("  {name:<14} {cycles:>9} cycles  OK");
                 }

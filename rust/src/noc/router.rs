@@ -330,4 +330,99 @@ mod tests {
         r.pop_port(PORT_E);
         assert_eq!(r.occupancy(), 0);
     }
+
+    #[test]
+    fn flitbuf_matches_fifo_model_under_random_ops() {
+        // Differential property: FlitBuf (fixed-capacity ring) must behave
+        // exactly like an unbounded FIFO truncated at `depth`, with
+        // push/pop conservation and free()+len()==depth at every step.
+        use crate::util::prop::{ensure, forall};
+        forall(256, |rng| {
+            let depth = 1 + rng.below_usize(MAX_DEPTH);
+            let mut buf = FlitBuf::new(depth);
+            let mut model: std::collections::VecDeque<u64> = Default::default();
+            let mut next_id = 1u64;
+            let (mut pushed, mut popped) = (0u64, 0u64);
+            for _ in 0..64 {
+                if rng.chance(0.55) {
+                    let ok = buf.push(msg(next_id));
+                    let model_ok = model.len() < depth;
+                    ensure(ok == model_ok, || {
+                        format!("push acceptance diverged at len {}", model.len())
+                    })?;
+                    if ok {
+                        model.push_back(next_id);
+                        pushed += 1;
+                    }
+                    next_id += 1;
+                } else {
+                    let got = buf.pop().map(|m| m.id);
+                    let want = model.pop_front();
+                    ensure(got == want, || format!("pop diverged: {got:?} vs {want:?}"))?;
+                    if got.is_some() {
+                        popped += 1;
+                    }
+                }
+                ensure(buf.len() == model.len(), || {
+                    format!("len {} vs model {}", buf.len(), model.len())
+                })?;
+                ensure(buf.free() + buf.len() == depth, || {
+                    format!("free {} + len {} != depth {depth}", buf.free(), buf.len())
+                })?;
+                ensure(
+                    buf.head_msg().map(|m| m.id) == model.front().copied(),
+                    || "head diverged from model".to_string(),
+                )?;
+                ensure(buf.iter().map(|m| m.id).eq(model.iter().copied()), || {
+                    "iteration order diverged from model".to_string()
+                })?;
+            }
+            ensure(pushed - popped == model.len() as u64, || {
+                format!("conservation: pushed {pushed} - popped {popped} != held {}", model.len())
+            })
+        });
+    }
+
+    #[test]
+    fn on_off_hysteresis_invariants_under_random_traffic() {
+        // At every post-commit boundary: free <= T_off forces OFF, free >=
+        // T_on forces ON, and inside the hysteresis band the advertised
+        // state must hold its previous value (the memory that damps
+        // ON/OFF oscillation, §3.3.2).
+        use crate::util::prop::{ensure, forall};
+        forall(256, |rng| {
+            let depth = 2 + rng.below_usize(MAX_DEPTH - 1);
+            let t_off = 1;
+            let t_on = 2 + rng.below_usize(depth - 1); // 2..=depth
+            let mut r = Router::new(depth, t_off, t_on);
+            let port = rng.below_usize(NUM_PORTS);
+            let mut id = 1u64;
+            let mut prev_on = true; // fresh routers advertise ON
+            for _ in 0..48 {
+                if rng.chance(0.6) && r.staging[port].is_none() && r.inputs[port].free() >= 1 {
+                    r.stage(port, msg(id));
+                    id += 1;
+                }
+                if rng.chance(0.4) {
+                    r.pop_port(port);
+                }
+                r.commit();
+                let free = r.inputs[port].free();
+                let on = r.on_state[port];
+                if free <= t_off {
+                    ensure(!on, || format!("free={free} <= T_off={t_off} must be OFF"))?;
+                } else if free >= t_on {
+                    ensure(on, || format!("free={free} >= T_on={t_on} must be ON"))?;
+                } else {
+                    ensure(on == prev_on, || {
+                        format!("free={free} in band ({t_off},{t_on}): state must hold")
+                    })?;
+                }
+                // can_accept never contradicts the advertised state.
+                ensure(!r.can_accept(port) || on, || "accepting while OFF".to_string())?;
+                prev_on = on;
+            }
+            Ok(())
+        });
+    }
 }

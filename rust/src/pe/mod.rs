@@ -166,6 +166,25 @@ impl Pe {
         self.held_messages() == 0 && self.am_window.is_empty()
     }
 
+    /// True when the PE's per-cycle phase would do *anything*: it holds a
+    /// message anywhere, has static AMs windowed on-chip, or its trigger
+    /// scheduler is still cooling down. This is the wake-list residency
+    /// predicate for [`crate::config::StepMode::ActiveSet`] stepping — a PE
+    /// for which this is false is skipped by the scheduler, which is safe
+    /// exactly because `fabric::NexusFabric::pe_phase` is a no-op on it.
+    /// Unlike [`Pe::is_idle`], a `trigger_wait` cooldown counts as work
+    /// (the countdown must tick every cycle).
+    #[inline]
+    pub fn has_pending_work(&self) -> bool {
+        self.local_redo.is_some()
+            || self.inbox.is_some()
+            || self.trigger_wait > 0
+            || self.stream.is_some()
+            || !self.stream_q.is_empty()
+            || !self.outq.is_empty()
+            || !self.am_window.is_empty()
+    }
+
     /// SRAM words used by the loaded image (capacity checks, Fig 16).
     pub fn sram_words_used(&self) -> usize {
         self.dmem.len() + self.stream_mem.len() * STREAM_ELEM_WORDS
@@ -180,8 +199,24 @@ mod tests {
     fn fresh_pe_is_idle() {
         let pe = Pe::new(512);
         assert!(pe.is_idle());
+        assert!(!pe.has_pending_work());
         assert_eq!(pe.held_messages(), 0);
         assert_eq!(pe.dmem.len(), 512);
+    }
+
+    #[test]
+    fn trigger_cooldown_is_pending_work_but_not_held() {
+        // A PE whose only activity is the TIA trigger-scheduler countdown is
+        // "idle" for the termination detector but must stay on the wake-list
+        // so the countdown ticks.
+        let mut pe = Pe::new(16);
+        pe.trigger_wait = 2;
+        assert!(pe.is_idle());
+        assert!(pe.has_pending_work());
+        pe.trigger_wait = 0;
+        assert!(!pe.has_pending_work());
+        pe.am_window.push_back(Message::new());
+        assert!(pe.has_pending_work());
     }
 
     #[test]

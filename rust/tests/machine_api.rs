@@ -54,6 +54,41 @@ fn deadlock_surfaces_as_err_through_machine_execute() {
     }
 }
 
+/// A deliberately undersized fabric (minimum-legal router buffers plus a
+/// tight cycle budget) must surface `ExecError::Deadlock` whose report
+/// *names the culprits*: which PEs/routers still hold work, and in which
+/// queues. This is the contract sweep harnesses rely on to triage hangs
+/// without re-running under a debugger.
+#[test]
+fn deadlock_report_names_culprit_components() {
+    let specs = suite(1);
+    let spmv = specs.iter().find(|s| s.name().starts_with("SpMV")).unwrap();
+    let mut cfg = ArchConfig::nexus();
+    cfg.router_buf_depth = 2; // minimum legal depth: maximum backpressure
+    cfg.max_cycles = 40; // far too few cycles to drain
+    let mut m = Machine::new(cfg);
+    match m.run(spmv) {
+        Err(ExecError::Deadlock(e)) => {
+            assert!(
+                !e.culprits.is_empty(),
+                "timeout must name the components holding work"
+            );
+            assert!(
+                e.culprits
+                    .iter()
+                    .all(|c| c.starts_with("PE") || c.starts_with('R')),
+                "culprits must be PE/router entries: {:?}",
+                e.culprits
+            );
+            // The human-readable Display carries the culprit list too.
+            let shown = e.to_string();
+            assert!(shown.contains("culprit"), "{shown}");
+        }
+        Ok(_) => panic!("40 cycles cannot drain SpMV"),
+        Err(e) => panic!("expected Deadlock, got {e}"),
+    }
+}
+
 /// `NexusFabric::reset()` reuse must be bit-identical to a freshly
 /// constructed fabric: run two suite workloads back to back on one machine,
 /// then compare outputs *and* full stats against fresh single-use machines.

@@ -1,0 +1,466 @@
+//! Property-based differential suite: active-set stepping vs the dense
+//! oracle (`StepMode::DenseOracle`) must be **bit-identical** — same
+//! outputs, same cycle counts, same `FabricStats` field by field — across
+//! random meshes, buffer depths, AXI/AM-queue parameters, and workload
+//! densities, for every (exec policy × routing policy) combination.
+//!
+//! Each combination runs `NEXUS_PROP_CASES` randomized cases (default 200;
+//! the CI release job raises it). On a mismatch the harness reports the
+//! failing case seed (via `util::prop::forall_seeded`), the first differing
+//! stats field (via `FabricStats::diff`), and the **first diverging cycle**
+//! found by re-running both schedulers in lockstep and comparing
+//! `NexusFabric::state_digest()` at every cycle boundary.
+
+use nexus::am::Message;
+use nexus::compiler::{Program, ProgramBuilder};
+use nexus::config::{ArchConfig, ExecPolicy, RoutingPolicy, StepMode};
+use nexus::fabric::stats::FabricStats;
+use nexus::fabric::{DeadlockError, NexusFabric};
+use nexus::isa::{ConfigEntry, Opcode};
+use nexus::pe::{StreamElem, StreamMode};
+use nexus::util::prop::{ensure, forall_seeded};
+use nexus::util::SplitMix64;
+
+/// Randomized case count per policy combination (env-tunable so CI can run
+/// a deeper sweep: `NEXUS_PROP_CASES=1000 cargo test --release`).
+fn prop_cases() -> usize {
+    std::env::var("NEXUS_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200)
+}
+
+/// Random architectural configuration for one case: mesh dims, router
+/// buffer depth, On/Off thresholds, AM-queue window, AXI bandwidth, idle
+/// tree latency, and the PRNG seed all vary; the policies are pinned by the
+/// calling test (one combination per test).
+fn random_cfg(rng: &mut SplitMix64, exec: ExecPolicy, routing: RoutingPolicy) -> ArchConfig {
+    const DIMS: [(usize, usize); 10] = [
+        (2, 2),
+        (2, 3),
+        (3, 2),
+        (3, 3),
+        (4, 2),
+        (2, 4),
+        (4, 4),
+        (5, 3),
+        (3, 5),
+        (4, 3),
+    ];
+    let (width, height) = DIMS[rng.below_usize(DIMS.len())];
+    let router_buf_depth = 2 + rng.below_usize(3); // 2..=4
+    let t_on = 2 + rng.below_usize(router_buf_depth - 1); // 2..=depth
+    let mut cfg = ArchConfig::nexus();
+    cfg.width = width;
+    cfg.height = height;
+    cfg.router_buf_depth = router_buf_depth;
+    cfg.t_off = 1;
+    cfg.t_on = t_on;
+    cfg.am_queue_entries = [1, 2, 4, 8, 114][rng.below_usize(5)];
+    cfg.axi_bytes_per_cycle = [1.0, 2.0, 8.0][rng.below_usize(3)];
+    cfg.idle_tree_latency = [0, 2, 4][rng.below_usize(3)];
+    cfg.exec = exec;
+    cfg.routing = routing;
+    cfg.trigger_latency = rng.below(2);
+    cfg.max_cycles = 20_000;
+    cfg.seed = rng.next_u64();
+    cfg.validate().expect("random config must be valid");
+    cfg
+}
+
+/// Shared configuration-memory table for the random programs. Entry roles:
+///
+/// - 0: `Add -> 1` (res addr) — relaxation hop: dist + weight …
+/// - 1: `AccMin -> 0` (res addr) — … min-updated at the owner, re-triggering
+///   entry 0 on improvement (the SSSP cascade shape);
+/// - 2: `Mul -> 3` — MAC chains: Load feeds a Mul …
+/// - 3: `Accum -> 3` (res addr) — … accumulated at the output owner;
+/// - 4: `Add -> 3` (res addr) — stream fan-out: emitted Adds then Accum.
+fn install_config(b: &mut ProgramBuilder) {
+    assert_eq!(b.config(ConfigEntry::new(Opcode::Add, 1).res_addr()), 0);
+    assert_eq!(b.config(ConfigEntry::new(Opcode::AccMin, 0).res_addr()), 1);
+    assert_eq!(b.config(ConfigEntry::new(Opcode::Mul, 3)), 2);
+    assert_eq!(b.config(ConfigEntry::new(Opcode::Accum, 3).res_addr()), 3);
+    assert_eq!(b.config(ConfigEntry::new(Opcode::Add, 3).res_addr()), 4);
+}
+
+/// A random small workload mixing the fabric's message shapes: remote
+/// stores, Load→Mul→Accum MAC chains, `Stream` fan-outs, and AccMin
+/// relaxation cascades. Density (message count per shape) is randomized per
+/// case; every written word is registered as a program output so the
+/// differential comparison covers all of them.
+fn random_program(rng: &mut SplitMix64, cfg: &ArchConfig) -> Program {
+    let n = cfg.num_pes();
+    let mut b = ProgramBuilder::new("prop-case", cfg);
+    install_config(&mut b);
+
+    let n_store = rng.below_usize(11);
+    let n_mac = rng.below_usize(9);
+    let n_fanout = rng.below_usize(3);
+    let relax_chain = if rng.chance(0.6) { 2 + rng.below_usize(3) } else { 0 };
+
+    // Remote stores: one static AM, terminal at the destination.
+    for i in 0..n_store {
+        let src = rng.below_usize(n);
+        let dst = rng.below_usize(n);
+        let addr = b.alloc(dst, 1);
+        let mut am = Message::new();
+        am.opcode = Opcode::Store;
+        am.op1 = (1 + i) as u16;
+        am.result = addr;
+        am.res_is_addr = true;
+        am.push_dest(dst as u8);
+        b.static_am(src, am);
+        b.output(dst, addr);
+    }
+
+    // MAC chains: Load x at the data owner, Mul anywhere (en-route
+    // eligible), Accum at the output owner.
+    for _ in 0..n_mac {
+        let src = rng.below_usize(n);
+        let data_pe = rng.below_usize(n);
+        let out_pe = rng.below_usize(n);
+        let x = 1 + rng.below(5) as i16;
+        let w = 1 + rng.below(5) as u16;
+        let init = rng.below(10) as i16;
+        let xa = b.place(data_pe, &[x]);
+        let ya = b.place(out_pe, &[init]);
+        let mut am = Message::new();
+        am.opcode = Opcode::Load; // op2 <- dmem[op2] at data_pe
+        am.n_pc = 2; // -> Mul -> Accum
+        am.op1 = w;
+        am.op2 = xa;
+        am.op2_is_addr = true;
+        am.result = ya;
+        am.res_is_addr = true;
+        am.push_dest(data_pe as u8);
+        am.push_dest(out_pe as u8);
+        b.static_am(src, am);
+        b.output(out_pe, ya);
+    }
+
+    // Stream fan-outs: one Stream trigger emits per-destination Adds that
+    // accumulate into scattered target words.
+    for _ in 0..n_fanout {
+        let src = rng.below_usize(n);
+        let k = 1 + rng.below_usize(4);
+        let mut elems = Vec::new();
+        let mut outs = Vec::new();
+        for _ in 0..k {
+            let pe = rng.below_usize(n);
+            let addr = b.place(pe, &[rng.below(20) as i16]);
+            outs.push((pe, addr));
+            elems.push(StreamElem {
+                value: 1 + rng.below(9) as i16,
+                aux: addr,
+                dest_pe: pe as u8,
+                mode: StreamMode::PerDest,
+            });
+        }
+        let base = b.stream(src, &elems);
+        let key = b.keyed_trigger(src, base, k as u16);
+        let mut am = Message::new();
+        am.opcode = Opcode::Stream;
+        am.n_pc = 4; // emitted AMs: Add -> Accum
+        am.op1 = rng.below(6) as u16;
+        am.op2 = key;
+        am.op2_is_addr = true;
+        am.push_dest(src as u8);
+        b.static_am(src, am);
+        for &(pe, addr) in &outs {
+            b.output(pe, addr);
+        }
+    }
+
+    // AccMin relaxation chain: node i's trigger streams an edge to node
+    // i+1 (positive weights, so the cascade terminates), seeded by one
+    // AccMin AM at node 0 — the BFS/SSSP shape with conditional
+    // re-emission.
+    if relax_chain > 0 {
+        let nodes: Vec<usize> = (0..relax_chain).map(|_| rng.below_usize(n)).collect();
+        let dists: Vec<u16> = nodes
+            .iter()
+            .map(|&pe| b.place(pe, &[nexus::tensor::graph::INF]))
+            .collect();
+        for i in 0..relax_chain - 1 {
+            let e = StreamElem {
+                value: 1 + rng.below(7) as i16,
+                aux: dists[i + 1],
+                dest_pe: nodes[i + 1] as u8,
+                mode: StreamMode::PerDest,
+            };
+            let base = b.stream(nodes[i], &[e]);
+            b.trigger(nodes[i], dists[i], base, 1);
+        }
+        let mut am = Message::new();
+        am.opcode = Opcode::AccMin;
+        am.n_pc = 0; // on improvement: emitted Add -> AccMin (cascade)
+        am.op1 = rng.below(4) as u16;
+        am.result = dists[0];
+        am.res_is_addr = true;
+        am.push_dest(nodes[0] as u8);
+        b.static_am(rng.below_usize(n), am);
+        for (i, &pe) in nodes.iter().enumerate() {
+            b.output(pe, dists[i]);
+        }
+    }
+
+    // Never emit a completely empty program (the comparison would be
+    // vacuous): fall back to a single store.
+    if n_store + n_mac + n_fanout == 0 && relax_chain == 0 {
+        let addr = b.alloc(n - 1, 1);
+        let mut am = Message::new();
+        am.opcode = Opcode::Store;
+        am.op1 = 42;
+        am.result = addr;
+        am.res_is_addr = true;
+        am.push_dest((n - 1) as u8);
+        b.static_am(0, am);
+        b.output(n - 1, addr);
+    }
+    b.build()
+}
+
+/// Outcome of one scheduler run, normalized for comparison.
+type RunOutcome = Result<(Vec<i16>, u64, FabricStats), DeadlockError>;
+
+fn run_mode(prog: &Program, cfg: &ArchConfig, mode: StepMode) -> (RunOutcome, NexusFabric) {
+    let mut f = NexusFabric::new(cfg.clone().with_step_mode(mode));
+    let r = f
+        .run_program(prog)
+        .map(|out| (out, f.cycles(), f.stats.clone()));
+    (r, f)
+}
+
+/// Lockstep both schedulers over `prog` and return the first cycle whose
+/// post-commit state digests differ (the mismatch diagnosis in failure
+/// reports).
+fn first_diverging_cycle(prog: &Program, cfg: &ArchConfig) -> Option<u64> {
+    let mut fa = NexusFabric::new(cfg.clone().with_step_mode(StepMode::ActiveSet));
+    let mut fd = NexusFabric::new(cfg.clone().with_step_mode(StepMode::DenseOracle));
+    fa.begin_program(prog);
+    fd.begin_program(prog);
+    if fa.state_digest() != fd.state_digest() {
+        return Some(fa.cycles());
+    }
+    for _ in 0..cfg.max_cycles + cfg.idle_tree_latency + 2 {
+        fa.step();
+        fd.step();
+        if fa.state_digest() != fd.state_digest() {
+            return Some(fa.cycles());
+        }
+        if fa.is_drained() && fd.is_drained() {
+            return None;
+        }
+    }
+    None
+}
+
+/// The core property: active-set and dense-oracle stepping are
+/// indistinguishable — identical outputs, cycle counts, and stats on
+/// success, identical timeout reports on deadlock.
+fn equivalent(rng: &mut SplitMix64, exec: ExecPolicy, routing: RoutingPolicy) -> Result<(), String> {
+    let cfg = random_cfg(rng, exec, routing);
+    let prog = random_program(rng, &cfg);
+    let (ra, fa) = run_mode(&prog, &cfg, StepMode::ActiveSet);
+    let (rd, _fd) = run_mode(&prog, &cfg, StepMode::DenseOracle);
+    let diverged = || {
+        first_diverging_cycle(&prog, &cfg)
+            .map(|c| format!("first diverging cycle: {c}"))
+            .unwrap_or_else(|| "no digest divergence found (writeback-only?)".into())
+    };
+    match (ra, rd) {
+        (Ok((out_a, cyc_a, st_a)), Ok((out_d, cyc_d, st_d))) => {
+            ensure(out_a == out_d, || {
+                format!("outputs diverged ({}); active {out_a:?} vs dense {out_d:?}", diverged())
+            })?;
+            ensure(cyc_a == cyc_d, || {
+                format!("cycles diverged: active {cyc_a} vs dense {cyc_d}; {}", diverged())
+            })?;
+            if let Some(field) = st_a.diff(&st_d) {
+                return Err(format!("stats diverged on {field}; {}", diverged()));
+            }
+            // The active-set run must also pass conservation + wake audits.
+            fa.check_conservation()
+                .map_err(|e| format!("active-set conservation: {e}"))
+        }
+        (Err(ea), Err(ed)) => {
+            ensure(ea.cycle == ed.cycle && ea.in_flight == ed.in_flight, || {
+                format!(
+                    "timeout reports diverged: active (cycle {}, {} in flight) vs \
+                     dense (cycle {}, {} in flight); {}",
+                    ea.cycle,
+                    ea.in_flight,
+                    ed.cycle,
+                    ed.in_flight,
+                    diverged()
+                )
+            })?;
+            ensure(ea.culprits == ed.culprits, || {
+                format!("culprit lists diverged: {:?} vs {:?}", ea.culprits, ed.culprits)
+            })
+        }
+        (Ok((_, cyc, _)), Err(e)) => Err(format!(
+            "active-set drained at cycle {cyc} but dense deadlocked at {}; {}",
+            e.cycle,
+            diverged()
+        )),
+        (Err(e), Ok((_, cyc, _))) => Err(format!(
+            "dense drained at cycle {cyc} but active-set deadlocked at {}; {}",
+            e.cycle,
+            diverged()
+        )),
+    }
+}
+
+macro_rules! equivalence_test {
+    ($name:ident, $seed:expr, $exec:expr, $routing:expr) => {
+        #[test]
+        fn $name() {
+            forall_seeded($seed, prop_cases(), &mut |rng| {
+                equivalent(rng, $exec, $routing)
+            });
+        }
+    };
+}
+
+equivalence_test!(
+    equivalence_enroute_turnmodel,
+    0xE1,
+    ExecPolicy::EnRoute,
+    RoutingPolicy::TurnModelAdaptive
+);
+equivalence_test!(equivalence_enroute_xy, 0xE2, ExecPolicy::EnRoute, RoutingPolicy::Xy);
+equivalence_test!(
+    equivalence_enroute_valiant,
+    0xE3,
+    ExecPolicy::EnRoute,
+    RoutingPolicy::Valiant
+);
+equivalence_test!(
+    equivalence_destonly_turnmodel,
+    0xD1,
+    ExecPolicy::DestinationOnly,
+    RoutingPolicy::TurnModelAdaptive
+);
+equivalence_test!(
+    equivalence_destonly_xy,
+    0xD2,
+    ExecPolicy::DestinationOnly,
+    RoutingPolicy::Xy
+);
+equivalence_test!(
+    equivalence_destonly_valiant,
+    0xD3,
+    ExecPolicy::DestinationOnly,
+    RoutingPolicy::Valiant
+);
+
+/// Lockstep variant: instead of only comparing end states, step both
+/// schedulers cycle by cycle and require equal state digests at *every*
+/// boundary, with the wake-list invariants holding throughout. Stronger
+/// (and much slower — a full-state digest per cycle per fabric), so it runs
+/// an eighth of the case budget.
+#[test]
+fn lockstep_digests_and_wake_invariants() {
+    let cases = (prop_cases() / 8).max(16);
+    forall_seeded(0x10C5, cases, &mut |rng| {
+        let exec = if rng.chance(0.5) { ExecPolicy::EnRoute } else { ExecPolicy::DestinationOnly };
+        let routing = [
+            RoutingPolicy::TurnModelAdaptive,
+            RoutingPolicy::Xy,
+            RoutingPolicy::Valiant,
+        ][rng.below_usize(3)];
+        let mut cfg = random_cfg(rng, exec, routing);
+        // Small data memories keep the per-cycle full-state digest cheap
+        // (the random programs use well under 128 words per PE).
+        cfg.dmem_words = 128;
+        let prog = random_program(rng, &cfg);
+        let mut fa = NexusFabric::new(cfg.clone().with_step_mode(StepMode::ActiveSet));
+        let mut fd = NexusFabric::new(cfg.clone().with_step_mode(StepMode::DenseOracle));
+        fa.begin_program(&prog);
+        fd.begin_program(&prog);
+        let budget = cfg.max_cycles + cfg.idle_tree_latency + 2;
+        for _ in 0..budget {
+            fa.step();
+            fd.step();
+            ensure(fa.state_digest() == fd.state_digest(), || {
+                format!("state digests diverged at cycle {}", fa.cycles())
+            })?;
+            fa.check_wake_consistency()
+                .map_err(|e| format!("active-set wake audit at cycle {}: {e}", fa.cycles()))?;
+            fd.check_wake_consistency()
+                .map_err(|e| format!("dense wake audit at cycle {}: {e}", fd.cycles()))?;
+            ensure(fa.is_drained() == fd.is_drained(), || {
+                format!("drain detectors disagreed at cycle {}", fa.cycles())
+            })?;
+            if fa.is_drained() {
+                return Ok(());
+            }
+        }
+        Err(format!("program did not drain within {budget} cycles"))
+    });
+}
+
+/// Regression (extends the PR-1 reset-determinism test to the active-set
+/// core): `reset()` followed by `run_program` is bit-identical to a fresh
+/// fabric *in both step modes*, on random programs.
+#[test]
+fn reset_is_bit_identical_in_both_modes() {
+    forall_seeded(0x5E5E, (prop_cases() / 4).max(25), &mut |rng| {
+        let cfg = random_cfg(rng, ExecPolicy::EnRoute, RoutingPolicy::TurnModelAdaptive);
+        let prog = random_program(rng, &cfg);
+        let dirty = random_program(rng, &cfg);
+        for mode in [StepMode::ActiveSet, StepMode::DenseOracle] {
+            let cfg = cfg.clone().with_step_mode(mode);
+            let mut fresh = NexusFabric::new(cfg.clone());
+            let out_fresh = fresh.run_program(&prog).map_err(|e| e.to_string())?;
+            let mut reused = NexusFabric::new(cfg);
+            let _ = reused.run_program(&dirty); // dirty the instance
+            reused.reset();
+            let out_reused = reused.run_program(&prog).map_err(|e| e.to_string())?;
+            ensure(out_fresh == out_reused, || {
+                format!("{mode:?}: outputs diverged after reset")
+            })?;
+            if let Some(field) = fresh.stats.diff(&reused.stats) {
+                return Err(format!("{mode:?}: stats diverged after reset on {field}"));
+            }
+            ensure(fresh.state_digest() == reused.state_digest(), || {
+                format!("{mode:?}: state digests diverged after reset")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+/// Full-suite equivalence on real workloads through the `Machine` session
+/// layer: cycle counts, outputs, and the complete stats block must agree on
+/// representative sparse / dense / graph kernels for each fabric variant.
+#[test]
+fn suite_workloads_equivalent_across_modes() {
+    use nexus::machine::Machine;
+    let specs = nexus::workloads::suite(1);
+    let picks: Vec<_> = specs
+        .iter()
+        .filter(|s| {
+            let n = s.name();
+            n.starts_with("SpMV") || n == "SpMSpM-S4" || n == "BFS" || n == "Conv"
+        })
+        .collect();
+    let names: Vec<String> = picks.iter().map(|s| s.name()).collect();
+    assert!(picks.len() >= 3, "suite changed shape: {names:?}");
+    for base in [ArchConfig::nexus(), ArchConfig::tia(), ArchConfig::tia_valiant()] {
+        let mut active = Machine::new(base.clone());
+        let mut dense = Machine::new(base.clone().with_step_mode(StepMode::DenseOracle));
+        for spec in &picks {
+            let ea = active.run(spec).expect("active-set run");
+            let ed = dense.run(spec).expect("dense-oracle run");
+            assert_eq!(ea.outputs, ed.outputs, "{} on {}", spec.name(), base.kind.name());
+            assert_eq!(ea.cycles(), ed.cycles(), "{} on {}", spec.name(), base.kind.name());
+            let (sa, sd) = (ea.stats.unwrap(), ed.stats.unwrap());
+            if let Some(field) = sa.diff(&sd) {
+                panic!("{} on {}: stats diverged on {field}", spec.name(), base.kind.name());
+            }
+        }
+    }
+}
