@@ -16,7 +16,8 @@ pub mod ablation;
 pub mod report;
 
 use crate::baselines::{roster, RunResult};
-use crate::config::ArchConfig;
+use crate::config::{ArchConfig, StepMode};
+use crate::dataset::{run_corpus, Corpus, RunOptions};
 use crate::machine::{Compiled, ExecError, Machine, MachinePool};
 use crate::workloads::suite;
 
@@ -125,6 +126,57 @@ pub fn validate_suite(cfg: &ArchConfig, seed: u64) -> Result<Vec<(String, u64)>,
     )
     .into_iter()
     .collect()
+}
+
+/// Render `nexus corpus list`: the registered scenarios (optionally
+/// filtered by glob) as an aligned table.
+pub fn corpus_list(filter: Option<&str>) -> String {
+    use std::fmt::Write as _;
+    let corpus = Corpus::builtin();
+    let scenarios = corpus.select(filter);
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<34} {:<10} {:<10} {:>5} {:>8}",
+        "scenario", "kernel", "source", "mesh", "density"
+    );
+    for sc in &scenarios {
+        let _ = writeln!(
+            s,
+            "{:<34} {:<10} {:<10} {:>5} {:>8.2}",
+            sc.name,
+            sc.kernel,
+            sc.source,
+            sc.mesh_name(),
+            sc.density
+        );
+    }
+    let _ = write!(
+        s,
+        "{} scenario(s){}",
+        scenarios.len(),
+        match filter {
+            Some(glob) => format!(" matching '{glob}' (of {})", corpus.len()),
+            None => String::new(),
+        }
+    );
+    s
+}
+
+/// Run `nexus corpus run`: execute the (filtered) corpus across the pool
+/// with bit-exact validation. Returns the per-scenario JSON lines (the
+/// `BENCH_CORPUS.json` artifact body) plus a success flag that is `false`
+/// if any scenario failed or no scenario matched.
+pub fn corpus_run(filter: Option<&str>, seed: u64, step_mode: StepMode) -> (String, bool) {
+    let corpus = Corpus::builtin();
+    let scenarios = corpus.select(filter);
+    if scenarios.is_empty() {
+        return (String::new(), false);
+    }
+    let runs = run_corpus(&scenarios, RunOptions { seed, step_mode });
+    let ok = runs.iter().all(|r| r.passed());
+    let lines: Vec<String> = runs.iter().map(|r| r.json_line()).collect();
+    (lines.join("\n"), ok)
 }
 
 /// Fig 16 data point: one (sparsity, SRAM size) cell of the bandwidth
@@ -260,6 +312,18 @@ mod tests {
         let sys = m.get(mm, "Systolic").unwrap().perf();
         let nexus = m.get(mm, "Nexus").unwrap().perf();
         assert!(sys > nexus, "systolic should win dense MatMul");
+    }
+
+    #[test]
+    fn corpus_cli_surfaces_work() {
+        let listing = corpus_list(Some("smoke/*"));
+        assert!(listing.contains("smoke/spmv-uniform-d30-4x4"), "{listing}");
+        let (lines, ok) = corpus_run(Some("smoke/spmv-*"), 1, StepMode::ActiveSet);
+        assert!(ok, "{lines}");
+        assert!(lines.lines().count() >= 2);
+        assert!(lines.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
+        let (empty, ok) = corpus_run(Some("no-such/*"), 1, StepMode::ActiveSet);
+        assert!(!ok && empty.is_empty(), "unmatched filter must fail");
     }
 
     #[test]

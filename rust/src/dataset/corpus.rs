@@ -1,0 +1,537 @@
+//! The scenario corpus: a named, enumerable, glob-filterable registry of
+//! (kernel × tensor source × sparsity regime × mesh size) execution
+//! scenarios the corpus runner sweeps.
+//!
+//! Scenario names are paths — `group/kernel-source-regime-mesh`, e.g.
+//! `matrix/spmv-hotspot-d10-8x8` — so shell-style globs select coherent
+//! slices: `smoke/*` (the CI smoke set), `*/spmv-*`, `graph/*-rmat-*`.
+//! Every scenario builds its [`Spec`] deterministically from a sweep seed
+//! (decorrelated per scenario by hashing the name), and exposes the same
+//! content fingerprint the [`crate::machine::Machine`] compile cache keys
+//! on, so repeated runs of one scenario inside a sweep recompile nothing.
+
+use crate::config::ArchConfig;
+use crate::machine::spec_fingerprint;
+use crate::tensor::gen::{self, SparsityRegime, RMAT_PROBS};
+use crate::tensor::Graph;
+use crate::util::SplitMix64;
+use crate::workloads::{binary_mask, Spec};
+
+/// Shell-style glob match supporting `*` (any run, possibly empty) and `?`
+/// (exactly one byte). Anchored at both ends, case-sensitive.
+pub fn glob_match(pattern: &str, text: &str) -> bool {
+    let p = pattern.as_bytes();
+    let t = text.as_bytes();
+    let (mut pi, mut ti) = (0usize, 0usize);
+    let mut star: Option<usize> = None;
+    let mut star_t = 0usize;
+    while ti < t.len() {
+        if pi < p.len() && (p[pi] == b'?' || p[pi] == t[ti]) {
+            pi += 1;
+            ti += 1;
+        } else if pi < p.len() && p[pi] == b'*' {
+            star = Some(pi);
+            star_t = ti;
+            pi += 1;
+        } else if let Some(sp) = star {
+            // Backtrack: let the last `*` swallow one more byte.
+            pi = sp + 1;
+            star_t += 1;
+            ti = star_t;
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == b'*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+/// One registered execution scenario: a deterministic workload builder plus
+/// the fabric geometry it targets.
+pub struct Scenario {
+    /// Path-style unique name, e.g. `matrix/spmv-rmat-d10-8x8`.
+    pub name: String,
+    /// Kernel family (`spmv`, `spmspm`, `spadd`, `sddmm`, `bfs`, ...).
+    pub kernel: &'static str,
+    /// Tensor source (`uniform`, `rmat`, `hotspot`, `banded`, `blockdiag`,
+    /// `chunglu`, `contact`).
+    pub source: &'static str,
+    /// Mesh (width, height) the scenario runs on.
+    pub mesh: (usize, usize),
+    /// Nominal density of the primary tensor (1.0 for dense-ish graphs'
+    /// placeholder; informational only).
+    pub density: f64,
+    build: Box<dyn Fn(&mut SplitMix64) -> Spec + Send + Sync>,
+}
+
+impl Scenario {
+    fn new(
+        name: impl Into<String>,
+        kernel: &'static str,
+        source: &'static str,
+        mesh: (usize, usize),
+        density: f64,
+        build: impl Fn(&mut SplitMix64) -> Spec + Send + Sync + 'static,
+    ) -> Self {
+        Scenario {
+            name: name.into(),
+            kernel,
+            source,
+            mesh,
+            density,
+            build: Box::new(build),
+        }
+    }
+
+    /// Build the workload instance for a sweep seed. Deterministic: equal
+    /// seeds give bit-identical tensors; different scenarios draw from
+    /// decorrelated streams (the seed is XORed with a hash of the name).
+    pub fn spec(&self, seed: u64) -> Spec {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in self.name.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        let mut rng = SplitMix64::new(seed ^ h);
+        (self.build)(&mut rng)
+    }
+
+    /// Content fingerprint of the scenario's tensors at this seed — the
+    /// same value the [`crate::machine::Machine`] compile cache keys on.
+    pub fn fingerprint(&self, seed: u64) -> u64 {
+        spec_fingerprint(&self.spec(seed))
+    }
+
+    /// Fabric configuration this scenario targets (Nexus at the scenario's
+    /// mesh; callers layer step mode / variant overrides on top).
+    pub fn config(&self) -> ArchConfig {
+        ArchConfig::nexus().with_array(self.mesh.0, self.mesh.1)
+    }
+
+    /// `"WxH"` display form of the mesh.
+    pub fn mesh_name(&self) -> String {
+        format!("{}x{}", self.mesh.0, self.mesh.1)
+    }
+}
+
+/// An ordered collection of uniquely named scenarios.
+pub struct Corpus {
+    scenarios: Vec<Scenario>,
+}
+
+impl Corpus {
+    /// The built-in corpus: smoke set (tiny tensors, 4x4 mesh — the CI
+    /// gate), the matrix sweep (8x8, every irregular generator against the
+    /// uniform baseline at matched densities), and the graph sweep (8x8,
+    /// R-MAT vs contact-network inputs).
+    pub fn builtin() -> Self {
+        let mut c = Corpus {
+            scenarios: Vec::new(),
+        };
+        c.register_smoke();
+        c.register_matrix();
+        c.register_graph();
+        c
+    }
+
+    fn add(&mut self, s: Scenario) {
+        debug_assert!(
+            self.scenarios.iter().all(|x| x.name != s.name),
+            "duplicate scenario name {}",
+            s.name
+        );
+        self.scenarios.push(s);
+    }
+
+    fn register_smoke(&mut self) {
+        let mesh = (4, 4);
+        self.add(Scenario::new(
+            "smoke/spmv-uniform-d30-4x4",
+            "spmv",
+            "uniform",
+            mesh,
+            0.30,
+            |rng| {
+                let a = gen::random_csr(rng, 24, 24, 0.30);
+                let x = gen::random_vec(rng, 24, 3);
+                Spec::Spmv { a, x }
+            },
+        ));
+        self.add(Scenario::new(
+            "smoke/spmv-hotspot-d30-4x4",
+            "spmv",
+            "hotspot",
+            mesh,
+            0.30,
+            |rng| {
+                let a = gen::hotspot_csr(rng, 24, 24, 0.30, 2, 0.8);
+                let x = gen::random_vec(rng, 24, 3);
+                Spec::Spmv { a, x }
+            },
+        ));
+        self.add(Scenario::new(
+            "smoke/spmspm-rmat-s4-4x4",
+            "spmspm",
+            "rmat",
+            mesh,
+            0.25,
+            |rng| {
+                let a = gen::rmat_csr(rng, 24, 24, 144, RMAT_PROBS);
+                let b = gen::random_csr(rng, 24, 24, 0.25);
+                Spec::SpMSpM {
+                    a,
+                    b,
+                    regime: SparsityRegime::S4,
+                }
+            },
+        ));
+        self.add(Scenario::new(
+            "smoke/spadd-banded-4x4",
+            "spadd",
+            "banded",
+            mesh,
+            // In-band rate 0.6 over a 7-wide band of a 24x24 matrix:
+            // ~0.17 overall.
+            0.17,
+            |rng| {
+                let a = gen::banded_csr(rng, 24, 3, 0.6);
+                let b = gen::banded_csr(rng, 24, 3, 0.6);
+                Spec::SpAdd { a, b }
+            },
+        ));
+        self.add(Scenario::new(
+            "smoke/bfs-rmat-4x4",
+            "bfs",
+            "rmat",
+            mesh,
+            1.0,
+            |rng| {
+                let g = gen::rmat_graph(rng, 48, 180, RMAT_PROBS);
+                Spec::Bfs { g, src: 0 }
+            },
+        ));
+        self.add(Scenario::new(
+            "smoke/pagerank-contact-4x4",
+            "pagerank",
+            "contact",
+            mesh,
+            1.0,
+            |rng| {
+                let g = Graph::synthetic_contact(rng, 48, 200);
+                Spec::PageRank { g, iters: 2 }
+            },
+        ));
+    }
+
+    fn register_matrix(&mut self) {
+        let mesh = (8, 8);
+        let n = 64usize;
+        // SpMV across every source at two density bands. The d10 pair
+        // (uniform vs hotspot/rmat) is the load-imbalance acceptance gate.
+        for &(tag, density) in &[("d10", 0.10), ("d30", 0.30)] {
+            let target = ((n * n) as f64 * density).round() as usize;
+            self.add(Scenario::new(
+                format!("matrix/spmv-uniform-{tag}-8x8"),
+                "spmv",
+                "uniform",
+                mesh,
+                density,
+                move |rng| {
+                    let a = gen::random_csr(rng, n, n, density);
+                    let x = gen::random_vec(rng, n, 3);
+                    Spec::Spmv { a, x }
+                },
+            ));
+            self.add(Scenario::new(
+                format!("matrix/spmv-rmat-{tag}-8x8"),
+                "spmv",
+                "rmat",
+                mesh,
+                density,
+                move |rng| {
+                    let a = gen::rmat_csr(rng, n, n, target, RMAT_PROBS);
+                    let x = gen::random_vec(rng, n, 3);
+                    Spec::Spmv { a, x }
+                },
+            ));
+            self.add(Scenario::new(
+                format!("matrix/spmv-hotspot-{tag}-8x8"),
+                "spmv",
+                "hotspot",
+                mesh,
+                density,
+                move |rng| {
+                    let a = gen::hotspot_csr(rng, n, n, density, 4, 0.85);
+                    let x = gen::random_vec(rng, n, 3);
+                    Spec::Spmv { a, x }
+                },
+            ));
+            self.add(Scenario::new(
+                format!("matrix/spmv-chunglu-{tag}-8x8"),
+                "spmv",
+                "chunglu",
+                mesh,
+                density,
+                move |rng| {
+                    let a = gen::chung_lu_csr(rng, n, n, density, 1.0);
+                    let x = gen::random_vec(rng, n, 3);
+                    Spec::Spmv { a, x }
+                },
+            ));
+            self.add(Scenario::new(
+                format!("matrix/spmv-banded-{tag}-8x8"),
+                "spmv",
+                "banded",
+                mesh,
+                density,
+                move |rng| {
+                    // Band wide enough that the in-band Bernoulli rate that
+                    // reproduces the nominal *overall* density stays < 1.
+                    let halfband = if density < 0.2 { 8 } else { 16 };
+                    let band_cells: usize = (0..n)
+                        .map(|r| (r + halfband).min(n - 1) + 1 - r.saturating_sub(halfband))
+                        .sum();
+                    let p = ((n * n) as f64 * density / band_cells as f64).min(1.0);
+                    let a = gen::banded_csr(rng, n, halfband, p);
+                    let x = gen::random_vec(rng, n, 3);
+                    Spec::Spmv { a, x }
+                },
+            ));
+            self.add(Scenario::new(
+                format!("matrix/spmv-blockdiag-{tag}-8x8"),
+                "spmv",
+                "blockdiag",
+                mesh,
+                density,
+                move |rng| {
+                    // `block` divides n, so the blocks hold n*block cells;
+                    // the in-block rate reproduces the nominal density.
+                    let block = if density < 0.2 { 8 } else { 32 };
+                    let p = (n as f64 * density / block as f64).min(1.0);
+                    let a = gen::block_diag_csr(rng, n, block, p);
+                    let x = gen::random_vec(rng, n, 3);
+                    Spec::Spmv { a, x }
+                },
+            ));
+        }
+        // SpMSpM: the paper's S1/S4 regimes, standard skewed pair vs R-MAT.
+        for regime in [SparsityRegime::S1, SparsityRegime::S4] {
+            let rname = regime.name().to_ascii_lowercase();
+            self.add(Scenario::new(
+                format!("matrix/spmspm-uniform-{rname}-8x8"),
+                "spmspm",
+                "uniform",
+                mesh,
+                1.0 - regime.sparsities().0,
+                move |rng| {
+                    let (a, b) = gen::spmspm_pair(rng, 48, regime);
+                    Spec::SpMSpM { a, b, regime }
+                },
+            ));
+            self.add(Scenario::new(
+                format!("matrix/spmspm-rmat-{rname}-8x8"),
+                "spmspm",
+                "rmat",
+                mesh,
+                1.0 - regime.sparsities().0,
+                move |rng| {
+                    let (sa, sb) = regime.sparsities();
+                    let nnz_a = ((48 * 48) as f64 * (1.0 - sa)).round() as usize;
+                    let a = gen::rmat_csr(rng, 48, 48, nnz_a, RMAT_PROBS);
+                    let b = gen::random_csr(rng, 48, 48, 1.0 - sb);
+                    Spec::SpMSpM { a, b, regime }
+                },
+            ));
+        }
+        self.add(Scenario::new(
+            "matrix/spadd-blockdiag-8x8",
+            "spadd",
+            "blockdiag",
+            mesh,
+            // In-block rate 0.5 over 8-blocks of a 64x64 matrix: ~0.06
+            // overall (the B operand uses 16-blocks at 0.3, ~0.075).
+            0.06,
+            move |rng| {
+                let a = gen::block_diag_csr(rng, n, 8, 0.5);
+                let b = gen::block_diag_csr(rng, n, 16, 0.3);
+                Spec::SpAdd { a, b }
+            },
+        ));
+        self.add(Scenario::new(
+            "matrix/sddmm-hotspot-d30-8x8",
+            "sddmm",
+            "hotspot",
+            mesh,
+            0.30,
+            |rng| {
+                // Binary hotspot mask: structure from the hotspot generator,
+                // values forced to 1 (SDDMM masks are patterns).
+                let pat = gen::hotspot_csr(rng, 32, 32, 0.30, 2, 0.8);
+                let mut trip = Vec::with_capacity(pat.nnz());
+                for r in 0..pat.rows {
+                    for (c, _) in pat.row(r) {
+                        trip.push((r, c, 1i16));
+                    }
+                }
+                let mask = crate::tensor::Csr::from_triplets(32, 32, trip);
+                let a = gen::random_dense(rng, 32, 16, 3);
+                let b = gen::random_dense(rng, 16, 32, 3);
+                Spec::Sddmm { mask, a, b }
+            },
+        ));
+        self.add(Scenario::new(
+            "matrix/sddmm-uniform-d30-8x8",
+            "sddmm",
+            "uniform",
+            mesh,
+            0.30,
+            |rng| {
+                let mask = binary_mask(rng, 32, 32, 0.30);
+                let a = gen::random_dense(rng, 32, 16, 3);
+                let b = gen::random_dense(rng, 16, 32, 3);
+                Spec::Sddmm { mask, a, b }
+            },
+        ));
+    }
+
+    fn register_graph(&mut self) {
+        fn graph_spec(kernel: &str, g: Graph) -> Spec {
+            match kernel {
+                "bfs" => Spec::Bfs { g, src: 0 },
+                "sssp" => Spec::Sssp { g, src: 0 },
+                _ => Spec::PageRank { g, iters: 2 },
+            }
+        }
+        let mesh = (8, 8);
+        for kernel in ["bfs", "sssp", "pagerank"] {
+            self.add(Scenario::new(
+                format!("graph/{kernel}-rmat-8x8"),
+                kernel,
+                "rmat",
+                mesh,
+                1.0,
+                move |rng| graph_spec(kernel, gen::rmat_graph(rng, 96, 420, RMAT_PROBS)),
+            ));
+            self.add(Scenario::new(
+                format!("graph/{kernel}-contact-8x8"),
+                kernel,
+                "contact",
+                mesh,
+                1.0,
+                move |rng| graph_spec(kernel, Graph::synthetic_contact(rng, 96, 420)),
+            ));
+        }
+    }
+
+    /// All scenarios, registration order.
+    pub fn scenarios(&self) -> &[Scenario] {
+        &self.scenarios
+    }
+
+    /// Scenarios whose name matches the glob, registration order.
+    pub fn filter(&self, pattern: &str) -> Vec<&Scenario> {
+        self.scenarios
+            .iter()
+            .filter(|s| glob_match(pattern, &s.name))
+            .collect()
+    }
+
+    /// [`Corpus::filter`] with an optional glob: every scenario when `None`
+    /// (the CLI's `--filter` dispatch).
+    pub fn select(&self, filter: Option<&str>) -> Vec<&Scenario> {
+        match filter {
+            Some(glob) => self.filter(glob),
+            None => self.scenarios.iter().collect(),
+        }
+    }
+
+    /// Look up one scenario by exact name.
+    pub fn find(&self, name: &str) -> Option<&Scenario> {
+        self.scenarios.iter().find(|s| s.name == name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.scenarios.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scenarios.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glob_match_basics() {
+        assert!(glob_match("smoke/*", "smoke/spmv-uniform-d30-4x4"));
+        assert!(!glob_match("smoke/*", "matrix/spmv-uniform-d10-8x8"));
+        assert!(glob_match("*/spmv-*", "matrix/spmv-rmat-d10-8x8"));
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("", ""));
+        assert!(!glob_match("", "x"));
+        assert!(glob_match("a?c", "abc"));
+        assert!(!glob_match("a?c", "ac"));
+        assert!(glob_match("*-8x8", "graph/bfs-rmat-8x8"));
+        assert!(!glob_match("*-4x4", "graph/bfs-rmat-8x8"));
+        assert!(glob_match("a*b*c", "aXbYc"));
+        assert!(!glob_match("a*b*c", "aXcYb"));
+    }
+
+    #[test]
+    fn builtin_corpus_is_well_formed() {
+        let c = Corpus::builtin();
+        assert!(c.len() >= 24, "corpus too small: {}", c.len());
+        // Unique names.
+        let mut names: Vec<&str> = c.scenarios().iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), c.len(), "duplicate scenario names");
+        // Every group populated; smoke stays small enough for CI.
+        let smoke = c.filter("smoke/*");
+        assert!(!smoke.is_empty() && smoke.len() <= 8);
+        assert!(!c.filter("matrix/*").is_empty());
+        assert!(!c.filter("graph/*").is_empty());
+        // Valid meshes.
+        for s in c.scenarios() {
+            s.config().validate().expect("scenario config");
+        }
+    }
+
+    #[test]
+    fn scenario_specs_are_deterministic_and_decorrelated() {
+        let c = Corpus::builtin();
+        let a = c.find("smoke/spmv-uniform-d30-4x4").unwrap();
+        assert_eq!(a.fingerprint(7), a.fingerprint(7), "same seed, same data");
+        assert_ne!(a.fingerprint(7), a.fingerprint(8), "seed must matter");
+        let b = c.find("smoke/spmv-hotspot-d30-4x4").unwrap();
+        assert_ne!(
+            a.fingerprint(7),
+            b.fingerprint(7),
+            "scenarios must draw decorrelated streams"
+        );
+    }
+
+    #[test]
+    fn hotspot_scenario_is_actually_irregular() {
+        let c = Corpus::builtin();
+        let hot = c.find("matrix/spmv-hotspot-d10-8x8").unwrap().spec(1);
+        let uni = c.find("matrix/spmv-uniform-d10-8x8").unwrap().spec(1);
+        let (hot_a, uni_a) = match (&hot, &uni) {
+            (Spec::Spmv { a: h, .. }, Spec::Spmv { a: u, .. }) => (h.clone(), u.clone()),
+            _ => panic!("spmv scenarios must build Spmv specs"),
+        };
+        // Matched density band...
+        let dh = hot_a.density();
+        let du = uni_a.density();
+        assert!((dh - du).abs() < 0.05, "densities diverged: {dh} vs {du}");
+        // ...but very different row-occupancy tails.
+        let cv = |m: &crate::tensor::Csr| {
+            let v: Vec<f64> = (0..m.rows).map(|r| m.row_nnz(r) as f64).collect();
+            crate::util::cv(&v)
+        };
+        assert!(cv(&hot_a) > 2.0 * cv(&uni_a), "hotspot rows not skewed");
+    }
+}

@@ -1,0 +1,42 @@
+//! Dataset ingestion + the scenario corpus: getting *real* and
+//! *adversarial* irregular tensors into the machine, at sweep scale.
+//!
+//! The paper's argument is about irregular workloads, but i.i.d. Bernoulli
+//! tensors (`tensor/gen.rs`'s `random_csr`) are the most regular kind of
+//! "sparse" there is — every row has the same expected occupancy, so load
+//! imbalance barely exists. This module closes that gap with three layers:
+//!
+//! - **Loaders** ([`mtx`], [`edgelist`]) — Matrix Market coordinate files
+//!   (integer/real/pattern; general + symmetric with expansion) into
+//!   [`crate::tensor::Csr`], and whitespace edge lists into
+//!   [`crate::tensor::Graph`], both with typed per-line parse errors and
+//!   value quantization into the INT16-exact band the bit-exact golden
+//!   comparison needs.
+//! - **Scenario registry** ([`corpus`]) — a [`Corpus`] of named
+//!   [`Scenario`]s (kernel × tensor source × sparsity regime × mesh),
+//!   enumerable, glob-filterable (`smoke/*`, `*/spmv-*`), and
+//!   content-fingerprinted with the same key the
+//!   [`crate::machine::Machine`] compile cache uses.
+//! - **Runner** ([`runner`]) — sweeps a scenario set over the
+//!   [`crate::machine::MachinePool`], validates every output, and emits one
+//!   JSON line per scenario including the per-PE load-imbalance metrics
+//!   (`op_cv`, `op_max_mean`) that make the irregularity story measurable.
+//!
+//! The irregular *generators* (R-MAT, Chung-Lu, banded, block-diagonal,
+//! hotspot rows) live with the other generators in
+//! [`crate::tensor::gen`]. The CLI surface is `nexus corpus list|run`.
+
+pub mod corpus;
+pub mod edgelist;
+pub mod mtx;
+pub mod runner;
+
+pub use corpus::{glob_match, Corpus, Scenario};
+pub use edgelist::{
+    read_edge_list, read_edge_list_file, write_edge_list, EdgeListError, EdgeListOptions,
+};
+pub use mtx::{
+    quantize_value, read_mtx, read_mtx_file, write_mtx, write_mtx_file, MtxError, MtxField,
+    MtxSymmetry,
+};
+pub use runner::{cross_check_corpus, run_corpus, RunOptions, ScenarioMetrics, ScenarioRun};

@@ -1,0 +1,530 @@
+//! Matrix Market (`.mtx`) coordinate-format reader/writer.
+//!
+//! Supports the subset real sparse-matrix collections (SuiteSparse, the
+//! matrices DCRA and DPU-v2 evaluate on) actually use for our kernels:
+//! `matrix coordinate {integer|real|pattern} {general|symmetric}`.
+//! Symmetric inputs are expanded (off-diagonal entries mirrored) so the
+//! result is always a fully materialized [`Csr`]. Array format, complex
+//! fields, and skew-symmetric/hermitian symmetry are rejected with typed
+//! [`MtxError::Unsupported`] errors rather than misparsed.
+//!
+//! ## Value quantization
+//!
+//! The fabric validates every run bit-for-bit against wrapping-INT16
+//! software references, which stays exact only while operand magnitudes are
+//! small (see `tensor/gen.rs`). Ingested values are therefore quantized by
+//! [`quantize_value`]: nonzero inputs map to the nearest integer in
+//! `[-4, 4]` with the sign preserved and never to zero (`|v| < 0.5` rounds
+//! to ±1); exact zeros are dropped from the sparse structure. The structure
+//! — which is what irregularity is about — survives untouched.
+
+use crate::tensor::{Csr, CsrError, DupPolicy};
+use std::collections::HashSet;
+use std::fmt;
+use std::path::Path;
+
+/// Value field of a Matrix Market header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MtxField {
+    Integer,
+    Real,
+    /// Structure only; every stored entry gets value 1.
+    Pattern,
+}
+
+/// Symmetry of a Matrix Market header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MtxSymmetry {
+    General,
+    /// One triangle stored; off-diagonal entries are mirrored on read.
+    Symmetric,
+}
+
+/// Typed `.mtx` parse failure. Line numbers are 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MtxError {
+    /// The file does not start with a `%%MatrixMarket` banner.
+    MissingHeader,
+    /// The banner exists but a token is not valid Matrix Market.
+    BadHeader { line: usize, what: String },
+    /// Valid Matrix Market, but a variant this loader does not handle
+    /// (array format, complex field, skew-symmetric/hermitian symmetry).
+    Unsupported { line: usize, what: String },
+    /// A size or entry line failed to parse.
+    Malformed { line: usize, what: String },
+    /// An entry was structurally invalid (out of bounds, duplicate).
+    Entry { line: usize, source: CsrError },
+    /// Fewer/more entry lines than the size line declared.
+    WrongEntryCount { expected: usize, got: usize },
+    /// Underlying I/O failure (file variants only).
+    Io(String),
+}
+
+impl fmt::Display for MtxError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MtxError::MissingHeader => {
+                write!(f, "missing %%MatrixMarket header on line 1")
+            }
+            MtxError::BadHeader { line, what } => {
+                write!(f, "line {line}: bad MatrixMarket header: {what}")
+            }
+            MtxError::Unsupported { line, what } => {
+                write!(f, "line {line}: unsupported MatrixMarket variant: {what}")
+            }
+            MtxError::Malformed { line, what } => write!(f, "line {line}: {what}"),
+            MtxError::Entry { line, source } => write!(f, "line {line}: {source}"),
+            MtxError::WrongEntryCount { expected, got } => {
+                write!(f, "size line declared {expected} entries, file has {got}")
+            }
+            MtxError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for MtxError {}
+
+/// Quantize a source value into the INT16-exact band the golden comparison
+/// needs: nearest integer in `[-4, 4]`, sign preserved, nonzero inputs
+/// never collapse to zero; exact zeros stay zero (and are dropped from the
+/// sparse structure by the loaders).
+pub fn quantize_value(v: f64) -> i16 {
+    if v == 0.0 {
+        return 0;
+    }
+    let q = v.abs().round().clamp(1.0, 4.0) as i16;
+    if v < 0.0 {
+        -q
+    } else {
+        q
+    }
+}
+
+/// Parsed header of a `.mtx` file.
+struct Header {
+    field: MtxField,
+    symmetry: MtxSymmetry,
+}
+
+fn parse_header(line: &str) -> Result<Header, MtxError> {
+    if !line.to_ascii_lowercase().starts_with("%%matrixmarket") {
+        return Err(MtxError::MissingHeader);
+    }
+    let toks: Vec<String> = line
+        .split_whitespace()
+        .map(|t| t.to_ascii_lowercase())
+        .collect();
+    if toks.len() != 5 {
+        return Err(MtxError::BadHeader {
+            line: 1,
+            what: format!("expected 5 header tokens, found {}", toks.len()),
+        });
+    }
+    if toks[1] != "matrix" {
+        return Err(MtxError::Unsupported {
+            line: 1,
+            what: format!("object '{}' (only 'matrix')", toks[1]),
+        });
+    }
+    match toks[2].as_str() {
+        "coordinate" => {}
+        "array" => {
+            return Err(MtxError::Unsupported {
+                line: 1,
+                what: "'array' format (only 'coordinate')".into(),
+            })
+        }
+        other => {
+            return Err(MtxError::BadHeader {
+                line: 1,
+                what: format!("format '{other}'"),
+            })
+        }
+    }
+    let field = match toks[3].as_str() {
+        "integer" => MtxField::Integer,
+        "real" => MtxField::Real,
+        "pattern" => MtxField::Pattern,
+        "complex" => {
+            return Err(MtxError::Unsupported {
+                line: 1,
+                what: "'complex' field".into(),
+            })
+        }
+        other => {
+            return Err(MtxError::BadHeader {
+                line: 1,
+                what: format!("field '{other}'"),
+            })
+        }
+    };
+    let symmetry = match toks[4].as_str() {
+        "general" => MtxSymmetry::General,
+        "symmetric" => MtxSymmetry::Symmetric,
+        "skew-symmetric" | "hermitian" => {
+            return Err(MtxError::Unsupported {
+                line: 1,
+                what: format!("'{}' symmetry", toks[4]),
+            })
+        }
+        other => {
+            return Err(MtxError::BadHeader {
+                line: 1,
+                what: format!("symmetry '{other}'"),
+            })
+        }
+    };
+    Ok(Header { field, symmetry })
+}
+
+/// Sanity caps on header-declared sizes, so a corrupt size line yields a
+/// typed error instead of an enormous allocation (the construction path
+/// allocates per-row state eagerly). Far beyond anything the fabric can
+/// ever tile.
+const MAX_DIM: usize = 1 << 20;
+const MAX_NNZ: usize = 1 << 26;
+
+/// Parse one 1-based index token.
+fn parse_index(tok: &str, line: usize, what: &str) -> Result<usize, MtxError> {
+    let v: usize = tok.parse().map_err(|_| MtxError::Malformed {
+        line,
+        what: format!("{what} '{tok}' is not an unsigned integer"),
+    })?;
+    if v == 0 {
+        return Err(MtxError::Malformed {
+            line,
+            what: format!("{what} is 0 (Matrix Market indices are 1-based)"),
+        });
+    }
+    Ok(v)
+}
+
+/// Read a Matrix Market coordinate matrix from text into a quantized
+/// [`Csr`]. See the module docs for the accepted subset and quantization
+/// rules.
+pub fn read_mtx(text: &str) -> Result<Csr, MtxError> {
+    let mut lines = text.lines().enumerate();
+    let header = match lines.next() {
+        Some((_, first)) => parse_header(first)?,
+        None => return Err(MtxError::MissingHeader),
+    };
+    // Size line: first non-comment, non-blank line after the banner.
+    let mut size: Option<(usize, usize, usize)> = None;
+    let mut size_line = 0usize;
+    for (i, raw) in &mut lines {
+        let line_no = i + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('%') {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks.len() != 3 {
+            return Err(MtxError::Malformed {
+                line: line_no,
+                what: format!("size line needs 'rows cols nnz', found {} tokens", toks.len()),
+            });
+        }
+        let rows = parse_index(toks[0], line_no, "row count")?;
+        let cols = parse_index(toks[1], line_no, "col count")?;
+        let nnz: usize = toks[2].parse().map_err(|_| MtxError::Malformed {
+            line: line_no,
+            what: format!("entry count '{}' is not an unsigned integer", toks[2]),
+        })?;
+        if rows > MAX_DIM || cols > MAX_DIM || nnz > MAX_NNZ {
+            return Err(MtxError::Unsupported {
+                line: line_no,
+                what: format!(
+                    "matrix size {rows}x{cols} with {nnz} entries exceeds the \
+                     supported bounds ({MAX_DIM}x{MAX_DIM}, {MAX_NNZ} entries)"
+                ),
+            });
+        }
+        if nnz > rows.saturating_mul(cols) {
+            return Err(MtxError::Malformed {
+                line: line_no,
+                what: format!("entry count {nnz} exceeds rows*cols = {}", rows * cols),
+            });
+        }
+        size = Some((rows, cols, nnz));
+        size_line = line_no;
+        break;
+    }
+    let (rows, cols, declared) = size.ok_or_else(|| MtxError::Malformed {
+        line: size_line.max(1),
+        what: "missing size line".into(),
+    })?;
+
+    let expected_tokens = match header.field {
+        MtxField::Pattern => 2,
+        _ => 3,
+    };
+    // Capacity is a hint only: cap it so a corrupt (but in-bounds) declared
+    // count cannot force a giant up-front allocation before any entry parses.
+    let cap = (declared * 2).min(1 << 22);
+    let mut seen: HashSet<(usize, usize)> = HashSet::with_capacity(cap);
+    let mut trip: Vec<(usize, usize, i16)> = Vec::with_capacity(cap);
+    let mut got = 0usize;
+    for (i, raw) in lines {
+        let line_no = i + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('%') {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks.len() != expected_tokens {
+            return Err(MtxError::Malformed {
+                line: line_no,
+                what: format!(
+                    "entry needs {expected_tokens} tokens for this field, found {}",
+                    toks.len()
+                ),
+            });
+        }
+        got += 1;
+        let r = parse_index(toks[0], line_no, "row index")? - 1;
+        let c = parse_index(toks[1], line_no, "col index")? - 1;
+        if r >= rows || c >= cols {
+            return Err(MtxError::Entry {
+                line: line_no,
+                source: CsrError::OutOfBounds {
+                    row: r,
+                    col: c,
+                    rows,
+                    cols,
+                },
+            });
+        }
+        let v = match header.field {
+            MtxField::Pattern => 1i16,
+            MtxField::Integer => {
+                let x: i64 = toks[2].parse().map_err(|_| MtxError::Malformed {
+                    line: line_no,
+                    what: format!("value '{}' is not an integer", toks[2]),
+                })?;
+                quantize_value(x as f64)
+            }
+            MtxField::Real => {
+                let x: f64 = toks[2].parse().map_err(|_| MtxError::Malformed {
+                    line: line_no,
+                    what: format!("value '{}' is not a number", toks[2]),
+                })?;
+                if !x.is_finite() {
+                    return Err(MtxError::Malformed {
+                        line: line_no,
+                        what: format!("value '{}' is not finite", toks[2]),
+                    });
+                }
+                quantize_value(x)
+            }
+        };
+        // Duplicate coordinates (including an explicit mirror of an already
+        // expanded symmetric entry) are malformed input, caught here so the
+        // error can name the offending line.
+        if !seen.insert((r, c)) {
+            return Err(MtxError::Entry {
+                line: line_no,
+                source: CsrError::Duplicate { row: r, col: c },
+            });
+        }
+        if v != 0 {
+            trip.push((r, c, v));
+        }
+        if header.symmetry == MtxSymmetry::Symmetric && r != c {
+            if !seen.insert((c, r)) {
+                return Err(MtxError::Entry {
+                    line: line_no,
+                    source: CsrError::Duplicate { row: c, col: r },
+                });
+            }
+            if v != 0 {
+                trip.push((c, r, v));
+            }
+        }
+    }
+    if got != declared {
+        return Err(MtxError::WrongEntryCount {
+            expected: declared,
+            got,
+        });
+    }
+    // The duplicate set above already guarantees uniqueness; Reject is a
+    // belt-and-suspenders audit that construction stays consistent.
+    Csr::try_from_triplets(rows, cols, trip, DupPolicy::Reject)
+        .map_err(|source| MtxError::Entry { line: 0, source })
+}
+
+/// Write a [`Csr`] as `matrix coordinate integer general` text. Values in
+/// `[-4, 4]` (everything the in-repo generators produce) round-trip
+/// bit-identically through [`read_mtx`].
+pub fn write_mtx(m: &Csr) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(64 + 16 * m.nnz());
+    s.push_str("%%MatrixMarket matrix coordinate integer general\n");
+    let _ = writeln!(s, "{} {} {}", m.rows, m.cols, m.nnz());
+    for r in 0..m.rows {
+        for (c, v) in m.row(r) {
+            let _ = writeln!(s, "{} {} {}", r + 1, c + 1, v);
+        }
+    }
+    s
+}
+
+/// [`read_mtx`] from a file path.
+pub fn read_mtx_file(path: impl AsRef<Path>) -> Result<Csr, MtxError> {
+    let text = std::fs::read_to_string(path).map_err(|e| MtxError::Io(e.to_string()))?;
+    read_mtx(&text)
+}
+
+/// [`write_mtx`] to a file path.
+pub fn write_mtx_file(path: impl AsRef<Path>, m: &Csr) -> Result<(), MtxError> {
+    std::fs::write(path, write_mtx(m)).map_err(|e| MtxError::Io(e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_value_rules() {
+        assert_eq!(quantize_value(0.0), 0);
+        assert_eq!(quantize_value(0.4), 1);
+        assert_eq!(quantize_value(-0.001), -1);
+        assert_eq!(quantize_value(2.5), 3);
+        assert_eq!(quantize_value(-3.7), -4);
+        assert_eq!(quantize_value(9000.0), 4);
+        assert_eq!(quantize_value(-123.0), -4);
+    }
+
+    #[test]
+    fn reads_general_integer() {
+        let text = "%%MatrixMarket matrix coordinate integer general\n\
+                    % a comment\n\
+                    3 4 3\n\
+                    1 1 2\n\
+                    2 3 -1\n\
+                    3 4 4\n";
+        let m = read_mtx(text).unwrap();
+        assert_eq!((m.rows, m.cols, m.nnz()), (3, 4, 3));
+        assert_eq!(m.to_dense().get(0, 0), 2);
+        assert_eq!(m.to_dense().get(1, 2), -1);
+        assert_eq!(m.to_dense().get(2, 3), 4);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn symmetric_expands_off_diagonal() {
+        let text = "%%MatrixMarket matrix coordinate integer symmetric\n\
+                    3 3 3\n\
+                    1 1 1\n\
+                    2 1 2\n\
+                    3 2 3\n";
+        let m = read_mtx(text).unwrap();
+        assert_eq!(m.nnz(), 5, "two off-diagonal entries mirror");
+        let d = m.to_dense();
+        assert_eq!(d.get(1, 0), 2);
+        assert_eq!(d.get(0, 1), 2);
+        assert_eq!(d.get(2, 1), 3);
+        assert_eq!(d.get(1, 2), 3);
+        assert_eq!(d.get(0, 0), 1);
+    }
+
+    #[test]
+    fn pattern_entries_become_one() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n\
+                    2 2 2\n\
+                    1 2\n\
+                    2 1\n";
+        let m = read_mtx(text).unwrap();
+        assert!(m.values.iter().all(|&v| v == 1));
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn real_values_quantize_and_zeros_drop() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    2 2 3\n\
+                    1 1 0.25\n\
+                    1 2 -7.9\n\
+                    2 2 0.0\n";
+        let m = read_mtx(text).unwrap();
+        assert_eq!(m.nnz(), 2, "explicit zero dropped");
+        assert_eq!(m.to_dense().get(0, 0), 1);
+        assert_eq!(m.to_dense().get(0, 1), -4);
+    }
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let mut rng = crate::util::SplitMix64::new(21);
+        let m = crate::tensor::gen::random_csr(&mut rng, 9, 7, 0.35);
+        let back = read_mtx(&write_mtx(&m)).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn error_cases_are_typed() {
+        assert_eq!(read_mtx(""), Err(MtxError::MissingHeader));
+        assert_eq!(read_mtx("1 1 1\n"), Err(MtxError::MissingHeader));
+        assert!(matches!(
+            read_mtx("%%MatrixMarket matrix array real general\n"),
+            Err(MtxError::Unsupported { .. })
+        ));
+        assert!(matches!(
+            read_mtx("%%MatrixMarket matrix coordinate complex general\n2 2 1\n1 1 1 0\n"),
+            Err(MtxError::Unsupported { .. })
+        ));
+        assert!(matches!(
+            read_mtx("%%MatrixMarket matrix coordinate integer general\nnot a size line\n"),
+            Err(MtxError::Malformed { line: 2, .. })
+        ));
+        // 0-based index.
+        assert!(matches!(
+            read_mtx("%%MatrixMarket matrix coordinate integer general\n2 2 1\n0 1 3\n"),
+            Err(MtxError::Malformed { line: 3, .. })
+        ));
+        // Out-of-bounds index.
+        assert!(matches!(
+            read_mtx("%%MatrixMarket matrix coordinate integer general\n2 2 1\n3 1 3\n"),
+            Err(MtxError::Entry {
+                line: 3,
+                source: CsrError::OutOfBounds { .. }
+            })
+        ));
+        // Duplicate coordinate.
+        assert!(matches!(
+            read_mtx("%%MatrixMarket matrix coordinate integer general\n2 2 2\n1 1 3\n1 1 2\n"),
+            Err(MtxError::Entry {
+                line: 4,
+                source: CsrError::Duplicate { row: 0, col: 0 }
+            })
+        ));
+        // Declared 2 entries, provided 1.
+        assert_eq!(
+            read_mtx("%%MatrixMarket matrix coordinate integer general\n2 2 2\n1 1 3\n"),
+            Err(MtxError::WrongEntryCount {
+                expected: 2,
+                got: 1
+            })
+        );
+        // Bad value token.
+        assert!(matches!(
+            read_mtx("%%MatrixMarket matrix coordinate integer general\n2 2 1\n1 1 x\n"),
+            Err(MtxError::Malformed { line: 3, .. })
+        ));
+        // Corrupt size line must be a typed error, not a huge allocation.
+        assert!(matches!(
+            read_mtx("%%MatrixMarket matrix coordinate integer general\n99999999999999 1 0\n"),
+            Err(MtxError::Unsupported { line: 2, .. })
+        ));
+        assert!(matches!(
+            read_mtx(
+                "%%MatrixMarket matrix coordinate integer general\n1 1 18446744073709551615\n"
+            ),
+            Err(MtxError::Unsupported { line: 2, .. })
+        ));
+        // Entry count larger than the matrix can hold.
+        assert!(matches!(
+            read_mtx("%%MatrixMarket matrix coordinate integer general\n2 2 5\n"),
+            Err(MtxError::Malformed { line: 2, .. })
+        ));
+    }
+}

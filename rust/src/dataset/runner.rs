@@ -1,0 +1,287 @@
+//! The corpus runner: execute a set of [`Scenario`]s across the
+//! [`MachinePool`], validate every output against the software reference,
+//! and emit one JSON line per scenario (cycles, utilization, congestion,
+//! and the per-PE load-imbalance metrics `op_cv` / `op_max_mean`).
+//!
+//! Workers key reusable [`Machine`]s by mesh geometry, so a sweep reuses
+//! fabric allocations and compile caches across every scenario sharing a
+//! mesh. Failures (deadlock, validation mismatch) do not abort the sweep:
+//! they surface as `"status":"error"` lines so a corpus regression names
+//! exactly which scenarios broke.
+
+use super::corpus::Scenario;
+use crate::config::StepMode;
+use crate::machine::{Machine, MachinePool};
+use std::collections::HashMap;
+
+/// Options for [`run_corpus`].
+#[derive(Debug, Clone, Copy)]
+pub struct RunOptions {
+    /// Sweep seed: every scenario derives its tensors from this.
+    pub seed: u64,
+    /// Simulator scheduling mode (results are bit-identical either way).
+    pub step_mode: StepMode,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions {
+            seed: 1,
+            step_mode: StepMode::ActiveSet,
+        }
+    }
+}
+
+/// Metrics of one successfully executed scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioMetrics {
+    pub cycles: u64,
+    pub work_ops: u64,
+    pub utilization: f64,
+    /// Mean blocked fraction over the five router port classes.
+    pub congestion: f64,
+    /// Coefficient of variation of per-PE busy cycles.
+    pub load_cv: f64,
+    /// Coefficient of variation of per-PE committed ops (work imbalance).
+    pub op_cv: f64,
+    /// Max/mean of per-PE committed ops.
+    pub op_max_mean: f64,
+    pub validated: bool,
+}
+
+/// Outcome of one scenario in a corpus sweep.
+#[derive(Debug, Clone)]
+pub struct ScenarioRun {
+    pub scenario: String,
+    pub kernel: &'static str,
+    pub source: &'static str,
+    pub mesh: String,
+    pub seed: u64,
+    /// Content fingerprint of the scenario's tensors (compile-cache key).
+    pub fingerprint: u64,
+    /// Metrics on success, rendered error on failure.
+    pub outcome: Result<ScenarioMetrics, String>,
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control bytes).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl ScenarioRun {
+    /// One machine-readable JSON line (the `BENCH_CORPUS.json` artifact
+    /// format; every value is a JSON number, string, or bool).
+    pub fn json_line(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::with_capacity(256);
+        let _ = write!(
+            s,
+            "{{\"scenario\":\"{}\",\"kernel\":\"{}\",\"source\":\"{}\",\"mesh\":\"{}\",\
+             \"seed\":{},\"fingerprint\":\"{:#018x}\"",
+            json_escape(&self.scenario),
+            json_escape(self.kernel),
+            json_escape(self.source),
+            json_escape(&self.mesh),
+            self.seed,
+            self.fingerprint,
+        );
+        match &self.outcome {
+            Ok(m) => {
+                let _ = write!(
+                    s,
+                    ",\"status\":\"ok\",\"cycles\":{},\"work_ops\":{},\
+                     \"utilization\":{:.4},\"congestion\":{:.4},\"load_cv\":{:.4},\
+                     \"op_cv\":{:.4},\"op_max_mean\":{:.4},\"validated\":{}}}",
+                    m.cycles,
+                    m.work_ops,
+                    m.utilization,
+                    m.congestion,
+                    m.load_cv,
+                    m.op_cv,
+                    m.op_max_mean,
+                    m.validated,
+                );
+            }
+            Err(e) => {
+                let _ = write!(s, ",\"status\":\"error\",\"error\":\"{}\"}}", json_escape(e));
+            }
+        }
+        s
+    }
+
+    /// True when the scenario executed and validated bit-exactly.
+    pub fn passed(&self) -> bool {
+        matches!(&self.outcome, Ok(m) if m.validated)
+    }
+}
+
+/// Execute scenarios across the pool, one reusable machine per mesh per
+/// worker. Results come back in scenario order.
+pub fn run_corpus(scenarios: &[&Scenario], opts: RunOptions) -> Vec<ScenarioRun> {
+    let pool = MachinePool::new();
+    pool.run_batch_with(
+        HashMap::<(usize, usize), Machine>::new,
+        scenarios,
+        |machines, sc| run_one(machines, sc, opts),
+    )
+}
+
+fn run_one(
+    machines: &mut HashMap<(usize, usize), Machine>,
+    sc: &Scenario,
+    opts: RunOptions,
+) -> ScenarioRun {
+    let m = machines
+        .entry(sc.mesh)
+        .or_insert_with(|| Machine::new(sc.config().with_step_mode(opts.step_mode)));
+    let spec = sc.spec(opts.seed);
+    let fingerprint = crate::machine::spec_fingerprint(&spec);
+    let outcome = match m.run(&spec) {
+        Ok(e) => {
+            let (load_cv, op_cv, op_max_mean) = match &e.stats {
+                Some(s) => (s.load_cv(), s.op_cv(), s.op_max_mean()),
+                None => (0.0, 0.0, 0.0),
+            };
+            let congestion =
+                e.result.congestion.iter().sum::<f64>() / e.result.congestion.len() as f64;
+            Ok(ScenarioMetrics {
+                cycles: e.result.cycles,
+                work_ops: e.result.work_ops,
+                utilization: e.result.utilization,
+                congestion,
+                load_cv,
+                op_cv,
+                op_max_mean,
+                validated: e.result.validated,
+            })
+        }
+        Err(err) => Err(err.to_string()),
+    };
+    ScenarioRun {
+        scenario: sc.name.clone(),
+        kernel: sc.kernel,
+        source: sc.source,
+        mesh: sc.mesh_name(),
+        seed: opts.seed,
+        fingerprint,
+        outcome,
+    }
+}
+
+/// `step_equivalence`-style cross-mode audit over scenarios: run each one
+/// under both [`StepMode`]s and require identical outputs, cycle counts,
+/// and the full [`crate::fabric::stats::FabricStats`] counter set. Returns
+/// the first divergence (scenario name plus the first differing counter)
+/// as `Err`.
+pub fn cross_check_corpus(scenarios: &[&Scenario], seed: u64) -> Result<(), String> {
+    let pool = MachinePool::new();
+    let results: Vec<Result<(), String>> = pool.run_batch(scenarios, |sc| {
+        let spec = sc.spec(seed);
+        let mut active = Machine::new(sc.config().with_step_mode(StepMode::ActiveSet));
+        let mut dense = Machine::new(sc.config().with_step_mode(StepMode::DenseOracle));
+        let ea = active
+            .run(&spec)
+            .map_err(|e| format!("{}: active-set failed: {e}", sc.name))?;
+        let ed = dense
+            .run(&spec)
+            .map_err(|e| format!("{}: dense-oracle failed: {e}", sc.name))?;
+        if ea.outputs != ed.outputs {
+            return Err(format!("{}: outputs diverge across step modes", sc.name));
+        }
+        if ea.cycles() != ed.cycles() {
+            return Err(format!(
+                "{}: cycles diverge: active {} vs dense {}",
+                sc.name,
+                ea.cycles(),
+                ed.cycles()
+            ));
+        }
+        match (&ea.stats, &ed.stats) {
+            (Some(sa), Some(sd)) => {
+                if let Some(diff) = sa.diff(sd) {
+                    return Err(format!("{}: stats diverge: {diff}", sc.name));
+                }
+            }
+            _ => return Err(format!("{}: missing fabric stats", sc.name)),
+        }
+        Ok(())
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::Corpus;
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("plain"), "plain");
+    }
+
+    #[test]
+    fn smoke_scenarios_run_validated_with_imbalance_metrics() {
+        let corpus = Corpus::builtin();
+        let smoke = corpus.filter("smoke/*");
+        assert!(!smoke.is_empty());
+        let runs = run_corpus(&smoke, RunOptions::default());
+        assert_eq!(runs.len(), smoke.len());
+        for run in &runs {
+            match &run.outcome {
+                Ok(m) => {
+                    assert!(m.validated, "{} not validated", run.scenario);
+                    assert!(m.cycles > 0);
+                    assert!(m.op_max_mean >= 1.0, "{}: max/mean < 1", run.scenario);
+                    let line = run.json_line();
+                    assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+                    assert!(line.contains("\"status\":\"ok\""), "{line}");
+                }
+                Err(e) => panic!("{} failed: {e}", run.scenario),
+            }
+        }
+    }
+
+    #[test]
+    fn run_corpus_results_follow_input_order_and_seed() {
+        let corpus = Corpus::builtin();
+        let smoke = corpus.filter("smoke/*");
+        let a = run_corpus(&smoke, RunOptions::default());
+        let b = run_corpus(&smoke, RunOptions::default());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.scenario, y.scenario);
+            assert_eq!(x.fingerprint, y.fingerprint);
+            assert_eq!(
+                x.outcome.as_ref().unwrap().cycles,
+                y.outcome.as_ref().unwrap().cycles,
+                "{} must be reproducible",
+                x.scenario
+            );
+        }
+        let c = run_corpus(
+            &smoke,
+            RunOptions {
+                seed: 99,
+                ..RunOptions::default()
+            },
+        );
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.fingerprint != y.fingerprint),
+            "different seed must change at least one tensor"
+        );
+    }
+}

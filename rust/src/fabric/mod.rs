@@ -136,6 +136,7 @@ impl NexusFabric {
         let n = cfg.num_pes();
         let mut stats = FabricStats::default();
         stats.per_pe_busy_cycles = vec![0; n];
+        stats.per_pe_committed_ops = vec![0; n];
         NexusFabric {
             pes: (0..n).map(|_| Pe::new(cfg.dmem_words)).collect(),
             routers: (0..n)
@@ -192,8 +193,11 @@ impl NexusFabric {
         // Reset every counter but keep the per-PE vector's allocation.
         let mut per_pe = std::mem::take(&mut self.stats.per_pe_busy_cycles);
         per_pe.fill(0);
+        let mut per_pe_ops = std::mem::take(&mut self.stats.per_pe_committed_ops);
+        per_pe_ops.fill(0);
         self.stats = FabricStats {
             per_pe_busy_cycles: per_pe,
+            per_pe_committed_ops: per_pe_ops,
             ..FabricStats::default()
         };
     }
@@ -1098,6 +1102,10 @@ impl NexusFabric {
         self.stats.cycles = self.cycle;
         for (id, pe) in self.pes.iter().enumerate() {
             self.stats.per_pe_busy_cycles[id] += pe.stats.busy_cycles;
+            // At most one ALU op (local or en-route claim) and one decode
+            // memory op commit per PE per cycle, so busy-cycle counts *are*
+            // op counts; summed over PEs this equals alu_ops + mem_ops.
+            self.stats.per_pe_committed_ops[id] += pe.stats.alu_busy_cycles + pe.stats.mem_ops;
         }
         for r in &self.routers {
             for p in 0..NUM_PORTS {

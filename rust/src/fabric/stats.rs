@@ -48,6 +48,12 @@ pub struct FabricStats {
     /// Per-PE busy-cycle counts: cycles each PE did useful work on any
     /// unit (ALU or decode) — utilization (Fig 13) + load-balance CV.
     pub per_pe_busy_cycles: Vec<u64>,
+    /// Per-PE committed operations: ALU ops executed at the PE (local or
+    /// en-route claimed) plus decode-unit memory ops. Unlike busy cycles
+    /// this excludes stall time entirely, so it is the *work* imbalance
+    /// metric the dataset corpus reports ([`FabricStats::op_cv`] /
+    /// [`FabricStats::op_max_mean`]). Sums to `alu_ops + mem_ops`.
+    pub per_pe_committed_ops: Vec<u64>,
     /// Per-input-port congestion aggregated over all routers (Fig 14),
     /// indexed by port class (NIC, N, E, S, W).
     pub port: [PortStats; NUM_PORTS],
@@ -85,6 +91,35 @@ impl FabricStats {
     pub fn load_cv(&self) -> f64 {
         let v: Vec<f64> = self.per_pe_busy_cycles.iter().map(|&c| c as f64).collect();
         crate::util::cv(&v)
+    }
+
+    /// Work-imbalance metric: coefficient of variation of per-PE committed
+    /// operations (0 = every PE committed the same op count). The corpus
+    /// acceptance gate: irregular inputs must push this well above the
+    /// uniform-random baseline at equal density.
+    pub fn op_cv(&self) -> f64 {
+        let v: Vec<f64> = self
+            .per_pe_committed_ops
+            .iter()
+            .map(|&c| c as f64)
+            .collect();
+        crate::util::cv(&v)
+    }
+
+    /// Work-imbalance metric: max over mean of per-PE committed operations
+    /// (1 = perfectly balanced; 0 when no ops were committed). The "how bad
+    /// is the worst PE" companion to [`FabricStats::op_cv`].
+    pub fn op_max_mean(&self) -> f64 {
+        if self.per_pe_committed_ops.is_empty() {
+            return 0.0;
+        }
+        let total: u64 = self.per_pe_committed_ops.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mean = total as f64 / self.per_pe_committed_ops.len() as f64;
+        let max = *self.per_pe_committed_ops.iter().max().unwrap() as f64;
+        max / mean
     }
 
     /// Useful operations per cycle across the fabric.
@@ -164,6 +199,7 @@ impl FabricStats {
         check!(trigger_checks);
         check!(offchip_bytes);
         check!(per_pe_busy_cycles);
+        check!(per_pe_committed_ops);
         check!(port);
         // Guard against the field list above going stale: if the structs
         // still differ, a counter was added to FabricStats without a
@@ -204,6 +240,20 @@ mod tests {
         assert!(d.contains("flit_hops") && d.contains('7'), "{d}");
         // diff is consistent with PartialEq.
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn op_imbalance_metrics() {
+        let mut s = FabricStats::default();
+        assert_eq!(s.op_cv(), 0.0);
+        assert_eq!(s.op_max_mean(), 0.0);
+        s.per_pe_committed_ops = vec![10, 10, 10, 10];
+        assert_eq!(s.op_cv(), 0.0);
+        assert!((s.op_max_mean() - 1.0).abs() < 1e-12);
+        s.per_pe_committed_ops = vec![40, 0, 0, 0];
+        // mean 10, sd sqrt(300) ~ 17.32 -> cv ~ 1.732; max/mean = 4.
+        assert!((s.op_cv() - 3.0f64.sqrt()).abs() < 1e-9, "{}", s.op_cv());
+        assert!((s.op_max_mean() - 4.0).abs() < 1e-12);
     }
 
     #[test]

@@ -59,6 +59,28 @@
 //! `cargo run --release -- validate --dense-oracle` re-validates the whole
 //! suite under the oracle scheduler.
 //!
+//! ## Datasets and scenarios
+//!
+//! The [`dataset`] subsystem feeds the machine *irregular* inputs instead
+//! of the i.i.d. Bernoulli tensors the generators default to:
+//!
+//! - Matrix Market `.mtx` / whitespace edge-list loaders with typed parse
+//!   errors and INT16-exact value quantization ([`dataset::mtx`],
+//!   [`dataset::edgelist`]);
+//! - heavy-tailed generators in [`tensor::gen`] (R-MAT, Chung-Lu
+//!   power-law, banded, block-diagonal, adversarial hotspot rows);
+//! - a named, glob-filterable scenario [`dataset::Corpus`] (kernel ×
+//!   source × sparsity regime × mesh) and a pooled corpus runner that
+//!   validates every scenario and emits one JSON line each, including the
+//!   per-PE work-imbalance metrics
+//!   [`fabric::stats::FabricStats::op_cv`] /
+//!   [`fabric::stats::FabricStats::op_max_mean`].
+//!
+//! CLI: `nexus corpus list [--filter GLOB]` and
+//! `nexus corpus run [--filter GLOB] [--seed N] [--dense-oracle]`;
+//! `cargo bench --bench corpus` compares uniform vs R-MAT vs hotspot
+//! inputs at 8×8/16×16.
+//!
 //! ## Module map
 //!
 //! The crate contains, from the bottom up:
@@ -68,6 +90,8 @@
 //! - [`isa`] — the opcode set carried inside Active Messages.
 //! - [`am`] — the 70-bit Active Message format (Fig 7) and its packed form.
 //! - [`tensor`] — CSR/ELL/dense formats, sparsity generators, graphs.
+//! - [`dataset`] — `.mtx`/edge-list ingestion, the scenario corpus, and
+//!   the corpus sweep runner (see "Datasets and scenarios" above).
 //! - [`noc`] — mesh routers, turn-model/XY/Valiant routing, On/Off control.
 //! - [`pe`] — per-PE state: data memory, decode unit, AM NIC.
 //! - [`fabric`] — the cycle-accurate simulator: Data-Driven execution and
@@ -95,6 +119,7 @@ pub mod baselines;
 pub mod compiler;
 pub mod config;
 pub mod coordinator;
+pub mod dataset;
 pub mod fabric;
 pub mod golden;
 pub mod isa;

@@ -196,7 +196,7 @@ impl Machine {
     /// workload instance returns the cached artifact, while equal-named
     /// specs with different data never collide.
     pub fn compile(&mut self, spec: &Spec) -> Result<Compiled, ExecError> {
-        let key = (spec.name(), fingerprint(spec));
+        let key = (spec.name(), spec_fingerprint(spec));
         if let Some(c) = self.cache.get(&key) {
             return Ok(c.clone());
         }
@@ -227,8 +227,11 @@ impl Machine {
 
 /// Order-sensitive FNV-1a content fingerprint of a spec's tensors — the
 /// compile-cache key, so two specs that share a display name but carry
-/// different data never alias each other's programs.
-fn fingerprint(spec: &Spec) -> u64 {
+/// different data never alias each other's programs. Public because the
+/// dataset scenario corpus reports it per scenario: equal fingerprints
+/// guarantee a sweep re-hits the same cached program, and a fingerprint
+/// drift across seeds/toolchains flags a generator determinism bug.
+pub fn spec_fingerprint(spec: &Spec) -> u64 {
     struct Fp(u64);
     impl Fp {
         fn u(&mut self, v: u64) {

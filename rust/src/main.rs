@@ -26,6 +26,7 @@ fn main() {
     };
 
     match cmd {
+        "corpus" => corpus(&args, seed, step_mode),
         "validate" => validate(seed, step_mode),
         "golden" => golden(seed),
         "fig10" => with_matrix(seed, report::fig10),
@@ -68,6 +69,10 @@ fn main() {
                 "nexus — Nexus Machine reproduction CLI\n\n\
                  usage: nexus <command> [--seed N] [--dense-oracle]\n\n\
                  commands:\n\
+                 \x20 corpus        dataset/scenario corpus: `corpus list` enumerates the\n\
+                 \x20               registered scenarios, `corpus run` executes them with\n\
+                 \x20               bit-exact validation, one JSON line per scenario\n\
+                 \x20               (--filter GLOB selects, e.g. --filter 'smoke/*')\n\
                  \x20 validate      run the 13-workload suite on Nexus/TIA/TIA-Valiant,\n\
                  \x20               checking fabric outputs against software references\n\
                  \x20               (--dense-oracle: use the dense reference scheduler\n\
@@ -81,6 +86,51 @@ fn main() {
                  \x20 compile-time  Nexus vs Generic-CGRA compile-path timing (§4)\n\
                  \x20 all           everything above in sequence"
             );
+        }
+    }
+}
+
+/// `nexus corpus list|run [--filter GLOB] [--seed N] [--dense-oracle]`:
+/// the dataset/scenario corpus surface. `run` prints exactly one JSON line
+/// per scenario on stdout (the CI smoke job tees this into
+/// `BENCH_CORPUS.json`); human-readable summaries go to stderr.
+fn corpus(args: &[String], seed: u64, step_mode: StepMode) {
+    let sub = args.get(1).map(String::as_str).unwrap_or("list");
+    let filter = args
+        .iter()
+        .position(|a| a == "--filter")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str);
+    match sub {
+        "list" => println!("{}", coordinator::corpus_list(filter)),
+        "run" => {
+            let (lines, ok) = coordinator::corpus_run(filter, seed, step_mode);
+            if !lines.is_empty() {
+                println!("{lines}");
+            }
+            if !ok {
+                eprintln!(
+                    "corpus run FAILED ({})",
+                    if lines.is_empty() {
+                        "no scenario matched the filter".to_string()
+                    } else {
+                        format!(
+                            "{} scenario(s) errored or failed validation",
+                            lines.lines().filter(|l| !l.contains("\"status\":\"ok\"")).count()
+                        )
+                    }
+                );
+                std::process::exit(1);
+            }
+            eprintln!(
+                "corpus run OK: {} scenario(s) validated ({} stepping, seed {seed})",
+                lines.lines().count(),
+                step_mode.name()
+            );
+        }
+        other => {
+            eprintln!("unknown corpus subcommand '{other}' (use: corpus list|run)");
+            std::process::exit(2);
         }
     }
 }

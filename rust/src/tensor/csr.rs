@@ -3,6 +3,54 @@
 //! against (SpMV, SpGEMM via Gustavson, SpADD, SDDMM).
 
 use super::dense::Dense;
+use std::fmt;
+
+/// Typed construction failure for the dataset-ingestion path: loaders turn
+/// these into per-line parse errors instead of panicking mid-file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CsrError {
+    /// A coordinate lies outside the declared matrix shape.
+    OutOfBounds {
+        row: usize,
+        col: usize,
+        rows: usize,
+        cols: usize,
+    },
+    /// The same coordinate appeared twice under [`DupPolicy::Reject`].
+    Duplicate { row: usize, col: usize },
+}
+
+impl fmt::Display for CsrError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CsrError::OutOfBounds {
+                row,
+                col,
+                rows,
+                cols,
+            } => write!(
+                f,
+                "coordinate ({row},{col}) outside the {rows}x{cols} matrix"
+            ),
+            CsrError::Duplicate { row, col } => {
+                write!(f, "duplicate coordinate ({row},{col})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CsrError {}
+
+/// What [`Csr::try_from_triplets`] does with repeated coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DupPolicy {
+    /// Merge duplicates by wrapping INT16 addition (the historical
+    /// `from_triplets` behavior; right for COO accumulation).
+    Sum,
+    /// Fail with [`CsrError::Duplicate`] — dataset files that list the same
+    /// coordinate twice are malformed, not accumulations.
+    Reject,
+}
 
 /// CSR sparse matrix. Values are i16 (fabric word); all reference kernels
 /// use wrapping INT16 arithmetic so they agree bit-for-bit with the fabric.
@@ -31,30 +79,59 @@ impl Csr {
     }
 
     /// Build from COO triplets (row, col, value). Duplicates are summed
-    /// (wrapping); explicit zeros are dropped.
+    /// (wrapping); explicit zeros are dropped. Panics on out-of-bounds
+    /// coordinates — loaders use [`Csr::try_from_triplets`] instead.
     pub fn from_triplets(
         rows: usize,
         cols: usize,
         triplets: impl IntoIterator<Item = (usize, usize, i16)>,
     ) -> Self {
+        match Self::try_from_triplets(rows, cols, triplets, DupPolicy::Sum) {
+            Ok(m) => m,
+            Err(e) => panic!("triplet {e}"),
+        }
+    }
+
+    /// Fallible COO construction for the ingestion path: out-of-bounds
+    /// coordinates are a typed error, and `dup` decides whether repeated
+    /// coordinates merge (wrapping sum) or fail. Explicit zeros (and
+    /// duplicates summing to zero under [`DupPolicy::Sum`]) are dropped.
+    pub fn try_from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: impl IntoIterator<Item = (usize, usize, i16)>,
+        dup: DupPolicy,
+    ) -> Result<Self, CsrError> {
         let mut per_row: Vec<Vec<(usize, i16)>> = vec![Vec::new(); rows];
         for (r, c, v) in triplets {
-            assert!(r < rows && c < cols, "triplet out of bounds ({r},{c})");
+            if r >= rows || c >= cols {
+                return Err(CsrError::OutOfBounds {
+                    row: r,
+                    col: c,
+                    rows,
+                    cols,
+                });
+            }
             per_row[r].push((c, v));
         }
         let mut rowptr = Vec::with_capacity(rows + 1);
         let mut colidx = Vec::new();
         let mut values = Vec::new();
         rowptr.push(0);
-        for row in &mut per_row {
+        for (r, row) in per_row.iter_mut().enumerate() {
             row.sort_unstable_by_key(|&(c, _)| c);
             let mut i = 0;
             while i < row.len() {
                 let c = row[i].0;
                 let mut v = 0i16;
+                let mut n = 0usize;
                 while i < row.len() && row[i].0 == c {
                     v = v.wrapping_add(row[i].1);
+                    n += 1;
                     i += 1;
+                }
+                if n > 1 && dup == DupPolicy::Reject {
+                    return Err(CsrError::Duplicate { row: r, col: c });
                 }
                 if v != 0 {
                     colidx.push(c);
@@ -63,13 +140,13 @@ impl Csr {
             }
             rowptr.push(colidx.len());
         }
-        Csr {
+        Ok(Csr {
             rows,
             cols,
             rowptr,
             colidx,
             values,
-        }
+        })
     }
 
     /// Build from a dense row-major matrix, dropping zeros.
@@ -265,6 +342,41 @@ mod tests {
         assert_eq!(m.to_dense().get(0, 0), 7);
         assert_eq!(m.to_dense().get(1, 1), 5);
         m.validate().unwrap();
+    }
+
+    #[test]
+    fn try_from_triplets_rejects_out_of_bounds() {
+        let e = Csr::try_from_triplets(2, 3, vec![(2, 0, 1)], DupPolicy::Sum).unwrap_err();
+        assert_eq!(
+            e,
+            CsrError::OutOfBounds {
+                row: 2,
+                col: 0,
+                rows: 2,
+                cols: 3
+            }
+        );
+        let e = Csr::try_from_triplets(2, 3, vec![(1, 3, 1)], DupPolicy::Sum).unwrap_err();
+        assert!(matches!(e, CsrError::OutOfBounds { col: 3, .. }), "{e}");
+    }
+
+    #[test]
+    fn try_from_triplets_duplicate_policy() {
+        let trips = vec![(0, 1, 2), (0, 1, 3)];
+        let merged = Csr::try_from_triplets(1, 2, trips.clone(), DupPolicy::Sum).unwrap();
+        assert_eq!(merged.to_dense().get(0, 1), 5);
+        let e = Csr::try_from_triplets(1, 2, trips, DupPolicy::Reject).unwrap_err();
+        assert_eq!(e, CsrError::Duplicate { row: 0, col: 1 });
+        // Duplicate detection fires even when the pair would sum to zero.
+        let e = Csr::try_from_triplets(1, 2, vec![(0, 0, 4), (0, 0, -4)], DupPolicy::Reject)
+            .unwrap_err();
+        assert_eq!(e, CsrError::Duplicate { row: 0, col: 0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn from_triplets_still_panics_out_of_bounds() {
+        let _ = Csr::from_triplets(2, 2, vec![(5, 0, 1)]);
     }
 
     #[test]

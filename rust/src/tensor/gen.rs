@@ -17,7 +17,9 @@
 
 use super::csr::Csr;
 use super::dense::Dense;
+use super::graph::Graph;
 use crate::util::SplitMix64;
+use std::collections::BTreeSet;
 
 /// Small nonzero value in `[-4, 4] \ {0}` — keeps INT16 results exact for
 /// golden-model comparison at our workload sizes.
@@ -76,6 +78,250 @@ pub fn random_dense(rng: &mut SplitMix64, rows: usize, cols: usize, amp: i64) ->
 /// Random dense vector.
 pub fn random_vec(rng: &mut SplitMix64, n: usize, amp: i64) -> Vec<i16> {
     (0..n).map(|_| rng.range_i64(-amp, amp) as i16).collect()
+}
+
+// --- irregular generators (dataset/scenario corpus) ----------------------
+//
+// The i.i.d. Bernoulli generators above are the most *regular* kind of
+// "sparse" there is: every row and column has the same expected occupancy,
+// so per-PE load stays flat no matter how the tensor is partitioned. The
+// generators below produce the heavy-tailed / clustered structure real
+// irregular datasets have (and that DCRA / DPU-v2 evaluate on), which is
+// what actually stresses the load-balancing story of the paper.
+
+/// Graph500 R-MAT quadrant probabilities `(a, b, c, d)` — heavy-tailed on
+/// both rows and columns.
+pub const RMAT_PROBS: (f64, f64, f64, f64) = (0.57, 0.19, 0.19, 0.05);
+
+/// Smallest `k` with `2^k >= n` (`n >= 1`).
+fn log2_ceil(n: usize) -> u32 {
+    let mut k = 0u32;
+    while (1usize << k) < n {
+        k += 1;
+    }
+    k
+}
+
+/// One R-MAT coordinate sample on the `side x side` recursive grid
+/// (`side` a power of two): descend the quadtree, picking a quadrant per
+/// level with probabilities `probs`.
+fn rmat_coord(rng: &mut SplitMix64, side: usize, probs: (f64, f64, f64, f64)) -> (usize, usize) {
+    let (a, b, c, _d) = probs;
+    let (mut r, mut col) = (0usize, 0usize);
+    let mut span = side;
+    while span > 1 {
+        span /= 2;
+        let x = rng.f64();
+        if x < a {
+            // top-left: nothing to add
+        } else if x < a + b {
+            col += span;
+        } else if x < a + b + c {
+            r += span;
+        } else {
+            r += span;
+            col += span;
+        }
+    }
+    (r, col)
+}
+
+/// R-MAT sparse matrix: ~`target_nnz` distinct coordinates drawn by
+/// recursive quadrant sampling (Graph500's generator), values small and
+/// nonzero. Both row and column occupancies come out power-law-ish, which
+/// is the degree structure of real graphs/matrices. Sampling is rejection-
+/// based (distinct coordinates, in-range for non-power-of-two shapes) with
+/// a bounded attempt budget, so very dense requests may undershoot.
+pub fn rmat_csr(
+    rng: &mut SplitMix64,
+    rows: usize,
+    cols: usize,
+    target_nnz: usize,
+    probs: (f64, f64, f64, f64),
+) -> Csr {
+    assert!(rows > 0 && cols > 0);
+    let side = 1usize << log2_ceil(rows.max(cols));
+    let mut coords: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let target = target_nnz.min(rows * cols);
+    let budget = 20 * target.max(1);
+    let mut attempts = 0usize;
+    while coords.len() < target && attempts < budget {
+        attempts += 1;
+        let (r, c) = rmat_coord(rng, side, probs);
+        if r < rows && c < cols {
+            coords.insert((r, c));
+        }
+    }
+    let trip: Vec<(usize, usize, i16)> = coords
+        .into_iter()
+        .map(|(r, c)| (r, c, small_value(rng)))
+        .collect();
+    Csr::from_triplets(rows, cols, trip)
+}
+
+/// R-MAT directed graph: ~`target_edges` distinct non-self-loop edges on
+/// `n` vertices with small positive weights. The usual synthetic stand-in
+/// for scale-free graph datasets.
+pub fn rmat_graph(
+    rng: &mut SplitMix64,
+    n: usize,
+    target_edges: usize,
+    probs: (f64, f64, f64, f64),
+) -> Graph {
+    assert!(n > 1);
+    let side = 1usize << log2_ceil(n);
+    let mut edges: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let target = target_edges.min(n * (n - 1));
+    let budget = 20 * target.max(1);
+    let mut attempts = 0usize;
+    while edges.len() < target && attempts < budget {
+        attempts += 1;
+        let (u, v) = rmat_coord(rng, side, probs);
+        if u < n && v < n && u != v {
+            edges.insert((u, v));
+        }
+    }
+    let mut g = Graph::new(n);
+    for (u, v) in edges {
+        let w = 1 + rng.below(7) as i16;
+        g.add_edge(u, v, w);
+    }
+    g
+}
+
+/// Chung-Lu power-law matrix: expected row occupancies follow
+/// `w_k ∝ (k+1)^-alpha` over a random row permutation, and within each row
+/// the column choices are themselves power-law weighted (a few popular
+/// columns). `alpha` around 0.8–1.2 gives realistic heavy tails; 0 recovers
+/// near-uniform occupancy.
+pub fn chung_lu_csr(
+    rng: &mut SplitMix64,
+    rows: usize,
+    cols: usize,
+    density: f64,
+    alpha: f64,
+) -> Csr {
+    assert!(rows > 0 && cols > 0);
+    let target_nnz = ((rows * cols) as f64 * density).round() as usize;
+    // Power-law weights over ranks; random permutations decouple rank from
+    // index so the heavy rows/columns land anywhere.
+    let rw: Vec<f64> = (0..rows).map(|k| ((k + 1) as f64).powf(-alpha)).collect();
+    let rw_sum: f64 = rw.iter().sum();
+    let cw: Vec<f64> = (0..cols).map(|k| ((k + 1) as f64).powf(-alpha)).collect();
+    let mut col_cum = Vec::with_capacity(cols);
+    let mut acc = 0.0;
+    for &w in &cw {
+        acc += w;
+        col_cum.push(acc);
+    }
+    let mut row_order: Vec<usize> = (0..rows).collect();
+    rng.shuffle(&mut row_order);
+    let mut col_order: Vec<usize> = (0..cols).collect();
+    rng.shuffle(&mut col_order);
+    let mut trip = Vec::new();
+    for (rank, &r) in row_order.iter().enumerate() {
+        let quota = ((rw[rank] / rw_sum) * target_nnz as f64).round() as usize;
+        let quota = quota.min(cols);
+        let mut chosen: BTreeSet<usize> = BTreeSet::new();
+        let mut attempts = 0usize;
+        while chosen.len() < quota && attempts < 20 * quota.max(1) {
+            attempts += 1;
+            let x = rng.f64() * acc;
+            // First cumulative weight >= x picks the column rank.
+            let k = col_cum.partition_point(|&c| c < x).min(cols - 1);
+            chosen.insert(col_order[k]);
+        }
+        for c in chosen {
+            trip.push((r, c, small_value(rng)));
+        }
+    }
+    Csr::from_triplets(rows, cols, trip)
+}
+
+/// Banded matrix: Bernoulli(`density`) nonzeros confined to the diagonal
+/// band `|r - c| <= halfband`. Clustered structure with strong data
+/// locality — the opposite adversary to the hotspot generator.
+pub fn banded_csr(rng: &mut SplitMix64, n: usize, halfband: usize, density: f64) -> Csr {
+    let mut trip = Vec::new();
+    for r in 0..n {
+        let lo = r.saturating_sub(halfband);
+        let hi = (r + halfband).min(n.saturating_sub(1));
+        for c in lo..=hi {
+            if rng.chance(density) {
+                trip.push((r, c, small_value(rng)));
+            }
+        }
+    }
+    Csr::from_triplets(n, n, trip)
+}
+
+/// Block-diagonal matrix: Bernoulli(`density`) nonzeros inside
+/// `block x block` diagonal blocks, zero elsewhere. Models clustered
+/// community structure (each block is a dense-ish sub-problem).
+pub fn block_diag_csr(rng: &mut SplitMix64, n: usize, block: usize, density: f64) -> Csr {
+    assert!(block > 0);
+    let mut trip = Vec::new();
+    let mut base = 0usize;
+    while base < n {
+        let end = (base + block).min(n);
+        for r in base..end {
+            for c in base..end {
+                if rng.chance(density) {
+                    trip.push((r, c, small_value(rng)));
+                }
+            }
+        }
+        base = end;
+    }
+    Csr::from_triplets(n, n, trip)
+}
+
+/// Adversarial "hotspot rows" matrix: `hot_rows` randomly chosen rows carry
+/// `hot_share` of the nnz budget (each capped at a full row); the remainder
+/// spreads uniformly over the other rows. This is the worst case for
+/// data-local architectures — a few PEs own nearly all the aggregation
+/// work — and the generator the load-imbalance acceptance checks lean on.
+pub fn hotspot_csr(
+    rng: &mut SplitMix64,
+    rows: usize,
+    cols: usize,
+    density: f64,
+    hot_rows: usize,
+    hot_share: f64,
+) -> Csr {
+    assert!(rows > 0 && cols > 0);
+    let target_nnz = ((rows * cols) as f64 * density).round() as usize;
+    let hot_rows = hot_rows.clamp(1, rows);
+    let hot = rng.sample_indices(rows, hot_rows);
+    let is_hot = {
+        let mut v = vec![false; rows];
+        for &r in &hot {
+            v[r] = true;
+        }
+        v
+    };
+    let mut trip = Vec::new();
+    let hot_budget = (target_nnz as f64 * hot_share.clamp(0.0, 1.0)).round() as usize;
+    let per_hot = (hot_budget / hot_rows).min(cols);
+    for &r in &hot {
+        for c in rng.sample_indices(cols, per_hot) {
+            trip.push((r, c, small_value(rng)));
+        }
+    }
+    let cold_rows = rows - hot_rows;
+    if cold_rows > 0 {
+        let cold_budget = target_nnz.saturating_sub(per_hot * hot_rows);
+        let per_cold = (cold_budget / cold_rows).min(cols);
+        for r in 0..rows {
+            if is_hot[r] || per_cold == 0 {
+                continue;
+            }
+            for c in rng.sample_indices(cols, per_cold) {
+                trip.push((r, c, small_value(rng)));
+            }
+        }
+    }
+    Csr::from_triplets(rows, cols, trip)
 }
 
 /// §4.2 SpMSpM sparsity regimes. Sparsity = fraction of *zeros*.
@@ -178,5 +424,93 @@ mod tests {
             let b = random_csr(&mut SplitMix64::new(seed), 16, 16, 0.4);
             ensure(a == b, || "same seed must give same matrix".into())
         });
+    }
+
+    #[test]
+    fn rmat_csr_is_heavy_tailed() {
+        let mut rng = SplitMix64::new(7);
+        let m = rmat_csr(&mut rng, 64, 64, 400, RMAT_PROBS);
+        m.validate().unwrap();
+        assert!(m.nnz() >= 300, "undershoot: {}", m.nnz());
+        let nnzs: Vec<f64> = (0..m.rows).map(|r| m.row_nnz(r) as f64).collect();
+        let cv = crate::util::cv(&nnzs);
+        assert!(cv > 0.7, "R-MAT rows should be heavy-tailed, cv={cv}");
+    }
+
+    #[test]
+    fn rmat_csr_is_deterministic() {
+        let a = rmat_csr(&mut SplitMix64::new(9), 32, 32, 200, RMAT_PROBS);
+        let b = rmat_csr(&mut SplitMix64::new(9), 32, 32, 200, RMAT_PROBS);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rmat_graph_shape_and_determinism() {
+        let g = rmat_graph(&mut SplitMix64::new(5), 48, 180, RMAT_PROBS);
+        assert_eq!(g.num_vertices, 48);
+        assert!(g.num_edges() >= 120, "edges {}", g.num_edges());
+        for (u, edges) in g.adj.iter().enumerate() {
+            for &(v, w) in edges {
+                assert!(v < 48 && v != u);
+                assert!((1..=7).contains(&w));
+            }
+        }
+        let h = rmat_graph(&mut SplitMix64::new(5), 48, 180, RMAT_PROBS);
+        assert_eq!(g.adj, h.adj);
+    }
+
+    #[test]
+    fn chung_lu_is_skewed_and_in_density_ballpark() {
+        let mut rng = SplitMix64::new(11);
+        let m = chung_lu_csr(&mut rng, 64, 64, 0.2, 1.0);
+        m.validate().unwrap();
+        let d = m.density();
+        assert!(d > 0.05 && d < 0.35, "density {d}");
+        let nnzs: Vec<f64> = (0..m.rows).map(|r| m.row_nnz(r) as f64).collect();
+        assert!(crate::util::cv(&nnzs) > 0.5, "rows should be skewed");
+    }
+
+    #[test]
+    fn banded_stays_in_band() {
+        let mut rng = SplitMix64::new(13);
+        let m = banded_csr(&mut rng, 48, 3, 0.6);
+        m.validate().unwrap();
+        assert!(m.nnz() > 0);
+        for r in 0..m.rows {
+            for (c, _) in m.row(r) {
+                let dist = r.abs_diff(c);
+                assert!(dist <= 3, "({r},{c}) outside band");
+            }
+        }
+    }
+
+    #[test]
+    fn block_diag_stays_in_blocks() {
+        let mut rng = SplitMix64::new(17);
+        let m = block_diag_csr(&mut rng, 40, 8, 0.5);
+        m.validate().unwrap();
+        assert!(m.nnz() > 0);
+        for r in 0..m.rows {
+            for (c, _) in m.row(r) {
+                assert_eq!(r / 8, c / 8, "({r},{c}) outside its diagonal block");
+            }
+        }
+    }
+
+    #[test]
+    fn hotspot_concentrates_nnz() {
+        let mut rng = SplitMix64::new(19);
+        let m = hotspot_csr(&mut rng, 64, 64, 0.1, 4, 0.85);
+        m.validate().unwrap();
+        let mut nnzs: Vec<usize> = (0..m.rows).map(|r| m.row_nnz(r)).collect();
+        nnzs.sort_unstable_by(|a, b| b.cmp(a));
+        let top4: usize = nnzs[..4].iter().sum();
+        assert!(
+            top4 * 2 > m.nnz(),
+            "4 hot rows should hold most nnz: {top4} of {}",
+            m.nnz()
+        );
+        let all: Vec<f64> = (0..m.rows).map(|r| m.row_nnz(r) as f64).collect();
+        assert!(crate::util::cv(&all) > 1.0, "hotspot cv too low");
     }
 }

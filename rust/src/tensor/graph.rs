@@ -8,8 +8,10 @@ use crate::util::SplitMix64;
 /// Distance value used as "unreached" (fits INT16 with headroom for +w).
 pub const INF: i16 = i16::MAX / 2;
 
-/// Directed weighted graph in adjacency-list form.
-#[derive(Debug, Clone)]
+/// Directed weighted graph in adjacency-list form. `PartialEq` compares
+/// exact adjacency (order included) — what the edge-list round-trip tests
+/// assert.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Graph {
     pub num_vertices: usize,
     /// `adj[v]` = list of (neighbor, weight).

@@ -8,7 +8,7 @@ pub mod ell;
 pub mod gen;
 pub mod graph;
 
-pub use csr::Csr;
+pub use csr::{Csr, CsrError, DupPolicy};
 pub use dense::Dense;
 pub use ell::Ell;
 pub use graph::Graph;

@@ -47,6 +47,16 @@ where
     }
 }
 
+/// Randomized case count from the `NEXUS_PROP_CASES` env var, falling back
+/// to `default`. The shared knob of every property suite: CI raises it for
+/// deeper release-mode sweeps (`NEXUS_PROP_CASES=500 cargo test --release`).
+pub fn env_cases(default: usize) -> usize {
+    std::env::var("NEXUS_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
 /// Helper: assert two u16 slices are equal, reporting first mismatch index.
 pub fn check_eq_u16(actual: &[u16], expected: &[u16], what: &str) -> Result<(), String> {
     if actual.len() != expected.len() {

@@ -1,0 +1,289 @@
+//! Dataset-subsystem integration suite: `.mtx` round-trip properties,
+//! loader error-case coverage, scenario-corpus execution with bit-exact
+//! validation, active-vs-dense cross-mode checks over the corpus (so the
+//! irregular inputs also exercise the wake-list scheduler), and the
+//! load-imbalance acceptance gate (hotspot/R-MAT op CoV >= 2x uniform at
+//! matched density).
+//!
+//! Property case counts follow `NEXUS_PROP_CASES` like the other property
+//! suites (default 200).
+
+use nexus::dataset::{
+    cross_check_corpus, glob_match, read_edge_list, read_mtx, run_corpus, write_edge_list,
+    write_mtx, Corpus, EdgeListOptions, MtxError, RunOptions,
+};
+use nexus::tensor::{gen, Csr, CsrError, Graph};
+use nexus::util::prop::{ensure, env_cases, forall_seeded};
+use nexus::util::SplitMix64;
+use nexus::workloads::Spec;
+
+/// Randomized case count (env-tunable: `NEXUS_PROP_CASES=1000 cargo test`).
+fn prop_cases() -> usize {
+    env_cases(200)
+}
+
+/// A random matrix from a random generator family — the round-trip
+/// property must hold for every source the corpus can build.
+fn random_matrix(rng: &mut SplitMix64) -> Csr {
+    let rows = 1 + rng.below_usize(20);
+    let cols = 1 + rng.below_usize(20);
+    match rng.below(6) {
+        0 => gen::random_csr(rng, rows, cols, 0.3),
+        1 => gen::skewed_csr(rng, rows, cols, 0.3),
+        2 => {
+            let target = (rows * cols) / 4;
+            gen::rmat_csr(rng, rows, cols, target, gen::RMAT_PROBS)
+        }
+        3 => gen::hotspot_csr(rng, rows, cols, 0.25, 2, 0.8),
+        4 => gen::banded_csr(rng, rows.max(cols), 2, 0.5),
+        _ => gen::block_diag_csr(rng, rows.max(cols), 4, 0.5),
+    }
+}
+
+#[test]
+fn mtx_roundtrip_property() {
+    forall_seeded(0xDA7A, prop_cases(), &mut |rng| {
+        let m = random_matrix(rng);
+        m.validate().map_err(|e| e.to_string())?;
+        let text = write_mtx(&m);
+        let back = read_mtx(&text).map_err(|e| format!("reread failed: {e}"))?;
+        ensure(back == m, || {
+            format!(
+                "mtx roundtrip mismatch for {}x{} nnz={}",
+                m.rows,
+                m.cols,
+                m.nnz()
+            )
+        })
+    });
+}
+
+#[test]
+fn edge_list_roundtrip_property() {
+    forall_seeded(0xED6E, prop_cases(), &mut |rng| {
+        // Contact graphs need enough vertices to reach their edge target.
+        let n = 10 + rng.below_usize(40);
+        let g = if rng.chance(0.5) {
+            gen::rmat_graph(rng, n, 3 * n, gen::RMAT_PROBS)
+        } else {
+            Graph::synthetic_contact(rng, n, 3 * n)
+        };
+        let opts = EdgeListOptions {
+            undirected: false,
+            num_vertices: Some(g.num_vertices),
+        };
+        let back = read_edge_list(&write_edge_list(&g), opts)
+            .map_err(|e| format!("reread failed: {e}"))?;
+        ensure(back == g, || format!("edge-list roundtrip mismatch at n={n}"))
+    });
+}
+
+#[test]
+fn mtx_symmetric_and_pattern_fixtures() {
+    // Symmetric integer: lower triangle stored, full matrix materialized.
+    let sym = "%%MatrixMarket matrix coordinate integer symmetric\n\
+               % infect-dublin-style fixture\n\
+               4 4 4\n\
+               1 1 2\n\
+               3 1 -1\n\
+               4 3 3\n\
+               4 4 1\n";
+    let m = read_mtx(sym).unwrap();
+    assert_eq!(m.nnz(), 6, "two off-diagonal entries mirror");
+    let d = m.to_dense();
+    assert_eq!(d.get(2, 0), -1);
+    assert_eq!(d.get(0, 2), -1);
+    assert_eq!(d.get(3, 2), 3);
+    assert_eq!(d.get(2, 3), 3);
+    // Pattern symmetric: structure only, ones everywhere stored.
+    let pat = "%%MatrixMarket matrix coordinate pattern symmetric\n\
+               3 3 2\n\
+               2 1\n\
+               3 2\n";
+    let p = read_mtx(pat).unwrap();
+    assert_eq!(p.nnz(), 4);
+    assert!(p.values.iter().all(|&v| v == 1));
+    // Case-insensitive banner, real field quantization.
+    let real = "%%matrixmarket MATRIX Coordinate REAL General\n\
+                2 2 2\n\
+                1 1 0.3\n\
+                2 2 -100.25\n";
+    let r = read_mtx(real).unwrap();
+    assert_eq!(r.to_dense().get(0, 0), 1);
+    assert_eq!(r.to_dense().get(1, 1), -4);
+}
+
+#[test]
+fn mtx_malformed_inputs_are_typed_errors() {
+    let cases: Vec<(&str, &str)> = vec![
+        ("", "missing header"),
+        ("3 3 1\n1 1 1\n", "no banner"),
+        ("%%MatrixMarket matrix array integer general\n", "array format"),
+        (
+            "%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1 0\n",
+            "complex field",
+        ),
+        (
+            "%%MatrixMarket matrix coordinate integer skew-symmetric\n1 1 0\n",
+            "skew symmetry",
+        ),
+        (
+            "%%MatrixMarket matrix coordinate integer general\n2 2\n",
+            "short size line",
+        ),
+        (
+            "%%MatrixMarket matrix coordinate integer general\n2 2 1\n1 1\n",
+            "missing value token",
+        ),
+        (
+            "%%MatrixMarket matrix coordinate integer general\n2 2 1\n9 1 1\n",
+            "row out of range",
+        ),
+        (
+            "%%MatrixMarket matrix coordinate integer general\n2 2 1\n0 1 1\n",
+            "zero-based index",
+        ),
+        (
+            "%%MatrixMarket matrix coordinate integer general\n2 2 3\n1 1 1\n2 2 1\n",
+            "undershot entry count",
+        ),
+        (
+            "%%MatrixMarket matrix coordinate integer general\n2 2 2\n1 2 1\n1 2 1\n",
+            "duplicate entry",
+        ),
+        (
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 nan\n",
+            "non-finite value",
+        ),
+        (
+            "%%MatrixMarket matrix coordinate integer symmetric\n2 2 2\n2 1 1\n1 2 1\n",
+            "explicit mirror of symmetric entry",
+        ),
+    ];
+    for (text, what) in cases {
+        assert!(read_mtx(text).is_err(), "{what} must fail");
+    }
+    // The duplicate case carries the structured Csr error.
+    let dup = read_mtx("%%MatrixMarket matrix coordinate integer general\n2 2 2\n1 2 1\n1 2 1\n")
+        .unwrap_err();
+    assert!(
+        matches!(
+            dup,
+            MtxError::Entry {
+                source: CsrError::Duplicate { row: 0, col: 1 },
+                ..
+            }
+        ),
+        "{dup}"
+    );
+}
+
+#[test]
+fn corpus_filters_compose_with_globs() {
+    let corpus = Corpus::builtin();
+    assert!(glob_match("smoke/*", "smoke/bfs-rmat-4x4"));
+    let smoke = corpus.filter("smoke/*");
+    let spmv = corpus.filter("*/spmv-*");
+    let all = corpus.filter("*");
+    assert!(!smoke.is_empty());
+    assert!(spmv.len() >= 12, "spmv family: {}", spmv.len());
+    assert_eq!(all.len(), corpus.len());
+    assert!(corpus.filter("nothing/*").is_empty());
+    // Filters preserve registration order.
+    let names: Vec<&str> = smoke.iter().map(|s| s.name.as_str()).collect();
+    let mut sorted = names.clone();
+    sorted.sort_unstable();
+    assert_eq!(names.len(), sorted.len());
+}
+
+#[test]
+fn smoke_corpus_validates_and_cross_checks_step_modes() {
+    let corpus = Corpus::builtin();
+    let smoke = corpus.filter("smoke/*");
+    // Active-set sweep: everything validates bit-exactly.
+    let runs = run_corpus(&smoke, RunOptions::default());
+    for run in &runs {
+        assert!(run.passed(), "{}: {:?}", run.scenario, run.outcome);
+    }
+    // Dense-oracle cross-check: identical outputs, cycles, and stats —
+    // the irregular corpus inputs drive the wake-list scheduler through
+    // the same differential gate as tests/step_equivalence.rs.
+    cross_check_corpus(&smoke, 1).expect("smoke corpus cross-mode check");
+}
+
+#[test]
+fn full_corpus_runs_validated() {
+    let corpus = Corpus::builtin();
+    let all: Vec<_> = corpus.scenarios().iter().collect();
+    let runs = run_corpus(&all, RunOptions::default());
+    assert_eq!(runs.len(), corpus.len());
+    for run in &runs {
+        assert!(run.passed(), "{}: {:?}", run.scenario, run.outcome);
+    }
+}
+
+/// The acceptance gate for the whole subsystem: irregular inputs must
+/// produce measurably imbalanced per-PE work. At matched density, the best
+/// of the hotspot/R-MAT SpMV scenarios must show a per-PE committed-op CoV
+/// at least 2x the uniform-random scenario's.
+#[test]
+fn irregular_scenarios_double_uniform_op_cv() {
+    let corpus = Corpus::builtin();
+    let names = [
+        "matrix/spmv-uniform-d10-8x8",
+        "matrix/spmv-hotspot-d10-8x8",
+        "matrix/spmv-rmat-d10-8x8",
+    ];
+    let scenarios: Vec<_> = names
+        .iter()
+        .map(|n| corpus.find(n).expect("registered scenario"))
+        .collect();
+    let runs = run_corpus(&scenarios, RunOptions::default());
+    let cv_of = |i: usize| -> f64 {
+        match &runs[i].outcome {
+            Ok(m) => {
+                assert!(m.validated, "{} not validated", runs[i].scenario);
+                m.op_cv
+            }
+            Err(e) => panic!("{} failed: {e}", runs[i].scenario),
+        }
+    };
+    let uniform = cv_of(0);
+    let hotspot = cv_of(1);
+    let rmat = cv_of(2);
+    let best = hotspot.max(rmat);
+    assert!(
+        best >= 2.0 * uniform,
+        "irregular inputs must at least double per-PE op CoV: \
+         uniform={uniform:.3} hotspot={hotspot:.3} rmat={rmat:.3}"
+    );
+}
+
+/// Committed-op accounting invariant: the per-PE vector sums to the global
+/// op counters, in both step modes.
+#[test]
+fn per_pe_committed_ops_sum_to_global_counters() {
+    use nexus::config::{ArchConfig, StepMode};
+    use nexus::machine::Machine;
+    let mut rng = SplitMix64::new(5);
+    let a = gen::hotspot_csr(&mut rng, 32, 32, 0.2, 2, 0.8);
+    let x = gen::random_vec(&mut rng, 32, 3);
+    for mode in [StepMode::ActiveSet, StepMode::DenseOracle] {
+        let mut m = Machine::new(ArchConfig::nexus().with_step_mode(mode));
+        let e = m
+            .run(&Spec::Spmv {
+                a: a.clone(),
+                x: x.clone(),
+            })
+            .expect("spmv run");
+        let s = e.stats.expect("fabric stats");
+        let per_pe: u64 = s.per_pe_committed_ops.iter().sum();
+        assert_eq!(
+            per_pe,
+            s.alu_ops + s.mem_ops,
+            "committed-op conservation broke under {:?}",
+            mode
+        );
+        assert!(s.op_max_mean() >= 1.0);
+    }
+}

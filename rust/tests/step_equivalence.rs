@@ -24,10 +24,7 @@ use nexus::util::SplitMix64;
 /// Randomized case count per policy combination (env-tunable so CI can run
 /// a deeper sweep: `NEXUS_PROP_CASES=1000 cargo test --release`).
 fn prop_cases() -> usize {
-    std::env::var("NEXUS_PROP_CASES")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(200)
+    nexus::util::prop::env_cases(200)
 }
 
 /// Random architectural configuration for one case: mesh dims, router
