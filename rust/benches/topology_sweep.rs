@@ -1,0 +1,85 @@
+//! `cargo bench --bench topology_sweep` — the fig14-style congestion
+//! story across NoC topologies: SpMV over hotspot and R-MAT inputs at a
+//! 16×16 array, on every [`TopologyKind`] (mesh, torus, ruche, chiplet).
+//! One machine-readable `BENCH_TOPOLOGY.json` line per (source, topology)
+//! cell, reporting cycles, mean port congestion, total/per-link flit
+//! movement, the hottest directed link, peak per-cycle link demand, and
+//! host wall-clock — the data behind "which topology decongests skewed
+//! traffic, and at what latency cost".
+
+use nexus::config::{ArchConfig, TopologyKind};
+use nexus::machine::Machine;
+use nexus::noc::routing::Dir;
+use nexus::noc::LINKS_PER_PE;
+use nexus::tensor::gen;
+use nexus::util::bench::bench;
+use nexus::util::SplitMix64;
+use nexus::workloads::Spec;
+
+fn spec_for(source: &str, seed: u64) -> Spec {
+    let n = 128;
+    let density = 0.08;
+    let mut rng = SplitMix64::new(seed);
+    let a = match source {
+        "hotspot" => gen::hotspot_csr(&mut rng, n, n, density, 4, 0.9),
+        "rmat" => {
+            let target = ((n * n) as f64 * density).round() as usize;
+            gen::rmat_csr(&mut rng, n, n, target, gen::RMAT_PROBS)
+        }
+        other => panic!("unknown source {other}"),
+    };
+    let x = gen::random_vec(&mut rng, n, 3);
+    Spec::Spmv { a, x }
+}
+
+fn main() {
+    let seed = 1u64;
+    let (w, h) = (16usize, 16usize);
+    for source in ["hotspot", "rmat"] {
+        let spec = spec_for(source, seed);
+        for kind in TopologyKind::ALL {
+            let cfg = ArchConfig::nexus()
+                .with_array(w, h)
+                .with_topology(kind)
+                .with_chiplet((8, 8), 4);
+            let mut m = Machine::new(cfg.clone());
+            let compiled = m.compile(&spec).expect("compile");
+            let exec = m.execute(&compiled).expect("topology bench run");
+            assert!(exec.validated(), "{source}/{} must validate", kind.name());
+            let stats = exec.stats.as_ref().expect("fabric stats");
+            let congestion = exec.result.congestion.iter().sum::<f64>()
+                / exec.result.congestion.len() as f64;
+            let (hot_from, hot_to, hot_flits) = match stats.max_link_flits() {
+                Some((idx, flits)) => {
+                    let from = idx / LINKS_PER_PE;
+                    let dir = Dir::from_port(idx % LINKS_PER_PE + 1);
+                    let to = nexus::noc::build_topology(&cfg)
+                        .neighbor(from, dir)
+                        .expect("hottest link wired");
+                    (from, to, flits)
+                }
+                None => (0, 0, 0),
+            };
+            let wall_s = bench(
+                &format!("spmv {source} {w}x{h} {}", kind.name()),
+                3,
+                || {
+                    m.execute(&compiled).expect("topology bench run");
+                },
+            );
+            println!(
+                "BENCH_TOPOLOGY.json {{\"bench\":\"topology_sweep\",\
+                 \"mesh\":\"{w}x{h}\",\"source\":\"{source}\",\
+                 \"topology\":\"{}\",\"cycles\":{},\"congestion\":{congestion:.4},\
+                 \"link_flits\":{},\"peak_link_demand\":{},\
+                 \"hot_link\":[{hot_from},{hot_to},{hot_flits}],\
+                 \"utilization\":{:.4},\"wall_s\":{wall_s:.6}}}",
+                kind.name(),
+                exec.cycles(),
+                stats.link_flits_total(),
+                stats.peak_link_demand,
+                exec.result.utilization,
+            );
+        }
+    }
+}

@@ -71,6 +71,58 @@ impl StepMode {
     }
 }
 
+/// Network topology connecting the PE routers. See
+/// [`crate::noc::topology`] for the link-level semantics of each variant.
+///
+/// The default [`TopologyKind::Mesh2D`] reproduces the paper's fabric
+/// bit-identically; the other variants reuse the same router microarchitecture
+/// (buffers, On/Off flow control, separable allocator) over different link
+/// sets, so congestion behavior — where en-route execution lives — can be
+/// compared across network shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum TopologyKind {
+    /// The paper's 2D mesh (default; bit-identical to the pre-topology
+    /// simulator).
+    #[default]
+    Mesh2D,
+    /// 2D torus: the mesh plus wraparound links on both axes. Shorter
+    /// average distance; routed with shortest-wrap dimension-order routing
+    /// plus bubble flow control for deadlock freedom on the rings.
+    Torus2D,
+    /// Ruche network: the mesh plus long-range skip links of stride
+    /// [`ArchConfig::ruche_stride`] in all four directions.
+    Ruche,
+    /// Two-level chiplet hierarchy (DCRA-style): the mesh partitioned into
+    /// [`ArchConfig::chiplet_dims`] tiles, with boundary-crossing links
+    /// paying [`ArchConfig::inter_chiplet_latency`] cycles per hop.
+    Chiplet2L,
+}
+
+impl TopologyKind {
+    /// All variants, in CLI/report order.
+    pub const ALL: [TopologyKind; 4] = [
+        TopologyKind::Mesh2D,
+        TopologyKind::Torus2D,
+        TopologyKind::Ruche,
+        TopologyKind::Chiplet2L,
+    ];
+
+    /// CLI / report name (`--topology <name>`).
+    pub fn name(self) -> &'static str {
+        match self {
+            TopologyKind::Mesh2D => "mesh",
+            TopologyKind::Torus2D => "torus",
+            TopologyKind::Ruche => "ruche",
+            TopologyKind::Chiplet2L => "chiplet",
+        }
+    }
+
+    /// Parse a CLI name (as printed by [`TopologyKind::name`]).
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
 /// NoC routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutingPolicy {
@@ -131,6 +183,18 @@ pub struct ArchConfig {
     /// Simulator scheduling mode (host-side only; does not change modeled
     /// behavior). See [`StepMode`].
     pub step_mode: StepMode,
+    /// Network topology connecting the routers. See [`TopologyKind`].
+    pub topology: TopologyKind,
+    /// Skip-link stride for [`TopologyKind::Ruche`] (ignored otherwise).
+    /// A ruche link jumps `ruche_stride` routers along one axis.
+    pub ruche_stride: usize,
+    /// Chiplet tile dimensions (width, height) for
+    /// [`TopologyKind::Chiplet2L`] (ignored otherwise). Must divide the
+    /// array dimensions.
+    pub chiplet_dims: (usize, usize),
+    /// Per-hop latency in cycles of a link that crosses a chiplet boundary
+    /// ([`TopologyKind::Chiplet2L`] only; intra-chiplet hops stay 1 cycle).
+    pub inter_chiplet_latency: usize,
 }
 
 impl ArchConfig {
@@ -156,6 +220,10 @@ impl ArchConfig {
             max_cycles: 2_000_000,
             seed: 0xA3C5,
             step_mode: StepMode::ActiveSet,
+            topology: TopologyKind::Mesh2D,
+            ruche_stride: 2,
+            chiplet_dims: (4, 4),
+            inter_chiplet_latency: 4,
         }
     }
 
@@ -217,6 +285,26 @@ impl ArchConfig {
         self
     }
 
+    /// Override the network topology ([`TopologyKind`]).
+    pub fn with_topology(mut self, topology: TopologyKind) -> Self {
+        self.topology = topology;
+        self
+    }
+
+    /// Override the ruche skip-link stride (implies nothing about topology;
+    /// combine with [`Self::with_topology`]).
+    pub fn with_ruche_stride(mut self, stride: usize) -> Self {
+        self.ruche_stride = stride;
+        self
+    }
+
+    /// Override the chiplet tile dimensions and inter-chiplet hop latency.
+    pub fn with_chiplet(mut self, dims: (usize, usize), latency: usize) -> Self {
+        self.chiplet_dims = dims;
+        self.inter_chiplet_latency = latency;
+        self
+    }
+
     /// Number of PEs in the fabric.
     #[inline]
     pub fn num_pes(&self) -> usize {
@@ -259,6 +347,26 @@ impl ArchConfig {
         }
         if self.num_pes() > 256 {
             return Err("destination fields are 8-bit; at most 256 PEs".into());
+        }
+        match self.topology {
+            TopologyKind::Mesh2D | TopologyKind::Torus2D => {}
+            TopologyKind::Ruche => {
+                if self.ruche_stride < 2 {
+                    return Err("ruche stride must be >= 2 (1 is a plain mesh link)".into());
+                }
+            }
+            TopologyKind::Chiplet2L => {
+                let (cw, ch) = self.chiplet_dims;
+                if cw == 0 || ch == 0 || self.width % cw != 0 || self.height % ch != 0 {
+                    return Err(format!(
+                        "chiplet dims {cw}x{ch} must divide the {}x{} array",
+                        self.width, self.height
+                    ));
+                }
+                if self.inter_chiplet_latency == 0 || self.inter_chiplet_latency > 255 {
+                    return Err("inter-chiplet latency must be in 1..=255 cycles".into());
+                }
+            }
         }
         Ok(())
     }
@@ -320,5 +428,48 @@ mod tests {
         c.router_buf_depth = 1;
         assert!(c.validate().is_err());
         assert!(ArchConfig::nexus().with_array(20, 20).validate().is_err());
+    }
+
+    #[test]
+    fn topology_names_roundtrip() {
+        for kind in TopologyKind::ALL {
+            assert_eq!(TopologyKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(TopologyKind::parse("hypercube"), None);
+        assert_eq!(TopologyKind::default(), TopologyKind::Mesh2D);
+        assert_eq!(ArchConfig::nexus().topology, TopologyKind::Mesh2D);
+    }
+
+    #[test]
+    fn topology_configs_validated() {
+        ArchConfig::nexus().with_topology(TopologyKind::Torus2D).validate().unwrap();
+        ArchConfig::nexus()
+            .with_topology(TopologyKind::Ruche)
+            .with_ruche_stride(2)
+            .validate()
+            .unwrap();
+        assert!(ArchConfig::nexus()
+            .with_topology(TopologyKind::Ruche)
+            .with_ruche_stride(1)
+            .validate()
+            .is_err());
+        ArchConfig::nexus()
+            .with_array(8, 8)
+            .with_topology(TopologyKind::Chiplet2L)
+            .with_chiplet((4, 4), 4)
+            .validate()
+            .unwrap();
+        // Tile dims must divide the array; latency must be nonzero.
+        assert!(ArchConfig::nexus()
+            .with_array(8, 8)
+            .with_topology(TopologyKind::Chiplet2L)
+            .with_chiplet((3, 4), 4)
+            .validate()
+            .is_err());
+        assert!(ArchConfig::nexus()
+            .with_topology(TopologyKind::Chiplet2L)
+            .with_chiplet((4, 4), 0)
+            .validate()
+            .is_err());
     }
 }

@@ -16,7 +16,7 @@ pub mod ablation;
 pub mod report;
 
 use crate::baselines::{roster, RunResult};
-use crate::config::{ArchConfig, StepMode};
+use crate::config::{ArchConfig, StepMode, TopologyKind};
 use crate::dataset::{run_corpus, Corpus, RunOptions};
 use crate::machine::{Compiled, ExecError, Machine, MachinePool};
 use crate::workloads::suite;
@@ -167,13 +167,25 @@ pub fn corpus_list(filter: Option<&str>) -> String {
 /// with bit-exact validation. Returns the per-scenario JSON lines (the
 /// `BENCH_CORPUS.json` artifact body) plus a success flag that is `false`
 /// if any scenario failed or no scenario matched.
-pub fn corpus_run(filter: Option<&str>, seed: u64, step_mode: StepMode) -> (String, bool) {
+pub fn corpus_run(
+    filter: Option<&str>,
+    seed: u64,
+    step_mode: StepMode,
+    topology: TopologyKind,
+) -> (String, bool) {
     let corpus = Corpus::builtin();
     let scenarios = corpus.select(filter);
     if scenarios.is_empty() {
         return (String::new(), false);
     }
-    let runs = run_corpus(&scenarios, RunOptions { seed, step_mode });
+    let runs = run_corpus(
+        &scenarios,
+        RunOptions {
+            seed,
+            step_mode,
+            topology,
+        },
+    );
     let ok = runs.iter().all(|r| r.passed());
     let lines: Vec<String> = runs.iter().map(|r| r.json_line()).collect();
     (lines.join("\n"), ok)
@@ -318,11 +330,21 @@ mod tests {
     fn corpus_cli_surfaces_work() {
         let listing = corpus_list(Some("smoke/*"));
         assert!(listing.contains("smoke/spmv-uniform-d30-4x4"), "{listing}");
-        let (lines, ok) = corpus_run(Some("smoke/spmv-*"), 1, StepMode::ActiveSet);
+        let (lines, ok) = corpus_run(
+            Some("smoke/spmv-*"),
+            1,
+            StepMode::ActiveSet,
+            TopologyKind::Mesh2D,
+        );
         assert!(ok, "{lines}");
         assert!(lines.lines().count() >= 2);
         assert!(lines.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
-        let (empty, ok) = corpus_run(Some("no-such/*"), 1, StepMode::ActiveSet);
+        let (empty, ok) = corpus_run(
+            Some("no-such/*"),
+            1,
+            StepMode::ActiveSet,
+            TopologyKind::Mesh2D,
+        );
         assert!(!ok && empty.is_empty(), "unmatched filter must fail");
     }
 

@@ -123,8 +123,9 @@ pub struct Corpus {
 impl Corpus {
     /// The built-in corpus: smoke set (tiny tensors, 4x4 mesh — the CI
     /// gate), the matrix sweep (8x8, every irregular generator against the
-    /// uniform baseline at matched densities), and the graph sweep (8x8,
-    /// R-MAT vs contact-network inputs).
+    /// uniform baseline at matched densities), the graph sweep (8x8,
+    /// R-MAT vs contact-network inputs), and the hotspot set (8x8, the
+    /// traffic-concentrating inputs used by the topology congestion gate).
     pub fn builtin() -> Self {
         let mut c = Corpus {
             scenarios: Vec::new(),
@@ -132,6 +133,7 @@ impl Corpus {
         c.register_smoke();
         c.register_matrix();
         c.register_graph();
+        c.register_hotspot();
         c
     }
 
@@ -424,6 +426,50 @@ impl Corpus {
         }
     }
 
+    /// Traffic-concentrating scenarios: skewed tensors whose AM streams
+    /// converge on a few owner PEs, saturating the links into the hot
+    /// region. This is the group the `--topology` congestion comparisons
+    /// (and the CI torus acceptance run) sweep, since wraparound/skip links
+    /// change its per-link flit distribution the most.
+    fn register_hotspot(&mut self) {
+        let mesh = (8, 8);
+        self.add(Scenario::new(
+            "hotspot/spmv-hotspot-d20-8x8",
+            "spmv",
+            "hotspot",
+            mesh,
+            0.20,
+            |rng| {
+                let a = gen::hotspot_csr(rng, 64, 64, 0.20, 2, 0.9);
+                let x = gen::random_vec(rng, 64, 3);
+                Spec::Spmv { a, x }
+            },
+        ));
+        self.add(Scenario::new(
+            "hotspot/spmv-rmat-d20-8x8",
+            "spmv",
+            "rmat",
+            mesh,
+            0.20,
+            |rng| {
+                let a = gen::rmat_csr(rng, 64, 64, 819, RMAT_PROBS);
+                let x = gen::random_vec(rng, 64, 3);
+                Spec::Spmv { a, x }
+            },
+        ));
+        self.add(Scenario::new(
+            "hotspot/bfs-rmat-8x8",
+            "bfs",
+            "rmat",
+            mesh,
+            1.0,
+            |rng| {
+                let g = gen::rmat_graph(rng, 96, 400, RMAT_PROBS);
+                Spec::Bfs { g, src: 0 }
+            },
+        ));
+    }
+
     /// All scenarios, registration order.
     pub fn scenarios(&self) -> &[Scenario] {
         &self.scenarios
@@ -494,6 +540,7 @@ mod tests {
         assert!(!smoke.is_empty() && smoke.len() <= 8);
         assert!(!c.filter("matrix/*").is_empty());
         assert!(!c.filter("graph/*").is_empty());
+        assert!(!c.filter("hotspot/*").is_empty());
         // Valid meshes.
         for s in c.scenarios() {
             s.config().validate().expect("scenario config");

@@ -10,8 +10,10 @@
 //! exactly which scenarios broke.
 
 use super::corpus::Scenario;
-use crate::config::StepMode;
+use crate::config::{StepMode, TopologyKind};
 use crate::machine::{Machine, MachinePool};
+use crate::noc::{build_topology, LINKS_PER_PE};
+use crate::noc::routing::Dir;
 use std::collections::HashMap;
 
 /// Options for [`run_corpus`].
@@ -21,6 +23,8 @@ pub struct RunOptions {
     pub seed: u64,
     /// Simulator scheduling mode (results are bit-identical either way).
     pub step_mode: StepMode,
+    /// NoC topology the sweep runs on (`--topology`; default 2D mesh).
+    pub topology: TopologyKind,
 }
 
 impl Default for RunOptions {
@@ -28,6 +32,7 @@ impl Default for RunOptions {
         RunOptions {
             seed: 1,
             step_mode: StepMode::ActiveSet,
+            topology: TopologyKind::Mesh2D,
         }
     }
 }
@@ -46,6 +51,13 @@ pub struct ScenarioMetrics {
     pub op_cv: f64,
     /// Max/mean of per-PE committed ops.
     pub op_max_mean: f64,
+    /// Total flits over all directed links (== `flit_hops`).
+    pub link_flits_total: u64,
+    /// Most flits any single cycle moved across the whole NoC.
+    pub peak_link_demand: u64,
+    /// Per-directed-link flit counts, nonzero links only, as
+    /// `(from_pe, to_pe, flits)` sorted hottest-first.
+    pub links: Vec<(usize, usize, u64)>,
     pub validated: bool,
 }
 
@@ -56,6 +68,8 @@ pub struct ScenarioRun {
     pub kernel: &'static str,
     pub source: &'static str,
     pub mesh: String,
+    /// Topology name the run used (`mesh`, `torus`, `ruche`, `chiplet`).
+    pub topology: &'static str,
     pub seed: u64,
     /// Content fingerprint of the scenario's tensors (compile-cache key).
     pub fingerprint: u64,
@@ -88,11 +102,12 @@ impl ScenarioRun {
         let _ = write!(
             s,
             "{{\"scenario\":\"{}\",\"kernel\":\"{}\",\"source\":\"{}\",\"mesh\":\"{}\",\
-             \"seed\":{},\"fingerprint\":\"{:#018x}\"",
+             \"topology\":\"{}\",\"seed\":{},\"fingerprint\":\"{:#018x}\"",
             json_escape(&self.scenario),
             json_escape(self.kernel),
             json_escape(self.source),
             json_escape(&self.mesh),
+            json_escape(self.topology),
             self.seed,
             self.fingerprint,
         );
@@ -102,7 +117,8 @@ impl ScenarioRun {
                     s,
                     ",\"status\":\"ok\",\"cycles\":{},\"work_ops\":{},\
                      \"utilization\":{:.4},\"congestion\":{:.4},\"load_cv\":{:.4},\
-                     \"op_cv\":{:.4},\"op_max_mean\":{:.4},\"validated\":{}}}",
+                     \"op_cv\":{:.4},\"op_max_mean\":{:.4},\
+                     \"link_flits\":{},\"peak_link_demand\":{},\"links\":[",
                     m.cycles,
                     m.work_ops,
                     m.utilization,
@@ -110,8 +126,16 @@ impl ScenarioRun {
                     m.load_cv,
                     m.op_cv,
                     m.op_max_mean,
-                    m.validated,
+                    m.link_flits_total,
+                    m.peak_link_demand,
                 );
+                for (i, &(from, to, flits)) in m.links.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    let _ = write!(s, "[{from},{to},{flits}]");
+                }
+                let _ = write!(s, "],\"validated\":{}}}", m.validated);
             }
             Err(e) => {
                 let _ = write!(s, ",\"status\":\"error\",\"error\":\"{}\"}}", json_escape(e));
@@ -137,14 +161,36 @@ pub fn run_corpus(scenarios: &[&Scenario], opts: RunOptions) -> Vec<ScenarioRun>
     )
 }
 
+/// Decode a raw `link_flits` vector into `(from, to, flits)` triples for
+/// the links the topology actually wires, nonzero only, hottest-first.
+fn decode_links(cfg: &crate::config::ArchConfig, link_flits: &[u64]) -> Vec<(usize, usize, u64)> {
+    let topo = build_topology(cfg);
+    let mut links: Vec<(usize, usize, u64)> = link_flits
+        .iter()
+        .enumerate()
+        .filter(|&(_, &f)| f > 0)
+        .filter_map(|(idx, &f)| {
+            let from = idx / LINKS_PER_PE;
+            let dir = Dir::from_port(idx % LINKS_PER_PE + 1);
+            topo.neighbor(from, dir).map(|to| (from, to, f))
+        })
+        .collect();
+    links.sort_by(|a, b| b.2.cmp(&a.2).then(a.0.cmp(&b.0)).then(a.1.cmp(&b.1)));
+    links
+}
+
 fn run_one(
     machines: &mut HashMap<(usize, usize), Machine>,
     sc: &Scenario,
     opts: RunOptions,
 ) -> ScenarioRun {
+    let cfg = sc
+        .config()
+        .with_topology(opts.topology)
+        .with_step_mode(opts.step_mode);
     let m = machines
         .entry(sc.mesh)
-        .or_insert_with(|| Machine::new(sc.config().with_step_mode(opts.step_mode)));
+        .or_insert_with(|| Machine::new(cfg.clone()));
     let spec = sc.spec(opts.seed);
     let fingerprint = crate::machine::spec_fingerprint(&spec);
     let outcome = match m.run(&spec) {
@@ -152,6 +198,14 @@ fn run_one(
             let (load_cv, op_cv, op_max_mean) = match &e.stats {
                 Some(s) => (s.load_cv(), s.op_cv(), s.op_max_mean()),
                 None => (0.0, 0.0, 0.0),
+            };
+            let (link_flits_total, peak_link_demand, links) = match &e.stats {
+                Some(s) => (
+                    s.link_flits_total(),
+                    s.peak_link_demand,
+                    decode_links(&cfg, &s.link_flits),
+                ),
+                None => (0, 0, Vec::new()),
             };
             let congestion =
                 e.result.congestion.iter().sum::<f64>() / e.result.congestion.len() as f64;
@@ -163,6 +217,9 @@ fn run_one(
                 load_cv,
                 op_cv,
                 op_max_mean,
+                link_flits_total,
+                peak_link_demand,
+                links,
                 validated: e.result.validated,
             })
         }
@@ -173,6 +230,7 @@ fn run_one(
         kernel: sc.kernel,
         source: sc.source,
         mesh: sc.mesh_name(),
+        topology: opts.topology.name(),
         seed: opts.seed,
         fingerprint,
         outcome,
@@ -247,12 +305,52 @@ mod tests {
                     assert!(m.validated, "{} not validated", run.scenario);
                     assert!(m.cycles > 0);
                     assert!(m.op_max_mean >= 1.0, "{}: max/mean < 1", run.scenario);
+                    assert!(m.link_flits_total > 0, "{}: no link traffic", run.scenario);
+                    assert!(m.peak_link_demand >= 1, "{}", run.scenario);
+                    assert!(!m.links.is_empty(), "{}", run.scenario);
                     let line = run.json_line();
                     assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
                     assert!(line.contains("\"status\":\"ok\""), "{line}");
+                    assert!(line.contains("\"topology\":\"mesh\""), "{line}");
+                    assert!(line.contains("\"peak_link_demand\":"), "{line}");
+                    assert!(line.contains("\"links\":[["), "{line}");
                 }
                 Err(e) => panic!("{} failed: {e}", run.scenario),
             }
+        }
+    }
+
+    #[test]
+    fn torus_hotspot_sweep_validates_and_reports_links() {
+        // The acceptance path behind `nexus corpus run --topology torus
+        // --filter 'hotspot/*'`: every scenario validates and its JSON line
+        // carries per-directed-link flit counts and peak link demand.
+        let corpus = Corpus::builtin();
+        let hot = corpus.filter("hotspot/*");
+        assert!(!hot.is_empty());
+        let runs = run_corpus(
+            &hot,
+            RunOptions {
+                topology: crate::config::TopologyKind::Torus2D,
+                ..RunOptions::default()
+            },
+        );
+        for run in &runs {
+            let m = run
+                .outcome
+                .as_ref()
+                .unwrap_or_else(|e| panic!("{} failed: {e}", run.scenario));
+            assert!(m.validated, "{} not validated", run.scenario);
+            // Every reported link must be between torus neighbours; total
+            // must partition into the per-link counts.
+            assert_eq!(
+                m.links.iter().map(|&(_, _, f)| f).sum::<u64>(),
+                m.link_flits_total,
+                "{}",
+                run.scenario
+            );
+            let line = run.json_line();
+            assert!(line.contains("\"topology\":\"torus\""), "{line}");
         }
     }
 

@@ -56,10 +56,11 @@ pub mod stats;
 
 use crate::am::Message;
 use crate::compiler::Program;
-use crate::config::{ArchConfig, ExecPolicy, RoutingPolicy, StepMode};
+use crate::config::{ArchConfig, ExecPolicy, RoutingPolicy, StepMode, TopologyKind};
 use crate::isa::{alu_eval, ConfigEntry, Opcode};
-use crate::noc::router::{Router, NUM_PORTS, PORT_LOCAL};
-use crate::noc::routing::{route_ports, route_xy, Dir};
+use crate::noc::router::{port_class, Router, MAX_PORTS, PORT_LOCAL};
+use crate::noc::routing::Dir;
+use crate::noc::topology::{build_topology, link_index, Topology, LINKS_PER_PE};
 use crate::pe::{ActiveStream, Pe, StreamMode, OUTQ_CAP};
 use crate::util::SplitMix64;
 use active::WakeList;
@@ -97,7 +98,8 @@ impl std::fmt::Display for DeadlockError {
 
 impl std::error::Error for DeadlockError {}
 
-/// The Nexus Machine fabric: a `width x height` mesh of PEs + routers.
+/// The Nexus Machine fabric: a `width x height` array of PEs + routers,
+/// connected by the [`Topology`] selected in the config (mesh by default).
 pub struct NexusFabric {
     pub cfg: ArchConfig,
     pes: Vec<Pe>,
@@ -113,8 +115,21 @@ pub struct NexusFabric {
     axi_rr: usize,
     /// Static AMs still waiting off-chip (refill fast-path counter).
     pending_remaining: usize,
-    /// Precomputed mesh coordinates per PE id (route-phase hot path).
-    xy: Vec<(u8, u8)>,
+    /// The link structure (route computation + geometry).
+    topo: Box<dyn Topology>,
+    /// Precomputed neighbor table: `nbr_tab[id][port]` is the PE reached by
+    /// leaving `id` through that output port, `u16::MAX` when unwired
+    /// (route-phase hot path; PE ids fit in u16 — the config caps at 256).
+    nbr_tab: Vec<[u16; MAX_PORTS]>,
+    /// Precomputed per-link traversal latencies (1 except chiplet-boundary
+    /// hops).
+    lat_tab: Vec<[u8; MAX_PORTS]>,
+    /// Ports wired per router (5 for the mesh family, 9 for ruche).
+    nports: usize,
+    /// Torus bubble flow control active (see [`Topology::requires_bubble`]).
+    torus_bubble: bool,
+    /// Link traversals in the current cycle (peak-demand accumulator).
+    link_demand: u64,
     rng: SplitMix64,
     /// Global cycle counter (includes inter-tile load cycles).
     cycle: u64,
@@ -134,25 +149,40 @@ impl NexusFabric {
     pub fn new(cfg: ArchConfig) -> Self {
         cfg.validate().expect("invalid ArchConfig");
         let n = cfg.num_pes();
+        let topo = build_topology(&cfg);
+        let nports = topo.num_ports();
+        let mut nbr_tab = vec![[u16::MAX; MAX_PORTS]; n];
+        let mut lat_tab = vec![[1u8; MAX_PORTS]; n];
+        for (id, (nbrs, lats)) in nbr_tab.iter_mut().zip(lat_tab.iter_mut()).enumerate() {
+            for port in 1..nports {
+                let dir = Dir::from_port(port);
+                if let Some(to) = topo.neighbor(id, dir) {
+                    nbrs[port] = to as u16;
+                    lats[port] = topo.hop_latency(id, dir) as u8;
+                }
+            }
+        }
+        let torus_bubble = topo.requires_bubble();
         let mut stats = FabricStats::default();
         stats.per_pe_busy_cycles = vec![0; n];
         stats.per_pe_committed_ops = vec![0; n];
+        stats.link_flits = vec![0; n * LINKS_PER_PE];
         NexusFabric {
             pes: (0..n).map(|_| Pe::new(cfg.dmem_words)).collect(),
             routers: (0..n)
-                .map(|_| Router::new(cfg.router_buf_depth, cfg.t_off, cfg.t_on))
+                .map(|_| Router::new(nports, cfg.router_buf_depth, cfg.t_off, cfg.t_on))
                 .collect(),
             config_mem: Vec::new(),
             pending_static: vec![VecDeque::new(); n],
             axi_credit: 0.0,
             axi_rr: 0,
             pending_remaining: 0,
-            xy: (0..n)
-                .map(|id| {
-                    let (x, y) = cfg.pe_xy(id);
-                    (x as u8, y as u8)
-                })
-                .collect(),
+            topo,
+            nbr_tab,
+            lat_tab,
+            nports,
+            torus_bubble,
+            link_demand: 0,
             rng: SplitMix64::new(cfg.seed),
             cycle: 0,
             next_msg_id: 1,
@@ -190,14 +220,18 @@ impl NexusFabric {
         self.awake_pes.clear();
         self.awake_routers.clear();
         self.config_mem.clear();
-        // Reset every counter but keep the per-PE vector's allocation.
+        self.link_demand = 0;
+        // Reset every counter but keep the per-PE/per-link vector allocations.
         let mut per_pe = std::mem::take(&mut self.stats.per_pe_busy_cycles);
         per_pe.fill(0);
         let mut per_pe_ops = std::mem::take(&mut self.stats.per_pe_committed_ops);
         per_pe_ops.fill(0);
+        let mut link_flits = std::mem::take(&mut self.stats.link_flits);
+        link_flits.fill(0);
         self.stats = FabricStats {
             per_pe_busy_cycles: per_pe,
             per_pe_committed_ops: per_pe_ops,
+            link_flits,
             ..FabricStats::default()
         };
     }
@@ -263,7 +297,8 @@ impl NexusFabric {
                 self.stats.offchip_bytes += crate::am::packed::AM_BYTES as u64;
             }
             self.pes[id] = pe;
-            self.routers[id] = Router::new(self.cfg.router_buf_depth, self.cfg.t_off, self.cfg.t_on);
+            self.routers[id] =
+                Router::new(self.nports, self.cfg.router_buf_depth, self.cfg.t_off, self.cfg.t_on);
         }
         // Data memories load *before* execution (§3.3.3: "data loading into
         // data memories occurs after each tile execution is complete").
@@ -348,6 +383,25 @@ impl NexusFabric {
                 culprits.push(format!("R{id} occ={}", self.routers[id].occupancy()));
             }
         }
+        // Saturated-link culprits: a receiving input port advertising OFF
+        // with flits queued names the directed link feeding it. (Under
+        // On/Off flow control buffers hover at one free slot rather than
+        // filling completely, so OFF-with-occupancy is the saturation
+        // signal, not `free() == 0`.)
+        for (id, r) in self.routers.iter().enumerate() {
+            for p in 1..r.num_ports() {
+                if !r.on_state[p] && !r.inputs[p].is_empty() {
+                    let from = self.nbr_tab[id][p];
+                    if from != u16::MAX {
+                        let dir = Dir::from_port(p).opposite();
+                        culprits.push(format!(
+                            "link R{from}->R{id} {dir:?} occ={}",
+                            r.inputs[p].len()
+                        ));
+                    }
+                }
+            }
+        }
         for (id, pe) in self.pes.iter().enumerate() {
             if !pe.is_idle() || self.routers[id].occupancy() > 0 {
                 detail += &format!(
@@ -364,33 +418,26 @@ impl NexusFabric {
             }
         }
         // Per-port head-flit forensics: what does each stuck head want?
+        // Topology-aware: enumerate the ports this router actually wires
+        // instead of assuming four mesh directions.
         for id in 0..self.cfg.num_pes() {
-            let (x, y) = self.cfg.pe_xy(id);
-            for p in 0..NUM_PORTS {
+            for p in 0..self.routers[id].num_ports() {
                 let Some(m) = self.routers[id].inputs[p].head_msg() else {
                     continue;
                 };
                 let tgt = m.route_target();
-                let acc: Vec<String> = [Dir::North, Dir::East, Dir::South, Dir::West]
-                    .iter()
-                    .filter(|d| {
-                        let (tx, ty) = self.cfg.pe_xy(tgt.unwrap_or(0) as usize);
-                        let _ = (tx, ty);
-                        match d {
-                            Dir::North => y > 0,
-                            Dir::South => y + 1 < self.cfg.height,
-                            Dir::East => x + 1 < self.cfg.width,
-                            Dir::West => x > 0,
-                            Dir::Local => false,
+                let acc: Vec<String> = (1..self.nports)
+                    .filter_map(|port| {
+                        let nbr = self.nbr_tab[id][port];
+                        if nbr == u16::MAX {
+                            return None;
                         }
-                    })
-                    .map(|&d| {
-                        let nbr = self.neighbor(id, d);
-                        format!(
+                        let d = Dir::from_port(port);
+                        Some(format!(
                             "{d:?}:{}{}",
-                            u8::from(self.routers[nbr].on_state[d.opposite_port()]),
-                            self.routers[nbr].inputs[d.opposite_port()].free()
-                        )
+                            u8::from(self.routers[nbr as usize].on_state[d.opposite_port()]),
+                            self.routers[nbr as usize].inputs[d.opposite_port()].free()
+                        ))
                     })
                     .collect();
                 detail += &format!(
@@ -436,11 +483,13 @@ impl NexusFabric {
     /// One clock cycle. Dispatches on [`StepMode`]; both schedules are
     /// bit-identical (see the module docs and `tests/step_equivalence.rs`).
     pub fn step(&mut self) {
+        self.link_demand = 0;
         self.axi_refill();
         match self.cfg.step_mode {
             StepMode::DenseOracle => self.step_dense(),
             StepMode::ActiveSet => self.step_active(),
         }
+        self.stats.peak_link_demand = self.stats.peak_link_demand.max(self.link_demand);
         self.cycle += 1;
     }
 
@@ -842,6 +891,18 @@ impl NexusFabric {
         };
         let Some(mut m) = m else { return };
         if self.cfg.routing == RoutingPolicy::Valiant && m.valiant_hop.is_none() {
+            if self.cfg.topology == TopologyKind::Torus2D {
+                // Torus Valiant: classic uniformly random intermediate node
+                // (VAL [32]); both legs follow shortest-wrap DOR and the
+                // bubble flow control keeps each ring deadlock-free, so no
+                // rectangle constraint is needed or meaningful on a torus.
+                if let Some(dst) = m.head_dest() {
+                    let hop = self.rng.below_usize(self.cfg.num_pes()) as u8;
+                    if hop != dst && hop as usize != id {
+                        m.valiant_hop = Some(hop);
+                    }
+                }
+            }
             // Randomized *minimal-path* load balancing (ROMM [33], the
             // scheme the paper's TIA-Valiant cites): the intermediate hop
             // is drawn inside the minimal rectangle between source and
@@ -849,7 +910,9 @@ impl NexusFabric {
             // path is monotone in both dimensions AND a legal west-first
             // path — no U-turns, no {N,S}->W turns — which keeps the
             // two-phase route deadlock-free without virtual channels.
-            if let Some(dst) = m.head_dest() {
+            // (Ruche and chiplet fabrics reuse it unchanged: their
+            // candidate sets still shrink the same rectangle.)
+            else if let Some(dst) = m.head_dest() {
                 let (sx, sy) = self.cfg.pe_xy(id);
                 let (dx, dy) = self.cfg.pe_xy(dst as usize);
                 let (ylo, yhi) = (sy.min(dy), sy.max(dy));
@@ -892,9 +955,9 @@ impl NexusFabric {
         {
             return;
         }
-        let start = (self.cycle as usize) % NUM_PORTS;
-        for k in 0..NUM_PORTS {
-            let p = (start + k) % NUM_PORTS;
+        let start = (self.cycle as usize) % self.nports;
+        for k in 0..self.nports {
+            let p = (start + k) % self.nports;
             let ready = self.routers[id].inputs[p]
                 .head_msg()
                 .map(|m| m.alu_ready() && m.head_dest() != Some(id as u8))
@@ -924,34 +987,16 @@ impl NexusFabric {
 
     // --- phase 3: routing ---------------------------------------------------
 
-    #[inline]
-    fn xy(&self, id: usize) -> (usize, usize) {
-        let (x, y) = self.xy[id];
-        (x as usize, y as usize)
-    }
-
-    fn neighbor(&self, id: usize, dir: Dir) -> usize {
-        let (x, y) = self.xy(id);
-        let (nx, ny) = match dir {
-            Dir::North => (x, y - 1),
-            Dir::South => (x, y + 1),
-            Dir::East => (x + 1, y),
-            Dir::West => (x - 1, y),
-            Dir::Local => (x, y),
-        };
-        self.cfg.pe_id(nx, ny)
-    }
-
     fn route_phase(&mut self, id: usize) {
         // Fast path: nothing buffered, nothing to route (the common case on
         // a partially loaded fabric — see EXPERIMENTS.md §Perf).
         if self.routers[id].inputs.iter().all(|b| b.is_empty()) {
             return;
         }
-        let (x, y) = self.xy(id);
+        let nports = self.nports;
         // Clear Valiant hops that reached their intermediate router.
         if self.cfg.routing == RoutingPolicy::Valiant {
-            for p in 0..NUM_PORTS {
+            for p in 0..nports {
                 if let Some(m) = self.routers[id].inputs[p].head_msg_mut() {
                     if m.valiant_hop == Some(id as u8) {
                         m.valiant_hop = None;
@@ -959,9 +1004,11 @@ impl NexusFabric {
                 }
             }
         }
-        // Route computation: desired output direction per input port.
-        let mut want: [Option<Dir>; NUM_PORTS] = [None; NUM_PORTS];
-        for p in 0..NUM_PORTS {
+        // Route computation: desired output direction per input port, asked
+        // of the topology (the mesh path delegates to the original
+        // west-first/XY functions bit-for-bit).
+        let mut want: [Option<Dir>; MAX_PORTS] = [None; MAX_PORTS];
+        for p in 0..nports {
             if self.routers[id].locked_port == Some(p) {
                 continue; // being executed en-route this cycle
             }
@@ -978,20 +1025,19 @@ impl NexusFabric {
                 want[p] = Some(Dir::Local);
                 continue;
             }
-            let (tx, ty) = self.xy(t);
             let dir = match self.cfg.routing {
-                RoutingPolicy::Xy => route_xy(x, y, tx, ty),
-                // Valiant phases ride the same west-first turn model; with
-                // the hop constraint above, the composite path stays legal.
+                RoutingPolicy::Xy => self.topo.route_deterministic(id, t),
+                // Valiant phases ride the same turn rules; with the hop
+                // constraint above, the composite path stays legal.
                 RoutingPolicy::Valiant | RoutingPolicy::TurnModelAdaptive => {
                     let mut cands = [Dir::Local; 2];
-                    let n = route_ports(x, y, tx, ty, &mut cands);
+                    let n = self.topo.route_candidates(id, t, &mut cands);
                     debug_assert!(n >= 1);
                     // Congestion-aware adaptive choice: among permitted
                     // turns, prefer a downstream that can accept now, then
                     // the one with more free buffer space.
                     let score = |d: Dir| {
-                        let nbr = self.neighbor(id, d);
+                        let nbr = self.nbr_tab[id][d.port()] as usize;
                         let port = d.opposite_port();
                         let acc = self.routers[nbr].can_accept(port);
                         (acc, self.routers[nbr].effective_free(port))
@@ -1013,19 +1059,19 @@ impl NexusFabric {
         // Separable allocation: each output port arbitrates among requesting
         // input ports with a rotating priority pointer (Fig 8d). A request
         // mask skips output ports nobody asked for.
-        let mut requested = [false; NUM_PORTS];
+        let mut requested = [false; MAX_PORTS];
         for w in want.iter().flatten() {
             requested[w.port()] = true;
         }
-        let mut moved = [false; NUM_PORTS];
-        for out in 0..NUM_PORTS {
+        let mut moved = [false; MAX_PORTS];
+        for out in 0..nports {
             if !requested[out] {
                 continue;
             }
             let start = self.routers[id].rr_ptr[out];
             let mut winner = None;
-            for k in 0..NUM_PORTS {
-                let p = (start + k) % NUM_PORTS;
+            for k in 0..nports {
+                let p = (start + k) % nports;
                 if want[p].map(|d| d.port()) == Some(out) {
                     winner = Some(p);
                     break;
@@ -1033,12 +1079,25 @@ impl NexusFabric {
             }
             let Some(p) = winner else { continue };
             let dir = want[p].unwrap();
-            // Crossbar traversal if downstream accepts.
+            // Crossbar traversal if downstream accepts. On a torus the
+            // bubble rule applies: a flit continuing along the same
+            // direction may transit into any non-full buffer (ignoring
+            // On/Off), while a flit *entering* a ring (injection or turn)
+            // must leave one extra slot free — the classic bubble flow
+            // control that keeps each wraparound ring deadlock-free.
             let ok = if out == PORT_LOCAL {
                 self.pes[id].inbox.is_none()
             } else {
-                let nbr = self.neighbor(id, dir);
-                self.routers[nbr].can_accept(dir.opposite_port())
+                let nbr = self.nbr_tab[id][dir.port()] as usize;
+                let dport = dir.opposite_port();
+                if self.torus_bubble && p == dport {
+                    self.routers[nbr].can_transit(dport)
+                } else if self.torus_bubble {
+                    self.routers[nbr].can_accept(dport)
+                        && self.routers[nbr].effective_free(dport) >= 2
+                } else {
+                    self.routers[nbr].can_accept(dport)
+                }
             };
             if !ok {
                 continue;
@@ -1049,13 +1108,24 @@ impl NexusFabric {
                 self.pes[id].inbox = Some(m);
                 self.wake_pe(id);
             } else {
-                let nbr = self.neighbor(id, dir);
-                self.routers[nbr].stage(dir.opposite_port(), m);
+                let nbr = self.nbr_tab[id][dir.port()] as usize;
+                let dport = dir.opposite_port();
+                // Multi-cycle links (chiplet crossings) park the flit in the
+                // staging slot for `latency - 1` extra commits, modelling
+                // both the added latency and the reduced link bandwidth.
+                let lat = self.lat_tab[id][dir.port()];
+                if lat > 1 {
+                    self.routers[nbr].stage_delayed(dport, m, lat - 1);
+                } else {
+                    self.routers[nbr].stage(dport, m);
+                }
                 self.wake_router(nbr);
                 self.stats.flit_hops += 1;
                 self.stats.buf_writes += 1;
+                self.stats.link_flits[link_index(id, dir)] += 1;
+                self.link_demand += 1;
             }
-            self.routers[id].rr_ptr[out] = (p + 1) % NUM_PORTS;
+            self.routers[id].rr_ptr[out] = (p + 1) % nports;
             moved[p] = true;
         }
         self.routers[id].sample_stats(&moved);
@@ -1108,10 +1178,18 @@ impl NexusFabric {
             self.stats.per_pe_committed_ops[id] += pe.stats.alu_busy_cycles + pe.stats.mem_ops;
         }
         for r in &self.routers {
-            for p in 0..NUM_PORTS {
-                self.stats.absorb_port(p, &r.stats[p]);
+            for p in 0..r.num_ports() {
+                // Ruche ports fold onto their mesh direction's class so the
+                // Fig-14 per-port breakdown keeps its five columns.
+                self.stats.absorb_port(port_class(p), &r.stats[p]);
             }
         }
+    }
+
+    /// The topology this fabric was built on (runtime-selected via
+    /// [`ArchConfig::topology`]).
+    pub fn topology(&self) -> &dyn Topology {
+        self.topo.as_ref()
     }
 
     /// Message conservation at drain: everything created was retired — plus
@@ -1240,7 +1318,7 @@ impl NexusFabric {
             mix(&mut h, self.pending_static[id].len() as u64);
         }
         for r in &self.routers {
-            for p in 0..NUM_PORTS {
+            for p in 0..r.num_ports() {
                 mix(&mut h, r.inputs[p].len() as u64);
                 for m in r.inputs[p].iter() {
                     mix_msg(&mut h, m);
@@ -1248,6 +1326,7 @@ impl NexusFabric {
                 if let Some(m) = &r.staging[p] {
                     mix_msg(&mut h, m);
                 }
+                mix(&mut h, r.staging_wait[p] as u64);
                 mix(&mut h, u64::from(r.on_state[p]));
                 mix(&mut h, r.rr_ptr[p] as u64);
             }
@@ -1658,5 +1737,130 @@ mod tests {
         assert!(f.stats.utilization() > 0.0);
         assert!(f.stats.cycles >= f.stats.load_cycles);
         assert!(f.stats.offchip_bytes > 0);
+    }
+
+    /// Topology-variant config with non-trivial geometry on the 4x4 array:
+    /// 2x2 chiplets (so boundary crossings exist) with a 3-cycle crossing.
+    fn topo_cfg(kind: crate::config::TopologyKind) -> ArchConfig {
+        nexus().with_topology(kind).with_chiplet((2, 2), 3)
+    }
+
+    #[test]
+    fn every_topology_delivers_and_conserves() {
+        use crate::config::TopologyKind;
+        for kind in TopologyKind::ALL {
+            for mode in [StepMode::ActiveSet, StepMode::DenseOracle] {
+                let cfg = topo_cfg(kind).with_step_mode(mode);
+                let mut f = NexusFabric::new(cfg.clone());
+                let prog = store_program(&cfg, 0, 15, -7);
+                let out = f.run_program(&prog).unwrap();
+                assert_eq!(out, vec![-7], "{kind:?}/{mode:?}");
+                f.check_conservation().unwrap();
+                let prog = mac_program(&cfg);
+                f.reset();
+                let out = f.run_program(&prog).unwrap();
+                assert_eq!(out, vec![10 + 7 * 6], "{kind:?}/{mode:?}");
+                f.check_conservation().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn link_flit_counters_sum_to_flit_hops() {
+        use crate::config::TopologyKind;
+        for kind in TopologyKind::ALL {
+            let cfg = topo_cfg(kind);
+            let mut f = NexusFabric::new(cfg.clone());
+            let prog = mac_program(&cfg);
+            f.run_program(&prog).unwrap();
+            assert_eq!(
+                f.stats.link_flits_total(),
+                f.stats.flit_hops,
+                "{kind:?}: per-link counters must partition flit_hops"
+            );
+            assert!(f.stats.flit_hops > 0, "{kind:?}: MAC program crosses links");
+            assert!(
+                f.stats.peak_link_demand >= 1,
+                "{kind:?}: some cycle moved at least one flit"
+            );
+            // Every counted link must be one the topology actually wires.
+            for (idx, &flits) in f.stats.link_flits.iter().enumerate() {
+                if flits == 0 {
+                    continue;
+                }
+                let from = idx / crate::noc::LINKS_PER_PE;
+                let dir = Dir::from_port(idx % crate::noc::LINKS_PER_PE + 1);
+                assert!(
+                    f.topology().neighbor(from, dir).is_some(),
+                    "{kind:?}: flits counted on unwired link {from}/{dir:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn torus_storm_drains_under_bubble_flow_control() {
+        // The torus analogue of `valiant_storm_drains_without_deadlock`:
+        // wraparound rings deadlock classic credit flow control, so this
+        // regression pins the bubble rule (ring continuation may transit,
+        // ring entry leaves a free slot).
+        let mut cfg = nexus().with_topology(crate::config::TopologyKind::Torus2D);
+        cfg.max_cycles = 200_000;
+        let mut b = ProgramBuilder::new("torus-storm", &cfg);
+        let mut rng = crate::util::SplitMix64::new(0xBEEF);
+        let mut targets = Vec::new();
+        for i in 0..400u16 {
+            let src = rng.below_usize(16);
+            let dst = rng.below_usize(16);
+            let addr = b.alloc(dst, 1);
+            let mut am = Message::new();
+            am.opcode = Opcode::Store;
+            am.op1 = i;
+            am.result = addr;
+            am.res_is_addr = true;
+            am.push_dest(dst as u8);
+            b.static_am(src, am);
+            targets.push((dst, addr, i));
+        }
+        for &(dst, addr, _) in &targets {
+            b.output(dst, addr);
+        }
+        let prog = b.build();
+        let mut f = NexusFabric::new(cfg);
+        let out = f.run_program(&prog).expect("torus storm must drain");
+        for (k, &(_, _, v)) in targets.iter().enumerate() {
+            assert_eq!(out[k], v as i16);
+        }
+        f.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn deadlock_report_names_saturated_links() {
+        // Storm every PE's stores at PE0 with a tiny cycle budget: the
+        // hotspot's input ports sit OFF with flits queued, so the timeout
+        // report must include `link R<from>->R0 ...` culprits.
+        let mut cfg = nexus();
+        cfg.max_cycles = 40;
+        let mut b = ProgramBuilder::new("hotspot-links", &cfg);
+        let addr = b.alloc(0, 1);
+        for i in 0..240u16 {
+            let src = 1 + (i as usize) % 15;
+            let mut am = Message::new();
+            am.opcode = Opcode::Store;
+            am.op1 = i;
+            am.result = addr;
+            am.res_is_addr = true;
+            am.push_dest(0);
+            b.static_am(src, am);
+        }
+        b.output(0, addr);
+        let prog = b.build();
+        let mut f = NexusFabric::new(cfg);
+        let e = f.run_program(&prog).expect_err("40 cycles cannot drain 240 stores");
+        assert!(
+            e.culprits.iter().any(|c| c.starts_with("link R")),
+            "timeout under congestion must name saturated links: {:?}",
+            e.culprits
+        );
     }
 }

@@ -55,8 +55,17 @@ pub struct FabricStats {
     /// [`FabricStats::op_max_mean`]). Sums to `alu_ops + mem_ops`.
     pub per_pe_committed_ops: Vec<u64>,
     /// Per-input-port congestion aggregated over all routers (Fig 14),
-    /// indexed by port class (NIC, N, E, S, W).
+    /// indexed by port class (NIC, N, E, S, W; ruche skip ports fold onto
+    /// their compass heading).
     pub port: [PortStats; NUM_PORTS],
+    /// Per-directed-link flit traversals, indexed by
+    /// [`crate::noc::topology::link_index`] (source PE × output direction).
+    /// Unwired directions stay 0; the topology-sweep bench and the corpus
+    /// runner derive hot-link profiles from this.
+    pub link_flits: Vec<u64>,
+    /// Peak number of link traversals in any single cycle — the
+    /// instantaneous bandwidth high-water mark of the whole network.
+    pub peak_link_demand: u64,
 }
 
 impl FabricStats {
@@ -163,6 +172,25 @@ impl FabricStats {
         self.port[port].flits_in += s.flits_in;
     }
 
+    /// Total flit traversals summed over every directed link. Equals
+    /// [`FabricStats::flit_hops`] (each hop crosses exactly one link).
+    pub fn link_flits_total(&self) -> u64 {
+        self.link_flits.iter().sum()
+    }
+
+    /// Traffic on the hottest directed link, as `(link index, flits)`;
+    /// `None` when no flit crossed any link. Recover the endpoint with
+    /// `index / LINKS_PER_PE` (source PE) and
+    /// `Dir::from_port(index % LINKS_PER_PE + 1)`.
+    pub fn max_link_flits(&self) -> Option<(usize, u64)> {
+        self.link_flits
+            .iter()
+            .copied()
+            .enumerate()
+            .max_by_key(|&(_, f)| f)
+            .filter(|&(_, f)| f > 0)
+    }
+
     /// Field-by-field comparison: `None` when equal, otherwise the name and
     /// values of the first differing field. The step-equivalence property
     /// suite uses this so a scheduler divergence names the exact counter
@@ -201,6 +229,8 @@ impl FabricStats {
         check!(per_pe_busy_cycles);
         check!(per_pe_committed_ops);
         check!(port);
+        check!(link_flits);
+        check!(peak_link_demand);
         // Guard against the field list above going stale: if the structs
         // still differ, a counter was added to FabricStats without a
         // matching check! — fail loudly instead of reporting equality.
@@ -254,6 +284,23 @@ mod tests {
         // mean 10, sd sqrt(300) ~ 17.32 -> cv ~ 1.732; max/mean = 4.
         assert!((s.op_cv() - 3.0f64.sqrt()).abs() < 1e-9, "{}", s.op_cv());
         assert!((s.op_max_mean() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_stat_helpers() {
+        let mut s = FabricStats::default();
+        assert_eq!(s.link_flits_total(), 0);
+        assert_eq!(s.max_link_flits(), None);
+        s.link_flits = vec![0, 3, 0, 9, 9, 0];
+        assert_eq!(s.link_flits_total(), 21);
+        // Ties resolve to the last index (max_by_key keeps later maxima).
+        assert_eq!(s.max_link_flits(), Some((4, 9)));
+        // diff covers the new fields.
+        let d = s.diff(&FabricStats::default()).expect("must differ");
+        assert!(d.contains("link_flits"), "{d}");
+        let p = FabricStats { peak_link_demand: 5, ..FabricStats::default() };
+        let d = p.diff(&FabricStats::default()).expect("must differ");
+        assert!(d.contains("peak_link_demand"), "{d}");
     }
 
     #[test]

@@ -57,7 +57,27 @@
 //! `cargo bench --bench hotpath` reports the dense-vs-active wall-clock
 //! ratio on a sparse workload at 16×16 as a `BENCH_STEP_MODE.json` line;
 //! `cargo run --release -- validate --dense-oracle` re-validates the whole
-//! suite under the oracle scheduler.
+//! suite under the oracle scheduler. Either mode additionally maintains
+//! per-directed-link flit counters and the peak per-cycle link demand
+//! ([`fabric::stats::FabricStats::link_flits`] /
+//! [`fabric::stats::FabricStats::peak_link_demand`], indexed via
+//! [`noc::link_index`]) — congestion localized to individual links, at a
+//! vector-increment per crossing, included in the bit-identity contract.
+//!
+//! ## Topologies
+//!
+//! The fabric's link geometry is a runtime parameter: [`noc::Topology`]
+//! implementations behind [`ArchConfig::topology`]
+//! ([`config::TopologyKind`]) — the default 2D **mesh** (bit-identical to
+//! the original hardwired fabric), the wraparound **torus**
+//! (shortest-wrap dimension-order routing + bubble flow control), a
+//! **ruche** mesh (long-range skip links every
+//! [`ArchConfig::ruche_stride`] hops), and a two-level **chiplet** array
+//! (mesh tiles whose boundary crossings cost
+//! [`ArchConfig::inter_chiplet_latency`] cycles and proportionally less
+//! bandwidth). CLI: `--topology mesh|torus|ruche|chiplet` on `corpus run`
+//! and `validate`; `cargo bench --bench topology_sweep` sweeps all four
+//! on skewed SpMV traffic (`BENCH_TOPOLOGY.json`).
 //!
 //! ## Datasets and scenarios
 //!
@@ -92,7 +112,8 @@
 //! - [`tensor`] — CSR/ELL/dense formats, sparsity generators, graphs.
 //! - [`dataset`] — `.mtx`/edge-list ingestion, the scenario corpus, and
 //!   the corpus sweep runner (see "Datasets and scenarios" above).
-//! - [`noc`] — mesh routers, turn-model/XY/Valiant routing, On/Off control.
+//! - [`noc`] — routers, the [`noc::Topology`] layer (mesh / torus / ruche
+//!   / chiplet), turn-model/XY/Valiant routing, On/Off control.
 //! - [`pe`] — per-PE state: data memory, decode unit, AM NIC.
 //! - [`fabric`] — the cycle-accurate simulator: Data-Driven execution and
 //!   In-Network (en-route) computing, the paper's contribution.

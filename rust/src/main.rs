@@ -4,7 +4,7 @@
 //! the cycle-accurate simulator, validates the fabric against software
 //! references and the XLA golden models, and exposes one-off runs.
 
-use nexus::config::{ArchConfig, StepMode};
+use nexus::config::{ArchConfig, StepMode, TopologyKind};
 use nexus::coordinator::{self, report};
 
 fn main() {
@@ -24,10 +24,28 @@ fn main() {
     } else {
         StepMode::ActiveSet
     };
+    // NoC topology: 2D mesh unless `--topology <mesh|torus|ruche|chiplet>`.
+    let topology = match args
+        .iter()
+        .position(|a| a == "--topology")
+        .and_then(|i| args.get(i + 1))
+    {
+        None => TopologyKind::Mesh2D,
+        Some(name) => match TopologyKind::parse(name) {
+            Some(kind) => kind,
+            None => {
+                eprintln!(
+                    "unknown topology '{name}' (use: {})",
+                    TopologyKind::ALL.map(|k| k.name()).join("|")
+                );
+                std::process::exit(2);
+            }
+        },
+    };
 
     match cmd {
-        "corpus" => corpus(&args, seed, step_mode),
-        "validate" => validate(seed, step_mode),
+        "corpus" => corpus(&args, seed, step_mode, topology),
+        "validate" => validate(seed, step_mode, topology),
         "golden" => golden(seed),
         "fig10" => with_matrix(seed, report::fig10),
         "fig11" => with_matrix(seed, report::fig11),
@@ -49,7 +67,7 @@ fn main() {
         "table2" => with_matrix(seed, report::table2),
         "compile-time" => compile_time(seed),
         "all" => {
-            validate(seed, step_mode);
+            validate(seed, step_mode, topology);
             let m = coordinator::run_matrix(seed);
             println!("{}", report::fig10(&m));
             println!("{}", report::fig11(&m));
@@ -67,16 +85,19 @@ fn main() {
         _ => {
             println!(
                 "nexus — Nexus Machine reproduction CLI\n\n\
-                 usage: nexus <command> [--seed N] [--dense-oracle]\n\n\
+                 usage: nexus <command> [--seed N] [--dense-oracle] [--topology T]\n\n\
                  commands:\n\
                  \x20 corpus        dataset/scenario corpus: `corpus list` enumerates the\n\
                  \x20               registered scenarios, `corpus run` executes them with\n\
                  \x20               bit-exact validation, one JSON line per scenario\n\
-                 \x20               (--filter GLOB selects, e.g. --filter 'smoke/*')\n\
+                 \x20               (--filter GLOB selects, e.g. --filter 'smoke/*';\n\
+                 \x20               --topology mesh|torus|ruche|chiplet picks the NoC —\n\
+                 \x20               JSON lines report per-link flits and peak demand)\n\
                  \x20 validate      run the 13-workload suite on Nexus/TIA/TIA-Valiant,\n\
                  \x20               checking fabric outputs against software references\n\
                  \x20               (--dense-oracle: use the dense reference scheduler\n\
-                 \x20               instead of active-set stepping; results are identical)\n\
+                 \x20               instead of active-set stepping; results are identical;\n\
+                 \x20               --topology also applies here)\n\
                  \x20 golden        additionally check against the XLA/PJRT golden models\n\
                  \x20               (requires `make artifacts`)\n\
                  \x20 fig10..fig17  regenerate the corresponding paper figure\n\
@@ -90,11 +111,11 @@ fn main() {
     }
 }
 
-/// `nexus corpus list|run [--filter GLOB] [--seed N] [--dense-oracle]`:
-/// the dataset/scenario corpus surface. `run` prints exactly one JSON line
-/// per scenario on stdout (the CI smoke job tees this into
-/// `BENCH_CORPUS.json`); human-readable summaries go to stderr.
-fn corpus(args: &[String], seed: u64, step_mode: StepMode) {
+/// `nexus corpus list|run [--filter GLOB] [--seed N] [--dense-oracle]
+/// [--topology T]`: the dataset/scenario corpus surface. `run` prints
+/// exactly one JSON line per scenario on stdout (the CI smoke job tees
+/// this into `BENCH_CORPUS.json`); human-readable summaries go to stderr.
+fn corpus(args: &[String], seed: u64, step_mode: StepMode, topology: TopologyKind) {
     let sub = args.get(1).map(String::as_str).unwrap_or("list");
     let filter = args
         .iter()
@@ -104,7 +125,7 @@ fn corpus(args: &[String], seed: u64, step_mode: StepMode) {
     match sub {
         "list" => println!("{}", coordinator::corpus_list(filter)),
         "run" => {
-            let (lines, ok) = coordinator::corpus_run(filter, seed, step_mode);
+            let (lines, ok) = coordinator::corpus_run(filter, seed, step_mode, topology);
             if !lines.is_empty() {
                 println!("{lines}");
             }
@@ -123,9 +144,10 @@ fn corpus(args: &[String], seed: u64, step_mode: StepMode) {
                 std::process::exit(1);
             }
             eprintln!(
-                "corpus run OK: {} scenario(s) validated ({} stepping, seed {seed})",
+                "corpus run OK: {} scenario(s) validated ({} stepping, {} topology, seed {seed})",
                 lines.lines().count(),
-                step_mode.name()
+                step_mode.name(),
+                topology.name()
             );
         }
         other => {
@@ -140,13 +162,13 @@ fn with_matrix(seed: u64, f: impl Fn(&coordinator::Matrix) -> String) {
     println!("{}", f(&m));
 }
 
-fn validate(seed: u64, step_mode: StepMode) {
+fn validate(seed: u64, step_mode: StepMode, topology: TopologyKind) {
     for cfg in [
         ArchConfig::nexus(),
         ArchConfig::tia(),
         ArchConfig::tia_valiant(),
     ] {
-        let cfg = cfg.with_step_mode(step_mode);
+        let cfg = cfg.with_step_mode(step_mode).with_topology(topology);
         let kind = cfg.kind.name();
         match coordinator::validate_suite(&cfg, seed) {
             Ok(rows) => {

@@ -1,10 +1,15 @@
-//! Network-on-Chip substrate: mesh geometry, routing functions (west-first
-//! turn model with congestion-aware adaptivity, XY, Valiant), and the
-//! five-port router of §3.3.2 with 3-flit input buffers, a separable
-//! allocator, a 6x5 crossbar abstraction, and On/Off congestion control.
+//! Network-on-Chip substrate: topology-parametric link geometry
+//! ([`topology`]: mesh, torus, ruche, chiplet), routing functions
+//! (west-first turn model with congestion-aware adaptivity, XY, Valiant,
+//! shortest-wrap DOR for the torus), and the router of §3.3.2 with 3-flit
+//! input buffers, a separable allocator, a crossbar abstraction, and
+//! On/Off congestion control — generalized from five fixed mesh ports to
+//! the topology's port count.
 
 pub mod router;
 pub mod routing;
+pub mod topology;
 
 pub use router::{Router, PORT_E, PORT_LOCAL, PORT_N, PORT_S, PORT_W};
 pub use routing::{route_ports, Dir};
+pub use topology::{build_topology, link_index, Link, Topology, LINKS_PER_PE};

@@ -1,12 +1,19 @@
-//! The five-port mesh router of §3.3.2.
+//! The mesh router of §3.3.2, generalized to a configurable port count.
 //!
-//! Each router has five input ports (Local/injection, N, E, S, W) and five
-//! output ports (Local/ejection, N, E, S, W). Every input port buffers up to
+//! In the paper's mesh each router has five input ports (Local/injection,
+//! N, E, S, W) and five output ports. Every input port buffers up to
 //! `depth` (default 3) single-flit messages — "each input port has a buffer
 //! comprising three registers", chosen to minimize power. Route computation
 //! compares the head flit's target with the router's position; a separable
 //! allocator (input-first then output arbitration with rotating priority)
 //! resolves conflicts; winners traverse the crossbar.
+//!
+//! Non-mesh topologies (see [`super::topology`]) reuse the identical
+//! microarchitecture over different link sets: a ruche network wires four
+//! extra skip ports (up to [`MAX_PORTS`] total), a chiplet hierarchy
+//! delivers staged flits after a multi-cycle link latency
+//! ([`Router::stage_delayed`]), and a torus keeps its rings deadlock-free
+//! with bubble flow control built on [`Router::can_transit`].
 //!
 //! **On/Off congestion control** (§3.3.2): a port advertises OFF when its
 //! free space drops to `T_off = 1` and ON again at `T_on = 2`; upstream
@@ -28,8 +35,25 @@ pub const PORT_S: usize = 3;
 pub const PORT_W: usize = 4;
 pub const NUM_PORTS: usize = 5;
 
+/// Largest port count any topology wires: the 5 mesh ports plus 4 ruche
+/// skip ports (see [`super::routing::Dir`]).
+pub const MAX_PORTS: usize = 9;
+
 /// Port names for reports (Fig 14's x-axis categories).
 pub const PORT_NAMES: [&str; NUM_PORTS] = ["NIC", "North", "East", "South", "West"];
+
+/// Fold a physical port index into one of the [`NUM_PORTS`] report
+/// categories: ruche skip ports count toward their compass heading
+/// (RucheNorth -> North, ...), so Fig 14's per-port congestion series keep
+/// their meaning on every topology.
+#[inline]
+pub fn port_class(port: usize) -> usize {
+    if port >= NUM_PORTS {
+        port - 4
+    } else {
+        port
+    }
+}
 
 /// Maximum supported buffer depth (fixed-capacity ring, no heap in the hot
 /// loop). Config depth must be <= this.
@@ -133,22 +157,28 @@ pub struct PortStats {
     pub flits_in: u64,
 }
 
-/// One mesh router.
+/// One router (mesh or extended-port variant).
 #[derive(Debug, Clone)]
 pub struct Router {
-    /// Input buffers indexed by port (PORT_LOCAL..PORT_W).
-    pub inputs: [FlitBuf; NUM_PORTS],
+    /// Input buffers indexed by port (`Dir::port()` order; length is the
+    /// topology's port count).
+    pub inputs: Vec<FlitBuf>,
     /// On/Off state advertised to upstream for each *input* port, as sampled
     /// at the end of the previous cycle. `true` = ON (may receive).
-    pub on_state: [bool; NUM_PORTS],
+    pub on_state: Vec<bool>,
     /// Rotating-priority pointer for output arbitration (separable
     /// allocator's second stage).
-    pub rr_ptr: [usize; NUM_PORTS],
+    pub rr_ptr: Vec<usize>,
     /// Staged incoming flits (one per input port) applied at commit — links
     /// deliver at most one flit per cycle.
-    pub staging: [Option<Message>; NUM_PORTS],
+    pub staging: Vec<Option<Message>>,
+    /// Remaining cycles before the staged flit on each port lands in its
+    /// buffer (0 = lands at the next commit; multi-cycle chiplet links
+    /// stage with a positive wait). While positive, the staging slot stays
+    /// held, which also throttles the link to one flit per `latency`.
+    pub staging_wait: Vec<u8>,
     /// Per-port congestion stats.
-    pub stats: [PortStats; NUM_PORTS],
+    pub stats: Vec<PortStats>,
     /// Head-of-line flit locked this cycle by en-route execution (port id).
     pub locked_port: Option<usize>,
     /// Occupancy changed since the last commit (push or pop); lets commit
@@ -160,18 +190,26 @@ pub struct Router {
 }
 
 impl Router {
-    pub fn new(depth: usize, t_off: usize, t_on: usize) -> Self {
+    pub fn new(num_ports: usize, depth: usize, t_off: usize, t_on: usize) -> Self {
+        assert!((NUM_PORTS..=MAX_PORTS).contains(&num_ports));
         Router {
-            inputs: std::array::from_fn(|_| FlitBuf::new(depth)),
-            on_state: [true; NUM_PORTS],
-            rr_ptr: [0; NUM_PORTS],
-            staging: [None; NUM_PORTS],
-            stats: [PortStats::default(); NUM_PORTS],
+            inputs: (0..num_ports).map(|_| FlitBuf::new(depth)).collect(),
+            on_state: vec![true; num_ports],
+            rr_ptr: vec![0; num_ports],
+            staging: vec![None; num_ports],
+            staging_wait: vec![0; num_ports],
+            stats: vec![PortStats::default(); num_ports],
             locked_port: None,
             dirty: false,
             t_off,
             t_on,
         }
+    }
+
+    /// Number of ports this router wires (set by the topology).
+    #[inline]
+    pub fn num_ports(&self) -> usize {
+        self.inputs.len()
     }
 
     /// Effective free space of an input port including its staged flit.
@@ -194,12 +232,35 @@ impl Router {
         self.staging[PORT_LOCAL].is_none() && self.inputs[PORT_LOCAL].free() >= 2
     }
 
+    /// Physical-space-only acceptance test, ignoring the advertised On/Off
+    /// state. Used by torus bubble flow control: a flit *continuing* along
+    /// a ring may advance whenever there is space, because ring entries
+    /// (which respect both On/Off and the two-slot bubble condition)
+    /// guarantee the ring never fills.
+    #[inline]
+    pub fn can_transit(&self, port: usize) -> bool {
+        self.staging[port].is_none() && self.inputs[port].free() >= 1
+    }
+
     /// Stage a flit arriving on `port` (from a neighbor or the NIC).
     /// Caller must have checked `can_accept` / `can_inject`.
     #[inline]
     pub fn stage(&mut self, port: usize, m: Message) {
         debug_assert!(self.staging[port].is_none());
         self.staging[port] = Some(m);
+        self.staging_wait[port] = 0;
+        self.dirty = true;
+    }
+
+    /// Stage a flit that lands after `wait` further commits (multi-cycle
+    /// chiplet links: a latency-L hop stages with `wait = L - 1`). The
+    /// staging slot stays held for the whole traversal, so the link also
+    /// carries at most one flit per L cycles.
+    #[inline]
+    pub fn stage_delayed(&mut self, port: usize, m: Message, wait: u8) {
+        debug_assert!(self.staging[port].is_none());
+        self.staging[port] = Some(m);
+        self.staging_wait[port] = wait;
         self.dirty = true;
     }
 
@@ -216,15 +277,21 @@ impl Router {
     }
 
     /// Commit staged flits into buffers and refresh the On/Off hysteresis
-    /// for the next cycle. Called once per cycle by the fabric.
+    /// for the next cycle. Called once per cycle by the fabric. A staged
+    /// flit still in flight on a slow link (positive `staging_wait`) ticks
+    /// down instead of landing, and keeps the router dirty (and hence
+    /// awake) until it arrives.
     pub fn commit(&mut self) {
         if !self.dirty {
             self.locked_port = None;
             return;
         }
         self.dirty = false;
-        for port in 0..NUM_PORTS {
-            if let Some(m) = self.staging[port].take() {
+        for port in 0..self.inputs.len() {
+            if self.staging[port].is_some() && self.staging_wait[port] > 0 {
+                self.staging_wait[port] -= 1;
+                self.dirty = true;
+            } else if let Some(m) = self.staging[port].take() {
                 let ok = self.inputs[port].push(m);
                 debug_assert!(ok, "staging over full buffer");
                 self.stats[port].flits_in += 1;
@@ -248,8 +315,8 @@ impl Router {
 
     /// Record per-port occupancy/blocked stats for this cycle. `moved[p]`
     /// is true if port p's head flit departed this cycle.
-    pub fn sample_stats(&mut self, moved: &[bool; NUM_PORTS]) {
-        for port in 0..NUM_PORTS {
+    pub fn sample_stats(&mut self, moved: &[bool]) {
+        for port in 0..self.inputs.len() {
             if !self.inputs[port].is_empty() {
                 self.stats[port].occupied_cycles += 1;
                 if !moved[port] {
@@ -289,7 +356,7 @@ mod tests {
 
     #[test]
     fn on_off_hysteresis() {
-        let mut r = Router::new(3, 1, 2);
+        let mut r = Router::new(NUM_PORTS, 3, 1, 2);
         assert!(r.can_accept(PORT_N));
         // Fill to 2 occupied (free = 1 <= T_off) => OFF after commit.
         r.stage(PORT_N, msg(1));
@@ -308,7 +375,7 @@ mod tests {
 
     #[test]
     fn bubble_rule_for_injection() {
-        let mut r = Router::new(3, 1, 2);
+        let mut r = Router::new(NUM_PORTS, 3, 1, 2);
         assert!(r.can_inject());
         r.stage(PORT_LOCAL, msg(1));
         assert!(!r.can_inject(), "one staged flit per cycle");
@@ -322,13 +389,74 @@ mod tests {
 
     #[test]
     fn occupancy_counts_staging() {
-        let mut r = Router::new(3, 1, 2);
+        let mut r = Router::new(NUM_PORTS, 3, 1, 2);
         r.stage(PORT_E, msg(1));
         assert_eq!(r.occupancy(), 1);
         r.commit();
         assert_eq!(r.occupancy(), 1);
         r.pop_port(PORT_E);
         assert_eq!(r.occupancy(), 0);
+    }
+
+    #[test]
+    fn delayed_staging_lands_after_wait() {
+        // A latency-4 chiplet hop: stage with wait=3, flit lands on the
+        // 4th commit; the staging slot is held (and the input refuses new
+        // arrivals) for the whole traversal.
+        let mut r = Router::new(NUM_PORTS, 3, 1, 2);
+        r.stage_delayed(PORT_W, msg(7), 3);
+        for step in 0..3 {
+            assert!(!r.can_accept(PORT_W), "slot held in flight (step {step})");
+            assert!(!r.can_transit(PORT_W));
+            assert_eq!(r.occupancy(), 1);
+            r.commit();
+            assert!(r.inputs[PORT_W].is_empty(), "landed early at step {step}");
+            assert!(r.dirty || step == 2, "in-flight flit must keep the router dirty");
+        }
+        r.commit();
+        assert_eq!(r.inputs[PORT_W].len(), 1);
+        assert_eq!(r.inputs[PORT_W].head_msg().unwrap().id, 7);
+        assert_eq!(r.stats[PORT_W].flits_in, 1, "counted once, on landing");
+        // wait=0 is exactly `stage`: lands at the next commit.
+        let mut r2 = Router::new(NUM_PORTS, 3, 1, 2);
+        r2.stage_delayed(PORT_N, msg(8), 0);
+        r2.commit();
+        assert_eq!(r2.inputs[PORT_N].len(), 1);
+    }
+
+    #[test]
+    fn extended_ports_and_classes() {
+        let mut r = Router::new(MAX_PORTS, 3, 1, 2);
+        assert_eq!(r.num_ports(), MAX_PORTS);
+        // Ruche ports behave like any other input.
+        let ruche_n = 5;
+        assert!(r.can_accept(ruche_n));
+        r.stage(ruche_n, msg(1));
+        r.commit();
+        assert_eq!(r.inputs[ruche_n].len(), 1);
+        // Report classes fold skip ports onto their compass heading.
+        assert_eq!(port_class(PORT_LOCAL), PORT_LOCAL);
+        assert_eq!(port_class(PORT_W), PORT_W);
+        assert_eq!(port_class(5), PORT_N);
+        assert_eq!(port_class(6), PORT_E);
+        assert_eq!(port_class(7), PORT_S);
+        assert_eq!(port_class(8), PORT_W);
+    }
+
+    #[test]
+    fn can_transit_ignores_on_state() {
+        // Bubble continuation: physical space only. Fill to free=1 (OFF).
+        let mut r = Router::new(NUM_PORTS, 3, 1, 2);
+        r.stage(PORT_S, msg(1));
+        r.commit();
+        r.stage(PORT_S, msg(2));
+        r.commit();
+        assert!(!r.on_state[PORT_S], "free=1 advertises OFF");
+        assert!(!r.can_accept(PORT_S), "entries respect On/Off");
+        assert!(r.can_transit(PORT_S), "continuations only need space");
+        r.stage(PORT_S, msg(3));
+        r.commit();
+        assert!(!r.can_transit(PORT_S), "full buffer blocks even transit");
     }
 
     #[test]
@@ -394,7 +522,7 @@ mod tests {
             let depth = 2 + rng.below_usize(MAX_DEPTH - 1);
             let t_off = 1;
             let t_on = 2 + rng.below_usize(depth - 1); // 2..=depth
-            let mut r = Router::new(depth, t_off, t_on);
+            let mut r = Router::new(NUM_PORTS, depth, t_off, t_on);
             let port = rng.below_usize(NUM_PORTS);
             let mut id = 1u64;
             let mut prev_on = true; // fresh routers advertise ON

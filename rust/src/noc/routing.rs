@@ -10,6 +10,11 @@
 //! Mesh coordinates: x grows east, y grows south; PE id = y * width + x.
 
 /// Output direction from a router.
+///
+/// The first five variants are the paper's 2D-mesh ports. The `Ruche*`
+/// variants are the long-range skip links a [`super::topology::Ruche`]
+/// network adds on top of the mesh (same compass heading, stride-length
+/// jump); mesh/torus/chiplet fabrics never produce them.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dir {
     Local,
@@ -17,6 +22,10 @@ pub enum Dir {
     East,
     South,
     West,
+    RucheNorth,
+    RucheEast,
+    RucheSouth,
+    RucheWest,
 }
 
 impl Dir {
@@ -29,6 +38,44 @@ impl Dir {
             Dir::East => 2,
             Dir::South => 3,
             Dir::West => 4,
+            Dir::RucheNorth => 5,
+            Dir::RucheEast => 6,
+            Dir::RucheSouth => 7,
+            Dir::RucheWest => 8,
+        }
+    }
+
+    /// Inverse of [`Dir::port`].
+    #[inline]
+    pub fn from_port(port: usize) -> Dir {
+        match port {
+            0 => Dir::Local,
+            1 => Dir::North,
+            2 => Dir::East,
+            3 => Dir::South,
+            4 => Dir::West,
+            5 => Dir::RucheNorth,
+            6 => Dir::RucheEast,
+            7 => Dir::RucheSouth,
+            8 => Dir::RucheWest,
+            _ => panic!("invalid port index {port}"),
+        }
+    }
+
+    /// The reverse heading (N↔S, E↔W, ruche likewise; Local is its own
+    /// opposite).
+    #[inline]
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::Local => Dir::Local,
+            Dir::North => Dir::South,
+            Dir::East => Dir::West,
+            Dir::South => Dir::North,
+            Dir::West => Dir::East,
+            Dir::RucheNorth => Dir::RucheSouth,
+            Dir::RucheEast => Dir::RucheWest,
+            Dir::RucheSouth => Dir::RucheNorth,
+            Dir::RucheWest => Dir::RucheEast,
         }
     }
 
@@ -36,13 +83,7 @@ impl Dir {
     /// this output arrives on (N exits arrive on the neighbor's S input).
     #[inline]
     pub fn opposite_port(self) -> usize {
-        match self {
-            Dir::Local => 0,
-            Dir::North => Dir::South.port(),
-            Dir::East => Dir::West.port(),
-            Dir::South => Dir::North.port(),
-            Dir::West => Dir::East.port(),
-        }
+        self.opposite().port()
     }
 }
 
@@ -146,7 +187,7 @@ mod tests {
                     Dir::South => (x, y + 1),
                     Dir::East => (x + 1, y),
                     Dir::West => (x - 1, y),
-                    Dir::Local => unreachable!(),
+                    _ => unreachable!("mesh route_ports never emits {dir:?}"),
                 };
                 ensure(manhattan(nx, ny, tx, ty) == d0 - 1, || {
                     format!("unproductive candidate {dir:?} from ({x},{y}) to ({tx},{ty})")
@@ -189,7 +230,7 @@ mod tests {
                     }
                     Dir::East => x += 1,
                     Dir::West => x -= 1,
-                    Dir::Local => {}
+                    _ => {}
                 }
             }
             Ok(())
@@ -210,9 +251,71 @@ mod tests {
                     Dir::South => y += 1,
                     Dir::East => x += 1,
                     Dir::West => x -= 1,
+                    other => unreachable!("route_xy never emits {other:?}"),
                 }
             }
             ensure((x, y) == (tx, ty), || "XY did not arrive".into())
         });
+    }
+
+    #[test]
+    fn dir_port_roundtrip() {
+        for port in 0..9 {
+            assert_eq!(Dir::from_port(port).port(), port);
+            // opposite is an involution and preserves the ruche/mesh class.
+            let d = Dir::from_port(port);
+            assert_eq!(d.opposite().opposite(), d);
+        }
+        assert_eq!(Dir::North.opposite_port(), Dir::South.port());
+        assert_eq!(Dir::RucheEast.opposite_port(), Dir::RucheWest.port());
+    }
+
+    #[test]
+    fn one_wide_meshes_route_pure_axis() {
+        // Degenerate 1xN / Nx1 meshes: route_ports must emit only moves
+        // along the existing axis (never a direction that would leave the
+        // strip), and reach the destination.
+        let mut out = [Dir::Local; 2];
+        for n in 2..=8 {
+            // 1-wide (single column): only N/S moves are meaningful.
+            for (y, ty) in [(0usize, n - 1), (n - 1, 0), (1, n - 2)] {
+                let (mut y, ty) = (y, ty);
+                for _ in 0..n {
+                    let c = route_ports(0, y, 0, ty, &mut out);
+                    if c == 0 {
+                        break;
+                    }
+                    for &d in &out[..c] {
+                        assert!(
+                            matches!(d, Dir::North | Dir::South),
+                            "1-wide mesh offered {d:?}"
+                        );
+                    }
+                    match out[0] {
+                        Dir::North => y -= 1,
+                        Dir::South => y += 1,
+                        _ => unreachable!(),
+                    }
+                }
+                assert_eq!(y, ty, "1-wide mesh did not arrive");
+            }
+            // 1-tall (single row): only E/W moves are meaningful.
+            for (x, tx) in [(0usize, n - 1), (n - 1, 0)] {
+                let (mut x, tx) = (x, tx);
+                for _ in 0..n {
+                    let c = route_ports(x, 0, tx, 0, &mut out);
+                    if c == 0 {
+                        break;
+                    }
+                    assert_eq!(c, 1, "1-tall mesh must be deterministic");
+                    match out[0] {
+                        Dir::East => x += 1,
+                        Dir::West => x -= 1,
+                        d => panic!("1-tall mesh offered {d:?}"),
+                    }
+                }
+                assert_eq!(x, tx, "1-tall mesh did not arrive");
+            }
+        }
     }
 }

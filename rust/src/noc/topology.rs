@@ -1,0 +1,723 @@
+//! Network topologies: the link structure connecting the PE routers.
+//!
+//! The paper evaluates a fixed 2D mesh, but en-route execution is
+//! fundamentally a *network* story — where messages travel determines which
+//! idle PEs can claim work — so the fabric abstracts the link structure
+//! behind the [`Topology`] trait. Four implementations share the same
+//! router microarchitecture (input buffers, On/Off flow control, separable
+//! allocator) over different link sets:
+//!
+//! - [`Mesh2D`] — the paper's mesh. The default, and **bit-identical** to
+//!   the pre-topology simulator: its routing methods delegate verbatim to
+//!   [`route_ports`] / [`route_xy`].
+//! - [`Torus2D`] — mesh plus wraparound links on both axes. Routed with
+//!   shortest-wrap dimension-order routing; the rings are kept
+//!   deadlock-free with bubble flow control (see
+//!   [`Topology::requires_bubble`]).
+//! - [`Ruche`] — mesh plus long-range skip links of a configurable stride
+//!   in all four compass directions (ports 5–8), the ruche-network idea:
+//!   express physical channels that cut hop counts for long flows. Routing
+//!   stays west-first (all westward motion — short or long — happens first
+//!   and deterministically), so the turn-model deadlock-freedom argument
+//!   carries over unchanged.
+//! - [`Chiplet2L`] — the mesh partitioned into chiplet tiles
+//!   (DCRA-style): links crossing a tile boundary pay a configurable
+//!   multi-cycle latency, modeling slower inter-chip SerDes hops. The link
+//!   *structure* and routing are the mesh's; only per-hop latency differs.
+//!
+//! Deadlock freedom per variant:
+//!
+//! - mesh / ruche / chiplet: west-first turn model (the prohibited
+//!   N/S→W turns are never taken because all westward motion is emitted
+//!   first and deterministically; ruche west skips are part of that same
+//!   westward phase).
+//! - torus: dimension-order (X then Y) shortest-wrap routing removes
+//!   cross-dimension cycles; within each unidirectional ring, bubble flow
+//!   control — a flit *entering* a ring needs two free slots downstream,
+//!   a flit *continuing* along a ring needs one — guarantees the ring can
+//!   never fill completely, so some flit can always advance.
+
+use crate::config::{ArchConfig, TopologyKind};
+use crate::noc::router::MAX_PORTS;
+use crate::noc::routing::{manhattan, route_ports, route_xy, Dir};
+
+/// Directed links per PE in the flattened per-link stats table: one slot
+/// per non-local output port (ports `1..MAX_PORTS`), whether or not the
+/// topology wires it.
+pub const LINKS_PER_PE: usize = MAX_PORTS - 1;
+
+/// Index of the directed link leaving PE `from` through `dir` in a flat
+/// `num_pes * LINKS_PER_PE` table (see
+/// [`crate::fabric::stats::FabricStats::link_flits`]).
+#[inline]
+pub fn link_index(from: usize, dir: Dir) -> usize {
+    debug_assert!(dir != Dir::Local, "local port is not a link");
+    from * LINKS_PER_PE + (dir.port() - 1)
+}
+
+/// One directed link of a topology, as enumerated by [`Topology::links`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Link {
+    /// Source PE id.
+    pub from: usize,
+    /// Destination PE id.
+    pub to: usize,
+    /// Output direction at the source router.
+    pub dir: Dir,
+    /// Traversal latency in cycles (>= 1).
+    pub latency: usize,
+}
+
+/// The link structure connecting the routers, plus the (topology-specific)
+/// route computation over it.
+///
+/// Implementations are pure geometry: no per-flit state lives here, so a
+/// single instance serves the whole fabric and the fabric can precompute
+/// neighbor/latency tables from it at construction.
+pub trait Topology: Send + Sync {
+    /// Which [`TopologyKind`] this instance implements.
+    fn kind(&self) -> TopologyKind;
+
+    /// Number of PEs (routers) in the fabric.
+    fn num_pes(&self) -> usize;
+
+    /// Number of router ports this topology wires (local port included).
+    /// The mesh family uses 5; ruche adds four skip ports for 9.
+    fn num_ports(&self) -> usize;
+
+    /// The PE reached by leaving `id` through `dir`, or `None` when that
+    /// output is not wired (mesh boundary, unwired ruche port, degenerate
+    /// torus axis of extent 1).
+    fn neighbor(&self, id: usize, dir: Dir) -> Option<usize>;
+
+    /// Candidate output directions for one hop from `from` toward `to`,
+    /// written to `out[..n]`. `n == 0` means the packet has arrived. Every
+    /// candidate is strictly productive (reduces [`Topology::distance`])
+    /// and points at a wired link; with `n == 2` the router picks
+    /// adaptively by downstream congestion.
+    fn route_candidates(&self, from: usize, to: usize, out: &mut [Dir; 2]) -> usize;
+
+    /// Deterministic (dimension-order) route for one hop, used by
+    /// [`crate::config::RoutingPolicy::Xy`] and the Valiant legs.
+    /// Returns [`Dir::Local`] on arrival.
+    fn route_deterministic(&self, from: usize, to: usize) -> Dir;
+
+    /// Traversal latency in cycles of the link leaving `id` through `dir`
+    /// (meaningful only for wired links; >= 1).
+    fn hop_latency(&self, _id: usize, _dir: Dir) -> usize {
+        1
+    }
+
+    /// Minimal hop count from `from` to `to` over this topology's links.
+    fn distance(&self, from: usize, to: usize) -> usize;
+
+    /// Whether the fabric must apply bubble flow control (ring entries
+    /// need two free downstream slots; in-ring continuations need one and
+    /// bypass On/Off backpressure). Only the torus sets this.
+    fn requires_bubble(&self) -> bool {
+        false
+    }
+
+    /// Enumerate every directed link, in `(pe id, port)` order.
+    fn links(&self) -> Vec<Link> {
+        let mut out = Vec::new();
+        for id in 0..self.num_pes() {
+            for port in 1..self.num_ports() {
+                let dir = Dir::from_port(port);
+                if let Some(to) = self.neighbor(id, dir) {
+                    out.push(Link { from: id, to, dir, latency: self.hop_latency(id, dir) });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Build the topology selected by `cfg.topology` over `cfg`'s array
+/// geometry. The config must already be validated.
+pub fn build_topology(cfg: &ArchConfig) -> Box<dyn Topology> {
+    match cfg.topology {
+        TopologyKind::Mesh2D => Box::new(Mesh2D::new(cfg.width, cfg.height)),
+        TopologyKind::Torus2D => Box::new(Torus2D::new(cfg.width, cfg.height)),
+        TopologyKind::Ruche => Box::new(Ruche::new(cfg.width, cfg.height, cfg.ruche_stride)),
+        TopologyKind::Chiplet2L => Box::new(Chiplet2L::new(
+            cfg.width,
+            cfg.height,
+            cfg.chiplet_dims,
+            cfg.inter_chiplet_latency,
+        )),
+    }
+}
+
+/// Shared geometry helpers for the grid-based implementations.
+#[derive(Debug, Clone, Copy)]
+struct Grid {
+    width: usize,
+    height: usize,
+}
+
+impl Grid {
+    #[inline]
+    fn xy(&self, id: usize) -> (usize, usize) {
+        (id % self.width, id / self.width)
+    }
+
+    #[inline]
+    fn id(&self, x: usize, y: usize) -> usize {
+        y * self.width + x
+    }
+
+    /// Mesh neighbor (boundary-checked) for the five mesh directions;
+    /// `None` for ruche ports.
+    fn mesh_neighbor(&self, id: usize, dir: Dir) -> Option<usize> {
+        let (x, y) = self.xy(id);
+        match dir {
+            Dir::North if y > 0 => Some(self.id(x, y - 1)),
+            Dir::South if y + 1 < self.height => Some(self.id(x, y + 1)),
+            Dir::East if x + 1 < self.width => Some(self.id(x + 1, y)),
+            Dir::West if x > 0 => Some(self.id(x - 1, y)),
+            _ => None,
+        }
+    }
+}
+
+/// The paper's 2D mesh (bit-identical to the pre-topology simulator: the
+/// routing methods delegate to the original [`route_ports`] /
+/// [`route_xy`] functions).
+pub struct Mesh2D {
+    grid: Grid,
+}
+
+impl Mesh2D {
+    pub fn new(width: usize, height: usize) -> Self {
+        Self { grid: Grid { width, height } }
+    }
+}
+
+impl Topology for Mesh2D {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Mesh2D
+    }
+
+    fn num_pes(&self) -> usize {
+        self.grid.width * self.grid.height
+    }
+
+    fn num_ports(&self) -> usize {
+        5
+    }
+
+    fn neighbor(&self, id: usize, dir: Dir) -> Option<usize> {
+        self.grid.mesh_neighbor(id, dir)
+    }
+
+    fn route_candidates(&self, from: usize, to: usize, out: &mut [Dir; 2]) -> usize {
+        let (x, y) = self.grid.xy(from);
+        let (tx, ty) = self.grid.xy(to);
+        route_ports(x, y, tx, ty, out)
+    }
+
+    fn route_deterministic(&self, from: usize, to: usize) -> Dir {
+        let (x, y) = self.grid.xy(from);
+        let (tx, ty) = self.grid.xy(to);
+        route_xy(x, y, tx, ty)
+    }
+
+    fn distance(&self, from: usize, to: usize) -> usize {
+        let (x, y) = self.grid.xy(from);
+        let (tx, ty) = self.grid.xy(to);
+        manhattan(x, y, tx, ty)
+    }
+}
+
+/// 2D torus: the mesh plus wraparound links on both axes.
+///
+/// Routing is shortest-wrap dimension-order (X fully, then Y): each axis
+/// moves in the direction of fewer wrap hops, ties broken toward
+/// East/South. Re-computed per hop this is monotone — the chosen direction
+/// never flips mid-axis — so the route is a minimal dimension-ordered
+/// path. Deadlock freedom comes from bubble flow control on the rings
+/// ([`Topology::requires_bubble`]), enforced by the fabric's crossbar.
+pub struct Torus2D {
+    grid: Grid,
+}
+
+impl Torus2D {
+    pub fn new(width: usize, height: usize) -> Self {
+        Self { grid: Grid { width, height } }
+    }
+
+    /// Direction of the shorter wrap along one axis of extent `n`, from
+    /// coordinate `c` to `t` (`None` when already aligned). Returns
+    /// `(positive, hops)` where `positive` means +1 steps (East/South).
+    #[inline]
+    fn axis_dir(n: usize, c: usize, t: usize) -> Option<(bool, usize)> {
+        if c == t || n < 2 {
+            return None;
+        }
+        let fwd = (t + n - c) % n; // hops moving +1 (East/South)
+        let back = n - fwd; // hops moving -1 (West/North)
+        if fwd <= back {
+            Some((true, fwd))
+        } else {
+            Some((false, back))
+        }
+    }
+}
+
+impl Topology for Torus2D {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Torus2D
+    }
+
+    fn num_pes(&self) -> usize {
+        self.grid.width * self.grid.height
+    }
+
+    fn num_ports(&self) -> usize {
+        5
+    }
+
+    fn neighbor(&self, id: usize, dir: Dir) -> Option<usize> {
+        let Grid { width: w, height: h } = self.grid;
+        let (x, y) = self.grid.xy(id);
+        // Axes of extent 1 have no links (a self-loop would be degenerate).
+        match dir {
+            Dir::North if h > 1 => Some(self.grid.id(x, (y + h - 1) % h)),
+            Dir::South if h > 1 => Some(self.grid.id(x, (y + 1) % h)),
+            Dir::East if w > 1 => Some(self.grid.id((x + 1) % w, y)),
+            Dir::West if w > 1 => Some(self.grid.id((x + w - 1) % w, y)),
+            _ => None,
+        }
+    }
+
+    fn route_candidates(&self, from: usize, to: usize, out: &mut [Dir; 2]) -> usize {
+        // Dimension-order shortest-wrap: a single deterministic candidate
+        // (adaptivity on torus rings is not covered by the turn-model
+        // deadlock argument, so none is offered).
+        let d = self.route_deterministic(from, to);
+        if d == Dir::Local {
+            0
+        } else {
+            out[0] = d;
+            1
+        }
+    }
+
+    fn route_deterministic(&self, from: usize, to: usize) -> Dir {
+        let (x, y) = self.grid.xy(from);
+        let (tx, ty) = self.grid.xy(to);
+        if let Some((positive, _)) = Self::axis_dir(self.grid.width, x, tx) {
+            return if positive { Dir::East } else { Dir::West };
+        }
+        if let Some((positive, _)) = Self::axis_dir(self.grid.height, y, ty) {
+            return if positive { Dir::South } else { Dir::North };
+        }
+        Dir::Local
+    }
+
+    fn distance(&self, from: usize, to: usize) -> usize {
+        let (x, y) = self.grid.xy(from);
+        let (tx, ty) = self.grid.xy(to);
+        let dx = Self::axis_dir(self.grid.width, x, tx).map_or(0, |(_, d)| d);
+        let dy = Self::axis_dir(self.grid.height, y, ty).map_or(0, |(_, d)| d);
+        dx + dy
+    }
+
+    fn requires_bubble(&self) -> bool {
+        true
+    }
+}
+
+/// Ruche network: the mesh plus skip links of stride `stride` in all four
+/// compass directions (router ports 5–8).
+///
+/// Routing extends west-first: when the remaining distance along an axis
+/// is at least the stride, the long link is taken (the stride-length jump
+/// is then guaranteed to stay inside the array); otherwise the mesh link.
+/// All westward motion — short or long — remains first and deterministic,
+/// so the adaptive set never contains a westward move after a N/S move
+/// and the turn-model deadlock-freedom argument is unchanged.
+pub struct Ruche {
+    grid: Grid,
+    stride: usize,
+}
+
+impl Ruche {
+    pub fn new(width: usize, height: usize, stride: usize) -> Self {
+        debug_assert!(stride >= 2, "stride 1 is a plain mesh link");
+        Self { grid: Grid { width, height }, stride }
+    }
+
+    /// Hops to cover `d` positions along one axis: long links for the
+    /// quotient, mesh links for the remainder.
+    #[inline]
+    fn axis_hops(&self, d: usize) -> usize {
+        d / self.stride + d % self.stride
+    }
+}
+
+impl Topology for Ruche {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Ruche
+    }
+
+    fn num_pes(&self) -> usize {
+        self.grid.width * self.grid.height
+    }
+
+    fn num_ports(&self) -> usize {
+        MAX_PORTS
+    }
+
+    fn neighbor(&self, id: usize, dir: Dir) -> Option<usize> {
+        let Grid { width: w, height: h } = self.grid;
+        let (x, y) = self.grid.xy(id);
+        let s = self.stride;
+        match dir {
+            Dir::RucheNorth if y >= s => Some(self.grid.id(x, y - s)),
+            Dir::RucheSouth if y + s < h => Some(self.grid.id(x, y + s)),
+            Dir::RucheEast if x + s < w => Some(self.grid.id(x + s, y)),
+            Dir::RucheWest if x >= s => Some(self.grid.id(x - s, y)),
+            Dir::RucheNorth | Dir::RucheSouth | Dir::RucheEast | Dir::RucheWest => None,
+            _ => self.grid.mesh_neighbor(id, dir),
+        }
+    }
+
+    fn route_candidates(&self, from: usize, to: usize, out: &mut [Dir; 2]) -> usize {
+        let (x, y) = self.grid.xy(from);
+        let (tx, ty) = self.grid.xy(to);
+        let s = self.stride;
+        if tx < x {
+            // Westward motion first and deterministically (west-first);
+            // x - tx >= s implies x >= s, so the long link exists.
+            out[0] = if x - tx >= s { Dir::RucheWest } else { Dir::West };
+            return 1;
+        }
+        let mut n = 0;
+        if tx > x {
+            // tx - x >= s implies x + s <= tx < width: link exists.
+            out[n] = if tx - x >= s { Dir::RucheEast } else { Dir::East };
+            n += 1;
+        }
+        if ty < y {
+            out[n] = if y - ty >= s { Dir::RucheNorth } else { Dir::North };
+            n += 1;
+        } else if ty > y {
+            out[n] = if ty - y >= s { Dir::RucheSouth } else { Dir::South };
+            n += 1;
+        }
+        n
+    }
+
+    fn route_deterministic(&self, from: usize, to: usize) -> Dir {
+        let (x, y) = self.grid.xy(from);
+        let (tx, ty) = self.grid.xy(to);
+        let s = self.stride;
+        if tx > x {
+            if tx - x >= s {
+                Dir::RucheEast
+            } else {
+                Dir::East
+            }
+        } else if tx < x {
+            if x - tx >= s {
+                Dir::RucheWest
+            } else {
+                Dir::West
+            }
+        } else if ty > y {
+            if ty - y >= s {
+                Dir::RucheSouth
+            } else {
+                Dir::South
+            }
+        } else if ty < y {
+            if y - ty >= s {
+                Dir::RucheNorth
+            } else {
+                Dir::North
+            }
+        } else {
+            Dir::Local
+        }
+    }
+
+    fn distance(&self, from: usize, to: usize) -> usize {
+        let (x, y) = self.grid.xy(from);
+        let (tx, ty) = self.grid.xy(to);
+        self.axis_hops(x.abs_diff(tx)) + self.axis_hops(y.abs_diff(ty))
+    }
+}
+
+/// Two-level chiplet hierarchy: the mesh partitioned into `cw x ch` tiles
+/// (DCRA-style), with links crossing a tile boundary paying `latency`
+/// cycles per hop instead of 1.
+///
+/// Link structure and routing are exactly the mesh's (so the west-first
+/// deadlock argument applies verbatim); the slower boundary links model
+/// inter-chip SerDes and also throttle boundary *bandwidth* to one flit
+/// per `latency` cycles, since a router input's staging slot stays held
+/// for the whole traversal.
+pub struct Chiplet2L {
+    grid: Grid,
+    tile: (usize, usize),
+    latency: usize,
+}
+
+impl Chiplet2L {
+    pub fn new(width: usize, height: usize, tile: (usize, usize), latency: usize) -> Self {
+        debug_assert!(tile.0 > 0 && tile.1 > 0 && width % tile.0 == 0 && height % tile.1 == 0);
+        debug_assert!(latency >= 1);
+        Self { grid: Grid { width, height }, tile, latency }
+    }
+
+    /// Chiplet tile coordinates of a PE.
+    #[inline]
+    fn tile_of(&self, id: usize) -> (usize, usize) {
+        let (x, y) = self.grid.xy(id);
+        (x / self.tile.0, y / self.tile.1)
+    }
+}
+
+impl Topology for Chiplet2L {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Chiplet2L
+    }
+
+    fn num_pes(&self) -> usize {
+        self.grid.width * self.grid.height
+    }
+
+    fn num_ports(&self) -> usize {
+        5
+    }
+
+    fn neighbor(&self, id: usize, dir: Dir) -> Option<usize> {
+        self.grid.mesh_neighbor(id, dir)
+    }
+
+    fn route_candidates(&self, from: usize, to: usize, out: &mut [Dir; 2]) -> usize {
+        let (x, y) = self.grid.xy(from);
+        let (tx, ty) = self.grid.xy(to);
+        route_ports(x, y, tx, ty, out)
+    }
+
+    fn route_deterministic(&self, from: usize, to: usize) -> Dir {
+        let (x, y) = self.grid.xy(from);
+        let (tx, ty) = self.grid.xy(to);
+        route_xy(x, y, tx, ty)
+    }
+
+    fn hop_latency(&self, id: usize, dir: Dir) -> usize {
+        match self.neighbor(id, dir) {
+            Some(to) if self.tile_of(id) != self.tile_of(to) => self.latency,
+            _ => 1,
+        }
+    }
+
+    fn distance(&self, from: usize, to: usize) -> usize {
+        let (x, y) = self.grid.xy(from);
+        let (tx, ty) = self.grid.xy(to);
+        manhattan(x, y, tx, ty)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+
+    fn follow(topo: &dyn Topology, from: usize, to: usize, adaptive: bool) -> Result<usize, String> {
+        // Walk route candidates (first candidate, or deterministic route)
+        // until arrival; returns hop count, errs on unproductive steps.
+        let mut at = from;
+        let mut hops = 0;
+        let mut out = [Dir::Local; 2];
+        let bound = topo.distance(from, to);
+        while at != to {
+            let dir = if adaptive {
+                let n = topo.route_candidates(at, to, &mut out);
+                ensure(n >= 1, || format!("no candidate at {at} toward {to}"))?;
+                for &d in &out[..n] {
+                    let nb = topo
+                        .neighbor(at, d)
+                        .ok_or_else(|| format!("candidate {d:?} at {at} is unwired"))?;
+                    ensure(topo.distance(nb, to) < topo.distance(at, to), || {
+                        format!("unproductive candidate {d:?} at {at} toward {to}")
+                    })?;
+                }
+                out[0]
+            } else {
+                topo.route_deterministic(at, to)
+            };
+            ensure(dir != Dir::Local, || format!("stalled at {at} toward {to}"))?;
+            at = topo.neighbor(at, dir).ok_or_else(|| format!("unwired {dir:?} at {at}"))?;
+            hops += 1;
+            ensure(hops <= bound, || format!("route {from}->{to} exceeded distance {bound}"))?;
+        }
+        Ok(hops)
+    }
+
+    /// Every topology, every (src, dst) pair on small arrays: both the
+    /// adaptive candidates and the deterministic route arrive within
+    /// exactly `distance()` hops, and all candidates are productive.
+    #[test]
+    fn all_topologies_route_minimally() {
+        let dims = [(1, 6), (6, 1), (2, 2), (4, 4), (5, 3)];
+        for (w, h) in dims {
+            let topos: Vec<Box<dyn Topology>> = vec![
+                Box::new(Mesh2D::new(w, h)),
+                Box::new(Torus2D::new(w, h)),
+                Box::new(Ruche::new(w, h, 2)),
+                Box::new(Chiplet2L::new(w, h, (w, h), 4)),
+            ];
+            for topo in &topos {
+                for from in 0..topo.num_pes() {
+                    for to in 0..topo.num_pes() {
+                        for adaptive in [true, false] {
+                            let hops = follow(topo.as_ref(), from, to, adaptive)
+                                .unwrap_or_else(|e| {
+                                    panic!("{:?} {w}x{h}: {e}", topo.kind());
+                                });
+                            assert_eq!(
+                                hops,
+                                topo.distance(from, to),
+                                "{:?} {w}x{h} {from}->{to} not minimal",
+                                topo.kind()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The mesh implementation is the pre-refactor router: candidates and
+    /// deterministic routes match the free functions exactly, and
+    /// neighbors match the original boundary arithmetic.
+    #[test]
+    fn mesh_matches_pre_refactor_functions() {
+        forall(200, |rng| {
+            let w = 1 + rng.below_usize(8);
+            let h = 1 + rng.below_usize(8);
+            let topo = Mesh2D::new(w, h);
+            for id in 0..w * h {
+                let (x, y) = (id % w, id / w);
+                for to in 0..w * h {
+                    let (tx, ty) = (to % w, to / w);
+                    let mut a = [Dir::Local; 2];
+                    let mut b = [Dir::Local; 2];
+                    let na = topo.route_candidates(id, to, &mut a);
+                    let nb = route_ports(x, y, tx, ty, &mut b);
+                    ensure(na == nb && a == b, || format!("route_ports diverged {id}->{to}"))?;
+                    ensure(topo.route_deterministic(id, to) == route_xy(x, y, tx, ty), || {
+                        format!("route_xy diverged {id}->{to}")
+                    })?;
+                }
+                for (dir, wired) in [
+                    (Dir::North, y > 0),
+                    (Dir::South, y + 1 < h),
+                    (Dir::East, x + 1 < w),
+                    (Dir::West, x > 0),
+                ] {
+                    ensure(topo.neighbor(id, dir).is_some() == wired, || {
+                        format!("mesh neighbor {dir:?} at ({x},{y}) wiring diverged")
+                    })?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn torus_wraps_and_shortens() {
+        let t = Torus2D::new(4, 4);
+        // Wraparound links exist at the boundary.
+        assert_eq!(t.neighbor(0, Dir::West), Some(3));
+        assert_eq!(t.neighbor(0, Dir::North), Some(12));
+        assert_eq!(t.neighbor(3, Dir::East), Some(0));
+        assert_eq!(t.neighbor(12, Dir::South), Some(0));
+        // Corner-to-corner is 2 hops on the torus vs 6 on the mesh.
+        let m = Mesh2D::new(4, 4);
+        assert_eq!(t.distance(0, 15), 2);
+        assert_eq!(m.distance(0, 15), 6);
+        // Ties break East/South (deterministic, monotone).
+        let t2 = Torus2D::new(4, 1);
+        assert_eq!(t2.route_deterministic(0, 2), Dir::East);
+        assert!(t.requires_bubble() && !m.requires_bubble());
+    }
+
+    #[test]
+    fn ruche_skips_cut_hops() {
+        let r = Ruche::new(8, 8, 3);
+        // Long links exist exactly where a stride jump stays in-array.
+        assert_eq!(r.neighbor(0, Dir::RucheEast), Some(3));
+        assert_eq!(r.neighbor(0, Dir::RucheWest), None);
+        assert_eq!(r.neighbor(63, Dir::RucheWest), Some(60));
+        assert_eq!(r.neighbor(63, Dir::RucheSouth), None);
+        // 7 east + 7 south = (2 long + 1 short) * 2 axes = 6 hops vs 14.
+        assert_eq!(r.distance(0, 63), 6);
+        assert_eq!(Mesh2D::new(8, 8).distance(0, 63), 14);
+        // Westward routing is still single-candidate (west-first).
+        let mut out = [Dir::Local; 2];
+        assert_eq!(r.route_candidates(7, 0, &mut out), 1);
+        assert_eq!(out[0], Dir::RucheWest);
+        assert_eq!(r.route_candidates(1, 0, &mut out), 1);
+        assert_eq!(out[0], Dir::West);
+    }
+
+    #[test]
+    fn chiplet_boundary_links_are_slow() {
+        let c = Chiplet2L::new(8, 8, (4, 4), 5);
+        // PE 3 -> PE 4 crosses the vertical tile boundary.
+        assert_eq!(c.hop_latency(3, Dir::East), 5);
+        assert_eq!(c.hop_latency(4, Dir::West), 5);
+        // Interior hops stay single-cycle.
+        assert_eq!(c.hop_latency(0, Dir::East), 1);
+        assert_eq!(c.hop_latency(3, Dir::South), 1);
+        // PE 27 (x=3,y=3) -> South crosses the horizontal boundary.
+        assert_eq!(c.hop_latency(27, Dir::South), 5);
+        // Routing itself is the mesh's.
+        assert_eq!(c.distance(0, 63), 14);
+    }
+
+    #[test]
+    fn link_enumeration_counts() {
+        // Directed mesh links: 2 per interior edge.
+        let m = Mesh2D::new(4, 3);
+        assert_eq!(m.links().len(), 2 * (4 * 2 + 3 * 3));
+        // Torus (extent >= 2 both axes): every PE has 4 out-links.
+        assert_eq!(Torus2D::new(4, 3).links().len(), 4 * 12);
+        // Degenerate 1-wide torus: only the N/S ring remains.
+        assert_eq!(Torus2D::new(1, 4).links().len(), 2 * 4);
+        // Ruche = mesh links + skip links.
+        let r = Ruche::new(4, 4, 2);
+        let mesh_links = 2 * (4 * 3 + 4 * 3);
+        let skip_links = 2 * (4 * 2 + 4 * 2); // 2 east starts per row, etc.
+        assert_eq!(r.links().len(), mesh_links + skip_links);
+        // Every enumerated link is wired, latency >= 1, and indexable.
+        for topo in [
+            Box::new(Chiplet2L::new(4, 4, (2, 2), 3)) as Box<dyn Topology>,
+            Box::new(r),
+        ] {
+            for l in topo.links() {
+                assert_eq!(topo.neighbor(l.from, l.dir), Some(l.to));
+                assert!(l.latency >= 1);
+                assert!(link_index(l.from, l.dir) < topo.num_pes() * LINKS_PER_PE);
+            }
+        }
+    }
+
+    #[test]
+    fn build_topology_respects_config() {
+        let mut cfg = ArchConfig::nexus().with_array(8, 8);
+        for kind in TopologyKind::ALL {
+            cfg.topology = kind;
+            cfg.validate().unwrap();
+            let topo = build_topology(&cfg);
+            assert_eq!(topo.kind(), kind);
+            assert_eq!(topo.num_pes(), 64);
+        }
+    }
+}

@@ -13,7 +13,7 @@
 
 use nexus::am::Message;
 use nexus::compiler::{Program, ProgramBuilder};
-use nexus::config::{ArchConfig, ExecPolicy, RoutingPolicy, StepMode};
+use nexus::config::{ArchConfig, ExecPolicy, RoutingPolicy, StepMode, TopologyKind};
 use nexus::fabric::stats::FabricStats;
 use nexus::fabric::{DeadlockError, NexusFabric};
 use nexus::isa::{ConfigEntry, Opcode};
@@ -62,6 +62,31 @@ fn random_cfg(rng: &mut SplitMix64, exec: ExecPolicy, routing: RoutingPolicy) ->
     cfg.max_cycles = 20_000;
     cfg.seed = rng.next_u64();
     cfg.validate().expect("random config must be valid");
+    cfg
+}
+
+/// Layer a randomized topology onto a [`random_cfg`] draw: Ruche strides
+/// vary 2..=3, chiplet tile dims are random divisors of the mesh dims with
+/// a random 1..=4-cycle crossing latency.
+fn random_topo_cfg(
+    rng: &mut SplitMix64,
+    exec: ExecPolicy,
+    routing: RoutingPolicy,
+    kind: TopologyKind,
+) -> ArchConfig {
+    let mut cfg = random_cfg(rng, exec, routing);
+    cfg.topology = kind;
+    match kind {
+        TopologyKind::Ruche => cfg.ruche_stride = 2 + rng.below_usize(2),
+        TopologyKind::Chiplet2L => {
+            let divisors = |n: usize| (1..=n).filter(|d| n % d == 0).collect::<Vec<usize>>();
+            let (ws, hs) = (divisors(cfg.width), divisors(cfg.height));
+            cfg.chiplet_dims = (ws[rng.below_usize(ws.len())], hs[rng.below_usize(hs.len())]);
+            cfg.inter_chiplet_latency = 1 + rng.below_usize(4);
+        }
+        TopologyKind::Mesh2D | TopologyKind::Torus2D => {}
+    }
+    cfg.validate().expect("random topology config must be valid");
     cfg
 }
 
@@ -258,6 +283,12 @@ fn first_diverging_cycle(prog: &Program, cfg: &ArchConfig) -> Option<u64> {
 /// success, identical timeout reports on deadlock.
 fn equivalent(rng: &mut SplitMix64, exec: ExecPolicy, routing: RoutingPolicy) -> Result<(), String> {
     let cfg = random_cfg(rng, exec, routing);
+    equivalent_on(rng, cfg)
+}
+
+/// [`equivalent`] over a caller-built configuration (the per-topology
+/// variants feed [`random_topo_cfg`] draws through here).
+fn equivalent_on(rng: &mut SplitMix64, cfg: ArchConfig) -> Result<(), String> {
     let prog = random_program(rng, &cfg);
     let (ra, fa) = run_mode(&prog, &cfg, StepMode::ActiveSet);
     let (rd, _fd) = run_mode(&prog, &cfg, StepMode::DenseOracle);
@@ -353,6 +384,36 @@ equivalence_test!(
     RoutingPolicy::Valiant
 );
 
+/// Per-topology equivalence: on every non-mesh topology, active-set vs
+/// dense-oracle stepping stays bit-identical across random geometries,
+/// topology parameters (stride / chiplet tiling / crossing latency), exec
+/// policies, and routing policies. Runs half the case budget per topology.
+macro_rules! topology_equivalence_test {
+    ($name:ident, $seed:expr, $kind:expr) => {
+        #[test]
+        fn $name() {
+            forall_seeded($seed, (prop_cases() / 2).max(50), &mut |rng| {
+                let exec = if rng.chance(0.5) {
+                    ExecPolicy::EnRoute
+                } else {
+                    ExecPolicy::DestinationOnly
+                };
+                let routing = [
+                    RoutingPolicy::TurnModelAdaptive,
+                    RoutingPolicy::Xy,
+                    RoutingPolicy::Valiant,
+                ][rng.below_usize(3)];
+                let cfg = random_topo_cfg(rng, exec, routing, $kind);
+                equivalent_on(rng, cfg)
+            });
+        }
+    };
+}
+
+topology_equivalence_test!(equivalence_topology_torus, 0x701, TopologyKind::Torus2D);
+topology_equivalence_test!(equivalence_topology_ruche, 0x702, TopologyKind::Ruche);
+topology_equivalence_test!(equivalence_topology_chiplet, 0x703, TopologyKind::Chiplet2L);
+
 /// Lockstep variant: instead of only comparing end states, step both
 /// schedulers cycle by cycle and require equal state digests at *every*
 /// boundary, with the wake-list invariants holding throughout. Stronger
@@ -368,7 +429,8 @@ fn lockstep_digests_and_wake_invariants() {
             RoutingPolicy::Xy,
             RoutingPolicy::Valiant,
         ][rng.below_usize(3)];
-        let mut cfg = random_cfg(rng, exec, routing);
+        let kind = TopologyKind::ALL[rng.below_usize(TopologyKind::ALL.len())];
+        let mut cfg = random_topo_cfg(rng, exec, routing, kind);
         // Small data memories keep the per-cycle full-state digest cheap
         // (the random programs use well under 128 words per PE).
         cfg.dmem_words = 128;

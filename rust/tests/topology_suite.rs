@@ -1,0 +1,205 @@
+//! Topology-layer integration suite: the 2D mesh default stays
+//! bit-identical across step modes on real workloads (the pre-refactor
+//! behavior contract), every topology variant validates the workload
+//! suite, wraparound/skip links actually shorten routes, chiplet boundary
+//! crossings actually cost cycles, and the per-link congestion counters
+//! obey their conservation invariant end to end through the `Machine`
+//! layer.
+
+use nexus::am::Message;
+use nexus::compiler::{Program, ProgramBuilder};
+use nexus::config::{ArchConfig, StepMode, TopologyKind};
+use nexus::fabric::NexusFabric;
+use nexus::isa::Opcode;
+use nexus::machine::Machine;
+
+/// `count` remote stores from the north-west corner PE to the south-east
+/// corner PE — the worst-case mesh path, and the one wraparound (torus)
+/// and skip (ruche) links shorten the most.
+fn corner_storm(cfg: &ArchConfig, count: u16) -> Program {
+    let far = cfg.num_pes() - 1;
+    let mut b = ProgramBuilder::new("corner-storm", cfg);
+    let addr = b.alloc(far, count as usize);
+    for i in 0..count {
+        let mut am = Message::new();
+        am.opcode = Opcode::Store;
+        am.op1 = i;
+        am.result = addr + i;
+        am.res_is_addr = true;
+        am.push_dest(far as u8);
+        b.static_am(0, am);
+    }
+    for i in 0..count {
+        b.output(far, addr + i);
+    }
+    b.build()
+}
+
+fn run_storm(cfg: ArchConfig) -> NexusFabric {
+    let prog = corner_storm(&cfg, 40);
+    let mut f = NexusFabric::new(cfg);
+    let out = f.run_program(&prog).expect("storm must drain");
+    assert_eq!(out, (0..40).collect::<Vec<i16>>());
+    f.check_conservation().unwrap();
+    f
+}
+
+fn base_8x8(kind: TopologyKind) -> ArchConfig {
+    ArchConfig::nexus()
+        .with_array(8, 8)
+        .with_topology(kind)
+        .with_chiplet((4, 4), 6)
+}
+
+/// The regression contract of the refactor: the default topology is the
+/// 2D mesh, and mesh execution stays bit-identical between the two step
+/// modes on real suite workloads — outputs, cycles, and the full stats
+/// block (which now includes the per-link counters).
+#[test]
+fn mesh_default_suite_is_bit_identical_across_modes() {
+    assert_eq!(ArchConfig::nexus().topology, TopologyKind::Mesh2D);
+    let specs = nexus::workloads::suite(1);
+    let picks: Vec<_> = specs
+        .iter()
+        .filter(|s| {
+            let n = s.name();
+            n.starts_with("SpMV") || n == "BFS"
+        })
+        .collect();
+    assert!(!picks.is_empty());
+    // An explicit Mesh2D selection and the default must be the same thing.
+    let mut default_m = Machine::new(ArchConfig::nexus());
+    let mut explicit = Machine::new(ArchConfig::nexus().with_topology(TopologyKind::Mesh2D));
+    let mut dense = Machine::new(ArchConfig::nexus().with_step_mode(StepMode::DenseOracle));
+    for spec in &picks {
+        let ed = default_m.run(spec).expect("default mesh run");
+        let ee = explicit.run(spec).expect("explicit mesh run");
+        let eo = dense.run(spec).expect("dense mesh run");
+        assert!(ed.result.validated, "{}", spec.name());
+        for other in [&ee, &eo] {
+            assert_eq!(ed.outputs, other.outputs, "{}", spec.name());
+            assert_eq!(ed.cycles(), other.cycles(), "{}", spec.name());
+        }
+        let (sa, sb) = (ed.stats.as_ref().unwrap(), eo.stats.as_ref().unwrap());
+        if let Some(field) = sa.diff(sb) {
+            panic!("{}: mesh stats diverged across modes on {field}", spec.name());
+        }
+    }
+}
+
+/// Every topology variant executes and validates real workloads through
+/// the `Machine` layer, and the per-link counters partition `flit_hops`.
+#[test]
+fn all_topologies_validate_suite_workloads() {
+    let specs = nexus::workloads::suite(1);
+    let spmv = specs
+        .iter()
+        .find(|s| s.name().starts_with("SpMV"))
+        .expect("suite has SpMV");
+    for kind in TopologyKind::ALL {
+        let cfg = ArchConfig::nexus().with_topology(kind).with_chiplet((2, 2), 3);
+        let mut m = Machine::new(cfg);
+        let e = m.run(spmv).unwrap_or_else(|err| panic!("{kind:?}: {err}"));
+        assert!(e.result.validated, "{kind:?}: SpMV must validate");
+        let s = e.stats.expect("fabric stats");
+        assert_eq!(
+            s.link_flits_total(),
+            s.flit_hops,
+            "{kind:?}: link counters must partition flit_hops"
+        );
+        assert!(s.peak_link_demand >= 1, "{kind:?}");
+        let (_, hottest) = s.max_link_flits().expect("some link carried flits");
+        assert!(hottest > 0, "{kind:?}");
+    }
+}
+
+/// Wraparound and skip links must shorten worst-case routes: the
+/// corner-to-corner storm crosses fewer total links on the torus (2-hop
+/// wrap path vs 14) and the ruche (stride jumps) than on the mesh.
+#[test]
+fn torus_and_ruche_cut_corner_traffic() {
+    let mesh = run_storm(base_8x8(TopologyKind::Mesh2D));
+    let torus = run_storm(base_8x8(TopologyKind::Torus2D));
+    let ruche = run_storm(base_8x8(TopologyKind::Ruche));
+    assert!(
+        torus.stats.flit_hops < mesh.stats.flit_hops,
+        "torus {} !< mesh {}",
+        torus.stats.flit_hops,
+        mesh.stats.flit_hops
+    );
+    assert!(
+        ruche.stats.flit_hops < mesh.stats.flit_hops,
+        "ruche {} !< mesh {}",
+        ruche.stats.flit_hops,
+        mesh.stats.flit_hops
+    );
+}
+
+/// Chiplet boundary crossings hold the staging slot for the configured
+/// latency, so the same storm costs strictly more cycles than the
+/// single-die mesh while crossing the same number of links.
+#[test]
+fn chiplet_crossings_cost_cycles_not_hops() {
+    let mesh = run_storm(base_8x8(TopologyKind::Mesh2D));
+    let chiplet = run_storm(base_8x8(TopologyKind::Chiplet2L));
+    assert_eq!(
+        chiplet.stats.flit_hops, mesh.stats.flit_hops,
+        "chiplet routes like the mesh"
+    );
+    assert!(
+        chiplet.cycles() > mesh.cycles(),
+        "chiplet {} !> mesh {}: 6-cycle crossings must show up",
+        chiplet.cycles(),
+        mesh.cycles()
+    );
+}
+
+/// The hottest link of an all-to-one hotspot on the mesh is one of the
+/// four links into the hotspot PE — the per-link counters localize
+/// congestion, not just count it.
+#[test]
+fn link_counters_localize_hotspot_congestion() {
+    let cfg = ArchConfig::nexus().with_array(8, 8);
+    let hot = 27usize; // interior PE: four in-links
+    let mut b = ProgramBuilder::new("hotspot", &cfg);
+    let addr = b.alloc(hot, 1);
+    for i in 0..120u16 {
+        let src = (i as usize * 7 + 1) % 64;
+        if src == hot {
+            continue;
+        }
+        let mut am = Message::new();
+        am.opcode = Opcode::Store;
+        am.op1 = i;
+        am.result = addr;
+        am.res_is_addr = true;
+        am.push_dest(hot as u8);
+        b.static_am(src, am);
+    }
+    b.output(hot, addr);
+    let prog = b.build();
+    let mut f = NexusFabric::new(cfg);
+    f.run_program(&prog).expect("hotspot drains");
+    let (_, peak) = f.stats.max_link_flits().expect("traffic flowed");
+    assert!(peak > 0);
+    // Flow conservation: every store funnels through one of the four
+    // in-links of the hotspot, so the busiest of those must carry the
+    // global per-link maximum.
+    let max_into_hot = f
+        .stats
+        .link_flits
+        .iter()
+        .enumerate()
+        .filter(|&(idx, _)| {
+            let from = idx / nexus::noc::LINKS_PER_PE;
+            let dir = nexus::noc::routing::Dir::from_port(idx % nexus::noc::LINKS_PER_PE + 1);
+            f.topology().neighbor(from, dir) == Some(hot)
+        })
+        .map(|(_, &flits)| flits)
+        .max()
+        .unwrap();
+    assert_eq!(
+        max_into_hot, peak,
+        "the hottest link must be one feeding the hotspot PE"
+    );
+}
