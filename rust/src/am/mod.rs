@@ -19,8 +19,12 @@ use crate::isa::{ConfigEntry, Opcode};
 /// output tensor").
 pub const MAX_DESTS: usize = 3;
 
-/// Sentinel for an empty destination slot.
-pub const NO_DEST: u8 = 0xFF;
+/// Sentinel for an empty destination slot. Destination fields are 16-bit
+/// in the unpacked [`Message`] so fig17-scale meshes (64×64 and beyond,
+/// up to the 16384-PE config cap) are addressable; the packed Fig 7 wire
+/// format keeps its 4-bit fields and remains defined for Table 1-sized
+/// fabrics only (see [`packed`]).
+pub const NO_DEST: u16 = 0xFFFF;
 
 /// An Active Message in flight. `Copy`: the struct is a few dozen bytes of
 /// plain data and the simulator moves it by value through router buffers.
@@ -30,7 +34,7 @@ pub struct Message {
     /// the owner PE of the next memory-class operation. Consumed (rotated)
     /// when that operation executes. ALU-class opcodes do not consume
     /// destinations — they may run anywhere along the route.
-    pub dests: [u8; MAX_DESTS],
+    pub dests: [u16; MAX_DESTS],
     /// Number of valid destinations remaining.
     pub ndests: u8,
     /// Program counter into the replicated configuration memory: selects the
@@ -61,7 +65,7 @@ pub struct Message {
     pub hops: u16,
     /// Valiant intermediate destination, if routing policy is Valiant and the
     /// first phase is still in progress.
-    pub valiant_hop: Option<u8>,
+    pub valiant_hop: Option<u16>,
     /// Set when an intermediate PE executed this message's opcode en-route
     /// (for the Fig 11 right-axis "% computations in-network" series).
     pub executed_enroute: bool,
@@ -91,7 +95,7 @@ impl Message {
 
     /// Current head destination PE, if any destinations remain.
     #[inline]
-    pub fn head_dest(&self) -> Option<u8> {
+    pub fn head_dest(&self) -> Option<u16> {
         if self.ndests > 0 {
             Some(self.dests[0])
         } else {
@@ -102,7 +106,7 @@ impl Message {
     /// Routing target for this cycle: the Valiant intermediate hop when one
     /// is pending, else the head destination.
     #[inline]
-    pub fn route_target(&self) -> Option<u8> {
+    pub fn route_target(&self) -> Option<u16> {
         self.valiant_hop.or_else(|| self.head_dest())
     }
 
@@ -121,7 +125,7 @@ impl Message {
     }
 
     /// Push a destination onto the list (codegen helper).
-    pub fn push_dest(&mut self, pe: u8) {
+    pub fn push_dest(&mut self, pe: u16) {
         assert!((self.ndests as usize) < MAX_DESTS, "too many destinations");
         self.dests[self.ndests as usize] = pe;
         self.ndests += 1;

@@ -26,7 +26,9 @@ use super::{Message, MAX_DESTS, NO_DEST};
 use crate::isa::Opcode;
 
 /// 4-bit destination sentinel for "no destination" in the packed format.
-const PACKED_NO_DEST: u8 = 0xF;
+/// (Typed to match the unpacked `Message::dests` words; the value still
+/// fits the 4-bit field.)
+const PACKED_NO_DEST: u16 = 0xF;
 
 /// Number of payload bits in a packed AM (for bandwidth accounting).
 pub const AM_BITS: u32 = 70;
@@ -65,7 +67,7 @@ pub fn pack(m: &Message) -> u128 {
 pub fn unpack(w: u128) -> Option<Message> {
     let mut m = Message::new();
     for i in 0..MAX_DESTS {
-        let d = ((w >> (4 * i)) & 0xF) as u8;
+        let d = ((w >> (4 * i)) & 0xF) as u16;
         if d != PACKED_NO_DEST {
             // Destinations must be contiguous from slot 0.
             if i != m.ndests as usize {
@@ -99,7 +101,7 @@ mod tests {
         let mut m = Message::new();
         let nd = rng.below_usize(MAX_DESTS + 1);
         for _ in 0..nd {
-            m.push_dest(rng.below(15) as u8);
+            m.push_dest(rng.below(15) as u16);
         }
         m.n_pc = rng.below(16) as u8;
         m.opcode = loop {

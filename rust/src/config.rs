@@ -195,6 +195,21 @@ pub struct ArchConfig {
     /// Per-hop latency in cycles of a link that crosses a chiplet boundary
     /// ([`TopologyKind::Chiplet2L`] only; intra-chiplet hops stay 1 cycle).
     pub inter_chiplet_latency: usize,
+    /// Number of horizontal row-band shards the fabric is partitioned into
+    /// for sharded stepping (must divide `height`). Each shard owns a
+    /// contiguous band of rows with its own wake-lists, PRNG stream
+    /// (`util::prng::stream_seed(seed, shard)`), message-id space, and
+    /// stats delta; cross-shard flits travel through per-epoch mailboxes.
+    /// `shards == 1` is bit-identical to the historical unsharded
+    /// simulator. Like [`StepMode`], the *thread count* below is host-side
+    /// only; the shard count is part of the modeled schedule (boundary
+    /// routing decisions read epoch-start snapshots), so results are
+    /// reproducible per `(seed, shards)` at **any** thread count.
+    pub shards: usize,
+    /// Worker threads stepping the shards in parallel (host-side only;
+    /// clamped to `shards`). `1` steps every shard on the caller's thread;
+    /// any value yields bit-identical results for a fixed shard count.
+    pub threads: usize,
 }
 
 impl ArchConfig {
@@ -224,6 +239,8 @@ impl ArchConfig {
             ruche_stride: 2,
             chiplet_dims: (4, 4),
             inter_chiplet_latency: 4,
+            shards: 1,
+            threads: 1,
         }
     }
 
@@ -305,6 +322,21 @@ impl ArchConfig {
         self
     }
 
+    /// Override the shard count for sharded stepping (`--shards`). Must
+    /// divide `height`; `1` (the default) is the unsharded simulator.
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Override the worker-thread count for sharded stepping
+    /// (`--threads`). Host-side only: results are bit-identical for a
+    /// fixed shard count at any thread count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
     /// Number of PEs in the fabric.
     #[inline]
     pub fn num_pes(&self) -> usize {
@@ -345,8 +377,20 @@ impl ArchConfig {
         if self.config_entries == 0 || self.config_entries > 16 {
             return Err("config entries must be in 1..=16 (4-bit N_PC)".into());
         }
-        if self.num_pes() > 256 {
-            return Err("destination fields are 8-bit; at most 256 PEs".into());
+        if self.num_pes() > 16_384 {
+            return Err("destination fields are 16-bit; at most 16384 PEs".into());
+        }
+        if self.shards == 0 {
+            return Err("shard count must be >= 1".into());
+        }
+        if self.height % self.shards != 0 {
+            return Err(format!(
+                "shard count {} must divide the array height {}",
+                self.shards, self.height
+            ));
+        }
+        if self.threads == 0 {
+            return Err("thread count must be >= 1".into());
         }
         match self.topology {
             TopologyKind::Mesh2D | TopologyKind::Torus2D => {}
@@ -427,7 +471,27 @@ mod tests {
         let mut c = ArchConfig::nexus();
         c.router_buf_depth = 1;
         assert!(c.validate().is_err());
-        assert!(ArchConfig::nexus().with_array(20, 20).validate().is_err());
+        // 20x20 = 400 PEs is now in range (16-bit destinations); the cap
+        // rejects arrays past 16384 PEs.
+        ArchConfig::nexus().with_array(20, 20).validate().unwrap();
+        assert!(ArchConfig::nexus().with_array(200, 200).validate().is_err());
+    }
+
+    #[test]
+    fn shard_and_thread_knobs_validated() {
+        let c = ArchConfig::nexus();
+        assert_eq!((c.shards, c.threads), (1, 1));
+        c.with_shards(4).with_threads(8).validate().unwrap(); // 4 divides height 4
+        ArchConfig::nexus().with_shards(2).validate().unwrap();
+        assert!(ArchConfig::nexus().with_shards(0).validate().is_err());
+        assert!(ArchConfig::nexus().with_threads(0).validate().is_err());
+        // 3 does not divide the default height of 4.
+        assert!(ArchConfig::nexus().with_shards(3).validate().is_err());
+        ArchConfig::nexus()
+            .with_array(8, 6)
+            .with_shards(3)
+            .validate()
+            .unwrap();
     }
 
     #[test]

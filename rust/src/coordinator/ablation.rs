@@ -138,8 +138,8 @@ pub fn placement_ablation(seed: u64) -> (u64, u64) {
                 am.op2_is_addr = true;
                 am.result = ys.addr[r];
                 am.res_is_addr = true;
-                am.push_dest(xs.pe[c] as u8);
-                am.push_dest(ys.pe[r] as u8);
+                am.push_dest(xs.pe[c] as u16);
+                am.push_dest(ys.pe[r] as u16);
                 b.static_am(row_part[r], am);
             }
         }

@@ -16,7 +16,7 @@ pub mod ablation;
 pub mod report;
 
 use crate::baselines::{roster, RunResult};
-use crate::config::{ArchConfig, StepMode, TopologyKind};
+use crate::config::ArchConfig;
 use crate::dataset::{run_corpus, Corpus, RunOptions};
 use crate::machine::{Compiled, ExecError, Machine, MachinePool};
 use crate::workloads::suite;
@@ -109,7 +109,8 @@ impl Matrix {
 /// (program name, cycles) on success, the first typed failure otherwise.
 pub fn validate_suite(cfg: &ArchConfig, seed: u64) -> Result<Vec<(String, u64)>, ExecError> {
     let specs = suite(seed);
-    let pool = MachinePool::new();
+    // Each Machine may itself step shards on `cfg.threads` workers.
+    let pool = MachinePool::for_threads(cfg.threads);
     pool.run_batch_with(
         || Machine::new(cfg.clone()),
         &specs,
@@ -164,28 +165,18 @@ pub fn corpus_list(filter: Option<&str>) -> String {
 }
 
 /// Run `nexus corpus run`: execute the (filtered) corpus across the pool
-/// with bit-exact validation. Returns the per-scenario JSON lines (the
-/// `BENCH_CORPUS.json` artifact body) plus a success flag that is `false`
-/// if any scenario failed or no scenario matched.
-pub fn corpus_run(
-    filter: Option<&str>,
-    seed: u64,
-    step_mode: StepMode,
-    topology: TopologyKind,
-) -> (String, bool) {
+/// with bit-exact validation. `opts` carries the sweep seed, step mode,
+/// topology, and the sharding knobs (`--shards`/`--threads`). Returns the
+/// per-scenario JSON lines (the `BENCH_CORPUS.json` artifact body) plus a
+/// success flag that is `false` if any scenario failed or no scenario
+/// matched.
+pub fn corpus_run(filter: Option<&str>, opts: RunOptions) -> (String, bool) {
     let corpus = Corpus::builtin();
     let scenarios = corpus.select(filter);
     if scenarios.is_empty() {
         return (String::new(), false);
     }
-    let runs = run_corpus(
-        &scenarios,
-        RunOptions {
-            seed,
-            step_mode,
-            topology,
-        },
-    );
+    let runs = run_corpus(&scenarios, opts);
     let ok = runs.iter().all(|r| r.passed());
     let lines: Vec<String> = runs.iter().map(|r| r.json_line()).collect();
     (lines.join("\n"), ok)
@@ -330,22 +321,24 @@ mod tests {
     fn corpus_cli_surfaces_work() {
         let listing = corpus_list(Some("smoke/*"));
         assert!(listing.contains("smoke/spmv-uniform-d30-4x4"), "{listing}");
-        let (lines, ok) = corpus_run(
-            Some("smoke/spmv-*"),
-            1,
-            StepMode::ActiveSet,
-            TopologyKind::Mesh2D,
-        );
+        let (lines, ok) = corpus_run(Some("smoke/spmv-*"), RunOptions::default());
         assert!(ok, "{lines}");
         assert!(lines.lines().count() >= 2);
         assert!(lines.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
-        let (empty, ok) = corpus_run(
-            Some("no-such/*"),
-            1,
-            StepMode::ActiveSet,
-            TopologyKind::Mesh2D,
-        );
+        let (empty, ok) = corpus_run(Some("no-such/*"), RunOptions::default());
         assert!(!ok && empty.is_empty(), "unmatched filter must fail");
+        // The sharded path surfaces through the same entry point and still
+        // validates bit-exactly.
+        let (sharded, ok) = corpus_run(
+            Some("smoke/spmv-*"),
+            RunOptions {
+                shards: 2,
+                threads: 2,
+                ..RunOptions::default()
+            },
+        );
+        assert!(ok, "{sharded}");
+        assert!(sharded.lines().all(|l| l.contains("\"shards\":2")), "{sharded}");
     }
 
     #[test]

@@ -39,4 +39,6 @@ pub use mtx::{
     quantize_value, read_mtx, read_mtx_file, write_mtx, write_mtx_file, MtxError, MtxField,
     MtxSymmetry,
 };
-pub use runner::{cross_check_corpus, run_corpus, RunOptions, ScenarioMetrics, ScenarioRun};
+pub use runner::{
+    cross_check_corpus, effective_shards, run_corpus, RunOptions, ScenarioMetrics, ScenarioRun,
+};

@@ -25,6 +25,15 @@ pub struct RunOptions {
     pub step_mode: StepMode,
     /// NoC topology the sweep runs on (`--topology`; default 2D mesh).
     pub topology: TopologyKind,
+    /// Requested row-band shard count (`--shards`). Scenario meshes vary,
+    /// so each run uses the largest divisor of its mesh height that does
+    /// not exceed this (`effective_shards`); `1` is the unsharded
+    /// simulator. The shard count is part of the modeled schedule, so it
+    /// appears in every JSON line.
+    pub shards: usize,
+    /// Worker threads per simulation (`--threads`; host-side only, results
+    /// are bit-identical at any thread count for a fixed shard count).
+    pub threads: usize,
 }
 
 impl Default for RunOptions {
@@ -33,8 +42,19 @@ impl Default for RunOptions {
             seed: 1,
             step_mode: StepMode::ActiveSet,
             topology: TopologyKind::Mesh2D,
+            shards: 1,
+            threads: 1,
         }
     }
+}
+
+/// Largest divisor of `height` that does not exceed `requested` — the
+/// per-scenario shard count a sweep-wide `--shards` request resolves to
+/// (shards must divide the mesh height; see
+/// [`crate::config::ArchConfig::shards`]).
+pub fn effective_shards(requested: usize, height: usize) -> usize {
+    let cap = requested.clamp(1, height.max(1));
+    (1..=cap).rev().find(|s| height % s == 0).unwrap_or(1)
 }
 
 /// Metrics of one successfully executed scenario.
@@ -55,6 +75,9 @@ pub struct ScenarioMetrics {
     pub link_flits_total: u64,
     /// Most flits any single cycle moved across the whole NoC.
     pub peak_link_demand: u64,
+    /// `peak_link_demand` converted to physical GB/s at the configured
+    /// clock ([`crate::power::link_demand_gbps`]).
+    pub peak_link_gbps: f64,
     /// Per-directed-link flit counts, nonzero links only, as
     /// `(from_pe, to_pe, flits)` sorted hottest-first.
     pub links: Vec<(usize, usize, u64)>,
@@ -70,6 +93,9 @@ pub struct ScenarioRun {
     pub mesh: String,
     /// Topology name the run used (`mesh`, `torus`, `ruche`, `chiplet`).
     pub topology: &'static str,
+    /// Shard count the run actually used ([`effective_shards`] of the
+    /// requested `--shards` for this scenario's mesh height).
+    pub shards: usize,
     pub seed: u64,
     /// Content fingerprint of the scenario's tensors (compile-cache key).
     pub fingerprint: u64,
@@ -102,12 +128,13 @@ impl ScenarioRun {
         let _ = write!(
             s,
             "{{\"scenario\":\"{}\",\"kernel\":\"{}\",\"source\":\"{}\",\"mesh\":\"{}\",\
-             \"topology\":\"{}\",\"seed\":{},\"fingerprint\":\"{:#018x}\"",
+             \"topology\":\"{}\",\"shards\":{},\"seed\":{},\"fingerprint\":\"{:#018x}\"",
             json_escape(&self.scenario),
             json_escape(self.kernel),
             json_escape(self.source),
             json_escape(&self.mesh),
             json_escape(self.topology),
+            self.shards,
             self.seed,
             self.fingerprint,
         );
@@ -118,7 +145,8 @@ impl ScenarioRun {
                     ",\"status\":\"ok\",\"cycles\":{},\"work_ops\":{},\
                      \"utilization\":{:.4},\"congestion\":{:.4},\"load_cv\":{:.4},\
                      \"op_cv\":{:.4},\"op_max_mean\":{:.4},\
-                     \"link_flits\":{},\"peak_link_demand\":{},\"links\":[",
+                     \"link_flits\":{},\"peak_link_demand\":{},\
+                     \"peak_link_gbps\":{:.3},\"links\":[",
                     m.cycles,
                     m.work_ops,
                     m.utilization,
@@ -128,6 +156,7 @@ impl ScenarioRun {
                     m.op_max_mean,
                     m.link_flits_total,
                     m.peak_link_demand,
+                    m.peak_link_gbps,
                 );
                 for (i, &(from, to, flits)) in m.links.iter().enumerate() {
                     if i > 0 {
@@ -153,7 +182,9 @@ impl ScenarioRun {
 /// Execute scenarios across the pool, one reusable machine per mesh per
 /// worker. Results come back in scenario order.
 pub fn run_corpus(scenarios: &[&Scenario], opts: RunOptions) -> Vec<ScenarioRun> {
-    let pool = MachinePool::new();
+    // Each simulation may itself run `opts.threads` shard workers; divide
+    // the host's cores between the two levels of parallelism.
+    let pool = MachinePool::for_threads(opts.threads);
     pool.run_batch_with(
         HashMap::<(usize, usize), Machine>::new,
         scenarios,
@@ -184,10 +215,13 @@ fn run_one(
     sc: &Scenario,
     opts: RunOptions,
 ) -> ScenarioRun {
+    let shards = effective_shards(opts.shards, sc.mesh.1);
     let cfg = sc
         .config()
         .with_topology(opts.topology)
-        .with_step_mode(opts.step_mode);
+        .with_step_mode(opts.step_mode)
+        .with_shards(shards)
+        .with_threads(opts.threads);
     let m = machines
         .entry(sc.mesh)
         .or_insert_with(|| Machine::new(cfg.clone()));
@@ -207,6 +241,7 @@ fn run_one(
                 ),
                 None => (0, 0, Vec::new()),
             };
+            let peak_link_gbps = crate::power::link_demand_gbps(peak_link_demand, cfg.freq_mhz);
             let congestion =
                 e.result.congestion.iter().sum::<f64>() / e.result.congestion.len() as f64;
             Ok(ScenarioMetrics {
@@ -219,6 +254,7 @@ fn run_one(
                 op_max_mean,
                 link_flits_total,
                 peak_link_demand,
+                peak_link_gbps,
                 links,
                 validated: e.result.validated,
             })
@@ -231,6 +267,7 @@ fn run_one(
         source: sc.source,
         mesh: sc.mesh_name(),
         topology: opts.topology.name(),
+        shards,
         seed: opts.seed,
         fingerprint,
         outcome,
@@ -312,7 +349,15 @@ mod tests {
                     assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
                     assert!(line.contains("\"status\":\"ok\""), "{line}");
                     assert!(line.contains("\"topology\":\"mesh\""), "{line}");
+                    assert!(line.contains("\"shards\":1"), "{line}");
                     assert!(line.contains("\"peak_link_demand\":"), "{line}");
+                    assert!(line.contains("\"peak_link_gbps\":"), "{line}");
+                    assert!(
+                        m.peak_link_gbps
+                            == crate::power::link_demand_gbps(m.peak_link_demand, 588.0),
+                        "{}",
+                        run.scenario
+                    );
                     assert!(line.contains("\"links\":[["), "{line}");
                 }
                 Err(e) => panic!("{} failed: {e}", run.scenario),
@@ -351,6 +396,42 @@ mod tests {
             );
             let line = run.json_line();
             assert!(line.contains("\"topology\":\"torus\""), "{line}");
+        }
+    }
+
+    #[test]
+    fn effective_shards_picks_largest_divisor() {
+        assert_eq!(effective_shards(1, 8), 1);
+        assert_eq!(effective_shards(8, 8), 8);
+        assert_eq!(effective_shards(3, 8), 2); // 3 does not divide 8
+        assert_eq!(effective_shards(8, 6), 6); // capped at the height
+        assert_eq!(effective_shards(4, 6), 3);
+        assert_eq!(effective_shards(0, 4), 1); // degenerate requests clamp
+        assert_eq!(effective_shards(5, 0), 1);
+    }
+
+    #[test]
+    fn sharded_corpus_run_is_thread_count_invariant() {
+        // `threads` is host-side only: a sharded sweep must validate and
+        // produce identical metrics at 1 and 4 worker threads.
+        let corpus = Corpus::builtin();
+        let smoke = corpus.filter("smoke/*");
+        let opts = |threads| RunOptions {
+            shards: 2,
+            threads,
+            ..RunOptions::default()
+        };
+        let serial = run_corpus(&smoke, opts(1));
+        let threaded = run_corpus(&smoke, opts(4));
+        for (a, b) in serial.iter().zip(&threaded) {
+            assert_eq!(a.scenario, b.scenario);
+            assert!(a.shards >= 2, "{}: shards {}", a.scenario, a.shards);
+            let (ma, mb) = (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+            assert!(ma.validated && mb.validated, "{}", a.scenario);
+            assert_eq!(ma.cycles, mb.cycles, "{}", a.scenario);
+            assert_eq!(ma.link_flits_total, mb.link_flits_total, "{}", a.scenario);
+            assert_eq!(ma.peak_link_demand, mb.peak_link_demand, "{}", a.scenario);
+            assert_eq!(a.json_line(), b.json_line(), "{}", a.scenario);
         }
     }
 

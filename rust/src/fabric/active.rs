@@ -26,14 +26,29 @@ pub struct WakeList {
     mask: Vec<bool>,
     /// Sorted members, for rotated iteration.
     set: BTreeSet<usize>,
+    /// Ids this list may legally hold, as `(base, len)` over the *global*
+    /// id space. A whole-fabric list owns `(0, n)`; a per-shard list owns
+    /// its shard's contiguous band. Only a debug guard — sharded stepping
+    /// keeps one list per shard and a cross-band `wake` means a shard
+    /// touched state it does not own.
+    band: (usize, usize),
 }
 
 impl WakeList {
     /// An empty wake-list over component ids `0..n`.
     pub fn new(n: usize) -> Self {
+        Self::new_for_band(n, 0, n)
+    }
+
+    /// An empty wake-list whose members must fall in `base..base + len`.
+    /// The mask still spans `0..n` (ids stay global; only ownership is
+    /// restricted), so `is_awake` works unchanged for any fabric id.
+    pub fn new_for_band(n: usize, base: usize, len: usize) -> Self {
+        debug_assert!(base + len <= n);
         WakeList {
             mask: vec![false; n],
             set: BTreeSet::new(),
+            band: (base, len),
         }
     }
 
@@ -59,6 +74,11 @@ impl WakeList {
     /// Mark `id` awake (idempotent).
     #[inline]
     pub fn wake(&mut self, id: usize) {
+        debug_assert!(
+            id >= self.band.0 && id < self.band.0 + self.band.1,
+            "wake({id}) outside its band {:?}",
+            self.band
+        );
         if !self.mask[id] {
             self.mask[id] = true;
             self.set.insert(id);
@@ -137,6 +157,28 @@ mod tests {
         out.clear();
         w.rotated_into(9, &mut out);
         assert_eq!(out, vec![9, 1, 4, 7]);
+    }
+
+    #[test]
+    fn band_list_keeps_global_ids() {
+        // A per-shard list over the band 4..8 of a 12-component fabric:
+        // membership tests and rotated iteration stay in global id space.
+        let mut w = WakeList::new_for_band(12, 4, 4);
+        assert_eq!(w.capacity(), 12);
+        w.wake(4);
+        w.wake(7);
+        assert!(w.is_awake(7) && !w.is_awake(3));
+        let mut out = Vec::new();
+        w.rotated_into(6, &mut out);
+        assert_eq!(out, vec![7, 4]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "outside its band")]
+    fn band_guard_catches_out_of_band_wake() {
+        let mut w = WakeList::new_for_band(12, 4, 4);
+        w.wake(9);
     }
 
     #[test]

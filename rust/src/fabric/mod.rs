@@ -42,30 +42,44 @@
 //! [`NexusFabric::check_conservation`] additionally asserts the wake-list
 //! invariants (no awake-but-idle leaks, no asleep-but-pending components).
 //!
+//! ## Sharded stepping
+//!
+//! The fabric is additionally partitioned into `cfg.shards` contiguous row
+//! bands (see [`shard`]): every phase runs shard-locally, boundary flits
+//! cross shards through per-shard outboxes drained at an epoch barrier, and
+//! boundary routing decisions read commit-time [`PortSnap`] snapshots. With
+//! `cfg.threads > 1` the shards step on persistent worker threads; results
+//! are **bit-identical at any thread count** for a fixed shard count, and
+//! `shards = 1` reproduces the historical unsharded simulator exactly.
+//! [`NexusFabric::run_cycles_parallel`] exposes a per-cycle digest trace so
+//! the equivalence suite can report the first diverging cycle.
+//!
 //! The same fabric executes the TIA and TIA-Valiant baselines by flag:
-//! [`ExecPolicy::DestinationOnly`] disables phase 2, `trigger_latency`
-//! charges the triggered-instruction scheduler cost, and
-//! [`RoutingPolicy::Valiant`] adds randomized intermediate destinations.
+//! [`crate::config::ExecPolicy::DestinationOnly`] disables phase 2,
+//! `trigger_latency` charges the triggered-instruction scheduler cost, and
+//! [`crate::config::RoutingPolicy::Valiant`] adds randomized intermediate
+//! destinations.
 //!
 //! Off-chip traffic is modeled with a byte-credit AXI model (§3.3.3): data
 //! memories load before a tile executes (counted as `load_cycles`), while
 //! AM queues stream *during* execution, hiding their latency.
 
 pub mod active;
+pub mod shard;
 pub mod stats;
 
 use crate::am::Message;
 use crate::compiler::Program;
-use crate::config::{ArchConfig, ExecPolicy, RoutingPolicy, StepMode, TopologyKind};
-use crate::isa::{alu_eval, ConfigEntry, Opcode};
-use crate::noc::router::{port_class, Router, MAX_PORTS, PORT_LOCAL};
+use crate::config::{ArchConfig, StepMode};
+use crate::isa::ConfigEntry;
+use crate::noc::router::{port_class, PortSnap, Router, MAX_PORTS};
 use crate::noc::routing::Dir;
-use crate::noc::topology::{build_topology, link_index, Topology, LINKS_PER_PE};
-use crate::pe::{ActiveStream, Pe, StreamMode, OUTQ_CAP};
-use crate::util::SplitMix64;
-use active::WakeList;
+use crate::noc::topology::{build_topology, Topology, LINKS_PER_PE};
+use crate::pe::Pe;
+use shard::{CommitCtx, ShardCtx, ShardState, SpinBarrier};
 use stats::FabricStats;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 /// Simulation failure: the fabric did not drain within `max_cycles`.
 #[derive(Debug, Clone)]
@@ -119,7 +133,7 @@ pub struct NexusFabric {
     topo: Box<dyn Topology>,
     /// Precomputed neighbor table: `nbr_tab[id][port]` is the PE reached by
     /// leaving `id` through that output port, `u16::MAX` when unwired
-    /// (route-phase hot path; PE ids fit in u16 — the config caps at 256).
+    /// (route-phase hot path; PE ids fit in u16 — the config caps at 16384).
     nbr_tab: Vec<[u16; MAX_PORTS]>,
     /// Precomputed per-link traversal latencies (1 except chiplet-boundary
     /// hops).
@@ -128,20 +142,27 @@ pub struct NexusFabric {
     nports: usize,
     /// Torus bubble flow control active (see [`Topology::requires_bubble`]).
     torus_bubble: bool,
-    /// Link traversals in the current cycle (peak-demand accumulator).
-    link_demand: u64,
-    rng: SplitMix64,
+    /// Owning shard per PE id (contiguous row bands).
+    shard_of: Vec<u16>,
+    /// Per-shard state: PRNG stream, message-id counter, wake-lists,
+    /// boundary outbox, stat deltas. Always at least one; with
+    /// `cfg.shards == 1`, shard 0 covers the whole fabric and stepping is
+    /// bit-identical to the historical unsharded simulator.
+    shards: Vec<ShardState>,
+    /// Boundary port snapshots: commit-time acceptance state of every input
+    /// port terminating a shard-crossing link, grouped by owner shard
+    /// (see [`shard::ShardCtx::nbr_view`]).
+    snap: Vec<PortSnap>,
+    /// `(router id, port)` per `snap` entry (refresh bookkeeping).
+    snap_src: Vec<(u16, u8)>,
+    /// `snap` entry per `(router, port)`; `u32::MAX` for non-boundary ports.
+    snap_idx: Vec<u32>,
+    /// `snap` index range owned by each shard (its routers' entries).
+    snap_ranges: Vec<(usize, usize)>,
+    /// `snap` index range of each individual router's entries.
+    snap_router_range: Vec<(u32, u32)>,
     /// Global cycle counter (includes inter-tile load cycles).
     cycle: u64,
-    next_msg_id: u64,
-    /// PEs with pending work (see [`Pe::has_pending_work`]). Maintained in
-    /// both step modes; consulted by the scheduler only in `ActiveSet`.
-    awake_pes: WakeList,
-    /// Routers holding at least one flit (buffered or staged).
-    awake_routers: WakeList,
-    /// Per-cycle iteration scratch (reused to keep `step()` allocation-free).
-    scratch_pes: Vec<usize>,
-    scratch_routers: Vec<usize>,
     pub stats: FabricStats,
 }
 
@@ -163,6 +184,60 @@ impl NexusFabric {
             }
         }
         let torus_bubble = topo.requires_bubble();
+        // Shard partition: contiguous bands of whole rows (`validate`
+        // enforces `height % shards == 0`).
+        let band = (cfg.height / cfg.shards) * cfg.width;
+        let shard_of: Vec<u16> = (0..n).map(|id| (id / band) as u16).collect();
+        let shards: Vec<ShardState> = (0..cfg.shards)
+            .map(|s| ShardState::new(s, n, s * band, band, cfg.seed))
+            .collect();
+        // Boundary snapshot tables: one entry per input port terminating a
+        // shard-crossing link, keyed `(dest router, dest port)`. Sorting
+        // groups entries by owner shard (ids are band-contiguous) and by
+        // router within a shard; each `(dest, port)` pair has exactly one
+        // upstream router in every supported topology, so dedup is a no-op
+        // kept as a guard.
+        let mut pairs: Vec<(usize, usize)> = Vec::new();
+        for id in 0..n {
+            for port in 1..nports {
+                let nbr = nbr_tab[id][port];
+                if nbr != u16::MAX && shard_of[id] != shard_of[nbr as usize] {
+                    pairs.push((nbr as usize, Dir::from_port(port).opposite_port()));
+                }
+            }
+        }
+        pairs.sort_unstable();
+        pairs.dedup();
+        let mut snap_idx = vec![u32::MAX; n * MAX_PORTS];
+        let mut snap = Vec::with_capacity(pairs.len());
+        let mut snap_src: Vec<(u16, u8)> = Vec::with_capacity(pairs.len());
+        for &(dest, dport) in &pairs {
+            snap_idx[dest * MAX_PORTS + dport] = snap.len() as u32;
+            snap.push(PortSnap::fresh(cfg.router_buf_depth));
+            snap_src.push((dest as u16, dport as u8));
+        }
+        let mut snap_ranges = vec![(0usize, 0usize); cfg.shards];
+        {
+            let mut k = 0;
+            for (s, range) in snap_ranges.iter_mut().enumerate() {
+                let lo = k;
+                while k < snap_src.len() && shard_of[snap_src[k].0 as usize] as usize == s {
+                    k += 1;
+                }
+                *range = (lo, k);
+            }
+        }
+        let mut snap_router_range = vec![(0u32, 0u32); n];
+        {
+            let mut k = 0;
+            for (id, range) in snap_router_range.iter_mut().enumerate() {
+                let lo = k as u32;
+                while k < snap_src.len() && snap_src[k].0 as usize == id {
+                    k += 1;
+                }
+                *range = (lo, k as u32);
+            }
+        }
         let mut stats = FabricStats::default();
         stats.per_pe_busy_cycles = vec![0; n];
         stats.per_pe_committed_ops = vec![0; n];
@@ -182,14 +257,14 @@ impl NexusFabric {
             lat_tab,
             nports,
             torus_bubble,
-            link_demand: 0,
-            rng: SplitMix64::new(cfg.seed),
+            shard_of,
+            shards,
+            snap,
+            snap_src,
+            snap_idx,
+            snap_ranges,
+            snap_router_range,
             cycle: 0,
-            next_msg_id: 1,
-            awake_pes: WakeList::new(n),
-            awake_routers: WakeList::new(n),
-            scratch_pes: Vec::with_capacity(n),
-            scratch_routers: Vec::with_capacity(n),
             stats,
             cfg,
         }
@@ -209,18 +284,19 @@ impl NexusFabric {
     /// this before every execution instead of building a new fabric.
     pub fn reset(&mut self) {
         self.cycle = 0;
-        self.next_msg_id = 1;
-        self.rng = SplitMix64::new(self.cfg.seed);
         self.axi_credit = 0.0;
         self.axi_rr = 0;
         self.pending_remaining = 0;
         for q in &mut self.pending_static {
             q.clear();
         }
-        self.awake_pes.clear();
-        self.awake_routers.clear();
+        for (s, shard) in self.shards.iter_mut().enumerate() {
+            shard.reset(s, self.cfg.seed);
+        }
+        for e in &mut self.snap {
+            *e = PortSnap::fresh(self.cfg.router_buf_depth);
+        }
         self.config_mem.clear();
-        self.link_demand = 0;
         // Reset every counter but keep the per-PE/per-link vector allocations.
         let mut per_pe = std::mem::take(&mut self.stats.per_pe_busy_cycles);
         per_pe.fill(0);
@@ -308,20 +384,33 @@ impl NexusFabric {
         self.stats.offchip_bytes += data_bytes;
         self.axi_credit = 0.0;
         self.pending_remaining = self.pending_static.iter().map(|q| q.len()).sum();
+        // Routers were rebuilt above, so every boundary snapshot is fresh.
+        for e in &mut self.snap {
+            *e = PortSnap::fresh(self.cfg.router_buf_depth);
+        }
         // Initial wake-lists: routers start empty; a PE starts awake iff its
         // on-chip AM window was preloaded (everything else activates later —
         // AXI refills, message deliveries, stream triggers).
-        self.awake_pes.clear();
-        self.awake_routers.clear();
+        for shard in &mut self.shards {
+            shard.awake_pes.clear();
+            shard.awake_routers.clear();
+            shard.outbox.clear();
+        }
         for id in 0..n {
             if self.pes[id].has_pending_work() {
-                self.awake_pes.wake(id);
+                self.shards[self.shard_of[id] as usize].awake_pes.wake(id);
             }
         }
     }
 
-    /// Cycle loop until the global idle detector fires.
+    /// Cycle loop until the global idle detector fires. Dispatches to the
+    /// persistent-worker engine when both `threads` and `shards` exceed one;
+    /// the parallel path produces bit-identical state for a fixed shard
+    /// count.
     fn execute(&mut self) -> Result<(), DeadlockError> {
+        if self.cfg.threads.min(self.cfg.shards) > 1 {
+            return self.parallel_loop(None, None);
+        }
         let start = self.cycle;
         let mut idle_streak = 0u64;
         loop {
@@ -463,705 +552,437 @@ impl NexusFabric {
     /// and off-chip static AMs are tracked by the `pending_remaining`
     /// counter. `DenseOracle` keeps the full O(PEs) scan as the reference.
     pub fn is_drained(&self) -> bool {
-        match self.cfg.step_mode {
-            StepMode::DenseOracle => {
-                self.pending_static.iter().all(|q| q.is_empty())
-                    && self.pes.iter().all(|p| p.is_idle())
-                    && self.routers.iter().all(|r| r.occupancy() == 0)
-            }
-            StepMode::ActiveSet => {
-                // Awake routers always hold flits; an awake PE may be merely
-                // cooling down its trigger timer, which `is_idle` (and the
-                // dense scan) ignores.
-                self.pending_remaining == 0
-                    && self.awake_routers.is_empty()
-                    && self.awake_pes.iter().all(|id| self.pes[id].is_idle())
-            }
-        }
+        self.view().is_drained()
     }
 
-    /// One clock cycle. Dispatches on [`StepMode`]; both schedules are
-    /// bit-identical (see the module docs and `tests/step_equivalence.rs`).
+    /// One clock cycle: AXI refill, per-shard phase passes, the epoch
+    /// barrier (boundary-outbox drain), per-shard commit passes, stat
+    /// merge. With `shards = 1` this is exactly the historical
+    /// single-threaded cycle; see `fabric/shard.rs` for the sharding
+    /// contract. Both [`StepMode`] schedules are bit-identical (see the
+    /// module docs and `tests/step_equivalence.rs`).
     pub fn step(&mut self) {
-        self.link_demand = 0;
-        self.axi_refill();
-        match self.cfg.step_mode {
-            StepMode::DenseOracle => self.step_dense(),
-            StepMode::ActiveSet => self.step_active(),
+        self.epoch_io().axi_refill();
+        for s in 0..self.cfg.shards {
+            self.shard_phases(s);
         }
-        self.stats.peak_link_demand = self.stats.peak_link_demand.max(self.link_demand);
-        self.cycle += 1;
+        self.epoch_io().drain_outboxes();
+        for s in 0..self.cfg.shards {
+            self.shard_commit(s);
+        }
+        self.epoch_io().epoch_end();
     }
 
-    /// The dense oracle: every phase scans all `width × height` components.
-    fn step_dense(&mut self) {
+    /// Run shard `s`'s phase passes (PE, en-route, route) over its band.
+    fn shard_phases(&mut self, s: usize) {
+        let (base, len) = (self.shards[s].base, self.shards[s].len);
+        let mut ctx = ShardCtx {
+            pes: &mut self.pes[base..base + len],
+            routers: &mut self.routers[base..base + len],
+            shard: &mut self.shards[s],
+            link_flits: &mut self.stats.link_flits
+                [base * LINKS_PER_PE..(base + len) * LINKS_PER_PE],
+            cfg: &self.cfg,
+            config_mem: &self.config_mem,
+            nbr_tab: &self.nbr_tab,
+            lat_tab: &self.lat_tab,
+            topo: self.topo.as_ref(),
+            nports: self.nports,
+            torus_bubble: self.torus_bubble,
+            shard_of: &self.shard_of,
+            snap: &self.snap,
+            snap_idx: &self.snap_idx,
+            cycle: self.cycle,
+        };
+        ctx.run_phases();
+    }
+
+    /// Run shard `s`'s commit pass and boundary-snapshot refresh.
+    fn shard_commit(&mut self, s: usize) {
+        let (base, len) = (self.shards[s].base, self.shards[s].len);
+        let (lo, hi) = self.snap_ranges[s];
+        let mut ctx = CommitCtx {
+            pes: &mut self.pes[base..base + len],
+            routers: &mut self.routers[base..base + len],
+            shard: &mut self.shards[s],
+            snap: &mut self.snap[lo..hi],
+            snap_src: &self.snap_src[lo..hi],
+            snap_router_range: &self.snap_router_range,
+            snap_base: lo,
+            step_mode: self.cfg.step_mode,
+        };
+        ctx.run_commit();
+    }
+
+    /// The coordinator's window over the fabric's non-sharded state (AXI
+    /// model, outbox drain, stat merge). In serial stepping this is just a
+    /// reborrow of `self`; the parallel engine builds the same window from
+    /// raw pointers while workers are parked at a barrier.
+    fn epoch_io(&mut self) -> EpochIo<'_> {
+        EpochIo {
+            cfg: &self.cfg,
+            pes: &mut self.pes,
+            routers: &mut self.routers,
+            shards: &mut self.shards,
+            shard_of: &self.shard_of,
+            pending_static: &mut self.pending_static,
+            axi_credit: &mut self.axi_credit,
+            axi_rr: &mut self.axi_rr,
+            pending_remaining: &mut self.pending_remaining,
+            stats: &mut self.stats,
+            cycle: &mut self.cycle,
+        }
+    }
+
+    /// A read-only view for drain detection and digesting, shared between
+    /// the public accessors and the parallel engine's coordinator.
+    fn view(&self) -> FabricView<'_> {
+        FabricView {
+            cfg: &self.cfg,
+            pes: &self.pes,
+            routers: &self.routers,
+            shards: &self.shards,
+            pending_static: &self.pending_static,
+            pending_remaining: self.pending_remaining,
+            axi_credit: self.axi_credit,
+            axi_rr: self.axi_rr,
+            cycle: self.cycle,
+        }
+    }
+
+    /// Step exactly `cycles` cycles, recording [`NexusFabric::state_digest`]
+    /// at every cycle boundary — on the parallel engine when
+    /// `min(threads, shards) > 1`, serially otherwise. The digest trace is
+    /// what the equivalence suite compares against serial stepping to
+    /// report the *first diverging cycle*.
+    pub fn run_cycles_parallel(&mut self, cycles: u64) -> Vec<u64> {
+        let mut trace = Vec::with_capacity(cycles as usize);
+        if self.cfg.threads.min(self.cfg.shards) > 1 {
+            self.parallel_loop(Some(cycles), Some(&mut trace))
+                .expect("fixed-epoch run cannot time out");
+        } else {
+            for _ in 0..cycles {
+                self.step();
+                trace.push(self.state_digest());
+            }
+        }
+        trace
+    }
+
+    /// The persistent-worker epoch engine. Shards are distributed
+    /// round-robin over `min(threads, shards)` workers; each epoch runs
+    ///
+    /// 1. coordinator: AXI refill, publish the cycle number;
+    /// 2. *barrier* — workers run their shards' phase passes;
+    /// 3. *barrier* — coordinator drains every shard outbox (in shard
+    ///    index order, so boundary staging is deterministic);
+    /// 4. *barrier* — workers run their shards' commit passes;
+    /// 5. *barrier* — coordinator merges stat deltas, advances the cycle,
+    ///    checks termination.
+    ///
+    /// Memory-safety scheme: workers and the coordinator share the
+    /// PE/router/shard/snapshot arrays through one set of raw pointers
+    /// (`Ptrs`); the barriers time-separate every conflicting access
+    /// (workers touch only their own bands during 2 and 4, the coordinator
+    /// touches the arrays only during 1, 3 and 5). Fields only the
+    /// coordinator uses (AXI queues, aggregate stats, the cycle counter)
+    /// are borrowed normally. The per-link flit vector is moved out of
+    /// `stats` for the duration so the coordinator's `&mut stats` never
+    /// aliases the bands workers write (shard stat deltas carry empty
+    /// vectors, so the epoch merge is a no-op on it).
+    ///
+    /// Terminates like `execute` (idle-tree drain, or `Err` after
+    /// `max_cycles`) unless `fixed_epochs` pins the epoch count.
+    fn parallel_loop(
+        &mut self,
+        fixed_epochs: Option<u64>,
+        mut trace: Option<&mut Vec<u64>>,
+    ) -> Result<(), DeadlockError> {
+        if fixed_epochs == Some(0) {
+            return Ok(());
+        }
         let n = self.cfg.num_pes();
-        // Rotate the PE service order each cycle so no PE gets systematic
-        // priority from simulation artifacts.
-        let start = (self.cycle as usize) % n;
-        for k in 0..n {
-            self.pe_phase((start + k) % n);
+        let nshards = self.cfg.shards;
+        let nthreads = self.cfg.threads.min(nshards);
+        let snap_len = self.snap.len();
+        #[derive(Clone, Copy)]
+        struct Band {
+            s: usize,
+            base: usize,
+            len: usize,
+            snap_lo: usize,
+            snap_hi: usize,
         }
-        if self.cfg.exec == ExecPolicy::EnRoute {
-            for k in 0..n {
-                self.enroute_phase((start + k) % n);
-            }
-        }
-        for k in 0..n {
-            self.route_phase((start + k) % n);
-        }
-        for id in 0..n {
-            self.commit_router(id);
-            self.commit_pe(id);
-        }
-    }
-
-    /// Event-driven scheduling: phases visit wake-list members only, in the
-    /// same rotated service order the dense scan uses. Bit-identity holds
-    /// because every skipped component is one on which the corresponding
-    /// dense phase is a no-op: `pe_phase` does nothing without pending work,
-    /// and the en-route/route phases do nothing on empty routers.
-    fn step_active(&mut self) {
-        let n = self.cfg.num_pes();
-        let start = (self.cycle as usize) % n;
-        // Snapshot the awake PEs: wakes during the cycle (inbox deliveries,
-        // en-route claims) take effect in the commit pass below, matching
-        // the dense scan, where a PE's phase has already run by the time a
-        // later phase hands it new work.
-        let mut pe_order = std::mem::take(&mut self.scratch_pes);
-        pe_order.clear();
-        self.awake_pes.rotated_into(start, &mut pe_order);
-        for &id in &pe_order {
-            self.pe_phase(id);
-        }
-        // Snapshot the awake routers once for both network phases: the set
-        // of routers with *buffered* flits cannot grow mid-cycle (injections
-        // and crossbar traversals only stage; staged flits land at commit),
-        // so a router staged-into this cycle no-ops both phases — exactly
-        // like the dense scan's empty-input fast path.
-        let mut router_order = std::mem::take(&mut self.scratch_routers);
-        router_order.clear();
-        self.awake_routers.rotated_into(start, &mut router_order);
-        if self.cfg.exec == ExecPolicy::EnRoute {
-            for &id in &router_order {
-                self.enroute_phase(id);
-            }
-        }
-        for &id in &router_order {
-            self.route_phase(id);
-        }
-        // Commit runs over the *current* wake-lists — including components
-        // woken this cycle (their staged flits must land, their busy flags
-        // must latch into stats) — and retires anything left with no work.
-        router_order.clear();
-        self.awake_routers.snapshot_into(&mut router_order);
-        for &id in &router_order {
-            self.commit_router(id);
-        }
-        pe_order.clear();
-        self.awake_pes.snapshot_into(&mut pe_order);
-        for &id in &pe_order {
-            self.commit_pe(id);
-        }
-        self.scratch_pes = pe_order;
-        self.scratch_routers = router_order;
-    }
-
-    /// Commit one router and update its wake-list residency.
-    #[inline]
-    fn commit_router(&mut self, id: usize) {
-        self.routers[id].commit();
-        if self.routers[id].occupancy() == 0 {
-            self.awake_routers.sleep(id);
-        }
-    }
-
-    /// Latch one PE's busy flags into its statistics, clear them for the
-    /// next cycle, and update its wake-list residency.
-    #[inline]
-    fn commit_pe(&mut self, id: usize) {
-        {
-            let pe = &mut self.pes[id];
-            if pe.alu_busy {
-                pe.stats.alu_busy_cycles += 1;
-            }
-            if pe.alu_busy || pe.decode_busy {
-                pe.stats.busy_cycles += 1;
-            }
-            pe.alu_busy = false;
-            pe.decode_busy = false;
-        }
-        if !self.pes[id].has_pending_work() {
-            self.awake_pes.sleep(id);
-        }
-    }
-
-    /// Wake a PE on an activation event (message delivery, AXI refill,
-    /// stream/dispatch handoff, en-route claim).
-    #[inline]
-    fn wake_pe(&mut self, id: usize) {
-        self.awake_pes.wake(id);
-    }
-
-    /// Wake a router when a flit is staged into it.
-    #[inline]
-    fn wake_router(&mut self, id: usize) {
-        self.awake_routers.wake(id);
-    }
-
-    // --- phase 1: PE-local work -------------------------------------------
-
-    fn pe_phase(&mut self, id: usize) {
-        // Fast path: fully idle PE — only reachable from the dense oracle;
-        // the active-set scheduler never visits sleeping PEs. Busy flags are
-        // always clear here: `commit_pe` latched and cleared them at the end
-        // of the previous cycle (so an en-route claim never lingers).
-        if !self.pes[id].has_pending_work() {
-            return;
-        }
-        // Pick at most one message: the decode/ALU handoff (local_redo) has
-        // priority; otherwise the inbox, gated by the TIA trigger scheduler.
-        let msg = {
-            let pe = &mut self.pes[id];
-            if let Some(m) = pe.local_redo.take() {
-                Some(m)
-            } else if pe.trigger_wait > 0 {
-                pe.trigger_wait -= 1;
-                None
-            } else if let Some(m) = pe.inbox.take() {
-                if self.cfg.trigger_latency > 0 {
-                    // Triggered-instruction tag match + priority encode: the
-                    // scheduler is busy for trigger_latency further cycles.
-                    pe.trigger_wait = self.cfg.trigger_latency;
-                    self.stats.trigger_checks += 1;
-                }
-                Some(m)
-            } else {
-                None
-            }
-        };
-        if let Some(m) = msg {
-            self.process_at(id, m);
-        }
-        self.stream_phase(id);
-        self.inject_phase(id);
-    }
-
-    /// Execute a message's current opcode at PE `id` (local work).
-    fn process_at(&mut self, id: usize, mut m: Message) {
-        let op = m.opcode;
-        if op == Opcode::Halt {
-            self.retire(m);
-            return;
-        }
-        if op.is_alu() {
-            debug_assert!(
-                !m.op1_is_addr && !m.op2_is_addr,
-                "ALU op with unresolved operand at PE{id}: {m:?}"
-            );
-            let v = alu_eval(op, m.op1, m.op2);
-            let entry = self.config_entry(m.n_pc);
-            m.morph(v, &entry);
-            self.pes[id].alu_busy = true;
-            self.stats.alu_ops += 1;
-            self.stats.config_reads += 1;
-            self.dispatch(id, m);
-        } else {
-            self.exec_memory(id, m);
-        }
-    }
-
-    #[inline]
-    fn config_entry(&self, n_pc: u8) -> ConfigEntry {
-        *self
-            .config_mem
-            .get(n_pc as usize)
-            .unwrap_or(&ConfigEntry::HALT)
-    }
-
-    /// Execute a memory-class opcode on PE `id`'s decode unit (§3.3.1).
-    fn exec_memory(&mut self, id: usize, mut m: Message) {
-        debug_assert_eq!(
-            m.head_dest(),
-            Some(id as u8),
-            "memory op {:?} at non-owner PE{id}",
-            m.opcode
-        );
-        self.stats.mem_ops += 1;
-        self.pes[id].stats.mem_ops += 1;
-        self.pes[id].decode_busy = true;
-        match m.opcode {
-            Opcode::Load => {
-                m.op2 = self.pes[id].dmem[m.op2 as usize];
-                self.pes[id].stats.dmem_reads += 1;
-                self.stats.dmem_reads += 1;
-                m.rotate_dests();
-                let e = self.config_entry(m.n_pc);
-                m.advance(&e);
-                self.stats.config_reads += 1;
-                self.dispatch(id, m);
-            }
-            Opcode::LoadOp1 => {
-                m.op1 = self.pes[id].dmem[m.op1 as usize];
-                self.pes[id].stats.dmem_reads += 1;
-                self.stats.dmem_reads += 1;
-                m.rotate_dests();
-                let e = self.config_entry(m.n_pc);
-                m.advance(&e);
-                self.stats.config_reads += 1;
-                self.dispatch(id, m);
-            }
-            Opcode::Store => {
-                self.pes[id].dmem[m.result as usize] = m.op1;
-                self.pes[id].stats.dmem_writes += 1;
-                self.stats.dmem_writes += 1;
-                self.retire(m);
-            }
-            Opcode::Accum => {
-                let a = m.result as usize;
-                let cur = self.pes[id].dmem[a];
-                self.pes[id].dmem[a] = (cur as i16).wrapping_add(m.op1 as i16) as u16;
-                self.pes[id].stats.dmem_reads += 1;
-                self.pes[id].stats.dmem_writes += 1;
-                self.stats.dmem_reads += 1;
-                self.stats.dmem_writes += 1;
-                self.retire(m);
-            }
-            Opcode::AccMin => {
-                let a = m.result as usize;
-                let cur = self.pes[id].dmem[a] as i16;
-                self.pes[id].stats.dmem_reads += 1;
-                self.stats.dmem_reads += 1;
-                if (m.op1 as i16) < cur {
-                    self.pes[id].dmem[a] = m.op1;
-                    self.pes[id].stats.dmem_writes += 1;
-                    self.stats.dmem_writes += 1;
-                    // Conditional re-emission (§3.1: BFS/SSSP relaxation).
-                    if let Some((base, count)) = self.pes[id].trigger[a] {
-                        let mut t = m;
-                        t.rotate_dests();
-                        let e = self.config_entry(t.n_pc);
-                        t.advance(&e);
-                        self.stats.config_reads += 1;
-                        self.queue_stream(id, base, count, t);
-                    }
-                }
-                // The message itself always dies; only the stream (if
-                // triggered) carries the update onward. Failed relaxations
-                // are the paper's "AMs terminate early" case.
-                self.retire(m);
-            }
-            Opcode::Stream => {
-                let key = m.op2 as usize;
-                let desc = self.pes[id].trigger[key];
-                debug_assert!(desc.is_some(), "Stream op with no trigger at PE{id}[{key}]");
-                if let Some((base, count)) = desc {
-                    m.rotate_dests();
-                    let e = self.config_entry(m.n_pc);
-                    m.advance(&e);
-                    self.stats.config_reads += 1;
-                    self.queue_stream(id, base, count, m);
-                }
-                // The triggering message is consumed by the stream engine.
-                self.stats.msgs_retired += 1;
-            }
-            _ => unreachable!("non-memory opcode {:?} in exec_memory", m.opcode),
-        }
-    }
-
-    /// Route a message after its op completed: locally (next op owned by
-    /// this PE) or out through the AM NIC.
-    fn dispatch(&mut self, id: usize, m: Message) {
-        if m.opcode == Opcode::Halt || m.ndests == 0 {
-            self.retire(m);
-            return;
-        }
-        let pe = &mut self.pes[id];
-        if m.head_dest() == Some(id as u8) && pe.local_redo.is_none() {
-            // Next op executes here: skip the network (decode/ALU handoff).
-            pe.local_redo = Some(m);
-        } else {
-            pe.outq.push_back(m);
-        }
-        self.wake_pe(id);
-    }
-
-    fn retire(&mut self, _m: Message) {
-        self.stats.msgs_retired += 1;
-    }
-
-    /// Install a streaming decode, or queue it if the engine is busy.
-    fn queue_stream(&mut self, id: usize, base: u32, count: u16, template: Message) {
-        if count == 0 {
-            // Empty stream: the AM "terminates early when it does not find
-            // corresponding elements" (§5.1).
-            return;
-        }
-        let s = ActiveStream {
-            base,
-            remaining: count,
-            pos: base,
-            template,
-        };
-        let pe = &mut self.pes[id];
-        if pe.stream.is_none() {
-            pe.stream = Some(s);
-        } else {
-            pe.stream_q.push_back(s);
-        }
-        self.wake_pe(id);
-    }
-
-    /// Advance the streaming decode by one emission (§3.3.1 streaming mode:
-    /// "the message initiates the loading of multiple elements from memory,
-    /// generating multiple output AMs").
-    fn stream_phase(&mut self, id: usize) {
-        if self.pes[id].stream.is_none() {
-            let next = self.pes[id].stream_q.pop_front();
-            self.pes[id].stream = next;
-        }
-        if self.pes[id].stream.is_none() || self.pes[id].outq.len() >= OUTQ_CAP {
-            return;
-        }
-        let (elem, template, done) = {
-            let pe = &mut self.pes[id];
-            let s = pe.stream.as_mut().unwrap();
-            let elem = pe.stream_mem[s.pos as usize];
-            s.pos += 1;
-            s.remaining -= 1;
-            let done = s.remaining == 0;
-            (elem, s.template, done)
-        };
-        if done {
-            self.pes[id].stream = None;
-        }
-        let mut m = template;
-        m.id = self.next_msg_id;
-        self.next_msg_id += 1;
-        m.birth = self.cycle;
-        m.hops = 0;
-        m.executed_enroute = false;
-        match elem.mode {
-            StreamMode::OffsetResult => {
-                // Gustavson: output row base + column index; B value in op2.
-                m.result = template.result.wrapping_add(elem.aux);
-                m.op2 = elem.value as u16;
-            }
-            StreamMode::PerDest => {
-                // Graph/Conv: element names its own destination + address.
-                m.dests = [elem.dest_pe, crate::am::NO_DEST, crate::am::NO_DEST];
-                m.ndests = 1;
-                m.result = elem.aux;
-                m.op2 = elem.value as u16;
-            }
-            StreamMode::OffsetOp1 => {
-                // SDDMM: op1 becomes an address (B-column base + k).
-                m.op1 = template.op1.wrapping_add(elem.aux);
-                m.op2 = elem.value as u16;
-            }
-        }
-        self.stats.stream_emissions += 1;
-        self.stats.scanner_ops += 1;
-        self.stats.msgs_created += 1;
-        self.stats.dmem_reads += 1; // element record fetch
-        self.pes[id].stats.stream_emissions += 1;
-        self.pes[id].decode_busy = true;
-        self.dispatch(id, m);
-    }
-
-    /// AM NIC injection (§3.3.1): dynamic AMs first; otherwise the next
-    /// static AM from the queue window, gated by router backpressure
-    /// (bubble rule: injection keeps one buffer slot free).
-    fn inject_phase(&mut self, id: usize) {
-        if !self.routers[id].can_inject() {
-            return;
-        }
-        let m = if let Some(m) = self.pes[id].outq.pop_front() {
-            Some(m)
-        } else if let Some(mut m) = self.pes[id].am_window.pop_front() {
-            m.id = self.next_msg_id;
-            self.next_msg_id += 1;
-            m.birth = self.cycle;
-            self.stats.static_injections += 1;
-            self.stats.msgs_created += 1;
-            self.pes[id].stats.static_injected += 1;
-            Some(m)
-        } else {
-            None
-        };
-        let Some(mut m) = m else { return };
-        if self.cfg.routing == RoutingPolicy::Valiant && m.valiant_hop.is_none() {
-            if self.cfg.topology == TopologyKind::Torus2D {
-                // Torus Valiant: classic uniformly random intermediate node
-                // (VAL [32]); both legs follow shortest-wrap DOR and the
-                // bubble flow control keeps each ring deadlock-free, so no
-                // rectangle constraint is needed or meaningful on a torus.
-                if let Some(dst) = m.head_dest() {
-                    let hop = self.rng.below_usize(self.cfg.num_pes()) as u8;
-                    if hop != dst && hop as usize != id {
-                        m.valiant_hop = Some(hop);
-                    }
-                }
-            }
-            // Randomized *minimal-path* load balancing (ROMM [33], the
-            // scheme the paper's TIA-Valiant cites): the intermediate hop
-            // is drawn inside the minimal rectangle between source and
-            // destination, constrained so the composite (src -> hop -> dst)
-            // path is monotone in both dimensions AND a legal west-first
-            // path — no U-turns, no {N,S}->W turns — which keeps the
-            // two-phase route deadlock-free without virtual channels.
-            // (Ruche and chiplet fabrics reuse it unchanged: their
-            // candidate sets still shrink the same rectangle.)
-            else if let Some(dst) = m.head_dest() {
-                let (sx, sy) = self.cfg.pe_xy(id);
-                let (dx, dy) = self.cfg.pe_xy(dst as usize);
-                let (ylo, yhi) = (sy.min(dy), sy.max(dy));
-                let rand_y = yhi - ylo; // exclusive range helper below
-                let (hx, hy) = if dx >= sx {
-                    // Eastbound (or same column): any hop in the rectangle.
-                    (
-                        sx + self.rng.below_usize(dx - sx + 1),
-                        ylo + self.rng.below_usize(rand_y + 1),
-                    )
-                } else if self.rng.chance(0.5) {
-                    // Westbound, X-randomized leg: keep y = sy so phase 1
-                    // is pure-W and phase 2 (west-first) does W then Y.
-                    (dx + self.rng.below_usize(sx - dx + 1), sy)
-                } else {
-                    // Westbound, Y-randomized leg: all W moves in phase 1,
-                    // phase 2 is pure Y.
-                    (dx, ylo + self.rng.below_usize(rand_y + 1))
-                };
-                let hop = self.cfg.pe_id(hx, hy) as u8;
-                if hop != dst {
-                    m.valiant_hop = Some(hop);
-                }
-            }
-        }
-        self.routers[id].stage(PORT_LOCAL, m);
-        self.wake_router(id);
-        self.stats.buf_writes += 1;
-    }
-
-    // --- phase 2: en-route (opportunistic) execution ------------------------
-
-    /// In-Network Computing (§3.1.3): a PE whose ALU is idle executes the
-    /// head flit of one of its router's input ports, if that flit carries an
-    /// ALU-class opcode with both operands resolved to values.
-    fn enroute_phase(&mut self, id: usize) {
-        if self.pes[id].alu_busy
-            || self.routers[id].locked_port.is_some()
-            || self.routers[id].inputs.iter().all(|b| b.is_empty())
-        {
-            return;
-        }
-        let start = (self.cycle as usize) % self.nports;
-        for k in 0..self.nports {
-            let p = (start + k) % self.nports;
-            let ready = self.routers[id].inputs[p]
-                .head_msg()
-                .map(|m| m.alu_ready() && m.head_dest() != Some(id as u8))
-                .unwrap_or(false);
-            if !ready {
-                continue;
-            }
-            let entry_pc = self.routers[id].inputs[p].head_msg().unwrap().n_pc;
-            let entry = self.config_entry(entry_pc);
-            let m = self.routers[id].inputs[p].head_msg_mut().unwrap();
-            let v = alu_eval(m.opcode, m.op1, m.op2);
-            m.morph(v, &entry);
-            m.executed_enroute = true;
-            self.routers[id].locked_port = Some(p);
-            self.pes[id].alu_busy = true;
-            // The claim must reach this cycle's commit pass (to latch the
-            // busy flag into stats and clear it), so the PE joins the
-            // wake-list even if it holds no messages of its own.
-            self.wake_pe(id);
-            self.pes[id].stats.enroute_ops += 1;
-            self.stats.alu_ops += 1;
-            self.stats.enroute_ops += 1;
-            self.stats.config_reads += 1;
-            return;
-        }
-    }
-
-    // --- phase 3: routing ---------------------------------------------------
-
-    fn route_phase(&mut self, id: usize) {
-        // Fast path: nothing buffered, nothing to route (the common case on
-        // a partially loaded fabric — see EXPERIMENTS.md §Perf).
-        if self.routers[id].inputs.iter().all(|b| b.is_empty()) {
-            return;
-        }
-        let nports = self.nports;
-        // Clear Valiant hops that reached their intermediate router.
-        if self.cfg.routing == RoutingPolicy::Valiant {
-            for p in 0..nports {
-                if let Some(m) = self.routers[id].inputs[p].head_msg_mut() {
-                    if m.valiant_hop == Some(id as u8) {
-                        m.valiant_hop = None;
-                    }
-                }
-            }
-        }
-        // Route computation: desired output direction per input port, asked
-        // of the topology (the mesh path delegates to the original
-        // west-first/XY functions bit-for-bit).
-        let mut want: [Option<Dir>; MAX_PORTS] = [None; MAX_PORTS];
-        for p in 0..nports {
-            if self.routers[id].locked_port == Some(p) {
-                continue; // being executed en-route this cycle
-            }
-            let Some(m) = self.routers[id].inputs[p].head_msg() else {
-                continue;
-            };
-            let Some(target) = m.route_target() else {
-                // No destination left: drop defensively (should not happen).
-                debug_assert!(false, "routed message without destination");
-                continue;
-            };
-            let t = target as usize;
-            if t == id {
-                want[p] = Some(Dir::Local);
-                continue;
-            }
-            let dir = match self.cfg.routing {
-                RoutingPolicy::Xy => self.topo.route_deterministic(id, t),
-                // Valiant phases ride the same turn rules; with the hop
-                // constraint above, the composite path stays legal.
-                RoutingPolicy::Valiant | RoutingPolicy::TurnModelAdaptive => {
-                    let mut cands = [Dir::Local; 2];
-                    let n = self.topo.route_candidates(id, t, &mut cands);
-                    debug_assert!(n >= 1);
-                    // Congestion-aware adaptive choice: among permitted
-                    // turns, prefer a downstream that can accept now, then
-                    // the one with more free buffer space.
-                    let score = |d: Dir| {
-                        let nbr = self.nbr_tab[id][d.port()] as usize;
-                        let port = d.opposite_port();
-                        let acc = self.routers[nbr].can_accept(port);
-                        (acc, self.routers[nbr].effective_free(port))
-                    };
-                    if n == 1 {
-                        cands[0]
-                    } else {
-                        let (s0, s1) = (score(cands[0]), score(cands[1]));
-                        if s1 > s0 {
-                            cands[1]
-                        } else {
-                            cands[0]
+        let assign: Vec<Vec<Band>> = (0..nthreads)
+            .map(|t| {
+                (t..nshards)
+                    .step_by(nthreads)
+                    .map(|s| {
+                        let (snap_lo, snap_hi) = self.snap_ranges[s];
+                        Band {
+                            s,
+                            base: self.shards[s].base,
+                            len: self.shards[s].len,
+                            snap_lo,
+                            snap_hi,
                         }
+                    })
+                    .collect()
+            })
+            .collect();
+        struct Ctl {
+            barrier: SpinBarrier,
+            cycle: AtomicU64,
+            stop: AtomicBool,
+        }
+        let ctl = Ctl {
+            barrier: SpinBarrier::new(nthreads + 1),
+            cycle: AtomicU64::new(self.cycle),
+            stop: AtomicBool::new(false),
+        };
+        // Read-only fabric geometry, shared with every worker.
+        let cfg = &self.cfg;
+        let config_mem = &self.config_mem;
+        let nbr_tab = &self.nbr_tab;
+        let lat_tab = &self.lat_tab;
+        let topo = self.topo.as_ref();
+        let shard_of = &self.shard_of;
+        let snap_idx = &self.snap_idx;
+        let snap_src = &self.snap_src;
+        let snap_router_range = &self.snap_router_range;
+        let (nports, torus_bubble) = (self.nports, self.torus_bubble);
+        // Coordinator-only mutable state (never touched by workers).
+        let pending_static = &mut self.pending_static;
+        let axi_credit = &mut self.axi_credit;
+        let axi_rr = &mut self.axi_rr;
+        let pending_remaining = &mut self.pending_remaining;
+        let cycle = &mut self.cycle;
+        let mut link_flits = std::mem::take(&mut self.stats.link_flits);
+        let stats = &mut self.stats;
+        struct Ptrs {
+            pes: *mut Pe,
+            routers: *mut Router,
+            shards: *mut ShardState,
+            snap: *mut PortSnap,
+            link_flits: *mut u64,
+        }
+        // SAFETY: the pointers are only dereferenced inside the scope below
+        // under the barrier discipline documented above.
+        unsafe impl Send for Ptrs {}
+        unsafe impl Sync for Ptrs {}
+        let ptrs = Ptrs {
+            pes: self.pes.as_mut_ptr(),
+            routers: self.routers.as_mut_ptr(),
+            shards: self.shards.as_mut_ptr(),
+            snap: self.snap.as_mut_ptr(),
+            link_flits: link_flits.as_mut_ptr(),
+        };
+        let timed_out = std::thread::scope(|scope| {
+            let ctl = &ctl;
+            let ptrs = &ptrs;
+            for bands in &assign {
+                scope.spawn(move || loop {
+                    ctl.barrier.wait(); // (1) refill done; phases may start
+                    if ctl.stop.load(Ordering::Acquire) {
+                        return;
                     }
-                }
-            };
-            want[p] = Some(dir);
-        }
-        // Separable allocation: each output port arbitrates among requesting
-        // input ports with a rotating priority pointer (Fig 8d). A request
-        // mask skips output ports nobody asked for.
-        let mut requested = [false; MAX_PORTS];
-        for w in want.iter().flatten() {
-            requested[w.port()] = true;
-        }
-        let mut moved = [false; MAX_PORTS];
-        for out in 0..nports {
-            if !requested[out] {
-                continue;
+                    let cur = ctl.cycle.load(Ordering::Acquire);
+                    for &b in bands {
+                        // SAFETY: this worker exclusively owns shard `b.s`'s
+                        // band between barriers (1) and (2); the snapshot
+                        // table is read-only during phases.
+                        let (pes, routers, shard, lf, snap) = unsafe {
+                            (
+                                std::slice::from_raw_parts_mut(ptrs.pes.add(b.base), b.len),
+                                std::slice::from_raw_parts_mut(ptrs.routers.add(b.base), b.len),
+                                &mut *ptrs.shards.add(b.s),
+                                std::slice::from_raw_parts_mut(
+                                    ptrs.link_flits.add(b.base * LINKS_PER_PE),
+                                    b.len * LINKS_PER_PE,
+                                ),
+                                std::slice::from_raw_parts(ptrs.snap.cast_const(), snap_len),
+                            )
+                        };
+                        let mut ctx = ShardCtx {
+                            pes,
+                            routers,
+                            shard,
+                            link_flits: lf,
+                            cfg,
+                            config_mem,
+                            nbr_tab,
+                            lat_tab,
+                            topo,
+                            nports,
+                            torus_bubble,
+                            shard_of,
+                            snap,
+                            snap_idx,
+                            cycle: cur,
+                        };
+                        ctx.run_phases();
+                    }
+                    ctl.barrier.wait(); // (2) phases done; coordinator drains
+                    ctl.barrier.wait(); // (3) drain done; commits may start
+                    for &b in bands {
+                        // SAFETY: exclusive band plus this shard's own
+                        // snapshot range between barriers (3) and (4).
+                        let (pes, routers, shard, snap) = unsafe {
+                            (
+                                std::slice::from_raw_parts_mut(ptrs.pes.add(b.base), b.len),
+                                std::slice::from_raw_parts_mut(ptrs.routers.add(b.base), b.len),
+                                &mut *ptrs.shards.add(b.s),
+                                std::slice::from_raw_parts_mut(
+                                    ptrs.snap.add(b.snap_lo),
+                                    b.snap_hi - b.snap_lo,
+                                ),
+                            )
+                        };
+                        let mut ctx = CommitCtx {
+                            pes,
+                            routers,
+                            shard,
+                            snap,
+                            snap_src: &snap_src[b.snap_lo..b.snap_hi],
+                            snap_router_range,
+                            snap_base: b.snap_lo,
+                            step_mode: cfg.step_mode,
+                        };
+                        ctx.run_commit();
+                    }
+                    ctl.barrier.wait(); // (4) commits done; coordinator merges
+                });
             }
-            let start = self.routers[id].rr_ptr[out];
-            let mut winner = None;
-            for k in 0..nports {
-                let p = (start + k) % nports;
-                if want[p].map(|d| d.port()) == Some(out) {
-                    winner = Some(p);
+            // Coordinator.
+            let start = *cycle;
+            let mut idle_streak = 0u64;
+            let mut timed_out = false;
+            loop {
+                {
+                    // SAFETY (here and below): workers are parked at a
+                    // barrier; the coordinator has exclusive access between
+                    // rendezvous.
+                    let (pes, routers, shards) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(ptrs.pes, n),
+                            std::slice::from_raw_parts_mut(ptrs.routers, n),
+                            std::slice::from_raw_parts_mut(ptrs.shards, nshards),
+                        )
+                    };
+                    EpochIo {
+                        cfg,
+                        pes,
+                        routers,
+                        shards,
+                        shard_of,
+                        pending_static: pending_static.as_mut_slice(),
+                        axi_credit: &mut *axi_credit,
+                        axi_rr: &mut *axi_rr,
+                        pending_remaining: &mut *pending_remaining,
+                        stats: &mut *stats,
+                        cycle: &mut *cycle,
+                    }
+                    .axi_refill();
+                }
+                ctl.cycle.store(*cycle, Ordering::Release);
+                ctl.barrier.wait(); // (1)
+                ctl.barrier.wait(); // (2)
+                {
+                    let (pes, routers, shards) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(ptrs.pes, n),
+                            std::slice::from_raw_parts_mut(ptrs.routers, n),
+                            std::slice::from_raw_parts_mut(ptrs.shards, nshards),
+                        )
+                    };
+                    EpochIo {
+                        cfg,
+                        pes,
+                        routers,
+                        shards,
+                        shard_of,
+                        pending_static: pending_static.as_mut_slice(),
+                        axi_credit: &mut *axi_credit,
+                        axi_rr: &mut *axi_rr,
+                        pending_remaining: &mut *pending_remaining,
+                        stats: &mut *stats,
+                        cycle: &mut *cycle,
+                    }
+                    .drain_outboxes();
+                }
+                ctl.barrier.wait(); // (3)
+                ctl.barrier.wait(); // (4)
+                {
+                    let (pes, routers, shards) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(ptrs.pes, n),
+                            std::slice::from_raw_parts_mut(ptrs.routers, n),
+                            std::slice::from_raw_parts_mut(ptrs.shards, nshards),
+                        )
+                    };
+                    EpochIo {
+                        cfg,
+                        pes,
+                        routers,
+                        shards,
+                        shard_of,
+                        pending_static: pending_static.as_mut_slice(),
+                        axi_credit: &mut *axi_credit,
+                        axi_rr: &mut *axi_rr,
+                        pending_remaining: &mut *pending_remaining,
+                        stats: &mut *stats,
+                        cycle: &mut *cycle,
+                    }
+                    .epoch_end();
+                }
+                let view = FabricView {
+                    cfg,
+                    pes: unsafe { std::slice::from_raw_parts(ptrs.pes.cast_const(), n) },
+                    routers: unsafe {
+                        std::slice::from_raw_parts(ptrs.routers.cast_const(), n)
+                    },
+                    shards: unsafe {
+                        std::slice::from_raw_parts(ptrs.shards.cast_const(), nshards)
+                    },
+                    pending_static: pending_static.as_slice(),
+                    pending_remaining: *pending_remaining,
+                    axi_credit: *axi_credit,
+                    axi_rr: *axi_rr,
+                    cycle: *cycle,
+                };
+                if let Some(t) = trace.as_mut() {
+                    t.push(view.digest());
+                }
+                let done = if let Some(epochs) = fixed_epochs {
+                    *cycle - start >= epochs
+                } else {
+                    if view.is_drained() {
+                        idle_streak += 1;
+                    } else {
+                        idle_streak = 0;
+                    }
+                    if idle_streak > cfg.idle_tree_latency {
+                        true
+                    } else if *cycle - start > cfg.max_cycles {
+                        timed_out = true;
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if done {
+                    ctl.stop.store(true, Ordering::Release);
+                    ctl.barrier.wait(); // release workers into their stop check
                     break;
                 }
             }
-            let Some(p) = winner else { continue };
-            let dir = want[p].unwrap();
-            // Crossbar traversal if downstream accepts. On a torus the
-            // bubble rule applies: a flit continuing along the same
-            // direction may transit into any non-full buffer (ignoring
-            // On/Off), while a flit *entering* a ring (injection or turn)
-            // must leave one extra slot free — the classic bubble flow
-            // control that keeps each wraparound ring deadlock-free.
-            let ok = if out == PORT_LOCAL {
-                self.pes[id].inbox.is_none()
-            } else {
-                let nbr = self.nbr_tab[id][dir.port()] as usize;
-                let dport = dir.opposite_port();
-                if self.torus_bubble && p == dport {
-                    self.routers[nbr].can_transit(dport)
-                } else if self.torus_bubble {
-                    self.routers[nbr].can_accept(dport)
-                        && self.routers[nbr].effective_free(dport) >= 2
-                } else {
-                    self.routers[nbr].can_accept(dport)
-                }
-            };
-            if !ok {
-                continue;
-            }
-            let mut m = self.routers[id].pop_port(p).unwrap();
-            m.hops += 1;
-            if out == PORT_LOCAL {
-                self.pes[id].inbox = Some(m);
-                self.wake_pe(id);
-            } else {
-                let nbr = self.nbr_tab[id][dir.port()] as usize;
-                let dport = dir.opposite_port();
-                // Multi-cycle links (chiplet crossings) park the flit in the
-                // staging slot for `latency - 1` extra commits, modelling
-                // both the added latency and the reduced link bandwidth.
-                let lat = self.lat_tab[id][dir.port()];
-                if lat > 1 {
-                    self.routers[nbr].stage_delayed(dport, m, lat - 1);
-                } else {
-                    self.routers[nbr].stage(dport, m);
-                }
-                self.wake_router(nbr);
-                self.stats.flit_hops += 1;
-                self.stats.buf_writes += 1;
-                self.stats.link_flits[link_index(id, dir)] += 1;
-                self.link_demand += 1;
-            }
-            self.routers[id].rr_ptr[out] = (p + 1) % nports;
-            moved[p] = true;
+            timed_out
+        });
+        self.stats.link_flits = link_flits;
+        if timed_out {
+            return Err(self.deadlock_report());
         }
-        self.routers[id].sample_stats(&moved);
-    }
-
-    // --- off-chip AXI model --------------------------------------------------
-
-    /// Stream static AMs from the off-chip reservoir into on-chip AM-queue
-    /// windows at AXI bandwidth (round-robin across PEs).
-    fn axi_refill(&mut self) {
-        if self.pending_remaining == 0 {
-            return;
-        }
-        self.axi_credit += self.cfg.axi_bytes_per_cycle;
-        let n = self.cfg.num_pes();
-        let am_bytes = crate::am::packed::AM_BYTES as f64;
-        let mut scanned = 0;
-        while self.axi_credit >= am_bytes && scanned < n {
-            let id = self.axi_rr;
-            self.axi_rr = (self.axi_rr + 1) % n;
-            if self.pending_static[id].is_empty()
-                || self.pes[id].am_window.len() >= self.cfg.am_queue_entries
-            {
-                scanned += 1;
-                continue;
-            }
-            scanned = 0;
-            let m = self.pending_static[id].pop_front().unwrap();
-            self.pending_remaining -= 1;
-            self.pes[id].am_window.push_back(m);
-            self.wake_pe(id);
-            self.axi_credit -= am_bytes;
-            self.stats.offchip_bytes += crate::am::packed::AM_BYTES as u64;
-        }
-        // Credit does not bank across idle periods beyond one burst.
-        self.axi_credit = self.axi_credit.min(self.cfg.axi_bytes_per_cycle * 16.0);
+        Ok(())
     }
 
     // --- stats ----------------------------------------------------------------
@@ -1222,8 +1043,9 @@ impl NexusFabric {
     ///   double-counted.
     pub fn check_wake_consistency(&self) -> Result<(), String> {
         for id in 0..self.cfg.num_pes() {
+            let shard = &self.shards[self.shard_of[id] as usize];
             let has = self.pes[id].has_pending_work();
-            let awake = self.awake_pes.is_awake(id);
+            let awake = shard.awake_pes.is_awake(id);
             if has && !awake {
                 return Err(format!("PE{id} asleep but has pending work (scheduler deadlock)"));
             }
@@ -1234,7 +1056,7 @@ impl NexusFabric {
                 return Err(format!("PE{id} asleep with busy flags set"));
             }
             let occ = self.routers[id].occupancy();
-            let r_awake = self.awake_routers.is_awake(id);
+            let r_awake = shard.awake_routers.is_awake(id);
             if occ > 0 && !r_awake {
                 return Err(format!("router {id} asleep holding {occ} flits (scheduler deadlock)"));
             }
@@ -1251,7 +1073,10 @@ impl NexusFabric {
     /// identical sequences in both step modes, since the lists are
     /// maintained identically).
     pub fn awake_counts(&self) -> (usize, usize) {
-        (self.awake_pes.len(), self.awake_routers.len())
+        (
+            self.shards.iter().map(|s| s.awake_pes.len()).sum(),
+            self.shards.iter().map(|s| s.awake_routers.len()).sum(),
+        )
     }
 
     /// Order-sensitive FNV-1a digest of the complete mutable simulator
@@ -1262,6 +1087,151 @@ impl NexusFabric {
     /// `tests/step_equivalence.rs` to report the *first diverging cycle* on
     /// an equivalence failure.
     pub fn state_digest(&self) -> u64 {
+        self.view().digest()
+    }
+}
+
+/// The coordinator's mutable window over the fabric's non-sharded state:
+/// AXI refill before the phase passes, the boundary-outbox drain at the
+/// epoch barrier, and the stat merge that closes the epoch. Built by
+/// [`NexusFabric::epoch_io`] in serial stepping and from raw pointers by
+/// the parallel engine (whose workers are parked at a barrier whenever one
+/// of these methods runs).
+struct EpochIo<'a> {
+    cfg: &'a ArchConfig,
+    pes: &'a mut [Pe],
+    routers: &'a mut [Router],
+    shards: &'a mut [ShardState],
+    shard_of: &'a [u16],
+    pending_static: &'a mut [VecDeque<Message>],
+    axi_credit: &'a mut f64,
+    axi_rr: &'a mut usize,
+    pending_remaining: &'a mut usize,
+    stats: &'a mut FabricStats,
+    cycle: &'a mut u64,
+}
+
+impl EpochIo<'_> {
+    /// Stream static AMs from the off-chip reservoir into on-chip AM-queue
+    /// windows at AXI bandwidth (round-robin across PEs).
+    fn axi_refill(&mut self) {
+        if *self.pending_remaining == 0 {
+            return;
+        }
+        *self.axi_credit += self.cfg.axi_bytes_per_cycle;
+        let n = self.cfg.num_pes();
+        let am_bytes = crate::am::packed::AM_BYTES as f64;
+        let mut scanned = 0;
+        while *self.axi_credit >= am_bytes && scanned < n {
+            let id = *self.axi_rr;
+            *self.axi_rr = (*self.axi_rr + 1) % n;
+            if self.pending_static[id].is_empty()
+                || self.pes[id].am_window.len() >= self.cfg.am_queue_entries
+            {
+                scanned += 1;
+                continue;
+            }
+            scanned = 0;
+            let m = self.pending_static[id].pop_front().unwrap();
+            *self.pending_remaining -= 1;
+            self.pes[id].am_window.push_back(m);
+            self.shards[self.shard_of[id] as usize].awake_pes.wake(id);
+            *self.axi_credit -= am_bytes;
+            self.stats.offchip_bytes += crate::am::packed::AM_BYTES as u64;
+        }
+        // Credit does not bank across idle periods beyond one burst.
+        *self.axi_credit = (*self.axi_credit).min(self.cfg.axi_bytes_per_cycle * 16.0);
+    }
+
+    /// Stage every shard's boundary flits into their destination routers —
+    /// the epoch barrier that makes cross-shard traffic deterministic:
+    /// shards drain in index order, each outbox in route-visit order.
+    /// Staging cannot conflict: each `(router, input port)` has exactly one
+    /// upstream router, hence exactly one shard that can target it.
+    fn drain_outboxes(&mut self) {
+        for s in 0..self.shards.len() {
+            let mut outbox = std::mem::take(&mut self.shards[s].outbox);
+            for f in outbox.drain(..) {
+                let to = f.to as usize;
+                if f.wait > 0 {
+                    self.routers[to].stage_delayed(f.port as usize, f.msg, f.wait);
+                } else {
+                    self.routers[to].stage(f.port as usize, f.msg);
+                }
+                self.shards[self.shard_of[to] as usize].awake_routers.wake(to);
+            }
+            // Hand the (now empty) allocation back for reuse.
+            self.shards[s].outbox = outbox;
+        }
+    }
+
+    /// Close the epoch: merge every shard's scalar stat delta into the
+    /// aggregate, fold the cycle's total link demand into the peak, and
+    /// advance the cycle counter.
+    fn epoch_end(&mut self) {
+        let mut demand = 0u64;
+        for shard in self.shards.iter_mut() {
+            let delta = std::mem::take(&mut shard.stats);
+            self.stats.merge_delta(&delta);
+            demand += shard.link_demand;
+        }
+        self.stats.peak_link_demand = self.stats.peak_link_demand.max(demand);
+        *self.cycle += 1;
+    }
+}
+
+/// A read-only snapshot view over the fabric state, serving the drain
+/// detector and the lockstep digest for both the serial accessors and the
+/// parallel engine's coordinator.
+struct FabricView<'a> {
+    cfg: &'a ArchConfig,
+    pes: &'a [Pe],
+    routers: &'a [Router],
+    shards: &'a [ShardState],
+    pending_static: &'a [VecDeque<Message>],
+    pending_remaining: usize,
+    axi_credit: f64,
+    axi_rr: usize,
+    cycle: u64,
+}
+
+impl FabricView<'_> {
+    /// Global idle condition (§3.1.4): all PEs inactive, no messages in
+    /// transit, no static AMs left to stream.
+    ///
+    /// In `ActiveSet` mode this is O(active): only wake-list members can
+    /// hold work (every sleeping component is empty by the commit-time
+    /// sleep invariant, which `check_wake_consistency` verifies), and
+    /// off-chip static AMs are tracked by the `pending_remaining` counter.
+    /// `DenseOracle` keeps the full O(PEs) scan as the reference.
+    fn is_drained(&self) -> bool {
+        match self.cfg.step_mode {
+            StepMode::DenseOracle => {
+                self.pending_static.iter().all(|q| q.is_empty())
+                    && self.pes.iter().all(|p| p.is_idle())
+                    && self.routers.iter().all(|r| r.occupancy() == 0)
+            }
+            StepMode::ActiveSet => {
+                // Awake routers always hold flits; an awake PE may be merely
+                // cooling down its trigger timer, which `is_idle` (and the
+                // dense scan) ignores.
+                self.pending_remaining == 0
+                    && self.shards.iter().all(|s| {
+                        s.awake_routers.is_empty()
+                            && s.awake_pes.iter().all(|id| self.pes[id].is_idle())
+                    })
+            }
+        }
+    }
+
+    /// Order-sensitive FNV-1a digest of the complete mutable simulator
+    /// state: PE memories/queues/flags, router buffers/staging/hysteresis,
+    /// AXI and cycle counters, per-shard PRNG/id streams, in-flight message
+    /// contents. Two fabrics executing bit-identically produce equal
+    /// digests at every cycle boundary — the lockstep divergence probe used
+    /// by `tests/step_equivalence.rs` to report the *first diverging cycle*
+    /// on an equivalence failure.
+    fn digest(&self) -> u64 {
         #[inline]
         fn mix(h: &mut u64, v: u64) {
             *h = (*h ^ v).wrapping_mul(0x0000_0100_0000_01b3);
@@ -1269,33 +1239,38 @@ impl NexusFabric {
         fn mix_msg(h: &mut u64, m: &Message) {
             mix(
                 h,
-                u64::from_le_bytes([
-                    m.dests[0],
-                    m.dests[1],
-                    m.dests[2],
-                    m.ndests,
-                    m.n_pc,
-                    m.opcode.encode(),
-                    u8::from(m.res_is_addr),
-                    u8::from(m.op1_is_addr) | (u8::from(m.op2_is_addr) << 1),
-                ]),
+                u64::from(m.dests[0])
+                    | (u64::from(m.dests[1]) << 16)
+                    | (u64::from(m.dests[2]) << 32)
+                    | (u64::from(m.ndests) << 48)
+                    | (u64::from(m.n_pc) << 56),
+            );
+            mix(
+                h,
+                u64::from(m.opcode.encode())
+                    | (u64::from(m.res_is_addr) << 8)
+                    | (u64::from(m.op1_is_addr) << 9)
+                    | (u64::from(m.op2_is_addr) << 10),
             );
             mix(h, ((m.result as u64) << 32) | ((m.op1 as u64) << 16) | m.op2 as u64);
             mix(h, m.id);
             mix(h, m.birth);
             mix(
                 h,
-                ((m.hops as u64) << 16) | m.valiant_hop.map_or(0xFFFF, |v| 0x100 | v as u64),
+                ((m.hops as u64) << 40)
+                    | m.valiant_hop.map_or(0xFFFF_FFFF, |v| 0x1_0000 | u64::from(v)),
             );
             mix(h, u64::from(m.executed_enroute));
         }
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
         mix(&mut h, self.cycle);
-        mix(&mut h, self.next_msg_id);
         mix(&mut h, self.pending_remaining as u64);
         mix(&mut h, self.axi_rr as u64);
         mix(&mut h, self.axi_credit.to_bits());
-        mix(&mut h, self.rng.clone().next_u64());
+        for s in self.shards {
+            mix(&mut h, s.next_msg_id);
+            mix(&mut h, s.rng.state());
+        }
         for (id, pe) in self.pes.iter().enumerate() {
             mix(&mut h, id as u64);
             for &w in &pe.dmem {
@@ -1317,7 +1292,7 @@ impl NexusFabric {
             }
             mix(&mut h, self.pending_static[id].len() as u64);
         }
-        for r in &self.routers {
+        for r in self.routers {
             for p in 0..r.num_ports() {
                 mix(&mut h, r.inputs[p].len() as u64);
                 for m in r.inputs[p].iter() {
@@ -1341,7 +1316,8 @@ mod tests {
     use super::*;
     use crate::am::Message;
     use crate::compiler::ProgramBuilder;
-    use crate::isa::ConfigEntry;
+    use crate::isa::{ConfigEntry, Opcode};
+    use crate::pe::StreamMode;
 
     fn nexus() -> ArchConfig {
         ArchConfig::nexus()
@@ -1356,7 +1332,7 @@ mod tests {
         am.op1 = val as u16;
         am.result = addr;
         am.res_is_addr = true;
-        am.push_dest(dst as u8);
+        am.push_dest(dst as u16);
         b.static_am(src, am);
         b.output(dst, addr);
         b.build()
@@ -1445,8 +1421,8 @@ mod tests {
                 am.op2_is_addr = true;
                 am.result = ya;
                 am.res_is_addr = true;
-                am.push_dest(data_pe as u8);
-                am.push_dest(out_pe as u8);
+                am.push_dest(data_pe as u16);
+                am.push_dest(out_pe as u16);
                 b.static_am(src, am);
                 b.output(out_pe, ya);
             }
@@ -1493,7 +1469,7 @@ mod tests {
             elems.push(crate::pe::StreamElem {
                 value: (k as i16 + 1) as u16 as i16,
                 aux: addr,
-                dest_pe: pe as u8,
+                dest_pe: pe as u16,
                 mode: StreamMode::PerDest,
             });
         }
@@ -1536,7 +1512,7 @@ mod tests {
         let e = crate::pe::StreamElem {
             value: 3,
             aux: db,
-            dest_pe: pe_b as u8,
+            dest_pe: pe_b as u16,
             mode: StreamMode::PerDest,
         };
         let base = b.stream(pe_a, &[e]);
@@ -1551,7 +1527,7 @@ mod tests {
         am.op1 = 0;
         am.result = da;
         am.res_is_addr = true;
-        am.push_dest(pe_a as u8);
+        am.push_dest(pe_a as u16);
         b.static_am(pe_a, am);
         b.output(pe_a, da);
         b.output(pe_b, db);
@@ -1586,7 +1562,7 @@ mod tests {
             am.op1 = i;
             am.result = addr;
             am.res_is_addr = true;
-            am.push_dest(dst as u8);
+            am.push_dest(dst as u16);
             b.static_am(src, am);
             targets.push((dst, addr, i));
         }
@@ -1818,7 +1794,7 @@ mod tests {
             am.op1 = i;
             am.result = addr;
             am.res_is_addr = true;
-            am.push_dest(dst as u8);
+            am.push_dest(dst as u16);
             b.static_am(src, am);
             targets.push((dst, addr, i));
         }

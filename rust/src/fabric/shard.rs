@@ -1,0 +1,973 @@
+//! Tile-partitioned (sharded) fabric stepping.
+//!
+//! The fabric is split into `cfg.shards` horizontal bands of rows, each a
+//! contiguous range of PE ids (`base..base + len`). Every per-cycle phase
+//! pass runs *within* one shard over one [`ShardCtx`]; the only cross-shard
+//! interactions are:
+//!
+//! - **boundary flits**: a route-phase winner whose downstream router lives
+//!   in another shard is appended to the sending shard's [`ShardState::outbox`]
+//!   instead of being staged directly. The fabric's coordinator drains all
+//!   outboxes between the phase and commit passes (an epoch barrier), so
+//!   cross-shard staging never races with the destination shard's own pass.
+//! - **boundary acceptance state**: routing decisions that would read a
+//!   neighbor router owned by another shard consult a [`PortSnap`] taken at
+//!   the previous commit instead ([`ShardCtx::nbr_view`]). Snapshots make
+//!   boundary decisions independent of shard stepping order — and therefore
+//!   of the host thread count — at the cost of one cycle of staleness on
+//!   shard-crossing links (physically: the On/Off wire already has exactly
+//!   this one-cycle latency inside a shard, so the model is uniform).
+//!
+//! Determinism contract: for a **fixed shard count**, results are bit-exact
+//! at any thread count (threads only change which host core runs a shard's
+//! pass; the epoch barriers serialize every cross-shard effect). Changing
+//! the shard count is a *semantic* knob — boundary links switch between
+//! live and snapshot acceptance state and PRNG/message-id streams split —
+//! so `shards = 1` reproduces the historical single-threaded simulator
+//! bit-for-bit, while `shards = k` is a (validated, self-consistent)
+//! fabric of its own.
+//!
+//! The parallel engine lives in `fabric/mod.rs` (`NexusFabric::execute`
+//! dispatches on `min(threads, shards)`); this module owns the data types,
+//! the per-shard phase/commit passes, and the [`SpinBarrier`] the engine
+//! synchronizes on.
+
+use crate::am::Message;
+use crate::config::{ArchConfig, ExecPolicy, RoutingPolicy, StepMode, TopologyKind};
+use crate::isa::{alu_eval, ConfigEntry, Opcode};
+use crate::noc::router::{PortSnap, Router, MAX_PORTS, PORT_LOCAL};
+use crate::noc::routing::Dir;
+use crate::noc::topology::{link_index, Topology, LINKS_PER_PE};
+use crate::pe::{ActiveStream, Pe, StreamMode, OUTQ_CAP};
+use crate::util::prng::{stream_seed, SplitMix64};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::active::WakeList;
+use super::stats::FabricStats;
+
+/// Message ids are `msg_tag | counter`: the owning shard's index in the top
+/// bits, a per-shard counter below. Shard 0's tag is zero, so ids in the
+/// single-shard fabric are exactly the historical global counter.
+pub(crate) const MSG_TAG_SHIFT: u32 = 48;
+
+/// A route-phase winner bound for a router in another shard, parked in the
+/// sending shard's outbox until the epoch barrier drains it.
+#[derive(Debug, Clone)]
+pub(crate) struct OutFlit {
+    /// Destination router id (global).
+    pub to: u32,
+    /// Destination input port.
+    pub port: u8,
+    /// Extra commits before the flit lands (`latency - 1`).
+    pub wait: u8,
+    pub msg: Message,
+}
+
+/// Per-shard mutable simulation state: everything a phase pass touches that
+/// is not a PE or router in the shard's band.
+#[derive(Debug, Clone)]
+pub(crate) struct ShardState {
+    /// First PE id owned by this shard.
+    pub base: usize,
+    /// Number of PEs owned.
+    pub len: usize,
+    /// Per-shard PRNG stream (Valiant hop draws), derived from the config
+    /// seed and shard index so streams are independent yet reproducible.
+    pub rng: SplitMix64,
+    /// Per-shard message-id counter (combined with `msg_tag`).
+    pub next_msg_id: u64,
+    /// Shard index pre-shifted into the id tag position.
+    pub msg_tag: u64,
+    /// PEs with pending work, restricted to this shard's band.
+    pub awake_pes: WakeList,
+    /// Routers holding flits, restricted to this shard's band.
+    pub awake_routers: WakeList,
+    /// Per-cycle iteration scratch (kept allocation-free).
+    pub scratch_pes: Vec<usize>,
+    pub scratch_routers: Vec<usize>,
+    /// Boundary flits awaiting the epoch-barrier drain.
+    pub outbox: Vec<OutFlit>,
+    /// Link traversals this shard charged in the current cycle.
+    pub link_demand: u64,
+    /// Scalar stat deltas accumulated during this shard's passes, merged
+    /// into the fabric's global stats at the epoch barrier (the per-PE /
+    /// per-link vectors stay empty here: PE stats live on the `Pe`, link
+    /// flits are written to a disjoint band slice of the global vector).
+    pub stats: FabricStats,
+}
+
+impl ShardState {
+    pub fn new(index: usize, n: usize, base: usize, len: usize, seed: u64) -> Self {
+        ShardState {
+            base,
+            len,
+            rng: SplitMix64::new(stream_seed(seed, index as u64)),
+            next_msg_id: 1,
+            msg_tag: (index as u64) << MSG_TAG_SHIFT,
+            awake_pes: WakeList::new_for_band(n, base, len),
+            awake_routers: WakeList::new_for_band(n, base, len),
+            scratch_pes: Vec::with_capacity(len),
+            scratch_routers: Vec::with_capacity(len),
+            outbox: Vec::new(),
+            link_demand: 0,
+            stats: FabricStats::default(),
+        }
+    }
+
+    /// Return to the just-constructed state (fabric reset).
+    pub fn reset(&mut self, index: usize, seed: u64) {
+        self.rng = SplitMix64::new(stream_seed(seed, index as u64));
+        self.next_msg_id = 1;
+        self.awake_pes.clear();
+        self.awake_routers.clear();
+        self.outbox.clear();
+        self.link_demand = 0;
+        self.stats = FabricStats::default();
+    }
+
+    /// Allocate the next message id in this shard's stream.
+    #[inline]
+    pub fn alloc_msg_id(&mut self) -> u64 {
+        let id = self.msg_tag | self.next_msg_id;
+        self.next_msg_id += 1;
+        id
+    }
+}
+
+/// Everything one shard's phase pass may touch: the shard's own PE/router
+/// band mutably, read-only fabric geometry, and the boundary snapshots of
+/// *other* shards' ports. Constructed fresh per pass (it is a bundle of
+/// reborrows, not storage).
+pub(crate) struct ShardCtx<'a> {
+    /// This shard's PEs, indexed by `id - shard.base`.
+    pub pes: &'a mut [Pe],
+    /// This shard's routers, same indexing.
+    pub routers: &'a mut [Router],
+    pub shard: &'a mut ShardState,
+    /// This shard's band of the global per-link flit counters
+    /// (`stats.link_flits[base * LINKS_PER_PE ..]`).
+    pub link_flits: &'a mut [u64],
+    pub cfg: &'a ArchConfig,
+    pub config_mem: &'a [ConfigEntry],
+    pub nbr_tab: &'a [[u16; MAX_PORTS]],
+    pub lat_tab: &'a [[u8; MAX_PORTS]],
+    pub topo: &'a dyn Topology,
+    pub nports: usize,
+    pub torus_bubble: bool,
+    /// Owning shard per PE id (boundary test).
+    pub shard_of: &'a [u16],
+    /// Boundary port snapshots (all shards'; read-only during phases).
+    pub snap: &'a [PortSnap],
+    /// `snap` entry per `(router, port)`, `u32::MAX` for non-boundary ports.
+    pub snap_idx: &'a [u32],
+    pub cycle: u64,
+}
+
+impl ShardCtx<'_> {
+    #[inline]
+    fn owns(&self, id: usize) -> bool {
+        id >= self.shard.base && id < self.shard.base + self.shard.len
+    }
+
+    /// Acceptance state of neighbor router `nbr`'s input `port`: live if the
+    /// neighbor is ours, the epoch-start snapshot if it belongs to another
+    /// shard.
+    #[inline]
+    fn nbr_view(&self, nbr: usize, port: usize) -> PortSnap {
+        if self.owns(nbr) {
+            self.routers[nbr - self.shard.base].port_snap(port)
+        } else {
+            let k = self.snap_idx[nbr * MAX_PORTS + port];
+            debug_assert!(k != u32::MAX, "live read of unregistered boundary port");
+            self.snap[k as usize]
+        }
+    }
+
+    /// Run the three per-cycle phases (PE, en-route, route) over this
+    /// shard's band, in the same rotated service order the unsharded
+    /// stepper uses (`pivot` visits `base + (cycle % len)` first).
+    pub fn run_phases(&mut self) {
+        self.shard.link_demand = 0;
+        let (base, len) = (self.shard.base, self.shard.len);
+        let pivot = base + (self.cycle as usize) % len;
+        match self.cfg.step_mode {
+            StepMode::DenseOracle => {
+                for k in 0..len {
+                    self.pe_phase(base + (pivot - base + k) % len);
+                }
+                if self.cfg.exec == ExecPolicy::EnRoute {
+                    for k in 0..len {
+                        self.enroute_phase(base + (pivot - base + k) % len);
+                    }
+                }
+                for k in 0..len {
+                    self.route_phase(base + (pivot - base + k) % len);
+                }
+            }
+            StepMode::ActiveSet => {
+                // Snapshot the awake PEs: wakes during the cycle take effect
+                // in the commit pass, matching the dense scan (where a PE's
+                // phase has already run by the time later phases hand it
+                // new work).
+                let mut pe_order = std::mem::take(&mut self.shard.scratch_pes);
+                pe_order.clear();
+                self.shard.awake_pes.rotated_into(pivot, &mut pe_order);
+                for &id in &pe_order {
+                    self.pe_phase(id);
+                }
+                // One router snapshot serves both network phases: the set of
+                // routers with *buffered* flits cannot grow mid-cycle
+                // (injections and traversals only stage until commit).
+                let mut router_order = std::mem::take(&mut self.shard.scratch_routers);
+                router_order.clear();
+                self.shard.awake_routers.rotated_into(pivot, &mut router_order);
+                if self.cfg.exec == ExecPolicy::EnRoute {
+                    for &id in &router_order {
+                        self.enroute_phase(id);
+                    }
+                }
+                for &id in &router_order {
+                    self.route_phase(id);
+                }
+                self.shard.scratch_pes = pe_order;
+                self.shard.scratch_routers = router_order;
+            }
+        }
+    }
+
+    // --- phase 1: PE-local work -------------------------------------------
+
+    fn pe_phase(&mut self, id: usize) {
+        let i = id - self.shard.base;
+        // Fast path: fully idle PE — only reachable from the dense oracle;
+        // the active-set scheduler never visits sleeping PEs.
+        if !self.pes[i].has_pending_work() {
+            return;
+        }
+        // Pick at most one message: the decode/ALU handoff (local_redo) has
+        // priority; otherwise the inbox, gated by the TIA trigger scheduler.
+        let msg = {
+            let pe = &mut self.pes[i];
+            if let Some(m) = pe.local_redo.take() {
+                Some(m)
+            } else if pe.trigger_wait > 0 {
+                pe.trigger_wait -= 1;
+                None
+            } else if let Some(m) = pe.inbox.take() {
+                if self.cfg.trigger_latency > 0 {
+                    // Triggered-instruction tag match + priority encode: the
+                    // scheduler is busy for trigger_latency further cycles.
+                    pe.trigger_wait = self.cfg.trigger_latency;
+                    self.shard.stats.trigger_checks += 1;
+                }
+                Some(m)
+            } else {
+                None
+            }
+        };
+        if let Some(m) = msg {
+            self.process_at(id, m);
+        }
+        self.stream_phase(id);
+        self.inject_phase(id);
+    }
+
+    /// Execute a message's current opcode at PE `id` (local work).
+    fn process_at(&mut self, id: usize, mut m: Message) {
+        let op = m.opcode;
+        if op == Opcode::Halt {
+            self.retire(m);
+            return;
+        }
+        if op.is_alu() {
+            debug_assert!(
+                !m.op1_is_addr && !m.op2_is_addr,
+                "ALU op with unresolved operand at PE{id}: {m:?}"
+            );
+            let v = alu_eval(op, m.op1, m.op2);
+            let entry = self.config_entry(m.n_pc);
+            m.morph(v, &entry);
+            self.pes[id - self.shard.base].alu_busy = true;
+            self.shard.stats.alu_ops += 1;
+            self.shard.stats.config_reads += 1;
+            self.dispatch(id, m);
+        } else {
+            self.exec_memory(id, m);
+        }
+    }
+
+    #[inline]
+    fn config_entry(&self, n_pc: u8) -> ConfigEntry {
+        *self
+            .config_mem
+            .get(n_pc as usize)
+            .unwrap_or(&ConfigEntry::HALT)
+    }
+
+    /// Execute a memory-class opcode on PE `id`'s decode unit (§3.3.1).
+    fn exec_memory(&mut self, id: usize, mut m: Message) {
+        debug_assert_eq!(
+            m.head_dest(),
+            Some(id as u16),
+            "memory op {:?} at non-owner PE{id}",
+            m.opcode
+        );
+        let i = id - self.shard.base;
+        self.shard.stats.mem_ops += 1;
+        self.pes[i].stats.mem_ops += 1;
+        self.pes[i].decode_busy = true;
+        match m.opcode {
+            Opcode::Load => {
+                m.op2 = self.pes[i].dmem[m.op2 as usize];
+                self.pes[i].stats.dmem_reads += 1;
+                self.shard.stats.dmem_reads += 1;
+                m.rotate_dests();
+                let e = self.config_entry(m.n_pc);
+                m.advance(&e);
+                self.shard.stats.config_reads += 1;
+                self.dispatch(id, m);
+            }
+            Opcode::LoadOp1 => {
+                m.op1 = self.pes[i].dmem[m.op1 as usize];
+                self.pes[i].stats.dmem_reads += 1;
+                self.shard.stats.dmem_reads += 1;
+                m.rotate_dests();
+                let e = self.config_entry(m.n_pc);
+                m.advance(&e);
+                self.shard.stats.config_reads += 1;
+                self.dispatch(id, m);
+            }
+            Opcode::Store => {
+                self.pes[i].dmem[m.result as usize] = m.op1;
+                self.pes[i].stats.dmem_writes += 1;
+                self.shard.stats.dmem_writes += 1;
+                self.retire(m);
+            }
+            Opcode::Accum => {
+                let a = m.result as usize;
+                let cur = self.pes[i].dmem[a];
+                self.pes[i].dmem[a] = (cur as i16).wrapping_add(m.op1 as i16) as u16;
+                self.pes[i].stats.dmem_reads += 1;
+                self.pes[i].stats.dmem_writes += 1;
+                self.shard.stats.dmem_reads += 1;
+                self.shard.stats.dmem_writes += 1;
+                self.retire(m);
+            }
+            Opcode::AccMin => {
+                let a = m.result as usize;
+                let cur = self.pes[i].dmem[a] as i16;
+                self.pes[i].stats.dmem_reads += 1;
+                self.shard.stats.dmem_reads += 1;
+                if (m.op1 as i16) < cur {
+                    self.pes[i].dmem[a] = m.op1;
+                    self.pes[i].stats.dmem_writes += 1;
+                    self.shard.stats.dmem_writes += 1;
+                    // Conditional re-emission (§3.1: BFS/SSSP relaxation).
+                    if let Some((base, count)) = self.pes[i].trigger[a] {
+                        let mut t = m;
+                        t.rotate_dests();
+                        let e = self.config_entry(t.n_pc);
+                        t.advance(&e);
+                        self.shard.stats.config_reads += 1;
+                        self.queue_stream(id, base, count, t);
+                    }
+                }
+                // The message itself always dies; only the stream (if
+                // triggered) carries the update onward. Failed relaxations
+                // are the paper's "AMs terminate early" case.
+                self.retire(m);
+            }
+            Opcode::Stream => {
+                let key = m.op2 as usize;
+                let desc = self.pes[i].trigger[key];
+                debug_assert!(desc.is_some(), "Stream op with no trigger at PE{id}[{key}]");
+                if let Some((base, count)) = desc {
+                    m.rotate_dests();
+                    let e = self.config_entry(m.n_pc);
+                    m.advance(&e);
+                    self.shard.stats.config_reads += 1;
+                    self.queue_stream(id, base, count, m);
+                }
+                // The triggering message is consumed by the stream engine.
+                self.shard.stats.msgs_retired += 1;
+            }
+            _ => unreachable!("non-memory opcode {:?} in exec_memory", m.opcode),
+        }
+    }
+
+    /// Route a message after its op completed: locally (next op owned by
+    /// this PE) or out through the AM NIC.
+    fn dispatch(&mut self, id: usize, m: Message) {
+        if m.opcode == Opcode::Halt || m.ndests == 0 {
+            self.retire(m);
+            return;
+        }
+        let pe = &mut self.pes[id - self.shard.base];
+        if m.head_dest() == Some(id as u16) && pe.local_redo.is_none() {
+            // Next op executes here: skip the network (decode/ALU handoff).
+            pe.local_redo = Some(m);
+        } else {
+            pe.outq.push_back(m);
+        }
+        self.shard.awake_pes.wake(id);
+    }
+
+    fn retire(&mut self, _m: Message) {
+        self.shard.stats.msgs_retired += 1;
+    }
+
+    /// Install a streaming decode, or queue it if the engine is busy.
+    fn queue_stream(&mut self, id: usize, base: u32, count: u16, template: Message) {
+        if count == 0 {
+            // Empty stream: the AM "terminates early when it does not find
+            // corresponding elements" (§5.1).
+            return;
+        }
+        let s = ActiveStream {
+            base,
+            remaining: count,
+            pos: base,
+            template,
+        };
+        let pe = &mut self.pes[id - self.shard.base];
+        if pe.stream.is_none() {
+            pe.stream = Some(s);
+        } else {
+            pe.stream_q.push_back(s);
+        }
+        self.shard.awake_pes.wake(id);
+    }
+
+    /// Advance the streaming decode by one emission (§3.3.1 streaming mode).
+    fn stream_phase(&mut self, id: usize) {
+        let i = id - self.shard.base;
+        if self.pes[i].stream.is_none() {
+            let next = self.pes[i].stream_q.pop_front();
+            self.pes[i].stream = next;
+        }
+        if self.pes[i].stream.is_none() || self.pes[i].outq.len() >= OUTQ_CAP {
+            return;
+        }
+        let (elem, template, done) = {
+            let pe = &mut self.pes[i];
+            let s = pe.stream.as_mut().unwrap();
+            let elem = pe.stream_mem[s.pos as usize];
+            s.pos += 1;
+            s.remaining -= 1;
+            let done = s.remaining == 0;
+            (elem, s.template, done)
+        };
+        if done {
+            self.pes[i].stream = None;
+        }
+        let mut m = template;
+        m.id = self.shard.alloc_msg_id();
+        m.birth = self.cycle;
+        m.hops = 0;
+        m.executed_enroute = false;
+        match elem.mode {
+            StreamMode::OffsetResult => {
+                // Gustavson: output row base + column index; B value in op2.
+                m.result = template.result.wrapping_add(elem.aux);
+                m.op2 = elem.value as u16;
+            }
+            StreamMode::PerDest => {
+                // Graph/Conv: element names its own destination + address.
+                m.dests = [elem.dest_pe, crate::am::NO_DEST, crate::am::NO_DEST];
+                m.ndests = 1;
+                m.result = elem.aux;
+                m.op2 = elem.value as u16;
+            }
+            StreamMode::OffsetOp1 => {
+                // SDDMM: op1 becomes an address (B-column base + k).
+                m.op1 = template.op1.wrapping_add(elem.aux);
+                m.op2 = elem.value as u16;
+            }
+        }
+        self.shard.stats.stream_emissions += 1;
+        self.shard.stats.scanner_ops += 1;
+        self.shard.stats.msgs_created += 1;
+        self.shard.stats.dmem_reads += 1; // element record fetch
+        self.pes[i].stats.stream_emissions += 1;
+        self.pes[i].decode_busy = true;
+        self.dispatch(id, m);
+    }
+
+    /// AM NIC injection (§3.3.1): dynamic AMs first; otherwise the next
+    /// static AM from the queue window, gated by router backpressure.
+    fn inject_phase(&mut self, id: usize) {
+        let i = id - self.shard.base;
+        if !self.routers[i].can_inject() {
+            return;
+        }
+        let m = if let Some(m) = self.pes[i].outq.pop_front() {
+            Some(m)
+        } else if let Some(mut m) = self.pes[i].am_window.pop_front() {
+            m.id = self.shard.alloc_msg_id();
+            m.birth = self.cycle;
+            self.shard.stats.static_injections += 1;
+            self.shard.stats.msgs_created += 1;
+            self.pes[i].stats.static_injected += 1;
+            Some(m)
+        } else {
+            None
+        };
+        let Some(mut m) = m else { return };
+        if self.cfg.routing == RoutingPolicy::Valiant && m.valiant_hop.is_none() {
+            if self.cfg.topology == TopologyKind::Torus2D {
+                // Torus Valiant: classic uniformly random intermediate node
+                // (VAL [32]); both legs follow shortest-wrap DOR and the
+                // bubble flow control keeps each ring deadlock-free, so no
+                // rectangle constraint is needed or meaningful on a torus.
+                if let Some(dst) = m.head_dest() {
+                    let hop = self.shard.rng.below_usize(self.cfg.num_pes()) as u16;
+                    if hop != dst && hop as usize != id {
+                        m.valiant_hop = Some(hop);
+                    }
+                }
+            }
+            // Randomized *minimal-path* load balancing (ROMM [33], the
+            // scheme the paper's TIA-Valiant cites): the intermediate hop
+            // is drawn inside the minimal rectangle between source and
+            // destination, constrained so the composite (src -> hop -> dst)
+            // path is monotone in both dimensions AND a legal west-first
+            // path — no U-turns, no {N,S}->W turns — which keeps the
+            // two-phase route deadlock-free without virtual channels.
+            // (Ruche and chiplet fabrics reuse it unchanged: their
+            // candidate sets still shrink the same rectangle.)
+            else if let Some(dst) = m.head_dest() {
+                let (sx, sy) = self.cfg.pe_xy(id);
+                let (dx, dy) = self.cfg.pe_xy(dst as usize);
+                let (ylo, yhi) = (sy.min(dy), sy.max(dy));
+                let rand_y = yhi - ylo; // exclusive range helper below
+                let rng = &mut self.shard.rng;
+                let (hx, hy) = if dx >= sx {
+                    // Eastbound (or same column): any hop in the rectangle.
+                    (
+                        sx + rng.below_usize(dx - sx + 1),
+                        ylo + rng.below_usize(rand_y + 1),
+                    )
+                } else if rng.chance(0.5) {
+                    // Westbound, X-randomized leg: keep y = sy so phase 1
+                    // is pure-W and phase 2 (west-first) does W then Y.
+                    (dx + rng.below_usize(sx - dx + 1), sy)
+                } else {
+                    // Westbound, Y-randomized leg: all W moves in phase 1,
+                    // phase 2 is pure Y.
+                    (dx, ylo + rng.below_usize(rand_y + 1))
+                };
+                let hop = self.cfg.pe_id(hx, hy) as u16;
+                if hop != dst {
+                    m.valiant_hop = Some(hop);
+                }
+            }
+        }
+        self.routers[i].stage(PORT_LOCAL, m);
+        self.shard.awake_routers.wake(id);
+        self.shard.stats.buf_writes += 1;
+    }
+
+    // --- phase 2: en-route (opportunistic) execution ------------------------
+
+    /// In-Network Computing (§3.1.3): a PE whose ALU is idle executes the
+    /// head flit of one of its router's input ports, if that flit carries an
+    /// ALU-class opcode with both operands resolved to values.
+    fn enroute_phase(&mut self, id: usize) {
+        let i = id - self.shard.base;
+        if self.pes[i].alu_busy
+            || self.routers[i].locked_port.is_some()
+            || self.routers[i].inputs.iter().all(|b| b.is_empty())
+        {
+            return;
+        }
+        let start = (self.cycle as usize) % self.nports;
+        for k in 0..self.nports {
+            let p = (start + k) % self.nports;
+            let ready = self.routers[i].inputs[p]
+                .head_msg()
+                .map(|m| m.alu_ready() && m.head_dest() != Some(id as u16))
+                .unwrap_or(false);
+            if !ready {
+                continue;
+            }
+            let entry_pc = self.routers[i].inputs[p].head_msg().unwrap().n_pc;
+            let entry = self.config_entry(entry_pc);
+            let m = self.routers[i].inputs[p].head_msg_mut().unwrap();
+            let v = alu_eval(m.opcode, m.op1, m.op2);
+            m.morph(v, &entry);
+            m.executed_enroute = true;
+            self.routers[i].locked_port = Some(p);
+            self.pes[i].alu_busy = true;
+            // The claim must reach this cycle's commit pass (to latch the
+            // busy flag into stats and clear it), so the PE joins the
+            // wake-list even if it holds no messages of its own.
+            self.shard.awake_pes.wake(id);
+            self.pes[i].stats.enroute_ops += 1;
+            self.shard.stats.alu_ops += 1;
+            self.shard.stats.enroute_ops += 1;
+            self.shard.stats.config_reads += 1;
+            return;
+        }
+    }
+
+    // --- phase 3: routing ---------------------------------------------------
+
+    fn route_phase(&mut self, id: usize) {
+        let i = id - self.shard.base;
+        // Fast path: nothing buffered, nothing to route.
+        if self.routers[i].inputs.iter().all(|b| b.is_empty()) {
+            return;
+        }
+        let nports = self.nports;
+        // Clear Valiant hops that reached their intermediate router.
+        if self.cfg.routing == RoutingPolicy::Valiant {
+            for p in 0..nports {
+                if let Some(m) = self.routers[i].inputs[p].head_msg_mut() {
+                    if m.valiant_hop == Some(id as u16) {
+                        m.valiant_hop = None;
+                    }
+                }
+            }
+        }
+        // Route computation: desired output direction per input port, asked
+        // of the topology (the mesh path delegates to the original
+        // west-first/XY functions bit-for-bit).
+        let mut want: [Option<Dir>; MAX_PORTS] = [None; MAX_PORTS];
+        for p in 0..nports {
+            if self.routers[i].locked_port == Some(p) {
+                continue; // being executed en-route this cycle
+            }
+            let Some(m) = self.routers[i].inputs[p].head_msg() else {
+                continue;
+            };
+            let Some(target) = m.route_target() else {
+                // No destination left: drop defensively (should not happen).
+                debug_assert!(false, "routed message without destination");
+                continue;
+            };
+            let t = target as usize;
+            if t == id {
+                want[p] = Some(Dir::Local);
+                continue;
+            }
+            let dir = match self.cfg.routing {
+                RoutingPolicy::Xy => self.topo.route_deterministic(id, t),
+                // Valiant phases ride the same turn rules; with the hop
+                // constraint above, the composite path stays legal.
+                RoutingPolicy::Valiant | RoutingPolicy::TurnModelAdaptive => {
+                    let mut cands = [Dir::Local; 2];
+                    let n = self.topo.route_candidates(id, t, &mut cands);
+                    debug_assert!(n >= 1);
+                    // Congestion-aware adaptive choice: among permitted
+                    // turns, prefer a downstream that can accept now, then
+                    // the one with more free buffer space. Cross-shard
+                    // downstreams score against their epoch-start snapshot.
+                    let score = |d: Dir| {
+                        let nbr = self.nbr_tab[id][d.port()] as usize;
+                        let v = self.nbr_view(nbr, d.opposite_port());
+                        (v.can_accept(), v.effective_free())
+                    };
+                    if n == 1 {
+                        cands[0]
+                    } else {
+                        let (s0, s1) = (score(cands[0]), score(cands[1]));
+                        if s1 > s0 {
+                            cands[1]
+                        } else {
+                            cands[0]
+                        }
+                    }
+                }
+            };
+            want[p] = Some(dir);
+        }
+        // Separable allocation: each output port arbitrates among requesting
+        // input ports with a rotating priority pointer (Fig 8d). A request
+        // mask skips output ports nobody asked for.
+        let mut requested = [false; MAX_PORTS];
+        for w in want.iter().flatten() {
+            requested[w.port()] = true;
+        }
+        let mut moved = [false; MAX_PORTS];
+        for out in 0..nports {
+            if !requested[out] {
+                continue;
+            }
+            let start = self.routers[i].rr_ptr[out];
+            let mut winner = None;
+            for k in 0..nports {
+                let p = (start + k) % nports;
+                if want[p].map(|d| d.port()) == Some(out) {
+                    winner = Some(p);
+                    break;
+                }
+            }
+            let Some(p) = winner else { continue };
+            let dir = want[p].unwrap();
+            // Crossbar traversal if downstream accepts. On a torus the
+            // bubble rule applies: a flit continuing along the same
+            // direction may transit into any non-full buffer (ignoring
+            // On/Off), while a flit *entering* a ring (injection or turn)
+            // must leave one extra slot free — the classic bubble flow
+            // control that keeps each wraparound ring deadlock-free.
+            let ok = if out == PORT_LOCAL {
+                self.pes[i].inbox.is_none()
+            } else {
+                let nbr = self.nbr_tab[id][dir.port()] as usize;
+                let v = self.nbr_view(nbr, dir.opposite_port());
+                if self.torus_bubble && p == dir.opposite_port() {
+                    v.can_transit()
+                } else if self.torus_bubble {
+                    v.can_accept() && v.effective_free() >= 2
+                } else {
+                    v.can_accept()
+                }
+            };
+            if !ok {
+                continue;
+            }
+            let mut m = self.routers[i].pop_port(p).unwrap();
+            m.hops += 1;
+            if out == PORT_LOCAL {
+                self.pes[i].inbox = Some(m);
+                self.shard.awake_pes.wake(id);
+            } else {
+                let nbr = self.nbr_tab[id][dir.port()] as usize;
+                let dport = dir.opposite_port();
+                // Multi-cycle links (chiplet crossings) park the flit in the
+                // staging slot for `latency - 1` extra commits, modelling
+                // both the added latency and the reduced link bandwidth.
+                let lat = self.lat_tab[id][dir.port()];
+                if self.owns(nbr) {
+                    if lat > 1 {
+                        self.routers[nbr - self.shard.base].stage_delayed(dport, m, lat - 1);
+                    } else {
+                        self.routers[nbr - self.shard.base].stage(dport, m);
+                    }
+                    self.shard.awake_routers.wake(nbr);
+                } else {
+                    // Boundary crossing: park in the outbox; the epoch
+                    // barrier stages it into the destination shard.
+                    self.shard.outbox.push(OutFlit {
+                        to: nbr as u32,
+                        port: dport as u8,
+                        wait: lat - 1,
+                        msg: m,
+                    });
+                }
+                self.shard.stats.flit_hops += 1;
+                self.shard.stats.buf_writes += 1;
+                self.link_flits[link_index(id, dir) - self.shard.base * LINKS_PER_PE] += 1;
+                self.shard.link_demand += 1;
+            }
+            self.routers[i].rr_ptr[out] = (p + 1) % nports;
+            moved[p] = true;
+        }
+        self.routers[i].sample_stats(&moved);
+    }
+}
+
+/// Everything one shard's commit pass may touch: the shard's band plus its
+/// own range of the boundary snapshot table (refreshed here, at the epoch
+/// barrier, for the next cycle's cross-shard reads).
+pub(crate) struct CommitCtx<'a> {
+    pub pes: &'a mut [Pe],
+    pub routers: &'a mut [Router],
+    pub shard: &'a mut ShardState,
+    /// This shard's slice of the snapshot table (`snap[snap_base..]`).
+    pub snap: &'a mut [PortSnap],
+    /// `(router id, port)` per owned snapshot entry, same slicing.
+    pub snap_src: &'a [(u16, u8)],
+    /// Global `snap` index range of each router's entries.
+    pub snap_router_range: &'a [(u32, u32)],
+    /// Global index of `snap[0]` / `snap_src[0]`.
+    pub snap_base: usize,
+    pub step_mode: StepMode,
+}
+
+impl CommitCtx<'_> {
+    /// Commit this shard's routers and PEs (staged flits land, busy flags
+    /// latch, wake-lists retire idle members) and refresh the boundary
+    /// snapshots of every router whose exported state may have changed.
+    pub fn run_commit(&mut self) {
+        let (base, len) = (self.shard.base, self.shard.len);
+        match self.step_mode {
+            StepMode::DenseOracle => {
+                for id in base..base + len {
+                    self.commit_router(id);
+                    self.commit_pe(id);
+                }
+            }
+            StepMode::ActiveSet => {
+                // Commit runs over the *current* wake-lists — including
+                // components woken this cycle — and retires anything left
+                // with no work.
+                let mut order = std::mem::take(&mut self.shard.scratch_routers);
+                order.clear();
+                self.shard.awake_routers.snapshot_into(&mut order);
+                for &id in &order {
+                    self.commit_router(id);
+                }
+                self.shard.scratch_routers = order;
+                let mut order = std::mem::take(&mut self.shard.scratch_pes);
+                order.clear();
+                self.shard.awake_pes.snapshot_into(&mut order);
+                for &id in &order {
+                    self.commit_pe(id);
+                }
+                self.shard.scratch_pes = order;
+            }
+        }
+    }
+
+    /// Commit one router, update its wake-list residency, and refresh its
+    /// boundary snapshots. `dirty` is captured *before* `commit` (which
+    /// consumes it): a router's exported acceptance state (buffers, staging,
+    /// On/Off) only changes at a commit where it was dirty, and every dirty
+    /// router is on the wake-list, so this refresh covers all changes.
+    #[inline]
+    fn commit_router(&mut self, id: usize) {
+        let i = id - self.shard.base;
+        let was_dirty = self.routers[i].dirty;
+        self.routers[i].commit();
+        if self.routers[i].occupancy() == 0 {
+            self.shard.awake_routers.sleep(id);
+        }
+        if was_dirty {
+            let (s, e) = self.snap_router_range[id];
+            for k in s as usize..e as usize {
+                let (rid, port) = self.snap_src[k - self.snap_base];
+                debug_assert_eq!(rid as usize, id);
+                self.snap[k - self.snap_base] =
+                    self.routers[i].port_snap(port as usize);
+            }
+        }
+    }
+
+    /// Latch one PE's busy flags into its statistics, clear them for the
+    /// next cycle, and update its wake-list residency.
+    #[inline]
+    fn commit_pe(&mut self, id: usize) {
+        let i = id - self.shard.base;
+        {
+            let pe = &mut self.pes[i];
+            if pe.alu_busy {
+                pe.stats.alu_busy_cycles += 1;
+            }
+            if pe.alu_busy || pe.decode_busy {
+                pe.stats.busy_cycles += 1;
+            }
+            pe.alu_busy = false;
+            pe.decode_busy = false;
+        }
+        if !self.pes[i].has_pending_work() {
+            self.shard.awake_pes.sleep(id);
+        }
+    }
+}
+
+/// A reusable sense-counting spin barrier for the parallel epoch loop.
+///
+/// `std::sync::Barrier` parks threads in the OS; at four rendezvous per
+/// simulated cycle the wake latency dominates the cycle itself. Epoch gaps
+/// here are microseconds, so spinning (with `spin_loop` hints) is the right
+/// trade. Generation counting makes the barrier safely reusable: a thread
+/// cannot enter wait `g + 1` before every thread has observed the release
+/// of wait `g`.
+pub(crate) struct SpinBarrier {
+    n: usize,
+    count: AtomicUsize,
+    generation: AtomicUsize,
+}
+
+impl SpinBarrier {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        SpinBarrier {
+            n,
+            count: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+        }
+    }
+
+    /// Block (spinning) until all `n` participants have called `wait`.
+    /// Release/Acquire pairing on `generation` makes every write before any
+    /// participant's `wait` visible to every participant after it.
+    pub fn wait(&self) {
+        let g = self.generation.load(Ordering::Acquire);
+        if self.count.fetch_add(1, Ordering::AcqRel) == self.n - 1 {
+            // Last arrival: reset the count and open the next generation.
+            self.count.store(0, Ordering::Release);
+            self.generation.store(g.wrapping_add(1), Ordering::Release);
+        } else {
+            while self.generation.load(Ordering::Acquire) == g {
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_msg_ids_are_tagged_and_disjoint() {
+        let mut s0 = ShardState::new(0, 8, 0, 4, 42);
+        let mut s1 = ShardState::new(1, 8, 4, 4, 42);
+        // Shard 0's stream is the historical global counter (tag = 0).
+        assert_eq!(s0.alloc_msg_id(), 1);
+        assert_eq!(s0.alloc_msg_id(), 2);
+        // Shard 1's ids carry its tag; streams never collide.
+        let id = s1.alloc_msg_id();
+        assert_eq!(id >> MSG_TAG_SHIFT, 1);
+        assert_eq!(id & ((1 << MSG_TAG_SHIFT) - 1), 1);
+        // Distinct seed-derived PRNG streams.
+        assert_ne!(s0.rng.next_u64(), s1.rng.next_u64());
+    }
+
+    #[test]
+    fn shard_reset_restores_fresh_state() {
+        let mut s = ShardState::new(1, 8, 4, 4, 7);
+        let fresh_draw = s.rng.clone().next_u64();
+        s.alloc_msg_id();
+        s.rng.next_u64();
+        s.awake_pes.wake(5);
+        s.link_demand = 3;
+        s.stats.alu_ops = 9;
+        s.reset(1, 7);
+        assert_eq!(s.next_msg_id, 1);
+        assert_eq!(s.rng.clone().next_u64(), fresh_draw);
+        assert!(s.awake_pes.is_empty());
+        assert_eq!(s.link_demand, 0);
+        assert_eq!(s.stats.alu_ops, 0);
+    }
+
+    #[test]
+    fn spin_barrier_synchronizes_and_reuses() {
+        use std::sync::atomic::AtomicU64;
+        const ROUNDS: usize = 64;
+        const THREADS: usize = 4;
+        let barrier = SpinBarrier::new(THREADS);
+        let counter = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..THREADS {
+                scope.spawn(|| {
+                    for round in 0..ROUNDS {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                        barrier.wait();
+                        // Every thread must observe all increments of this
+                        // round before any thread starts the next one.
+                        let seen = counter.load(Ordering::Relaxed);
+                        assert!(
+                            seen >= ((round + 1) * THREADS) as u64,
+                            "barrier leaked: saw {seen} in round {round}"
+                        );
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), (ROUNDS * THREADS) as u64);
+    }
+}

@@ -191,6 +191,38 @@ impl FabricStats {
             .filter(|&(_, f)| f > 0)
     }
 
+    /// Fold a per-shard statistics *delta* into this aggregate. Every
+    /// additive event counter is summed; the globally-derived fields are
+    /// deliberately left untouched: `cycles` and `load_cycles` advance once
+    /// per epoch in the fabric's top-level loop, and `peak_link_demand` is
+    /// a max over *whole-fabric* per-cycle demand, computed at the epoch
+    /// barrier from the sum of per-shard demand counters (a per-shard max
+    /// would undercount cycles where the peak straddles shards). Vector
+    /// fields add elementwise, growing to fit.
+    pub fn merge_delta(&mut self, d: &FabricStats) {
+        self.alu_ops += d.alu_ops;
+        self.enroute_ops += d.enroute_ops;
+        self.mem_ops += d.mem_ops;
+        self.stream_emissions += d.stream_emissions;
+        self.static_injections += d.static_injections;
+        self.msgs_created += d.msgs_created;
+        self.msgs_retired += d.msgs_retired;
+        self.flit_hops += d.flit_hops;
+        self.buf_writes += d.buf_writes;
+        self.dmem_reads += d.dmem_reads;
+        self.dmem_writes += d.dmem_writes;
+        self.config_reads += d.config_reads;
+        self.scanner_ops += d.scanner_ops;
+        self.trigger_checks += d.trigger_checks;
+        self.offchip_bytes += d.offchip_bytes;
+        for (p, s) in d.port.iter().enumerate() {
+            self.absorb_port(p, s);
+        }
+        add_elementwise(&mut self.per_pe_busy_cycles, &d.per_pe_busy_cycles);
+        add_elementwise(&mut self.per_pe_committed_ops, &d.per_pe_committed_ops);
+        add_elementwise(&mut self.link_flits, &d.link_flits);
+    }
+
     /// Field-by-field comparison: `None` when equal, otherwise the name and
     /// values of the first differing field. The step-equivalence property
     /// suite uses this so a scheduler divergence names the exact counter
@@ -238,6 +270,16 @@ impl FabricStats {
             return Some("field not covered by FabricStats::diff — update the check! list".into());
         }
         None
+    }
+}
+
+/// `dst[i] += src[i]`, growing `dst` with zeros when `src` is longer.
+fn add_elementwise(dst: &mut Vec<u64>, src: &[u64]) {
+    if dst.len() < src.len() {
+        dst.resize(src.len(), 0);
+    }
+    for (a, b) in dst.iter_mut().zip(src) {
+        *a += *b;
     }
 }
 
@@ -301,6 +343,46 @@ mod tests {
         let p = FabricStats { peak_link_demand: 5, ..FabricStats::default() };
         let d = p.diff(&FabricStats::default()).expect("must differ");
         assert!(d.contains("peak_link_demand"), "{d}");
+    }
+
+    #[test]
+    fn merge_delta_sums_counters_but_not_global_fields() {
+        let mut agg = FabricStats {
+            cycles: 100,
+            load_cycles: 10,
+            alu_ops: 5,
+            peak_link_demand: 7,
+            per_pe_busy_cycles: vec![1, 2],
+            ..FabricStats::default()
+        };
+        let mut d = FabricStats {
+            alu_ops: 3,
+            flit_hops: 9,
+            offchip_bytes: 18,
+            // A shard delta may carry these, but merging must not touch
+            // the aggregate's globally-derived fields.
+            cycles: 999,
+            load_cycles: 999,
+            peak_link_demand: 999,
+            per_pe_busy_cycles: vec![10, 10, 10],
+            link_flits: vec![4, 0, 4],
+            ..FabricStats::default()
+        };
+        d.port[1].flits_in = 6;
+        agg.merge_delta(&d);
+        assert_eq!(agg.cycles, 100);
+        assert_eq!(agg.load_cycles, 10);
+        assert_eq!(agg.peak_link_demand, 7);
+        assert_eq!(agg.alu_ops, 8);
+        assert_eq!(agg.flit_hops, 9);
+        assert_eq!(agg.offchip_bytes, 18);
+        assert_eq!(agg.port[1].flits_in, 6);
+        assert_eq!(agg.per_pe_busy_cycles, vec![11, 12, 10]);
+        assert_eq!(agg.link_flits, vec![4, 0, 4]);
+        // Merging a default delta is a no-op.
+        let before = agg.clone();
+        agg.merge_delta(&FabricStats::default());
+        assert_eq!(agg, before);
     }
 
     #[test]

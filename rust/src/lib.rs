@@ -63,6 +63,27 @@
 //! [`fabric::stats::FabricStats::peak_link_demand`], indexed via
 //! [`noc::link_index`]) — congestion localized to individual links, at a
 //! vector-increment per crossing, included in the bit-identity contract.
+//! [`power::link_demand_gbps`] converts the peak into physical GB/s at the
+//! configured clock (reported per scenario by the corpus runner).
+//!
+//! ## Simulator performance: sharded parallel stepping
+//!
+//! Orthogonal to the step mode, the fabric can be partitioned into
+//! [`ArchConfig::shards`] horizontal row bands and stepped by
+//! [`ArchConfig::threads`] worker threads under deterministic epoch
+//! barriers (`--shards`/`--threads` on the CLI). The shard count is part
+//! of the *modeled schedule* — boundary links switch to epoch-start
+//! snapshot acceptance and each shard owns a private PRNG stream
+//! ([`util::prng::stream_seed`]), message-id space, and wake-lists — while
+//! the thread count is host-side only: for a fixed `(seed, shards)`,
+//! outputs, cycle counts, stats, and the per-cycle
+//! [`fabric::NexusFabric::state_digest`] trace are **bit-identical at any
+//! thread count** (`shards = 1` reproduces the historical simulator
+//! exactly). Enforced by the `sharded_*` lockstep suites in
+//! `tests/step_equivalence.rs`; [`fabric::NexusFabric::run_cycles_parallel`]
+//! exposes the digest trace the suites compare. `cargo bench --bench
+//! fig17_scalability` measures the wall-clock scaling on 32×32 and 64×64
+//! meshes (`BENCH_SHARDED.json` lines).
 //!
 //! ## Topologies
 //!

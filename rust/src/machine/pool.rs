@@ -33,6 +33,17 @@ impl MachinePool {
         }
     }
 
+    /// Pool sized for jobs that each run a fabric on `threads_per_job`
+    /// worker threads ([`crate::config::ArchConfig::threads`]): the host's
+    /// available parallelism divided by the per-job thread count, so a
+    /// sweep of multi-threaded simulations does not oversubscribe cores.
+    pub fn for_threads(threads_per_job: usize) -> Self {
+        let avail = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Self::with_workers(avail / threads_per_job.max(1))
+    }
+
     pub fn workers(&self) -> usize {
         self.workers
     }
@@ -125,6 +136,15 @@ mod tests {
         );
         assert_eq!(out, jobs);
         assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn for_threads_divides_parallelism() {
+        // threads_per_job = 1 must match the default sizing; huge
+        // per-job thread counts must still leave one worker.
+        assert_eq!(MachinePool::for_threads(1).workers(), MachinePool::new().workers());
+        assert_eq!(MachinePool::for_threads(usize::MAX).workers(), 1);
+        assert!(MachinePool::for_threads(2).workers() <= MachinePool::new().workers());
     }
 
     #[test]

@@ -6,16 +6,27 @@
 
 use nexus::config::{ArchConfig, StepMode, TopologyKind};
 use nexus::coordinator::{self, report};
+use nexus::dataset::RunOptions;
+
+/// Parse `--flag N` from the argument list, with a default.
+fn flag_value<T: std::str::FromStr>(args: &[String], flag: &str, default: T) -> T {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
-    let seed = args
-        .iter()
-        .position(|a| a == "--seed")
-        .and_then(|i| args.get(i + 1))
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(1u64);
+    let seed = flag_value(&args, "--seed", 1u64);
+    // Sharded stepping: `--shards N` partitions each fabric into N row
+    // bands (part of the modeled schedule — must divide the mesh height,
+    // corpus runs clamp per scenario); `--threads N` steps the shards on N
+    // worker threads (host-side only; bit-identical at any thread count).
+    let shards = flag_value(&args, "--shards", 1usize).max(1);
+    let threads = flag_value(&args, "--threads", 1usize).max(1);
     // Simulator scheduling mode: active-set by default; `--dense-oracle`
     // re-runs on the dense reference scan (bit-identical, slower) to
     // cross-check the event-driven scheduler on real workloads.
@@ -43,9 +54,17 @@ fn main() {
         },
     };
 
+    let opts = RunOptions {
+        seed,
+        step_mode,
+        topology,
+        shards,
+        threads,
+    };
+
     match cmd {
-        "corpus" => corpus(&args, seed, step_mode, topology),
-        "validate" => validate(seed, step_mode, topology),
+        "corpus" => corpus(&args, opts),
+        "validate" => validate(&opts),
         "golden" => golden(seed),
         "fig10" => with_matrix(seed, report::fig10),
         "fig11" => with_matrix(seed, report::fig11),
@@ -67,7 +86,7 @@ fn main() {
         "table2" => with_matrix(seed, report::table2),
         "compile-time" => compile_time(seed),
         "all" => {
-            validate(seed, step_mode, topology);
+            validate(&opts);
             let m = coordinator::run_matrix(seed);
             println!("{}", report::fig10(&m));
             println!("{}", report::fig11(&m));
@@ -85,19 +104,23 @@ fn main() {
         _ => {
             println!(
                 "nexus — Nexus Machine reproduction CLI\n\n\
-                 usage: nexus <command> [--seed N] [--dense-oracle] [--topology T]\n\n\
+                 usage: nexus <command> [--seed N] [--dense-oracle] [--topology T]\n\
+                 \x20             [--shards N] [--threads N]\n\n\
                  commands:\n\
                  \x20 corpus        dataset/scenario corpus: `corpus list` enumerates the\n\
                  \x20               registered scenarios, `corpus run` executes them with\n\
                  \x20               bit-exact validation, one JSON line per scenario\n\
                  \x20               (--filter GLOB selects, e.g. --filter 'smoke/*';\n\
                  \x20               --topology mesh|torus|ruche|chiplet picks the NoC —\n\
-                 \x20               JSON lines report per-link flits and peak demand)\n\
+                 \x20               JSON lines report per-link flits, peak demand, GB/s)\n\
                  \x20 validate      run the 13-workload suite on Nexus/TIA/TIA-Valiant,\n\
                  \x20               checking fabric outputs against software references\n\
                  \x20               (--dense-oracle: use the dense reference scheduler\n\
                  \x20               instead of active-set stepping; results are identical;\n\
                  \x20               --topology also applies here)\n\
+                 \x20               (--shards N: partition each fabric into N row bands —\n\
+                 \x20               part of the modeled schedule; --threads N: step the\n\
+                 \x20               shards on N worker threads, bit-identical at any N)\n\
                  \x20 golden        additionally check against the XLA/PJRT golden models\n\
                  \x20               (requires `make artifacts`)\n\
                  \x20 fig10..fig17  regenerate the corresponding paper figure\n\
@@ -112,10 +135,11 @@ fn main() {
 }
 
 /// `nexus corpus list|run [--filter GLOB] [--seed N] [--dense-oracle]
-/// [--topology T]`: the dataset/scenario corpus surface. `run` prints
-/// exactly one JSON line per scenario on stdout (the CI smoke job tees
-/// this into `BENCH_CORPUS.json`); human-readable summaries go to stderr.
-fn corpus(args: &[String], seed: u64, step_mode: StepMode, topology: TopologyKind) {
+/// [--topology T] [--shards N] [--threads N]`: the dataset/scenario corpus
+/// surface. `run` prints exactly one JSON line per scenario on stdout (the
+/// CI smoke job tees this into `BENCH_CORPUS.json`); human-readable
+/// summaries go to stderr.
+fn corpus(args: &[String], opts: RunOptions) {
     let sub = args.get(1).map(String::as_str).unwrap_or("list");
     let filter = args
         .iter()
@@ -125,7 +149,7 @@ fn corpus(args: &[String], seed: u64, step_mode: StepMode, topology: TopologyKin
     match sub {
         "list" => println!("{}", coordinator::corpus_list(filter)),
         "run" => {
-            let (lines, ok) = coordinator::corpus_run(filter, seed, step_mode, topology);
+            let (lines, ok) = coordinator::corpus_run(filter, opts);
             if !lines.is_empty() {
                 println!("{lines}");
             }
@@ -144,10 +168,14 @@ fn corpus(args: &[String], seed: u64, step_mode: StepMode, topology: TopologyKin
                 std::process::exit(1);
             }
             eprintln!(
-                "corpus run OK: {} scenario(s) validated ({} stepping, {} topology, seed {seed})",
+                "corpus run OK: {} scenario(s) validated ({} stepping, {} topology, \
+                 {} shard(s) x {} thread(s), seed {})",
                 lines.lines().count(),
-                step_mode.name(),
-                topology.name()
+                opts.step_mode.name(),
+                opts.topology.name(),
+                opts.shards,
+                opts.threads,
+                opts.seed
             );
         }
         other => {
@@ -162,20 +190,25 @@ fn with_matrix(seed: u64, f: impl Fn(&coordinator::Matrix) -> String) {
     println!("{}", f(&m));
 }
 
-fn validate(seed: u64, step_mode: StepMode, topology: TopologyKind) {
+fn validate(opts: &RunOptions) {
     for cfg in [
         ArchConfig::nexus(),
         ArchConfig::tia(),
         ArchConfig::tia_valiant(),
     ] {
-        let cfg = cfg.with_step_mode(step_mode).with_topology(topology);
+        let cfg = cfg
+            .with_step_mode(opts.step_mode)
+            .with_topology(opts.topology);
+        let shards = nexus::dataset::effective_shards(opts.shards, cfg.height);
+        let cfg = cfg.with_shards(shards).with_threads(opts.threads);
         let kind = cfg.kind.name();
-        match coordinator::validate_suite(&cfg, seed) {
+        match coordinator::validate_suite(&cfg, opts.seed) {
             Ok(rows) => {
                 println!(
-                    "[{kind}] all {} workloads validated ({} stepping):",
+                    "[{kind}] all {} workloads validated ({} stepping, {} shard(s)):",
                     rows.len(),
-                    step_mode.name()
+                    opts.step_mode.name(),
+                    shards
                 );
                 for (name, cycles) in rows {
                     println!("  {name:<14} {cycles:>9} cycles  OK");

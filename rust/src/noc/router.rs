@@ -157,6 +157,58 @@ pub struct PortStats {
     pub flits_in: u64,
 }
 
+/// Epoch-start snapshot of one input port's acceptance state, taken at
+/// cycle commit for ports that terminate a **shard-crossing** link in the
+/// sharded fabric. During the next cycle's phase pass, the upstream shard
+/// scores and admits boundary flits against this snapshot instead of the
+/// neighbor's live state, so boundary decisions are independent of the
+/// order (and thread interleaving) in which shards step.
+///
+/// Using a snapshot is conservative-safe: mid-cycle the destination port's
+/// occupancy can only *shrink* (its own route phase pops flits; the unique
+/// upstream router for the port is the snapshot reader itself), so a flit
+/// admitted against the snapshot always finds the space the snapshot
+/// promised at the epoch barrier.
+#[derive(Debug, Clone, Copy)]
+pub struct PortSnap {
+    /// Advertised On/Off state ([`Router::on_state`]).
+    pub on: bool,
+    /// Staging slot held (in-flight or landing flit).
+    pub staged: bool,
+    /// Free buffer slots ([`FlitBuf::free`]; fits u8 since depth <=
+    /// [`MAX_DEPTH`]).
+    pub free: u8,
+}
+
+impl PortSnap {
+    /// Snapshot of a port on a fresh (empty, ON) router of `depth` buffers.
+    pub fn fresh(depth: usize) -> Self {
+        PortSnap {
+            on: true,
+            staged: false,
+            free: depth as u8,
+        }
+    }
+
+    /// [`Router::can_accept`] evaluated against the snapshot.
+    #[inline]
+    pub fn can_accept(&self) -> bool {
+        self.on && !self.staged && self.free >= 1
+    }
+
+    /// [`Router::can_transit`] evaluated against the snapshot.
+    #[inline]
+    pub fn can_transit(&self) -> bool {
+        !self.staged && self.free >= 1
+    }
+
+    /// [`Router::effective_free`] evaluated against the snapshot.
+    #[inline]
+    pub fn effective_free(&self) -> usize {
+        self.free as usize - usize::from(self.staged)
+    }
+}
+
 /// One router (mesh or extended-port variant).
 #[derive(Debug, Clone)]
 pub struct Router {
@@ -307,6 +359,16 @@ impl Router {
         self.locked_port = None;
     }
 
+    /// Snapshot one input port's acceptance state (see [`PortSnap`]).
+    #[inline]
+    pub fn port_snap(&self, port: usize) -> PortSnap {
+        PortSnap {
+            on: self.on_state[port],
+            staged: self.staging[port].is_some(),
+            free: self.inputs[port].free() as u8,
+        }
+    }
+
     /// Total flits currently buffered (for termination detection).
     pub fn occupancy(&self) -> usize {
         self.inputs.iter().map(|b| b.len()).sum::<usize>()
@@ -441,6 +503,28 @@ mod tests {
         assert_eq!(port_class(6), PORT_E);
         assert_eq!(port_class(7), PORT_S);
         assert_eq!(port_class(8), PORT_W);
+    }
+
+    #[test]
+    fn port_snap_mirrors_live_acceptance_checks() {
+        let mut r = Router::new(NUM_PORTS, 3, 1, 2);
+        assert!(PortSnap::fresh(3).can_accept());
+        assert_eq!(PortSnap::fresh(3).effective_free(), 3);
+        // Walk the port through staged / filling / OFF states and require
+        // the snapshot to agree with the live predicates at every step.
+        for step in 0..4 {
+            let s = r.port_snap(PORT_E);
+            assert_eq!(s.can_accept(), r.can_accept(PORT_E), "step {step}");
+            assert_eq!(s.can_transit(), r.can_transit(PORT_E), "step {step}");
+            assert_eq!(s.effective_free(), r.effective_free(PORT_E), "step {step}");
+            if r.can_accept(PORT_E) {
+                r.stage(PORT_E, msg(step as u64));
+                let staged = r.port_snap(PORT_E);
+                assert!(staged.staged && !staged.can_accept(), "step {step}");
+            }
+            r.commit();
+        }
+        assert!(!r.port_snap(PORT_E).on, "filled port must snapshot OFF");
     }
 
     #[test]

@@ -41,7 +41,7 @@ pub struct StreamElem {
     /// Mode-dependent metadata: column index, target address, …
     pub aux: u16,
     /// Destination PE for `PerDest` mode (ignored otherwise).
-    pub dest_pe: u8,
+    pub dest_pe: u16,
     pub mode: StreamMode,
 }
 

@@ -187,6 +187,15 @@ impl EnergyModel {
     }
 }
 
+/// Peak NoC link bandwidth demand in GB/s: the busiest cycle's link
+/// traversal count ([`FabricStats::peak_link_demand`]) times the packed AM
+/// flit size (9 bytes) times the clock. Converts the simulator's abstract
+/// flits/cycle peak into the physical provisioning number reported by the
+/// corpus runner's per-scenario JSON.
+pub fn link_demand_gbps(peak_link_demand: u64, freq_mhz: f64) -> f64 {
+    peak_link_demand as f64 * crate::am::packed::AM_BYTES as f64 * freq_mhz * 1e6 / 1e9
+}
+
 /// Performance-per-watt (Fig 12): useful MOPS / mW.
 pub fn perf_per_watt(work_ops: u64, cycles: u64, power_mw: f64, freq_mhz: f64) -> f64 {
     if cycles == 0 || power_mw <= 0.0 {
@@ -255,6 +264,18 @@ mod tests {
             (0.95..1.45).contains(&ratio),
             "Nexus/CGRA power ratio {ratio}"
         );
+    }
+
+    #[test]
+    fn link_demand_gbps_matches_hand_computation() {
+        // 100 flits in the busiest cycle × 9 bytes × 588 MHz
+        //   = 100 * 9 * 588e6 B/s = 529.2 GB/s.
+        let got = link_demand_gbps(100, 588.0);
+        assert!((got - 529.2).abs() < 1e-9, "{got}");
+        assert_eq!(link_demand_gbps(0, 588.0), 0.0);
+        // Linear in both the peak and the clock.
+        assert!((link_demand_gbps(200, 588.0) - 2.0 * got).abs() < 1e-9);
+        assert!((link_demand_gbps(100, 1176.0) - 2.0 * got).abs() < 1e-9);
     }
 
     #[test]

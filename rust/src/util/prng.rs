@@ -17,6 +17,14 @@ impl SplitMix64 {
         Self { state: seed }
     }
 
+    /// Expose the raw state (used by the fabric's `state_digest`, which
+    /// must fold the *position* of every shard's PRNG stream into the
+    /// digest without advancing it).
+    #[inline]
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
     /// Next raw 64-bit value.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
@@ -84,6 +92,25 @@ impl SplitMix64 {
     }
 }
 
+/// Derive the seed of an independent PRNG stream `lane` from a base
+/// `seed` (per-shard Valiant randomization in the sharded fabric).
+///
+/// Lane 0 returns the base seed unchanged so a one-shard fabric is
+/// bit-identical to the historical unsharded simulator. Other lanes pass
+/// `seed ^ lane·golden` through the SplitMix64 finalizer: a plain
+/// `seed + lane` would hand SplitMix64 — whose state is a simple counter —
+/// a family of *shifted* copies of the same stream, which is exactly the
+/// correlation the scramble destroys.
+pub fn stream_seed(seed: u64, lane: u64) -> u64 {
+    if lane == 0 {
+        return seed;
+    }
+    let mut z = seed ^ lane.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,6 +150,25 @@ mod tests {
         t.sort_unstable();
         t.dedup();
         assert_eq!(t.len(), 20);
+    }
+
+    #[test]
+    fn stream_seed_lane0_is_identity_and_lanes_decorrelate() {
+        assert_eq!(stream_seed(42, 0), 42);
+        // Distinct lanes must yield streams that are neither equal nor
+        // shifted copies of one another (compare a window of draws).
+        let window = |lane: u64| {
+            let mut r = SplitMix64::new(stream_seed(42, lane));
+            (0..32).map(|_| r.next_u64()).collect::<Vec<u64>>()
+        };
+        let (a, b, c) = (window(0), window(1), window(2));
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        for shift in 1..8 {
+            assert_ne!(a[shift..], b[..32 - shift], "lane 1 is a shifted lane 0");
+        }
+        // Determinism: same (seed, lane) -> same stream.
+        assert_eq!(window(3), window(3));
     }
 
     #[test]

@@ -56,7 +56,7 @@ pub fn build(input: &Dense, filter: &Dense, cfg: &ArchConfig) -> Built {
                     taps.push(StreamElem {
                         value: filter.get(i, j),
                         aux: out_addr[ohh * ow + oww],
-                        dest_pe: outrow_part[ohh] as u8,
+                        dest_pe: outrow_part[ohh] as u16,
                         mode: StreamMode::PerDest,
                     });
                 }
@@ -75,7 +75,7 @@ pub fn build(input: &Dense, filter: &Dense, cfg: &ArchConfig) -> Built {
             am.op2 = key;
             am.op2_is_addr = true;
             am.res_is_addr = true; // emitted AMs' result is an address
-            am.push_dest(pe as u8); // stream decodes locally
+            am.push_dest(pe as u16); // stream decodes locally
             b.static_am(pe, am);
         }
     }

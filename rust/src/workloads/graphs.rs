@@ -41,7 +41,7 @@ fn build_relax(name: &str, g: &Graph, src: usize, unit_weights: bool, cfg: &Arch
             .map(|&(v, w)| StreamElem {
                 value: if unit_weights { 1 } else { w },
                 aux: dist_addr[v],
-                dest_pe: part[v] as u8,
+                dest_pe: part[v] as u16,
                 mode: StreamMode::PerDest,
             })
             .collect();
@@ -63,7 +63,7 @@ fn build_relax(name: &str, g: &Graph, src: usize, unit_weights: bool, cfg: &Arch
     am.op1 = 0;
     am.result = dist_addr[src];
     am.res_is_addr = true;
-    am.push_dest(part[src] as u8);
+    am.push_dest(part[src] as u16);
     b.static_am(part[src], am);
 
     for v in 0..g.num_vertices {
@@ -156,8 +156,8 @@ pub fn build_pagerank(g: &Graph, iters: usize, cfg: &ArchConfig) -> Built {
                 am.op2 = 2 * deg[u]; // damping 0.5: divide by 2*deg
                 am.result = next_addr[v];
                 am.res_is_addr = true;
-                am.push_dest(part[u] as u8);
-                am.push_dest(part[v] as u8);
+                am.push_dest(part[u] as u16);
+                am.push_dest(part[v] as u16);
                 b.static_am(part[u], am);
             }
         }

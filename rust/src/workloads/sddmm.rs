@@ -86,9 +86,9 @@ pub fn build(mask: &Csr, a: &Dense, b_mat: &Dense, cfg: &ArchConfig) -> Built {
             am.op2_is_addr = true;
             am.result = c_addr;
             am.res_is_addr = true;
-            am.push_dest(arow_part[i] as u8); // R1: A row stream
-            am.push_dest(bcol_part[j] as u8); // R2: B column deref
-            am.push_dest(c_pe as u8); // R3: C accumulate
+            am.push_dest(arow_part[i] as u16); // R1: A row stream
+            am.push_dest(bcol_part[j] as u16); // R2: B column deref
+            am.push_dest(c_pe as u16); // R3: C accumulate
             bld.static_am(mask_part[i], am);
         }
     }

@@ -40,7 +40,7 @@ pub fn build(a: &Csr, b_mat: &Csr, cfg: &ArchConfig) -> Built {
                 am.op1 = v as u16;
                 am.result = c_base[r] + c as u16;
                 am.res_is_addr = true;
-                am.push_dest(row_part[r] as u8);
+                am.push_dest(row_part[r] as u16);
                 b.static_am(src_of(r), am);
             }
         }

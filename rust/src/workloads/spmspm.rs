@@ -200,8 +200,8 @@ fn try_build_tile(
             am.op2_is_addr = true;
             am.result = c_base[i]; // output row base; emission adds j
             am.res_is_addr = true;
-            am.push_dest(brow_part[k] as u8);
-            am.push_dest(arow_part[i] as u8); // C row owner
+            am.push_dest(brow_part[k] as u16);
+            am.push_dest(arow_part[i] as u16); // C row owner
             b.static_am(arow_part[i], am);
         }
     }

@@ -131,7 +131,7 @@ fn random_program(rng: &mut SplitMix64, cfg: &ArchConfig) -> Program {
         am.op1 = (1 + i) as u16;
         am.result = addr;
         am.res_is_addr = true;
-        am.push_dest(dst as u8);
+        am.push_dest(dst as u16);
         b.static_am(src, am);
         b.output(dst, addr);
     }
@@ -155,8 +155,8 @@ fn random_program(rng: &mut SplitMix64, cfg: &ArchConfig) -> Program {
         am.op2_is_addr = true;
         am.result = ya;
         am.res_is_addr = true;
-        am.push_dest(data_pe as u8);
-        am.push_dest(out_pe as u8);
+        am.push_dest(data_pe as u16);
+        am.push_dest(out_pe as u16);
         b.static_am(src, am);
         b.output(out_pe, ya);
     }
@@ -175,7 +175,7 @@ fn random_program(rng: &mut SplitMix64, cfg: &ArchConfig) -> Program {
             elems.push(StreamElem {
                 value: 1 + rng.below(9) as i16,
                 aux: addr,
-                dest_pe: pe as u8,
+                dest_pe: pe as u16,
                 mode: StreamMode::PerDest,
             });
         }
@@ -187,7 +187,7 @@ fn random_program(rng: &mut SplitMix64, cfg: &ArchConfig) -> Program {
         am.op1 = rng.below(6) as u16;
         am.op2 = key;
         am.op2_is_addr = true;
-        am.push_dest(src as u8);
+        am.push_dest(src as u16);
         b.static_am(src, am);
         for &(pe, addr) in &outs {
             b.output(pe, addr);
@@ -208,7 +208,7 @@ fn random_program(rng: &mut SplitMix64, cfg: &ArchConfig) -> Program {
             let e = StreamElem {
                 value: 1 + rng.below(7) as i16,
                 aux: dists[i + 1],
-                dest_pe: nodes[i + 1] as u8,
+                dest_pe: nodes[i + 1] as u16,
                 mode: StreamMode::PerDest,
             };
             let base = b.stream(nodes[i], &[e]);
@@ -220,7 +220,7 @@ fn random_program(rng: &mut SplitMix64, cfg: &ArchConfig) -> Program {
         am.op1 = rng.below(4) as u16;
         am.result = dists[0];
         am.res_is_addr = true;
-        am.push_dest(nodes[0] as u8);
+        am.push_dest(nodes[0] as u16);
         b.static_am(rng.below_usize(n), am);
         for (i, &pe) in nodes.iter().enumerate() {
             b.output(pe, dists[i]);
@@ -236,7 +236,7 @@ fn random_program(rng: &mut SplitMix64, cfg: &ArchConfig) -> Program {
         am.op1 = 42;
         am.result = addr;
         am.res_is_addr = true;
-        am.push_dest((n - 1) as u8);
+        am.push_dest((n - 1) as u16);
         b.static_am(0, am);
         b.output(n - 1, addr);
     }
@@ -486,6 +486,199 @@ fn reset_is_bit_identical_in_both_modes() {
             }
             ensure(fresh.state_digest() == reused.state_digest(), || {
                 format!("{mode:?}: state digests diverged after reset")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+/// Draw a random sharded configuration on `kind`: an even mesh height (so
+/// shard counts 2 and 4 are reachable), a shard count drawn from the
+/// divisors of the height, a random step mode, and 2..=4 worker threads.
+fn random_sharded_cfg(rng: &mut SplitMix64, kind: TopologyKind) -> ArchConfig {
+    let exec = if rng.chance(0.5) { ExecPolicy::EnRoute } else { ExecPolicy::DestinationOnly };
+    let routing = [
+        RoutingPolicy::TurnModelAdaptive,
+        RoutingPolicy::Xy,
+        RoutingPolicy::Valiant,
+    ][rng.below_usize(3)];
+    let mut cfg = loop {
+        let c = random_topo_cfg(rng, exec, routing, kind);
+        if c.height % 2 == 0 {
+            break c;
+        }
+    };
+    let shard_opts: Vec<usize> = [2usize, 4].into_iter().filter(|s| cfg.height % s == 0).collect();
+    cfg.shards = shard_opts[rng.below_usize(shard_opts.len())];
+    cfg.threads = 2 + rng.below_usize(3); // 2..=4
+    if rng.chance(0.5) {
+        cfg.step_mode = StepMode::DenseOracle;
+    }
+    cfg.validate().expect("random sharded config must be valid");
+    cfg
+}
+
+/// Lockstep diagnosis for the sharded suite: step a single-threaded fabric
+/// cycle by cycle against the parallel engine's per-epoch digest trace and
+/// return the first cycle whose digests differ.
+fn sharded_first_diverging_cycle(prog: &Program, cfg: &ArchConfig, epochs: u64) -> Option<u64> {
+    let mut serial = NexusFabric::new(cfg.clone().with_threads(1));
+    let mut parallel = NexusFabric::new(cfg.clone());
+    serial.begin_program(prog);
+    parallel.begin_program(prog);
+    let trace = parallel.run_cycles_parallel(epochs);
+    for &digest in &trace {
+        serial.step();
+        if serial.state_digest() != digest {
+            return Some(serial.cycles());
+        }
+    }
+    None
+}
+
+/// The sharded-stepping property: for a fixed shard count, the parallel
+/// engine (threads >= 2) is **bit-identical** to single-threaded stepping —
+/// same outputs, cycle counts, and stats on success, same deadlock reports
+/// on timeout — across random geometries, topologies, step modes, and
+/// policies. Divergences are diagnosed down to the first differing cycle
+/// via the per-epoch digest trace.
+fn sharded_equivalent(rng: &mut SplitMix64, kind: TopologyKind) -> Result<(), String> {
+    let cfg = random_sharded_cfg(rng, kind);
+    let prog = random_program(rng, &cfg);
+    let run = |threads: usize| {
+        let mut f = NexusFabric::new(cfg.clone().with_threads(threads));
+        let r = f.run_program(&prog).map(|out| (out, f.cycles(), f.stats.clone()));
+        (r, f)
+    };
+    let (rs, fs) = run(1);
+    let (rp, _fp) = run(cfg.threads);
+    let diverged = || {
+        sharded_first_diverging_cycle(&prog, &cfg, 2_000)
+            .map(|c| format!("first diverging cycle: {c}"))
+            .unwrap_or_else(|| "no digest divergence in the first 2000 cycles".into())
+    };
+    match (rs, rp) {
+        (Ok((out_s, cyc_s, st_s)), Ok((out_p, cyc_p, st_p))) => {
+            ensure(out_s == out_p, || {
+                format!(
+                    "shards={} threads={}: outputs diverged ({}); serial {out_s:?} vs \
+                     parallel {out_p:?}",
+                    cfg.shards,
+                    cfg.threads,
+                    diverged()
+                )
+            })?;
+            ensure(cyc_s == cyc_p, || {
+                format!(
+                    "shards={} threads={}: cycles diverged: serial {cyc_s} vs parallel \
+                     {cyc_p}; {}",
+                    cfg.shards,
+                    cfg.threads,
+                    diverged()
+                )
+            })?;
+            if let Some(field) = st_s.diff(&st_p) {
+                return Err(format!(
+                    "shards={} threads={}: stats diverged on {field}; {}",
+                    cfg.shards,
+                    cfg.threads,
+                    diverged()
+                ));
+            }
+            fs.check_conservation()
+                .map_err(|e| format!("serial sharded conservation: {e}"))
+        }
+        (Err(es), Err(ep)) => ensure(
+            es.cycle == ep.cycle && es.in_flight == ep.in_flight && es.culprits == ep.culprits,
+            || {
+                format!(
+                    "shards={} threads={}: timeout reports diverged: serial (cycle {}, {} \
+                     in flight) vs parallel (cycle {}, {} in flight); {}",
+                    cfg.shards,
+                    cfg.threads,
+                    es.cycle,
+                    es.in_flight,
+                    ep.cycle,
+                    ep.in_flight,
+                    diverged()
+                )
+            },
+        ),
+        (Ok((_, cyc, _)), Err(e)) => Err(format!(
+            "serial drained at cycle {cyc} but parallel deadlocked at {}; {}",
+            e.cycle,
+            diverged()
+        )),
+        (Err(e), Ok((_, cyc, _))) => Err(format!(
+            "parallel drained at cycle {cyc} but serial deadlocked at {}; {}",
+            e.cycle,
+            diverged()
+        )),
+    }
+}
+
+macro_rules! sharded_equivalence_test {
+    ($name:ident, $seed:expr, $kind:expr) => {
+        #[test]
+        fn $name() {
+            forall_seeded($seed, (prop_cases() / 4).max(25), &mut |rng| {
+                sharded_equivalent(rng, $kind)
+            });
+        }
+    };
+}
+
+sharded_equivalence_test!(sharded_lockstep_mesh, 0x5A1, TopologyKind::Mesh2D);
+sharded_equivalence_test!(sharded_lockstep_torus, 0x5A2, TopologyKind::Torus2D);
+sharded_equivalence_test!(sharded_lockstep_ruche, 0x5A3, TopologyKind::Ruche);
+sharded_equivalence_test!(sharded_lockstep_chiplet, 0x5A4, TopologyKind::Chiplet2L);
+
+/// Active-set vs dense-oracle equivalence *under sharding*: with shards=2
+/// and a multi-threaded engine, the two scheduler modes must still be
+/// bit-identical (the cross-mode property composes with the cross-thread
+/// one).
+#[test]
+fn sharded_active_vs_dense_equivalence() {
+    forall_seeded(0x5AD, (prop_cases() / 4).max(25), &mut |rng| {
+        let mut cfg = random_sharded_cfg(rng, TopologyKind::Mesh2D);
+        cfg.shards = 2;
+        cfg.step_mode = StepMode::ActiveSet;
+        equivalent_on(rng, cfg)
+    });
+}
+
+/// Same seed, same shard count, **any** thread count: the per-epoch digest
+/// traces and program outputs must be byte-for-byte identical at 1, 2, 3,
+/// and 4 worker threads (`threads` is host-side only).
+#[test]
+fn sharded_same_seed_any_thread_count_is_deterministic() {
+    forall_seeded(0x7D7D, (prop_cases() / 8).max(16), &mut |rng| {
+        let cfg = random_sharded_cfg(rng, TopologyKind::Mesh2D);
+        let prog = random_program(rng, &cfg);
+        let trace_at = |threads: usize| {
+            let mut f = NexusFabric::new(cfg.clone().with_threads(threads));
+            f.begin_program(&prog);
+            f.run_cycles_parallel(400)
+        };
+        let baseline = trace_at(1);
+        for threads in 2..=4 {
+            let t = trace_at(threads);
+            if let Some(cycle) = baseline.iter().zip(&t).position(|(a, b)| a != b) {
+                return Err(format!(
+                    "shards={}: digest trace at {threads} threads diverged from \
+                     single-threaded at cycle {cycle}",
+                    cfg.shards
+                ));
+            }
+        }
+        let out_at = |threads: usize| {
+            let mut f = NexusFabric::new(cfg.clone().with_threads(threads));
+            f.run_program(&prog).map_err(|e| e.to_string())
+        };
+        let base_out = out_at(1);
+        for threads in 2..=4 {
+            ensure(out_at(threads) == base_out, || {
+                format!("shards={}: outputs differ at {threads} threads", cfg.shards)
             })?;
         }
         Ok(())

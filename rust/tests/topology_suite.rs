@@ -26,7 +26,7 @@ fn corner_storm(cfg: &ArchConfig, count: u16) -> Program {
         am.op1 = i;
         am.result = addr + i;
         am.res_is_addr = true;
-        am.push_dest(far as u8);
+        am.push_dest(far as u16);
         b.static_am(0, am);
     }
     for i in 0..count {
@@ -173,7 +173,7 @@ fn link_counters_localize_hotspot_congestion() {
         am.op1 = i;
         am.result = addr;
         am.res_is_addr = true;
-        am.push_dest(hot as u8);
+        am.push_dest(hot as u16);
         b.static_am(src, am);
     }
     b.output(hot, addr);
