@@ -9,6 +9,7 @@ use nexus::config::ArchConfig;
 use nexus::machine::Machine;
 use nexus::tensor::gen;
 use nexus::util::bench::bench;
+use nexus::util::json::JsonObj;
 use nexus::util::SplitMix64;
 use nexus::workloads::Spec;
 
@@ -46,17 +47,18 @@ fn main() {
                     m.execute(&compiled).expect("corpus bench run");
                 },
             );
-            println!(
-                "BENCH_CORPUS_IMBALANCE.json {{\"bench\":\"corpus_imbalance\",\
-                 \"mesh\":\"{w}x{h}\",\"source\":\"{source}\",\"density\":0.1,\
-                 \"cycles\":{},\"op_cv\":{:.4},\"op_max_mean\":{:.4},\
-                 \"load_cv\":{:.4},\"utilization\":{:.4},\"wall_s\":{wall_s:.6}}}",
-                exec.cycles(),
-                stats.op_cv(),
-                stats.op_max_mean(),
-                stats.load_cv(),
-                exec.result.utilization,
-            );
+            let mut o = JsonObj::new();
+            o.str("bench", "corpus_imbalance")
+                .str("mesh", &format!("{w}x{h}"))
+                .str("source", source)
+                .f64("density", 0.1, 1)
+                .u64("cycles", exec.cycles())
+                .f64("op_cv", stats.op_cv(), 4)
+                .f64("op_max_mean", stats.op_max_mean(), 4)
+                .f64("load_cv", stats.load_cv(), 4)
+                .f64("utilization", exec.result.utilization, 4)
+                .f64("wall_s", wall_s, 6);
+            println!("BENCH_CORPUS_IMBALANCE.json {}", o.build());
         }
     }
 }

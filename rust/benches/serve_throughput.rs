@@ -1,0 +1,183 @@
+//! `cargo bench --bench serve_throughput` — end-to-end service
+//! throughput on a heavy-tailed request mix, plus a deliberate overload
+//! burst to price backpressure.
+//!
+//! Phase 1 (throughput): an in-process server with the default worker
+//! pool takes a corpus-drawn mix from 4 concurrent pipelining clients —
+//! mostly smoke-size scenarios (the many-small mode of real batch
+//! traffic), a minority of 8×8 hotspot/R-MAT runs, and a thin 16×16
+//! tail. Seeds repeat, so the shared compile cache must show hits.
+//!
+//! Phase 2 (overload): a second server throttled to one worker and a
+//! tiny queue receives a 64-request burst; the point measured is that
+//! every request is *answered* — `ok + overloaded == sent`, rejections
+//! are immediate, nothing is silently dropped.
+//!
+//! Emits `BENCH_SERVE.json` lines on stdout.
+
+use nexus::serve::protocol::{parse_json, Json};
+use nexus::serve::{Server, ServeOptions};
+use nexus::util::json::JsonObj;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::Instant;
+
+/// The heavy-tailed scenario mix, weights chosen so ~80% of requests are
+/// smoke-size, ~15% mid (8×8), ~5% heavy (16×16).
+fn mix(i: usize) -> (&'static str, u64) {
+    // Seeds cycle through a small set so repeats hit the compile cache.
+    let seed = 1 + (i % 4) as u64;
+    let name = match i % 20 {
+        0..=7 => "smoke/spmv-uniform-d30-4x4",
+        8..=11 => "smoke/spmv-hotspot-d30-4x4",
+        12..=15 => "smoke/bfs-rmat-4x4",
+        16 | 17 => "hotspot/spmv-rmat-d20-8x8",
+        18 => "hotspot/spmv-hotspot-d20-8x8",
+        _ => "hotspot/spmv-rmat-d6-16x16",
+    };
+    (name, seed)
+}
+
+/// Pipeline `requests` lines down one connection, return the response
+/// lines (in order).
+fn drive(addr: std::net::SocketAddr, requests: &[String]) -> Vec<String> {
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let reader = BufReader::new(stream);
+    for r in requests {
+        writeln!(writer, "{r}").expect("write request");
+    }
+    writer.flush().expect("flush");
+    let _ = writer.shutdown(std::net::Shutdown::Write);
+    reader.lines().map(|l| l.expect("response line")).collect()
+}
+
+fn field_u64(v: &Json, key: &str) -> u64 {
+    v.get(key).and_then(Json::as_u64).unwrap_or(0)
+}
+
+fn main() {
+    // ---- Phase 1: sustained throughput on the heavy-tailed mix ----
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        queue_capacity: 512,
+        ..ServeOptions::default()
+    })
+    .expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let server_thread = thread::spawn(move || server.run().expect("serve"));
+
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 60;
+    let started = Instant::now();
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            thread::spawn(move || {
+                let requests: Vec<String> = (0..PER_CLIENT)
+                    .map(|i| {
+                        let (name, seed) = mix(c * PER_CLIENT + i);
+                        format!("{{\"scenario\":\"{name}\",\"seed\":{seed}}}")
+                    })
+                    .collect();
+                drive(addr, &requests)
+            })
+        })
+        .collect();
+    let responses: Vec<String> = handles
+        .into_iter()
+        .flat_map(|h| h.join().expect("client"))
+        .collect();
+    let wall_s = started.elapsed().as_secs_f64();
+
+    let total = CLIENTS * PER_CLIENT;
+    let mut ok = 0usize;
+    let mut cache_hits = 0usize;
+    let mut exec_us_sum = 0u64;
+    for line in &responses {
+        let v = parse_json(line).expect("response must be JSON");
+        match v.get("status").and_then(Json::as_str) {
+            Some("ok") => {
+                ok += 1;
+                if v.get("cache").and_then(Json::as_str) == Some("hit") {
+                    cache_hits += 1;
+                }
+                exec_us_sum += field_u64(&v, "exec_us");
+            }
+            other => panic!("phase 1 must not reject: {other:?} in {line}"),
+        }
+    }
+    assert_eq!(ok, total, "every request answered ok");
+    assert!(
+        cache_hits > 0,
+        "repeated (scenario, seed) pairs must hit the compile cache"
+    );
+
+    // Pull the server's own metrics before shutting it down.
+    let metrics = drive(addr, &["GET /metrics".to_string(), "{\"cmd\":\"shutdown\"}".to_string()]);
+    let m = parse_json(&metrics[0]).expect("metrics line");
+    server_thread.join().expect("server thread");
+
+    let hit_rate = m.get("cache_hit_rate").and_then(Json::as_f64).unwrap_or(0.0);
+    let mut o = JsonObj::new();
+    o.str("bench", "serve_throughput")
+        .u64("clients", CLIENTS as u64)
+        .u64("requests", total as u64)
+        .u64("ok", ok as u64)
+        .f64("wall_s", wall_s, 3)
+        .f64("scenarios_per_sec", total as f64 / wall_s, 2)
+        .f64("mean_exec_us", exec_us_sum as f64 / ok as f64, 1)
+        .u64("client_cache_hits", cache_hits as u64)
+        .u64("latency_p50_us", field_u64(&m, "latency_p50_us"))
+        .u64("latency_p99_us", field_u64(&m, "latency_p99_us"))
+        .u64("cache_hits", field_u64(&m, "cache_hits"))
+        .u64("cache_misses", field_u64(&m, "cache_misses"))
+        .f64("cache_hit_rate", hit_rate, 4);
+    println!("BENCH_SERVE.json {}", o.build());
+
+    // ---- Phase 2: overload burst against a throttled server ----
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        queue_capacity: 8,
+        ..ServeOptions::default()
+    })
+    .expect("bind burst server");
+    let addr = server.local_addr().expect("addr");
+    let server_thread = thread::spawn(move || server.run().expect("serve"));
+
+    const BURST: usize = 64;
+    let burst: Vec<String> = (0..BURST)
+        .map(|i| format!("{{\"scenario\":\"hotspot/spmv-rmat-d20-8x8\",\"seed\":{}}}", 1 + i % 2))
+        .collect();
+    let started = Instant::now();
+    let responses = drive(addr, &burst);
+    let burst_wall_s = started.elapsed().as_secs_f64();
+
+    let (mut ok, mut rejected) = (0usize, 0usize);
+    for line in &responses {
+        let v = parse_json(line).expect("burst response");
+        match (
+            v.get("status").and_then(Json::as_str),
+            v.get("error").and_then(Json::as_str),
+        ) {
+            (Some("ok"), _) => ok += 1,
+            (Some("error"), Some("overloaded")) => rejected += 1,
+            other => panic!("unexpected burst response {other:?}: {line}"),
+        }
+    }
+    assert_eq!(ok + rejected, BURST, "every burst request answered");
+    assert!(rejected > 0, "the burst must trip backpressure");
+    assert!(ok > 0, "admitted work still completes under overload");
+
+    let _ = drive(addr, &["{\"cmd\":\"shutdown\"}".to_string()]);
+    server_thread.join().expect("burst server thread");
+
+    let mut o = JsonObj::new();
+    o.str("bench", "serve_overload")
+        .u64("burst", BURST as u64)
+        .u64("ok", ok as u64)
+        .u64("rejected", rejected as u64)
+        .f64("wall_s", burst_wall_s, 3);
+    println!("BENCH_SERVE.json {}", o.build());
+}

@@ -13,6 +13,7 @@ use nexus::noc::routing::Dir;
 use nexus::noc::LINKS_PER_PE;
 use nexus::tensor::gen;
 use nexus::util::bench::bench;
+use nexus::util::json::JsonObj;
 use nexus::util::SplitMix64;
 use nexus::workloads::Spec;
 
@@ -67,19 +68,19 @@ fn main() {
                     m.execute(&compiled).expect("topology bench run");
                 },
             );
-            println!(
-                "BENCH_TOPOLOGY.json {{\"bench\":\"topology_sweep\",\
-                 \"mesh\":\"{w}x{h}\",\"source\":\"{source}\",\
-                 \"topology\":\"{}\",\"cycles\":{},\"congestion\":{congestion:.4},\
-                 \"link_flits\":{},\"peak_link_demand\":{},\
-                 \"hot_link\":[{hot_from},{hot_to},{hot_flits}],\
-                 \"utilization\":{:.4},\"wall_s\":{wall_s:.6}}}",
-                kind.name(),
-                exec.cycles(),
-                stats.link_flits_total(),
-                stats.peak_link_demand,
-                exec.result.utilization,
-            );
+            let mut o = JsonObj::new();
+            o.str("bench", "topology_sweep")
+                .str("mesh", &format!("{w}x{h}"))
+                .str("source", source)
+                .str("topology", kind.name())
+                .u64("cycles", exec.cycles())
+                .f64("congestion", congestion, 4)
+                .u64("link_flits", stats.link_flits_total())
+                .u64("peak_link_demand", stats.peak_link_demand)
+                .raw("hot_link", &format!("[{hot_from},{hot_to},{hot_flits}]"))
+                .f64("utilization", exec.result.utilization, 4)
+                .f64("wall_s", wall_s, 6);
+            println!("BENCH_TOPOLOGY.json {}", o.build());
         }
     }
 }

@@ -182,6 +182,26 @@ pub fn corpus_run(filter: Option<&str>, opts: RunOptions) -> (String, bool) {
     (lines.join("\n"), ok)
 }
 
+/// Run `nexus serve`: print a startup banner to stderr (stdout stays
+/// clean for tooling) and block in the server's accept loop until a
+/// shutdown request drains it. Returning `Ok(())` is the exit-0 path.
+pub fn serve(opts: crate::serve::ServeOptions) -> std::io::Result<()> {
+    let server = crate::serve::Server::bind(opts.clone())?;
+    eprintln!(
+        "nexus serve: listening on {} ({} worker(s), queue {}, cache {}, \
+         {} stepping, {} topology, {} shard(s) x {} thread(s))",
+        server.local_addr()?,
+        opts.effective_workers(),
+        opts.queue_capacity,
+        opts.cache_capacity,
+        opts.step_mode.name(),
+        opts.topology.name(),
+        opts.shards,
+        opts.threads,
+    );
+    server.run()
+}
+
 /// Fig 16 data point: one (sparsity, SRAM size) cell of the bandwidth
 /// trade-off sweep.
 #[derive(Debug, Clone, Copy)]

@@ -468,6 +468,35 @@ impl Corpus {
                 Spec::Bfs { g, src: 0 }
             },
         ));
+        // 16x16-mesh variants: the heavy tail of the `nexus serve`
+        // throughput mix. Tensors stay modest (n=96, ~6% density) so the
+        // full-corpus debug-mode validation sweep stays fast — the point
+        // is the 4x-larger fabric, not a bigger matrix.
+        let big = (16, 16);
+        self.add(Scenario::new(
+            "hotspot/spmv-rmat-d6-16x16",
+            "spmv",
+            "rmat",
+            big,
+            0.06,
+            |rng| {
+                let a = gen::rmat_csr(rng, 96, 96, 553, RMAT_PROBS);
+                let x = gen::random_vec(rng, 96, 3);
+                Spec::Spmv { a, x }
+            },
+        ));
+        self.add(Scenario::new(
+            "hotspot/spmv-hotspot-d6-16x16",
+            "spmv",
+            "hotspot",
+            big,
+            0.06,
+            |rng| {
+                let a = gen::hotspot_csr(rng, 96, 96, 0.06, 3, 0.85);
+                let x = gen::random_vec(rng, 96, 3);
+                Spec::Spmv { a, x }
+            },
+        ));
     }
 
     /// All scenarios, registration order.

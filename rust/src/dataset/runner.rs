@@ -103,74 +103,47 @@ pub struct ScenarioRun {
     pub outcome: Result<ScenarioMetrics, String>,
 }
 
-/// Minimal JSON string escaping (quotes, backslashes, control bytes).
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for ch in s.chars() {
-        match ch {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
-
 impl ScenarioRun {
     /// One machine-readable JSON line (the `BENCH_CORPUS.json` artifact
-    /// format; every value is a JSON number, string, or bool).
+    /// format; every value is a JSON number, string, or bool), emitted
+    /// through the shared [`crate::util::json`] writer — the same escaping
+    /// the `nexus serve` protocol uses.
     pub fn json_line(&self) -> String {
-        use std::fmt::Write as _;
-        let mut s = String::with_capacity(256);
-        let _ = write!(
-            s,
-            "{{\"scenario\":\"{}\",\"kernel\":\"{}\",\"source\":\"{}\",\"mesh\":\"{}\",\
-             \"topology\":\"{}\",\"shards\":{},\"seed\":{},\"fingerprint\":\"{:#018x}\"",
-            json_escape(&self.scenario),
-            json_escape(self.kernel),
-            json_escape(self.source),
-            json_escape(&self.mesh),
-            json_escape(self.topology),
-            self.shards,
-            self.seed,
-            self.fingerprint,
-        );
+        let mut o = crate::util::json::JsonObj::new();
+        o.str("scenario", &self.scenario)
+            .str("kernel", self.kernel)
+            .str("source", self.source)
+            .str("mesh", &self.mesh)
+            .str("topology", self.topology)
+            .u64("shards", self.shards as u64)
+            .u64("seed", self.seed)
+            .hex("fingerprint", self.fingerprint);
         match &self.outcome {
             Ok(m) => {
-                let _ = write!(
-                    s,
-                    ",\"status\":\"ok\",\"cycles\":{},\"work_ops\":{},\
-                     \"utilization\":{:.4},\"congestion\":{:.4},\"load_cv\":{:.4},\
-                     \"op_cv\":{:.4},\"op_max_mean\":{:.4},\
-                     \"link_flits\":{},\"peak_link_demand\":{},\
-                     \"peak_link_gbps\":{:.3},\"links\":[",
-                    m.cycles,
-                    m.work_ops,
-                    m.utilization,
-                    m.congestion,
-                    m.load_cv,
-                    m.op_cv,
-                    m.op_max_mean,
-                    m.link_flits_total,
-                    m.peak_link_demand,
-                    m.peak_link_gbps,
+                let links = crate::util::json::array(
+                    m.links
+                        .iter()
+                        .map(|&(from, to, flits)| format!("[{from},{to},{flits}]")),
                 );
-                for (i, &(from, to, flits)) in m.links.iter().enumerate() {
-                    if i > 0 {
-                        s.push(',');
-                    }
-                    let _ = write!(s, "[{from},{to},{flits}]");
-                }
-                let _ = write!(s, "],\"validated\":{}}}", m.validated);
+                o.str("status", "ok")
+                    .u64("cycles", m.cycles)
+                    .u64("work_ops", m.work_ops)
+                    .f64("utilization", m.utilization, 4)
+                    .f64("congestion", m.congestion, 4)
+                    .f64("load_cv", m.load_cv, 4)
+                    .f64("op_cv", m.op_cv, 4)
+                    .f64("op_max_mean", m.op_max_mean, 4)
+                    .u64("link_flits", m.link_flits_total)
+                    .u64("peak_link_demand", m.peak_link_demand)
+                    .f64("peak_link_gbps", m.peak_link_gbps, 3)
+                    .raw("links", &links)
+                    .bool("validated", m.validated);
             }
             Err(e) => {
-                let _ = write!(s, ",\"status\":\"error\",\"error\":\"{}\"}}", json_escape(e));
+                o.str("status", "error").str("error", e);
             }
         }
-        s
+        o.build()
     }
 
     /// True when the scenario executed and validated bit-exactly.
@@ -324,9 +297,31 @@ mod tests {
     use crate::dataset::Corpus;
 
     #[test]
-    fn json_escape_handles_specials() {
-        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
-        assert_eq!(json_escape("plain"), "plain");
+    fn json_lines_reparse_with_the_serve_parser() {
+        // The runner emits through util::json and the serve protocol
+        // parses with its own hand-rolled parser; a line that round-trips
+        // through both proves the two ends of the shared emitter agree.
+        let run = ScenarioRun {
+            scenario: "weird/\"quoted\"-name".to_string(),
+            kernel: "spmv",
+            source: "rmat",
+            mesh: "8x8".to_string(),
+            topology: "mesh",
+            shards: 2,
+            seed: 7,
+            fingerprint: 0xdead_beef,
+            outcome: Err("tab\there \"and\" newline\nthere".to_string()),
+        };
+        let line = run.json_line();
+        let v = crate::serve::protocol::parse_json(&line).expect("line must reparse");
+        assert_eq!(
+            v.get("scenario").and_then(|j| j.as_str()),
+            Some("weird/\"quoted\"-name")
+        );
+        assert_eq!(
+            v.get("error").and_then(|j| j.as_str()),
+            Some("tab\there \"and\" newline\nthere")
+        );
     }
 
     #[test]

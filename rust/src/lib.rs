@@ -122,6 +122,25 @@
 //! `cargo bench --bench corpus` compares uniform vs R-MAT vs hotspot
 //! inputs at 8×8/16×16.
 //!
+//! ## Serving
+//!
+//! `nexus serve --addr 127.0.0.1:7077 --workers N` runs the simulator as
+//! a long-lived batch-execution daemon ([`serve`]): newline-delimited
+//! JSON requests over plain TCP (a corpus scenario name or an inline
+//! spec, plus a seed), one JSON response line per request, in request
+//! order. The service keeps per-worker reusable [`machine::Machine`]s
+//! fed from a process-wide bounded-LRU compile cache
+//! ([`machine::SharedCompileCache`]), admits work through a bounded
+//! queue with explicit backpressure (`{"error":"overloaded"}` instead of
+//! silent drops), answers `GET /health` / `GET /metrics` with live
+//! counters (throughput, p50/p99 latency, cache hit rate), and drains
+//! gracefully on `{"cmd":"shutdown"}`. Served results are bit-identical
+//! to direct [`machine::Machine::run`] calls — the response carries
+//! output and counter digests, and `tests/serve_suite.rs` holds the
+//! equivalence. `cargo bench --bench serve_throughput` drives a
+//! heavy-tailed request mix against an in-process server
+//! (`BENCH_SERVE.json`).
+//!
 //! ## Module map
 //!
 //! The crate contains, from the bottom up:
@@ -150,6 +169,9 @@
 //! - [`power`] — 22nm-calibrated area/energy models (Figs 10/15, Table 2).
 //! - [`runtime`] — PJRT golden-model runtime (loads `artifacts/*.hlo.txt`;
 //!   the XLA client is gated behind the `pjrt` cargo feature).
+//! - [`serve`] — the `nexus serve` TCP daemon: NDJSON protocol, bounded
+//!   work queue, worker pool over the shared compile cache, live
+//!   `/health` + `/metrics` (see "Serving" above).
 //! - [`coordinator`] — pooled experiment sweeps and report printers.
 //!
 //! Python (JAX + Pallas) appears only at build time: `make artifacts` lowers
@@ -170,6 +192,7 @@ pub mod noc;
 pub mod pe;
 pub mod power;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 pub mod workloads;

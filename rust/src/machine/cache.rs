@@ -1,0 +1,274 @@
+//! Bounded LRU compile caches: the per-[`Machine`](super::Machine) cache
+//! and the process-wide [`SharedCompileCache`] the `nexus serve` workers
+//! feed from.
+//!
+//! Both hold [`Compiled`] artifacts (cheap clones — the program is behind
+//! an `Arc`) keyed by content, and both are *bounded*: a long-running
+//! service that compiles an unbounded stream of distinct specs must not
+//! grow its cache without limit. Eviction is least-recently-used; an
+//! evicted entry simply recompiles on its next request, which is
+//! bit-identical by construction (compilation is deterministic in the
+//! spec and the architecture — asserted by the unit tests below).
+
+use super::{spec_fingerprint, Compiled, ExecError, Machine};
+use crate::config::ArchConfig;
+use crate::workloads::Spec;
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::Mutex;
+
+/// Default per-machine cache capacity: generous — a sweep over the whole
+/// corpus plus the 13-workload suite fits many times over — but finite.
+pub const DEFAULT_CACHE_CAPACITY: usize = 1024;
+
+/// A bounded LRU map from cache key to [`Compiled`] artifact with
+/// hit/miss accounting. Not thread-safe by itself; [`SharedCompileCache`]
+/// wraps it in a mutex for cross-worker sharing.
+#[derive(Debug)]
+pub struct CompileCache<K: Hash + Eq + Clone> {
+    map: HashMap<K, (Compiled, u64)>,
+    capacity: usize,
+    /// Monotonic use counter: the LRU stamp. Eviction scans for the
+    /// minimum — O(n), fine at the capacities involved (eviction is the
+    /// rare path; lookups stay O(1)).
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl<K: Hash + Eq + Clone> CompileCache<K> {
+    /// A cache holding at most `capacity` artifacts (min 1).
+    pub fn new(capacity: usize) -> Self {
+        CompileCache {
+            map: HashMap::new(),
+            capacity: capacity.max(1),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Look up a key, refreshing its recency on hit. Counts hit/miss.
+    pub fn get(&mut self, key: &K) -> Option<Compiled> {
+        self.clock += 1;
+        match self.map.get_mut(key) {
+            Some(entry) => {
+                entry.1 = self.clock;
+                self.hits += 1;
+                Some(entry.0.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an entry, evicting the least-recently-used one
+    /// first when the cache is at capacity.
+    pub fn insert(&mut self, key: K, value: Compiled) {
+        self.clock += 1;
+        if !self.map.contains_key(&key) && self.map.len() >= self.capacity {
+            if let Some(lru) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&lru);
+            }
+        }
+        self.map.insert(key, (value, self.clock));
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Replace the capacity, evicting LRU entries until the new bound
+    /// holds.
+    pub fn set_capacity(&mut self, capacity: usize) {
+        self.capacity = capacity.max(1);
+        while self.map.len() > self.capacity {
+            if let Some(lru) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&lru);
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+/// Fingerprint of the *architecture* side of a compile key: every
+/// [`ArchConfig`] field the compile path (partitioning + static-AM
+/// codegen) depends on. Two configs with equal tags produce bit-identical
+/// artifacts for equal specs, so a shared cache may serve either.
+pub fn config_tag(cfg: &ArchConfig) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut u = |v: u64| h = (h ^ v).wrapping_mul(0x0000_0100_0000_01b3);
+    u(cfg.width as u64);
+    u(cfg.height as u64);
+    u(cfg.dmem_words as u64);
+    for b in cfg.kind.name().bytes() {
+        u(b as u64);
+    }
+    h
+}
+
+/// Key of one shared-cache entry: (architecture tag, workload name,
+/// tensor-content fingerprint).
+pub type SharedKey = (u64, String, u64);
+
+/// The process-wide compile cache behind `nexus serve`: one mutex-guarded
+/// bounded LRU shared by every worker, so a scenario compiled by any
+/// worker is a cache hit for all of them. Hit/miss counters feed the
+/// service's `/metrics` cache-hit-rate.
+pub struct SharedCompileCache {
+    inner: Mutex<CompileCache<SharedKey>>,
+}
+
+impl SharedCompileCache {
+    pub fn new(capacity: usize) -> Self {
+        SharedCompileCache {
+            inner: Mutex::new(CompileCache::new(capacity)),
+        }
+    }
+
+    /// Fetch the artifact for `spec` on the architecture tagged `tag`,
+    /// compiling on `machine` on a miss. Returns the artifact and whether
+    /// it was a shared-cache hit. The mutex is NOT held across the
+    /// compile, so concurrent workers missing on the same key may both
+    /// compile — both artifacts are bit-identical, the last insert wins.
+    pub fn get_or_compile(
+        &self,
+        tag: u64,
+        machine: &mut Machine,
+        spec: &Spec,
+    ) -> Result<(Compiled, bool), ExecError> {
+        let key: SharedKey = (tag, spec.name(), spec_fingerprint(spec));
+        if let Some(c) = self.inner.lock().unwrap().get(&key) {
+            return Ok((c, true));
+        }
+        let compiled = machine.compile(spec)?;
+        self.inner.lock().unwrap().insert(key, compiled.clone());
+        Ok((compiled, false))
+    }
+
+    /// `(hits, misses, entries, capacity)` — the `/metrics` cache block.
+    pub fn stats(&self) -> (u64, u64, usize, usize) {
+        let c = self.inner.lock().unwrap();
+        let (h, m) = c.counters();
+        (h, m, c.len(), c.capacity())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gen;
+    use crate::util::SplitMix64;
+
+    fn spmv_spec(seed: u64) -> Spec {
+        let mut rng = SplitMix64::new(seed);
+        let a = gen::random_csr(&mut rng, 16, 16, 0.3);
+        let x = gen::random_vec(&mut rng, 16, 3);
+        Spec::Spmv { a, x }
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        // Three distinct specs through a capacity-2 per-machine cache:
+        // compiling C must evict A (the LRU), not B (refreshed by a get).
+        let mut m = Machine::new(ArchConfig::nexus()).with_cache_capacity(2);
+        let (a, b, c) = (spmv_spec(1), spmv_spec(2), spmv_spec(3));
+        m.compile(&a).unwrap();
+        m.compile(&b).unwrap();
+        assert_eq!(m.cached_programs(), 2);
+        m.compile(&a).unwrap(); // refresh A: B becomes the LRU
+        m.compile(&c).unwrap(); // evicts B
+        assert_eq!(m.cached_programs(), 2);
+        // A stays shared (cache hit — same Arc), B was evicted.
+        let a1 = m.compile(&a).unwrap();
+        let a2 = m.compile(&a).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a1.artifact, &a2.artifact));
+    }
+
+    #[test]
+    fn eviction_plus_recompile_is_bit_identical() {
+        // A capacity-1 cache thrashes between two specs; every execution
+        // must stay bit-identical to an unbounded-cache machine's.
+        let cfg = ArchConfig::nexus();
+        let mut bounded = Machine::new(cfg.clone()).with_cache_capacity(1);
+        let mut unbounded = Machine::new(cfg);
+        let (a, b) = (spmv_spec(11), spmv_spec(12));
+        for _ in 0..3 {
+            for spec in [&a, &b] {
+                let eb = bounded.run(spec).unwrap();
+                let eu = unbounded.run(spec).unwrap();
+                assert_eq!(eb.outputs, eu.outputs);
+                assert_eq!(eb.cycles(), eu.cycles());
+                assert_eq!(eb.stats, eu.stats, "full counter set must match");
+            }
+            assert_eq!(bounded.cached_programs(), 1, "capacity bound violated");
+        }
+        assert_eq!(unbounded.cached_programs(), 2);
+    }
+
+    #[test]
+    fn shared_cache_hits_across_machines() {
+        let cfg = ArchConfig::nexus();
+        let tag = config_tag(&cfg);
+        let cache = SharedCompileCache::new(8);
+        let spec = spmv_spec(5);
+        let mut m1 = Machine::new(cfg.clone());
+        let mut m2 = Machine::new(cfg);
+        let (c1, hit1) = cache.get_or_compile(tag, &mut m1, &spec).unwrap();
+        let (c2, hit2) = cache.get_or_compile(tag, &mut m2, &spec).unwrap();
+        assert!(!hit1 && hit2, "second worker must hit the shared cache");
+        assert!(std::sync::Arc::ptr_eq(&c1.artifact, &c2.artifact));
+        // And the shared artifact executes on both machines.
+        let e1 = m1.execute(&c1).unwrap();
+        let e2 = m2.execute(&c2).unwrap();
+        assert_eq!(e1.outputs, e2.outputs);
+        assert_eq!(e1.cycles(), e2.cycles());
+        let (h, miss, len, cap) = cache.stats();
+        assert_eq!((h, miss, len, cap), (1, 1, 1, 8));
+    }
+
+    #[test]
+    fn config_tag_distinguishes_geometry() {
+        let a = config_tag(&ArchConfig::nexus());
+        let b = config_tag(&ArchConfig::nexus().with_array(8, 8));
+        assert_ne!(a, b);
+        assert_eq!(a, config_tag(&ArchConfig::nexus()));
+    }
+
+    #[test]
+    fn set_capacity_shrinks() {
+        let mut m = Machine::new(ArchConfig::nexus());
+        for s in 0..4 {
+            m.compile(&spmv_spec(s + 20)).unwrap();
+        }
+        assert_eq!(m.cached_programs(), 4);
+        m.set_cache_capacity(2);
+        assert_eq!(m.cached_programs(), 2);
+    }
+}

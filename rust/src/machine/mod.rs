@@ -12,10 +12,14 @@
 //! ```
 //!
 //! A [`Machine`] owns a [`Backend`] (a reusable simulator instance or an
-//! analytical model) plus a compile cache keyed by workload, so sweeps that
-//! rerun a workload skip recompilation and fabric executions reuse the
-//! fabric's allocations via [`NexusFabric::reset`](crate::fabric::NexusFabric::reset)
-//! instead of rebuilding a simulator per run. Every failure mode is a typed
+//! analytical model) plus a *bounded LRU* compile cache keyed by workload
+//! and tensor content ([`cache::CompileCache`]; capacity via
+//! [`Machine::with_cache_capacity`]), so sweeps that rerun a workload skip
+//! recompilation and fabric executions reuse the fabric's allocations via
+//! [`NexusFabric::reset`](crate::fabric::NexusFabric::reset)
+//! instead of rebuilding a simulator per run. Long-running services share
+//! artifacts *across* machines through the process-wide
+//! [`cache::SharedCompileCache`]. Every failure mode is a typed
 //! [`ExecError`] — deadlocks surface as `Err`, not `panic!`; unsupported
 //! (architecture, workload) pairs as [`ExecError::Unsupported`]; reference
 //! mismatches as [`ExecError::ValidationMismatch`].
@@ -32,10 +36,12 @@
 //! `tests/step_equivalence.rs`), so sweeps can mix modes freely.
 
 mod backend;
+pub mod cache;
 mod error;
 mod pool;
 
 pub use backend::{Artifact, Backend, FabricArch};
+pub use cache::{config_tag, CompileCache, SharedCompileCache, DEFAULT_CACHE_CAPACITY};
 pub use error::ExecError;
 pub use pool::MachinePool;
 
@@ -43,7 +49,6 @@ use crate::baselines::RunResult;
 use crate::config::ArchConfig;
 use crate::fabric::stats::FabricStats;
 use crate::workloads::{Built, Spec, Tiles};
-use std::collections::HashMap;
 use std::sync::Arc;
 
 /// A workload compiled by (and executable on) one backend. Cheap to clone:
@@ -164,10 +169,11 @@ impl Execution {
 }
 
 /// A reusable execution session for one architecture: a [`Backend`] plus a
-/// compile cache. See the [module docs](self) for the API shape.
+/// bounded LRU compile cache. See the [module docs](self) for the API
+/// shape.
 pub struct Machine {
     backend: Box<dyn Backend>,
-    cache: HashMap<(String, u64), Compiled>,
+    cache: CompileCache<(String, u64)>,
 }
 
 impl Machine {
@@ -182,8 +188,23 @@ impl Machine {
     pub fn from_backend(backend: Box<dyn Backend>) -> Self {
         Machine {
             backend,
-            cache: HashMap::new(),
+            cache: CompileCache::new(DEFAULT_CACHE_CAPACITY),
         }
+    }
+
+    /// Replace the compile-cache capacity (builder form). The default
+    /// ([`DEFAULT_CACHE_CAPACITY`]) is generous; long-running services
+    /// that compile an open-ended stream of specs lower it to bound
+    /// memory. Shrinking evicts least-recently-used artifacts, which
+    /// recompile bit-identically on their next request.
+    pub fn with_cache_capacity(mut self, capacity: usize) -> Self {
+        self.cache.set_capacity(capacity);
+        self
+    }
+
+    /// As [`Machine::with_cache_capacity`], in place.
+    pub fn set_cache_capacity(&mut self, capacity: usize) {
+        self.cache.set_capacity(capacity);
     }
 
     /// Roster name of the underlying architecture.
@@ -198,7 +219,7 @@ impl Machine {
     pub fn compile(&mut self, spec: &Spec) -> Result<Compiled, ExecError> {
         let key = (spec.name(), spec_fingerprint(spec));
         if let Some(c) = self.cache.get(&key) {
-            return Ok(c.clone());
+            return Ok(c);
         }
         let artifact = self.backend.compile(spec)?;
         let compiled = Compiled::new(key.0.clone(), artifact);

@@ -64,6 +64,7 @@ fn main() {
 
     match cmd {
         "corpus" => corpus(&args, opts),
+        "serve" => serve(&args, step_mode, topology, shards, threads),
         "validate" => validate(&opts),
         "golden" => golden(seed),
         "fig10" => with_matrix(seed, report::fig10),
@@ -121,6 +122,13 @@ fn main() {
                  \x20               (--shards N: partition each fabric into N row bands —\n\
                  \x20               part of the modeled schedule; --threads N: step the\n\
                  \x20               shards on N worker threads, bit-identical at any N)\n\
+                 \x20 serve         long-running batch-execution daemon: NDJSON over TCP\n\
+                 \x20               (--addr HOST:PORT, default 127.0.0.1:7077;\n\
+                 \x20               --workers N execution threads; --queue-cap N bounded\n\
+                 \x20               admission queue; --cache-cap N compile-cache entries;\n\
+                 \x20               --shards/--threads/--topology/--dense-oracle apply to\n\
+                 \x20               every served run; GET /health + GET /metrics for\n\
+                 \x20               liveness; {\"cmd\":\"shutdown\"} drains and exits 0)\n\
                  \x20 golden        additionally check against the XLA/PJRT golden models\n\
                  \x20               (requires `make artifacts`)\n\
                  \x20 fig10..fig17  regenerate the corresponding paper figure\n\
@@ -182,6 +190,39 @@ fn corpus(args: &[String], opts: RunOptions) {
             eprintln!("unknown corpus subcommand '{other}' (use: corpus list|run)");
             std::process::exit(2);
         }
+    }
+}
+
+/// `nexus serve [--addr HOST:PORT] [--workers N] [--queue-cap N]
+/// [--cache-cap N]` plus the global run flags: start the batch-execution
+/// daemon and block until a shutdown request drains it.
+fn serve(
+    args: &[String],
+    step_mode: StepMode,
+    topology: TopologyKind,
+    shards: usize,
+    threads: usize,
+) {
+    let defaults = nexus::serve::ServeOptions::default();
+    let opts = nexus::serve::ServeOptions {
+        addr: args
+            .iter()
+            .position(|a| a == "--addr")
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+            .unwrap_or_else(|| defaults.addr.clone()),
+        workers: flag_value(args, "--workers", defaults.workers),
+        queue_capacity: flag_value(args, "--queue-cap", defaults.queue_capacity).max(1),
+        cache_capacity: flag_value(args, "--cache-cap", defaults.cache_capacity).max(1),
+        shards,
+        threads,
+        topology,
+        step_mode,
+        ..defaults
+    };
+    if let Err(e) = coordinator::serve(opts) {
+        eprintln!("serve failed: {e}");
+        std::process::exit(1);
     }
 }
 

@@ -1,0 +1,106 @@
+//! `/health` and `/metrics` response rendering. Pure functions from the
+//! observable state to one JSON line, so tests can assert the exact
+//! shape without a socket.
+
+use super::metrics::Metrics;
+use crate::util::json::JsonObj;
+use std::sync::atomic::Ordering;
+
+/// The `GET /health` line: liveness plus the two numbers an operator
+/// checks first.
+pub fn health_line(m: &Metrics, queue_depth: usize, workers: usize, draining: bool) -> String {
+    let mut o = JsonObj::new();
+    o.str("status", if draining { "draining" } else { "ok" })
+        .f64("uptime_secs", m.uptime_secs(), 3)
+        .u64("workers", workers as u64)
+        .u64("queue_depth", queue_depth as u64)
+        .u64("completed", m.completed.load(Ordering::Relaxed));
+    o.build()
+}
+
+/// The `GET /metrics` line: full lifecycle counters, throughput, latency
+/// percentiles, queue occupancy, and shared-compile-cache hit rate.
+#[allow(clippy::too_many_arguments)]
+pub fn metrics_line(
+    m: &Metrics,
+    queue_depth: usize,
+    queue_capacity: usize,
+    workers: usize,
+    cache: (u64, u64, usize, usize),
+    draining: bool,
+) -> String {
+    let (hits, misses, entries, capacity) = cache;
+    let lookups = hits + misses;
+    let hit_rate = if lookups == 0 {
+        0.0
+    } else {
+        hits as f64 / lookups as f64
+    };
+    let mut o = JsonObj::new();
+    o.str("status", if draining { "draining" } else { "ok" })
+        .f64("uptime_secs", m.uptime_secs(), 3)
+        .u64("workers", workers as u64)
+        .u64("received", m.received.load(Ordering::Relaxed))
+        .u64("completed", m.completed.load(Ordering::Relaxed))
+        .u64("errored", m.errored.load(Ordering::Relaxed))
+        .u64("rejected", m.rejected.load(Ordering::Relaxed))
+        .u64("malformed", m.malformed.load(Ordering::Relaxed))
+        .f64("scenarios_per_sec", m.scenarios_per_sec(), 2)
+        .u64("latency_p50_us", m.latency_percentile_us(50.0))
+        .u64("latency_p99_us", m.latency_percentile_us(99.0))
+        .u64("queue_depth", queue_depth as u64)
+        .u64("queue_capacity", queue_capacity as u64)
+        .u64("cache_hits", hits)
+        .u64("cache_misses", misses)
+        .f64("cache_hit_rate", hit_rate, 4)
+        .u64("cache_entries", entries as u64)
+        .u64("cache_capacity", capacity as u64);
+    o.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::protocol::{parse_json, Json};
+
+    #[test]
+    fn health_line_shape() {
+        let m = Metrics::new();
+        m.completed.fetch_add(5, Ordering::Relaxed);
+        let line = health_line(&m, 2, 4, false);
+        let v = parse_json(&line).unwrap();
+        assert_eq!(v.get("status").and_then(Json::as_str), Some("ok"));
+        assert_eq!(v.get("workers").and_then(Json::as_u64), Some(4));
+        assert_eq!(v.get("queue_depth").and_then(Json::as_u64), Some(2));
+        assert_eq!(v.get("completed").and_then(Json::as_u64), Some(5));
+        let drained = health_line(&m, 0, 4, true);
+        let v = parse_json(&drained).unwrap();
+        assert_eq!(v.get("status").and_then(Json::as_str), Some("draining"));
+    }
+
+    #[test]
+    fn metrics_line_reports_cache_hit_rate() {
+        let m = Metrics::new();
+        m.received.fetch_add(10, Ordering::Relaxed);
+        m.completed.fetch_add(8, Ordering::Relaxed);
+        m.rejected.fetch_add(2, Ordering::Relaxed);
+        m.record_latency_us(100);
+        let line = metrics_line(&m, 1, 64, 4, (6, 2, 2, 256), false);
+        let v = parse_json(&line).unwrap();
+        assert_eq!(v.get("received").and_then(Json::as_u64), Some(10));
+        assert_eq!(v.get("completed").and_then(Json::as_u64), Some(8));
+        assert_eq!(v.get("rejected").and_then(Json::as_u64), Some(2));
+        assert_eq!(v.get("cache_hits").and_then(Json::as_u64), Some(6));
+        assert_eq!(v.get("cache_hit_rate").and_then(Json::as_f64), Some(0.75));
+        assert_eq!(v.get("queue_capacity").and_then(Json::as_u64), Some(64));
+        assert!(v.get("latency_p99_us").and_then(Json::as_u64).unwrap() >= 100);
+    }
+
+    #[test]
+    fn zero_lookup_cache_hit_rate_is_zero() {
+        let m = Metrics::new();
+        let line = metrics_line(&m, 0, 8, 1, (0, 0, 0, 8), false);
+        let v = parse_json(&line).unwrap();
+        assert_eq!(v.get("cache_hit_rate").and_then(Json::as_f64), Some(0.0));
+    }
+}

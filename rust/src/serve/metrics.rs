@@ -1,0 +1,148 @@
+//! Live service counters behind `/metrics`: lock-free atomics for the
+//! request lifecycle plus a fixed-bucket latency histogram for p50/p99.
+//!
+//! The histogram is 32 power-of-two microsecond buckets (bucket *i*
+//! covers `[2^i, 2^(i+1))` µs, bucket 0 covers `[0, 2)` µs). Percentiles
+//! come out as the upper bound of the bucket holding the requested rank —
+//! coarse (within 2×) but constant-space, lock-free, and monotone, which
+//! is what a hot-path service counter wants.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+const BUCKETS: usize = 32;
+
+/// Shared service counters. All methods take `&self`; every field is an
+/// atomic, so the hot path never contends on a lock.
+pub struct Metrics {
+    started: Instant,
+    /// Request lines that parsed into a run request and were considered
+    /// for admission.
+    pub received: AtomicU64,
+    /// Runs executed to completion (ok responses).
+    pub completed: AtomicU64,
+    /// Runs that failed in execution (`exec_failed` responses).
+    pub errored: AtomicU64,
+    /// Runs refused by backpressure (`overloaded` + `shutting_down`).
+    pub rejected: AtomicU64,
+    /// Lines that failed to parse at all (`malformed`, `oversized`,
+    /// `bad_request`, `unknown_scenario`).
+    pub malformed: AtomicU64,
+    latency_us: [AtomicU64; BUCKETS],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            started: Instant::now(),
+            received: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            errored: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            malformed: AtomicU64::new(0),
+            latency_us: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Seconds since the service started.
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Record one completed request's end-to-end latency (queue + exec).
+    pub fn record_latency_us(&self, us: u64) {
+        let bucket = if us < 2 {
+            0
+        } else {
+            (63 - us.leading_zeros() as usize).min(BUCKETS - 1)
+        };
+        self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Latency percentile estimate in microseconds: the upper bound of
+    /// the bucket containing rank `ceil(p/100 * n)`. Returns 0 with no
+    /// samples.
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let counts: Vec<u64> = self
+            .latency_us
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    /// Completed-run throughput since start.
+    pub fn scenarios_per_sec(&self) -> f64 {
+        let up = self.uptime_secs();
+        if up <= 0.0 {
+            return 0.0;
+        }
+        self.completed.load(Ordering::Relaxed) as f64 / up
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_track_bucket_bounds() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentile_us(50.0), 0, "no samples yet");
+        // 99 fast samples (~8µs → bucket 3, bound 16) and one slow
+        // (~1000µs → bucket 9, bound 1024).
+        for _ in 0..99 {
+            m.record_latency_us(8);
+        }
+        m.record_latency_us(1000);
+        assert_eq!(m.latency_percentile_us(50.0), 16);
+        assert_eq!(m.latency_percentile_us(99.0), 16);
+        assert_eq!(m.latency_percentile_us(100.0), 1024);
+    }
+
+    #[test]
+    fn sub_two_micros_lands_in_bucket_zero() {
+        let m = Metrics::new();
+        m.record_latency_us(0);
+        m.record_latency_us(1);
+        assert_eq!(m.latency_percentile_us(100.0), 2);
+    }
+
+    #[test]
+    fn huge_latencies_saturate_the_last_bucket() {
+        let m = Metrics::new();
+        m.record_latency_us(u64::MAX);
+        // Saturates at the top bucket rather than indexing out of range.
+        assert_eq!(m.latency_percentile_us(100.0), 1u64 << 32);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.received.fetch_add(3, Ordering::Relaxed);
+        m.completed.fetch_add(2, Ordering::Relaxed);
+        m.rejected.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(m.received.load(Ordering::Relaxed), 3);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 1);
+        assert!(m.uptime_secs() >= 0.0);
+    }
+}

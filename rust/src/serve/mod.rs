@@ -1,0 +1,437 @@
+//! `nexus serve` — a long-running batch-execution daemon over plain TCP.
+//!
+//! # Architecture
+//!
+//! ```text
+//!                 ┌────────────────────────────────────────────────┐
+//!  TCP clients ──▶│ accept loop (nonblocking poll)                 │
+//!                 │   └─ per-connection reader + ordered writer    │
+//!                 │        │ parse line → Request                  │
+//!                 │        │ control (health/metrics/shutdown):    │
+//!                 │        │   answered inline                     │
+//!                 │        ▼ runs:                                 │
+//!                 │  BoundedQueue<Job> ── full? → "overloaded"     │
+//!                 │        ▼                                       │
+//!                 │  worker pool (N threads, reusable Machines)    │
+//!                 │        │  SharedCompileCache (mutex + LRU)     │
+//!                 │        ▼                                       │
+//!                 │  response line → per-request reply channel     │
+//!                 └────────────────────────────────────────────────┘
+//! ```
+//!
+//! Design points, each load-bearing for the acceptance tests:
+//!
+//! - **Determinism.** A served run is the same compile + execute a direct
+//!   [`Machine::run`] performs for the same (spec, seed, shards): the
+//!   response carries FNV digests of the outputs and the full counter
+//!   set, and the test suite asserts they are bit-identical to an
+//!   in-process run.
+//! - **Ordered pipelining.** Clients may pipeline many request lines;
+//!   responses always come back in request order. The reader thread
+//!   enqueues one single-use reply channel per request into an in-order
+//!   stream; the connection's writer thread drains them sequentially
+//!   while workers fill them concurrently.
+//! - **Explicit backpressure.** Admission is [`BoundedQueue::try_push`]:
+//!   when the queue is full the client gets `{"error":"overloaded"}`
+//!   immediately. Nothing admitted is ever dropped.
+//! - **Graceful shutdown.** A `{"cmd":"shutdown"}` request (or closing
+//!   the listener) flips the draining flag and closes the queue: new
+//!   runs are refused with `shutting_down`, admitted runs complete and
+//!   their responses flush, workers join, and the process exits 0.
+//!
+//! Everything is std-only: no async runtime, no serde — threads, a
+//! mutex-and-condvar queue, and the hand-rolled [`protocol`] JSON.
+
+pub mod health;
+pub mod metrics;
+pub mod protocol;
+pub mod queue;
+
+use crate::config::{ArchConfig, StepMode, TopologyKind};
+use crate::dataset::runner::effective_shards;
+use crate::dataset::Corpus;
+use crate::machine::{config_tag, spec_fingerprint, Machine, SharedCompileCache};
+use metrics::Metrics;
+use protocol::{
+    parse_request, read_line_bounded, run_response_line, Request, RunRequest, RunTarget,
+    ServeError,
+};
+use queue::{BoundedQueue, PushError};
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Tuning knobs for one server instance. `Default` is a sensible local
+/// deployment; the CLI maps flags onto the fields it exposes.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Listen address, e.g. `127.0.0.1:7077` (`:0` picks a free port).
+    pub addr: String,
+    /// Worker threads executing runs (0 → available parallelism).
+    pub workers: usize,
+    /// Requested shard count applied to every run (folded to a divisor
+    /// of each mesh height, exactly like the corpus runner).
+    pub shards: usize,
+    /// OS threads per sharded step.
+    pub threads: usize,
+    /// NoC topology for every run.
+    pub topology: TopologyKind,
+    /// Fabric stepping mode for every run.
+    pub step_mode: StepMode,
+    /// Bounded run-queue capacity (admission control).
+    pub queue_capacity: usize,
+    /// Shared compile-cache capacity (artifacts, LRU-evicted).
+    pub cache_capacity: usize,
+    /// Hard per-line size bound for requests.
+    pub max_line_bytes: usize,
+    /// How long shutdown waits for open connections to finish before
+    /// forcing their sockets closed.
+    pub drain_grace_ms: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:7077".to_string(),
+            workers: 0,
+            shards: 1,
+            threads: 1,
+            topology: TopologyKind::Mesh2D,
+            step_mode: StepMode::ActiveSet,
+            queue_capacity: 64,
+            cache_capacity: 256,
+            max_line_bytes: 64 * 1024,
+            drain_grace_ms: 3000,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Resolve `workers == 0` to the host's available parallelism.
+    pub fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(2)
+    }
+}
+
+/// One admitted run: the request, its admission time (for `queue_us`),
+/// and the single-use channel its response line goes down.
+struct Job {
+    request: RunRequest,
+    enqueued: Instant,
+    reply: mpsc::Sender<String>,
+}
+
+/// State shared by the accept loop, connection handlers, and workers.
+struct ServerState {
+    opts: ServeOptions,
+    corpus: Corpus,
+    queue: BoundedQueue<Job>,
+    metrics: Metrics,
+    cache: SharedCompileCache,
+    draining: AtomicBool,
+    active_conns: AtomicUsize,
+    /// Clones of every accepted stream, so shutdown can force-close
+    /// stragglers after the drain grace period.
+    conn_streams: Mutex<Vec<TcpStream>>,
+}
+
+impl ServerState {
+    /// Flip into drain mode: refuse new work, let admitted work finish.
+    fn begin_shutdown(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+        self.queue.close();
+    }
+
+    fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+}
+
+/// A bound-but-not-yet-running server. Splitting bind from run lets
+/// tests and benches bind port 0 and read [`Server::local_addr`] before
+/// serving.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    /// Bind the listen socket and build the shared state.
+    pub fn bind(opts: ServeOptions) -> io::Result<Server> {
+        let listener = TcpListener::bind(&opts.addr)?;
+        let state = Arc::new(ServerState {
+            queue: BoundedQueue::new(opts.queue_capacity),
+            metrics: Metrics::new(),
+            cache: SharedCompileCache::new(opts.cache_capacity),
+            corpus: Corpus::builtin(),
+            draining: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+            conn_streams: Mutex::new(Vec::new()),
+            opts,
+        });
+        Ok(Server { listener, state })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Serve until a shutdown request arrives, then drain and return.
+    /// Returning `Ok(())` is the exit-0 path.
+    pub fn run(self) -> io::Result<()> {
+        let Server { listener, state } = self;
+        listener.set_nonblocking(true)?;
+        let workers = state.opts.effective_workers();
+        let worker_handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let state = Arc::clone(&state);
+                thread::spawn(move || worker_loop(&state))
+            })
+            .collect();
+
+        // Accept loop: nonblocking poll so the draining flag is observed
+        // promptly — this is the listener-close path of shutdown.
+        let mut conn_handles = Vec::new();
+        while !state.draining() {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if let Ok(clone) = stream.try_clone() {
+                        state.conn_streams.lock().unwrap().push(clone);
+                    }
+                    state.active_conns.fetch_add(1, Ordering::SeqCst);
+                    let state = Arc::clone(&state);
+                    conn_handles.push(thread::spawn(move || {
+                        let _ = handle_conn(stream, &state);
+                        state.active_conns.fetch_sub(1, Ordering::SeqCst);
+                    }));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(2));
+                }
+                Err(_) => break,
+            }
+        }
+        drop(listener);
+
+        // Drain: workers finish every admitted job (the queue is closed,
+        // so pop() returns None once empty), then exit.
+        for h in worker_handles {
+            let _ = h.join();
+        }
+
+        // Give open connections a grace period to flush and hang up, then
+        // force-close the stragglers so their reader threads unblock.
+        let deadline = Instant::now() + Duration::from_millis(state.opts.drain_grace_ms);
+        while state.active_conns.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(10));
+        }
+        for s in state.conn_streams.lock().unwrap().iter() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        for h in conn_handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Bind and serve with the given options (the CLI entry point).
+pub fn run(opts: ServeOptions) -> io::Result<()> {
+    Server::bind(opts)?.run()
+}
+
+/// Per-connection protocol loop. The calling thread reads and parses
+/// request lines; a paired writer thread emits responses strictly in
+/// request order while workers fill them out of order.
+fn handle_conn(stream: TcpStream, state: &Arc<ServerState>) -> io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let write_half = stream.try_clone()?;
+
+    // Ordered pipelining: a channel of single-use reply channels. The
+    // reader pushes one receiver per request, in order; the writer drains
+    // them sequentially, blocking on whichever response is next due.
+    let (slot_tx, slot_rx) = mpsc::channel::<mpsc::Receiver<String>>();
+    let writer = thread::spawn(move || {
+        let mut w = BufWriter::new(write_half);
+        for slot in slot_rx {
+            // A dropped sender (worker gone without replying) is skipped;
+            // admitted jobs normally always reply.
+            if let Ok(line) = slot.recv() {
+                if writeln!(w, "{line}").and_then(|_| w.flush()).is_err() {
+                    break;
+                }
+            }
+        }
+    });
+
+    // Answer an inline (non-queued) response while preserving order.
+    let ready = |line: String| {
+        let (tx, rx) = mpsc::channel();
+        let _ = tx.send(line);
+        rx
+    };
+
+    loop {
+        let line = match read_line_bounded(&mut reader, state.opts.max_line_bytes)? {
+            None => break,
+            Some(Err(e)) => {
+                state.metrics.malformed.fetch_add(1, Ordering::Relaxed);
+                let _ = slot_tx.send(ready(e.to_line()));
+                continue;
+            }
+            Some(Ok(l)) => l,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_request(&line) {
+            Err(e) => {
+                state.metrics.malformed.fetch_add(1, Ordering::Relaxed);
+                let _ = slot_tx.send(ready(e.to_line()));
+            }
+            Ok(Request::Health) => {
+                let _ = slot_tx.send(ready(health::health_line(
+                    &state.metrics,
+                    state.queue.len(),
+                    state.opts.effective_workers(),
+                    state.draining(),
+                )));
+            }
+            Ok(Request::Metrics) => {
+                let _ = slot_tx.send(ready(health::metrics_line(
+                    &state.metrics,
+                    state.queue.len(),
+                    state.queue.capacity(),
+                    state.opts.effective_workers(),
+                    state.cache.stats(),
+                    state.draining(),
+                )));
+            }
+            Ok(Request::Shutdown) => {
+                state.begin_shutdown();
+                let mut o = crate::util::json::JsonObj::new();
+                o.str("status", "ok").bool("shutdown", true);
+                let _ = slot_tx.send(ready(o.build()));
+                break;
+            }
+            Ok(Request::Run(request)) => {
+                state.metrics.received.fetch_add(1, Ordering::Relaxed);
+                if state.draining() {
+                    state.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = slot_tx.send(ready(ServeError::ShuttingDown.to_line()));
+                    continue;
+                }
+                let (reply_tx, reply_rx) = mpsc::channel();
+                let job = Job {
+                    request,
+                    enqueued: Instant::now(),
+                    reply: reply_tx,
+                };
+                match state.queue.try_push(job) {
+                    Ok(()) => {
+                        let _ = slot_tx.send(reply_rx);
+                    }
+                    Err((kind, _job)) => {
+                        state.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        let e = match kind {
+                            PushError::Full => ServeError::Overloaded,
+                            PushError::Closed => ServeError::ShuttingDown,
+                        };
+                        let _ = slot_tx.send(ready(e.to_line()));
+                    }
+                }
+            }
+        }
+    }
+
+    // EOF (or shutdown): stop accepting slots and let the writer drain
+    // the responses still owed — this is what makes pipelined shutdowns
+    // lossless — then hang up.
+    drop(slot_tx);
+    let _ = writer.join();
+    Ok(())
+}
+
+/// Worker thread: pull jobs until the queue closes and drains, keeping
+/// one reusable [`Machine`] per mesh geometry.
+fn worker_loop(state: &Arc<ServerState>) {
+    let mut machines: HashMap<(usize, usize), Machine> = HashMap::new();
+    while let Some(job) = state.queue.pop() {
+        let queue_us = job.enqueued.elapsed().as_micros() as u64;
+        let line = match execute_job(state, &mut machines, &job.request, queue_us) {
+            Ok(line) => {
+                state.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                line
+            }
+            Err(e) => {
+                state.metrics.errored.fetch_add(1, Ordering::Relaxed);
+                e.to_line()
+            }
+        };
+        // End-to-end latency: queue wait + execution.
+        state
+            .metrics
+            .record_latency_us(job.enqueued.elapsed().as_micros() as u64);
+        let _ = job.reply.send(line);
+    }
+}
+
+/// Resolve, compile (through the shared cache), and execute one run.
+/// The compile + execute pair is exactly what a direct
+/// [`Machine::run`] does, which is what keeps served results
+/// bit-identical to in-process ones.
+fn execute_job(
+    state: &Arc<ServerState>,
+    machines: &mut HashMap<(usize, usize), Machine>,
+    request: &RunRequest,
+    queue_us: u64,
+) -> Result<String, ServeError> {
+    let (name, mesh, spec) = match &request.target {
+        RunTarget::Scenario(name) => {
+            let sc = state
+                .corpus
+                .find(name)
+                .ok_or_else(|| ServeError::UnknownScenario(name.clone()))?;
+            (sc.name.clone(), sc.mesh, sc.spec(request.seed))
+        }
+        RunTarget::Inline(inline) => (inline.name(), inline.mesh, inline.spec(request.seed)),
+    };
+    let opts = &state.opts;
+    let shards = effective_shards(opts.shards, mesh.1);
+    let cfg = ArchConfig::nexus()
+        .with_array(mesh.0, mesh.1)
+        .with_topology(opts.topology)
+        .with_step_mode(opts.step_mode)
+        .with_shards(shards)
+        .with_threads(opts.threads);
+    let machine = machines.entry(mesh).or_insert_with(|| {
+        Machine::new(cfg.clone()).with_cache_capacity(opts.cache_capacity.max(1))
+    });
+    let started = Instant::now();
+    let (compiled, cache_hit) = state
+        .cache
+        .get_or_compile(config_tag(&cfg), machine, &spec)
+        .map_err(|e| ServeError::ExecFailed(e.to_string()))?;
+    let exec = machine
+        .execute(&compiled)
+        .map_err(|e| ServeError::ExecFailed(e.to_string()))?;
+    let exec_us = started.elapsed().as_micros() as u64;
+    Ok(run_response_line(
+        &name,
+        spec_fingerprint(&spec),
+        request.seed,
+        shards,
+        cache_hit,
+        &exec,
+        queue_us,
+        exec_us,
+    ))
+}

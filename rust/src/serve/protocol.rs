@@ -1,0 +1,929 @@
+//! The `nexus serve` wire protocol: newline-delimited JSON, one request
+//! per line in, exactly one JSON response line out, in request order.
+//!
+//! Requests (one object per line):
+//!
+//! - `{"scenario":"hotspot/spmv-rmat-d20-8x8","seed":7}` — run a named
+//!   corpus scenario ([`crate::dataset::Corpus`]); `seed` defaults to 1.
+//! - `{"spec":{"kernel":"spmv","source":"rmat","n":64,"density":0.2,
+//!   "mesh":[8,8]},"seed":7}` — run an inline spec description
+//!   ([`InlineSpec`]): the tensors are generated deterministically from
+//!   the description and the seed, exactly as a direct in-process build
+//!   would.
+//! - `{"cmd":"health"}` / `{"cmd":"metrics"}` / `{"cmd":"shutdown"}` —
+//!   service control. For curl-ability the literal lines `GET /health`
+//!   and `GET /metrics` are accepted as aliases.
+//!
+//! Responses are single JSON objects: `{"status":"ok",...}` with the
+//! execution summary (digest + cycles + stats), or
+//! `{"status":"error","error":"<code>",...}` where `<code>` is one of
+//! `malformed`, `unknown_scenario`, `oversized`, `bad_request`,
+//! `overloaded`, `shutting_down`, `exec_failed`. Queue-full rejections
+//! are *immediate* — `{"status":"error","error":"overloaded"}` — never
+//! silent drops.
+//!
+//! Everything here is hand-rolled std-only: a recursive-descent JSON
+//! parser ([`parse_json`]) with a depth bound, and emission through the
+//! shared [`crate::util::json`] writer.
+
+use crate::fabric::stats::FabricStats;
+use crate::machine::Execution;
+use crate::tensor::gen::{self, RMAT_PROBS};
+use crate::util::json::JsonObj;
+use crate::util::{fnv1a_str, Fnv64, SplitMix64};
+use crate::workloads::Spec;
+use std::fmt;
+
+/// Maximum nesting depth [`parse_json`] accepts (requests are flat; the
+/// bound exists so hostile input cannot overflow the parse stack).
+const MAX_JSON_DEPTH: usize = 32;
+
+// ---------------------------------------------------------------------------
+// Typed protocol errors
+// ---------------------------------------------------------------------------
+
+/// Everything that can go wrong between reading a request line and
+/// enqueueing (or executing) it. Each variant renders as a one-line JSON
+/// error response with a stable `error` code.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// The line was not valid JSON (detail names the position).
+    Malformed(String),
+    /// A syntactically valid request naming no registered scenario.
+    UnknownScenario(String),
+    /// The request line exceeded the configured size bound.
+    Oversized { len: usize, max: usize },
+    /// Valid JSON that is not a valid request (missing/invalid fields).
+    BadRequest(String),
+    /// The bounded queue was full: explicit backpressure.
+    Overloaded,
+    /// The service is draining; new work is rejected.
+    ShuttingDown,
+    /// The run itself failed (deadlock, validation mismatch, ...).
+    ExecFailed(String),
+}
+
+impl ServeError {
+    /// Stable machine-readable error code.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Malformed(_) => "malformed",
+            ServeError::UnknownScenario(_) => "unknown_scenario",
+            ServeError::Oversized { .. } => "oversized",
+            ServeError::BadRequest(_) => "bad_request",
+            ServeError::Overloaded => "overloaded",
+            ServeError::ShuttingDown => "shutting_down",
+            ServeError::ExecFailed(_) => "exec_failed",
+        }
+    }
+
+    /// Render the one-line JSON error response.
+    pub fn to_line(&self) -> String {
+        let mut o = JsonObj::new();
+        o.str("status", "error").str("error", self.code());
+        match self {
+            ServeError::Malformed(d)
+            | ServeError::UnknownScenario(d)
+            | ServeError::BadRequest(d)
+            | ServeError::ExecFailed(d) => {
+                o.str("detail", d);
+            }
+            ServeError::Oversized { len, max } => {
+                o.u64("len", *len as u64).u64("max", *max as u64);
+            }
+            ServeError::Overloaded | ServeError::ShuttingDown => {}
+        }
+        o.build()
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Malformed(d) => write!(f, "malformed request: {d}"),
+            ServeError::UnknownScenario(n) => write!(f, "unknown scenario '{n}'"),
+            ServeError::Oversized { len, max } => {
+                write!(f, "request line of {len} bytes exceeds the {max}-byte bound")
+            }
+            ServeError::BadRequest(d) => write!(f, "bad request: {d}"),
+            ServeError::Overloaded => write!(f, "queue full"),
+            ServeError::ShuttingDown => write!(f, "shutting down"),
+            ServeError::ExecFailed(d) => write!(f, "execution failed: {d}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON value model + parser
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value. Public so tests and benches can parse response
+/// lines with the same parser the service uses for requests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup (first match; `None` on non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integral number as u64 (rejects fractions and
+    /// negatives; JSON numbers above 2^53 are not representable exactly,
+    /// which the protocol sidesteps by carrying 64-bit digests as hex
+    /// strings).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 2f64.powi(53) => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err<T>(&self, msg: &str) -> Result<T, String> {
+        Err(format!("{msg} at byte {}", self.pos))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.bump() == Some(b) {
+            Ok(())
+        } else {
+            self.pos = self.pos.saturating_sub(1);
+            self.err(&format!("expected '{}'", b as char))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_JSON_DEPTH {
+            return self.err("nesting too deep");
+        }
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(_) => self.err("unexpected character"),
+            None => self.err("unexpected end of input"),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            self.err(&format!("expected '{word}'"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap_or("");
+        match text.parse::<f64>() {
+            Ok(n) if n.is_finite() => Ok(Json::Num(n)),
+            _ => self.err("invalid number"),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => return self.err("unterminated string"),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let hi = self.hex4()?;
+                        let ch = if (0xD800..0xDC00).contains(&hi) {
+                            // Surrogate pair: require the low half.
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return self.err("unpaired surrogate");
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return self.err("invalid low surrogate");
+                            }
+                            let c = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                            char::from_u32(c)
+                        } else {
+                            char::from_u32(hi)
+                        };
+                        match ch {
+                            Some(c) => out.push(c),
+                            None => return self.err("invalid \\u escape"),
+                        }
+                    }
+                    _ => return self.err("invalid escape"),
+                },
+                Some(c) if c < 0x20 => return self.err("raw control byte in string"),
+                Some(c) if c < 0x80 => out.push(c as char),
+                Some(c) => {
+                    // Multi-byte UTF-8: re-decode from the source slice.
+                    let width = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        0xF0..=0xF7 => 4,
+                        _ => return self.err("invalid utf-8"),
+                    };
+                    let start = self.pos - 1;
+                    if start + width > self.bytes.len() {
+                        return self.err("truncated utf-8");
+                    }
+                    match std::str::from_utf8(&self.bytes[start..start + width]) {
+                        Ok(s) => {
+                            out.push_str(s);
+                            self.pos = start + width;
+                        }
+                        Err(_) => return self.err("invalid utf-8"),
+                    }
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let d = match self.bump() {
+                Some(c @ b'0'..=b'9') => (c - b'0') as u32,
+                Some(c @ b'a'..=b'f') => (c - b'a' + 10) as u32,
+                Some(c @ b'A'..=b'F') => (c - b'A' + 10) as u32,
+                _ => return self.err("invalid \\u escape"),
+            };
+            v = (v << 4) | d;
+        }
+        Ok(v)
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(items)),
+                _ => {
+                    self.pos = self.pos.saturating_sub(1);
+                    return self.err("expected ',' or ']'");
+                }
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let value = self.value(depth + 1)?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(fields)),
+                _ => {
+                    self.pos = self.pos.saturating_sub(1);
+                    return self.err("expected ',' or '}'");
+                }
+            }
+        }
+    }
+}
+
+/// Parse one JSON value from `s` (whole-string: trailing non-whitespace
+/// is an error).
+pub fn parse_json(s: &str) -> Result<Json, String> {
+    let mut p = Parser {
+        bytes: s.as_bytes(),
+        pos: 0,
+    };
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return p.err("trailing characters");
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// A parsed request line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Run(RunRequest),
+    Health,
+    Metrics,
+    Shutdown,
+}
+
+/// One unit of executable work: what to run and the sweep seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRequest {
+    pub target: RunTarget,
+    pub seed: u64,
+}
+
+/// What a run request names: a registered corpus scenario or an inline
+/// generated spec.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RunTarget {
+    Scenario(String),
+    Inline(InlineSpec),
+}
+
+/// An inline spec description: a deterministic generator invocation the
+/// client describes instead of naming. Restricted to SpMV over the
+/// irregular matrix generators — enough to exercise arbitrary shapes
+/// without widening the attack surface of a network-facing parser.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InlineSpec {
+    /// Kernel family; currently only `"spmv"`.
+    pub kernel: String,
+    /// Tensor source: `uniform`, `rmat`, or `hotspot`.
+    pub source: String,
+    /// Square matrix dimension (8..=512).
+    pub n: usize,
+    /// Nominal density in (0, 1].
+    pub density: f64,
+    /// Mesh `(width, height)`, each in 2..=32.
+    pub mesh: (usize, usize),
+}
+
+impl InlineSpec {
+    /// Canonical display name — also the decorrelation salt for the
+    /// tensor stream, mirroring [`crate::dataset::Scenario::spec`].
+    pub fn name(&self) -> String {
+        format!(
+            "inline/{}-{}-n{}-d{:.2}-{}x{}",
+            self.kernel, self.source, self.n, self.density, self.mesh.0, self.mesh.1
+        )
+    }
+
+    /// Build the workload deterministically from the description and the
+    /// seed. Equal (description, seed) pairs give bit-identical tensors —
+    /// the property the serve bit-identity tests rely on.
+    pub fn spec(&self, seed: u64) -> Spec {
+        let mut rng = SplitMix64::new(seed ^ fnv1a_str(&self.name()));
+        let n = self.n;
+        let a = match self.source.as_str() {
+            "rmat" => {
+                let target = ((n * n) as f64 * self.density).round().max(1.0) as usize;
+                gen::rmat_csr(&mut rng, n, n, target, RMAT_PROBS)
+            }
+            "hotspot" => gen::hotspot_csr(&mut rng, n, n, self.density, 4, 0.85),
+            _ => gen::random_csr(&mut rng, n, n, self.density),
+        };
+        let x = gen::random_vec(&mut rng, n, 3);
+        Spec::Spmv { a, x }
+    }
+
+    fn from_json(v: &Json) -> Result<InlineSpec, ServeError> {
+        let bad = |d: &str| ServeError::BadRequest(d.to_string());
+        let kernel = v
+            .get("kernel")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("spec.kernel missing"))?
+            .to_string();
+        if kernel != "spmv" {
+            return Err(bad("spec.kernel must be \"spmv\""));
+        }
+        let source = v
+            .get("source")
+            .and_then(Json::as_str)
+            .unwrap_or("uniform")
+            .to_string();
+        if !matches!(source.as_str(), "uniform" | "rmat" | "hotspot") {
+            return Err(bad("spec.source must be uniform|rmat|hotspot"));
+        }
+        let n = match v.get("n") {
+            None => 64,
+            Some(j) => j.as_usize().ok_or_else(|| bad("spec.n must be an integer"))?,
+        };
+        if !(8..=512).contains(&n) {
+            return Err(bad("spec.n must be in 8..=512"));
+        }
+        let density = match v.get("density") {
+            None => 0.2,
+            Some(j) => j.as_f64().ok_or_else(|| bad("spec.density must be a number"))?,
+        };
+        if !(density > 0.0 && density <= 1.0) {
+            return Err(bad("spec.density must be in (0, 1]"));
+        }
+        let mesh = match v.get("mesh") {
+            None => (8, 8),
+            Some(Json::Arr(a)) if a.len() == 2 => {
+                let w = a[0].as_usize().ok_or_else(|| bad("spec.mesh must be [w,h]"))?;
+                let h = a[1].as_usize().ok_or_else(|| bad("spec.mesh must be [w,h]"))?;
+                (w, h)
+            }
+            Some(_) => return Err(bad("spec.mesh must be a [w,h] array")),
+        };
+        if !(2..=32).contains(&mesh.0) || !(2..=32).contains(&mesh.1) {
+            return Err(bad("spec.mesh sides must be in 2..=32"));
+        }
+        Ok(InlineSpec {
+            kernel,
+            source,
+            n,
+            density,
+            mesh,
+        })
+    }
+}
+
+/// Parse one request line. `GET /health` / `GET /metrics` are accepted
+/// verbatim; everything else must be a JSON object.
+pub fn parse_request(line: &str) -> Result<Request, ServeError> {
+    let t = line.trim();
+    if t.starts_with("GET /health") {
+        return Ok(Request::Health);
+    }
+    if t.starts_with("GET /metrics") {
+        return Ok(Request::Metrics);
+    }
+    let v = parse_json(t).map_err(ServeError::Malformed)?;
+    if !matches!(v, Json::Obj(_)) {
+        return Err(ServeError::BadRequest("request must be a JSON object".into()));
+    }
+    if let Some(cmd) = v.get("cmd") {
+        return match cmd.as_str() {
+            Some("health") => Ok(Request::Health),
+            Some("metrics") => Ok(Request::Metrics),
+            Some("shutdown") => Ok(Request::Shutdown),
+            _ => Err(ServeError::BadRequest(
+                "cmd must be health|metrics|shutdown".into(),
+            )),
+        };
+    }
+    let seed = match v.get("seed") {
+        None => 1,
+        Some(j) => j
+            .as_u64()
+            .ok_or_else(|| ServeError::BadRequest("seed must be a non-negative integer".into()))?,
+    };
+    if let Some(name) = v.get("scenario") {
+        let name = name
+            .as_str()
+            .ok_or_else(|| ServeError::BadRequest("scenario must be a string".into()))?;
+        return Ok(Request::Run(RunRequest {
+            target: RunTarget::Scenario(name.to_string()),
+            seed,
+        }));
+    }
+    if let Some(spec) = v.get("spec") {
+        return Ok(Request::Run(RunRequest {
+            target: RunTarget::Inline(InlineSpec::from_json(spec)?),
+            seed,
+        }));
+    }
+    Err(ServeError::BadRequest(
+        "request needs a scenario, spec, or cmd field".into(),
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Bounded line reading
+// ---------------------------------------------------------------------------
+
+/// Read one `\n`-terminated line with a hard size bound.
+///
+/// - `Ok(None)` — clean EOF (no bytes before it).
+/// - `Ok(Some(Ok(line)))` — a line within bounds (terminator and any
+///   trailing `\r` stripped; a final unterminated line counts).
+/// - `Ok(Some(Err(_)))` — the line exceeded `max` bytes
+///   ([`ServeError::Oversized`]) or was not UTF-8
+///   ([`ServeError::Malformed`]). The offending line is consumed through
+///   its terminator either way, so the connection survives and the
+///   *next* line parses normally — an oversized request costs one error
+///   response, not the session.
+pub fn read_line_bounded<R: std::io::BufRead>(
+    r: &mut R,
+    max: usize,
+) -> std::io::Result<Option<Result<String, ServeError>>> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut total = 0usize;
+    let mut saw_any = false;
+    loop {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            if !saw_any {
+                return Ok(None);
+            }
+            break;
+        }
+        saw_any = true;
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                total += i;
+                if total <= max {
+                    buf.extend_from_slice(&chunk[..i]);
+                }
+                r.consume(i + 1);
+                break;
+            }
+            None => {
+                let len = chunk.len();
+                total += len;
+                if total <= max {
+                    buf.extend_from_slice(chunk);
+                }
+                r.consume(len);
+            }
+        }
+    }
+    if total > max {
+        return Ok(Some(Err(ServeError::Oversized { len: total, max })));
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    match String::from_utf8(buf) {
+        Ok(s) => Ok(Some(Ok(s))),
+        Err(_) => Ok(Some(Err(ServeError::Malformed(
+            "request line is not valid UTF-8".into(),
+        )))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+/// FNV-1a digest of an output tensor — the transportable bit-identity
+/// witness (equal digests ⇔ equal outputs, up to hash collisions).
+pub fn outputs_digest(outputs: &[i16]) -> u64 {
+    Fnv64::new().i16s(outputs).finish()
+}
+
+/// FNV-1a digest over the cycle-accurate counter set: the scalar
+/// counters plus the per-PE and per-link vectors. Two executions with
+/// equal stats digests ran the same modeled schedule.
+pub fn stats_digest(stats: &FabricStats) -> u64 {
+    let mut h = Fnv64::new();
+    h.u64(stats.cycles)
+        .u64(stats.alu_ops)
+        .u64(stats.enroute_ops)
+        .u64(stats.mem_ops)
+        .u64(stats.msgs_created)
+        .u64(stats.msgs_retired)
+        .u64(stats.flit_hops)
+        .u64(stats.buf_writes)
+        .u64(stats.dmem_reads)
+        .u64(stats.dmem_writes)
+        .u64(stats.offchip_bytes)
+        .u64(stats.peak_link_demand);
+    h.u64(stats.per_pe_busy_cycles.len() as u64);
+    for &v in &stats.per_pe_busy_cycles {
+        h.u64(v);
+    }
+    h.u64(stats.per_pe_committed_ops.len() as u64);
+    for &v in &stats.per_pe_committed_ops {
+        h.u64(v);
+    }
+    h.u64(stats.link_flits.len() as u64);
+    for &v in &stats.link_flits {
+        h.u64(v);
+    }
+    h.finish()
+}
+
+/// Render the success response for one executed run request.
+#[allow(clippy::too_many_arguments)]
+pub fn run_response_line(
+    name: &str,
+    fingerprint: u64,
+    seed: u64,
+    shards: usize,
+    cache_hit: bool,
+    exec: &Execution,
+    queue_us: u64,
+    exec_us: u64,
+) -> String {
+    let (op_cv, op_max_mean, sdigest) = match &exec.stats {
+        Some(s) => (s.op_cv(), s.op_max_mean(), stats_digest(s)),
+        None => (0.0, 0.0, 0),
+    };
+    let mut o = JsonObj::new();
+    o.str("status", "ok")
+        .str("scenario", name)
+        .hex("fingerprint", fingerprint)
+        .u64("seed", seed)
+        .u64("shards", shards as u64)
+        .str("cache", if cache_hit { "hit" } else { "miss" })
+        .u64("cycles", exec.cycles())
+        .u64("work_ops", exec.result.work_ops)
+        .f64("utilization", exec.result.utilization, 4)
+        .f64("op_cv", op_cv, 4)
+        .f64("op_max_mean", op_max_mean, 4)
+        .hex("outputs_digest", outputs_digest(&exec.outputs))
+        .hex("stats_digest", sdigest)
+        .bool("validated", exec.validated())
+        .u64("queue_us", queue_us)
+        .u64("exec_us", exec_us);
+    o.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_json_roundtrips_basic_values() {
+        assert_eq!(parse_json("null").unwrap(), Json::Null);
+        assert_eq!(parse_json(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(parse_json("-12.5e1").unwrap(), Json::Num(-125.0));
+        assert_eq!(
+            parse_json("\"a\\n\\\"b\\u0041\"").unwrap(),
+            Json::Str("a\n\"bA".into())
+        );
+        let v = parse_json("{\"a\":[1,2,{\"b\":false}],\"c\":\"x\"}").unwrap();
+        assert_eq!(v.get("c").and_then(Json::as_str), Some("x"));
+        match v.get("a") {
+            Some(Json::Arr(items)) => assert_eq!(items.len(), 3),
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_json_surrogate_pairs_and_unicode() {
+        assert_eq!(
+            parse_json("\"\\ud83d\\ude00\"").unwrap(),
+            Json::Str("😀".into())
+        );
+        assert_eq!(parse_json("\"héllo\"").unwrap(), Json::Str("héllo".into()));
+        assert!(parse_json("\"\\ud83d\"").is_err(), "unpaired surrogate");
+    }
+
+    #[test]
+    fn parse_json_rejects_garbage() {
+        for bad in ["", "{", "{\"a\":}", "[1,]", "tru", "1 2", "{\"a\" 1}", "nan", "{oops"] {
+            assert!(parse_json(bad).is_err(), "{bad:?} must not parse");
+        }
+        // Depth bound: 40 nested arrays exceed MAX_JSON_DEPTH.
+        let deep = "[".repeat(40) + &"]".repeat(40);
+        assert!(parse_json(&deep).is_err());
+    }
+
+    #[test]
+    fn parse_request_forms() {
+        assert_eq!(parse_request("GET /health").unwrap(), Request::Health);
+        assert_eq!(parse_request("GET /metrics HTTP/1.1").unwrap(), Request::Metrics);
+        assert_eq!(parse_request("{\"cmd\":\"shutdown\"}").unwrap(), Request::Shutdown);
+        match parse_request("{\"scenario\":\"smoke/bfs-rmat-4x4\",\"seed\":9}").unwrap() {
+            Request::Run(r) => {
+                assert_eq!(r.seed, 9);
+                assert_eq!(r.target, RunTarget::Scenario("smoke/bfs-rmat-4x4".into()));
+            }
+            other => panic!("expected run, got {other:?}"),
+        }
+        // Seed defaults to 1.
+        match parse_request("{\"scenario\":\"x\"}").unwrap() {
+            Request::Run(r) => assert_eq!(r.seed, 1),
+            other => panic!("expected run, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_request_inline_spec() {
+        let line = "{\"spec\":{\"kernel\":\"spmv\",\"source\":\"rmat\",\"n\":32,\
+                    \"density\":0.25,\"mesh\":[4,4]},\"seed\":3}";
+        match parse_request(line).unwrap() {
+            Request::Run(RunRequest {
+                target: RunTarget::Inline(s),
+                seed,
+            }) => {
+                assert_eq!(seed, 3);
+                assert_eq!((s.n, s.mesh), (32, (4, 4)));
+                assert_eq!(s.name(), "inline/spmv-rmat-n32-d0.25-4x4");
+                // Deterministic: equal (description, seed) → equal tensors.
+                assert_eq!(
+                    crate::machine::spec_fingerprint(&s.spec(3)),
+                    crate::machine::spec_fingerprint(&s.spec(3))
+                );
+                assert_ne!(
+                    crate::machine::spec_fingerprint(&s.spec(3)),
+                    crate::machine::spec_fingerprint(&s.spec(4))
+                );
+            }
+            other => panic!("expected inline run, got {other:?}"),
+        }
+        // Defaults: n=64, density=0.2, mesh 8x8, source uniform.
+        match parse_request("{\"spec\":{\"kernel\":\"spmv\"}}").unwrap() {
+            Request::Run(RunRequest {
+                target: RunTarget::Inline(s),
+                ..
+            }) => assert_eq!((s.n, s.density, s.mesh), (64, 0.2, (8, 8))),
+            other => panic!("expected inline run, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_request_typed_errors() {
+        assert!(matches!(
+            parse_request("{oops"),
+            Err(ServeError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse_request("[1,2]"),
+            Err(ServeError::BadRequest(_))
+        ));
+        assert!(matches!(
+            parse_request("{\"cmd\":\"explode\"}"),
+            Err(ServeError::BadRequest(_))
+        ));
+        assert!(matches!(
+            parse_request("{\"scenario\":\"x\",\"seed\":-1}"),
+            Err(ServeError::BadRequest(_))
+        ));
+        assert!(matches!(
+            parse_request("{\"spec\":{\"kernel\":\"spmv\",\"n\":4}}"),
+            Err(ServeError::BadRequest(_))
+        ));
+        assert!(matches!(
+            parse_request("{\"spec\":{\"kernel\":\"spmv\",\"mesh\":[64,64]}}"),
+            Err(ServeError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn error_lines_are_stable_json() {
+        let e = ServeError::Overloaded;
+        assert_eq!(e.to_line(), "{\"status\":\"error\",\"error\":\"overloaded\"}");
+        let e = ServeError::Oversized { len: 99, max: 10 };
+        assert_eq!(
+            e.to_line(),
+            "{\"status\":\"error\",\"error\":\"oversized\",\"len\":99,\"max\":10}"
+        );
+        let e = ServeError::Malformed("quote \" here".into());
+        let line = e.to_line();
+        assert!(parse_json(&line).is_ok(), "error lines must reparse: {line}");
+    }
+
+    #[test]
+    fn read_line_bounded_survives_oversized_lines() {
+        use std::io::BufReader;
+        let input = format!("short\r\n{}\nafter\n", "x".repeat(100));
+        let mut r = BufReader::with_capacity(16, input.as_bytes());
+        assert_eq!(
+            read_line_bounded(&mut r, 32).unwrap(),
+            Some(Ok("short".to_string()))
+        );
+        match read_line_bounded(&mut r, 32).unwrap() {
+            Some(Err(ServeError::Oversized { len, max })) => {
+                assert_eq!((len, max), (100, 32));
+            }
+            other => panic!("expected oversized, got {other:?}"),
+        }
+        // The connection survives: the next line still parses.
+        assert_eq!(
+            read_line_bounded(&mut r, 32).unwrap(),
+            Some(Ok("after".to_string()))
+        );
+        assert_eq!(read_line_bounded(&mut r, 32).unwrap(), None, "clean EOF");
+    }
+
+    #[test]
+    fn read_line_bounded_final_unterminated_line_counts() {
+        use std::io::BufReader;
+        let mut r = BufReader::new("tail".as_bytes());
+        assert_eq!(
+            read_line_bounded(&mut r, 32).unwrap(),
+            Some(Ok("tail".to_string()))
+        );
+        assert_eq!(read_line_bounded(&mut r, 32).unwrap(), None);
+    }
+
+    #[test]
+    fn read_line_bounded_rejects_bad_utf8() {
+        use std::io::BufReader;
+        let bytes: &[u8] = b"\xff\xfe\n ok\n";
+        let mut r = BufReader::new(bytes);
+        assert!(matches!(
+            read_line_bounded(&mut r, 32).unwrap(),
+            Some(Err(ServeError::Malformed(_)))
+        ));
+        assert_eq!(
+            read_line_bounded(&mut r, 32).unwrap(),
+            Some(Ok(" ok".to_string()))
+        );
+    }
+
+    #[test]
+    fn digests_react_to_any_change() {
+        assert_ne!(outputs_digest(&[1, 2, 3]), outputs_digest(&[1, 2, 4]));
+        assert_ne!(outputs_digest(&[]), outputs_digest(&[0]));
+        assert_eq!(outputs_digest(&[-5, 7]), outputs_digest(&[-5, 7]));
+    }
+}

@@ -1,0 +1,178 @@
+//! A bounded multi-producer multi-consumer queue with *explicit*
+//! backpressure: [`BoundedQueue::try_push`] fails immediately when the
+//! queue is at capacity so the connection handler can answer
+//! `{"error":"overloaded"}` right away — the service never blocks a
+//! client on admission and never drops accepted work silently.
+//!
+//! std's `mpsc::sync_channel` is close but single-consumer; the serve
+//! worker pool needs many consumers pulling from one queue, so this is
+//! the classic mutex + condvar ring instead. Consumers block in
+//! [`BoundedQueue::pop`] until work arrives or the queue is closed.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Why a [`BoundedQueue::try_push`] was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// At capacity: the caller should reject with backpressure.
+    Full,
+    /// Closed for shutdown: no new work is admitted.
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// The bounded MPMC queue. Shared across threads behind an `Arc`.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    ready: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue admitting at most `capacity` pending items (min 1).
+    pub fn new(capacity: usize) -> Self {
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Non-blocking push. On refusal the item comes back to the caller so
+    /// it can be answered (rejection is a *response*, not a drop).
+    pub fn try_push(&self, item: T) -> Result<(), (PushError, T)> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err((PushError::Closed, item));
+        }
+        if g.items.len() >= self.capacity {
+            return Err((PushError::Full, item));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: waits for an item or for close. Returns `None` only
+    /// when the queue is closed AND drained — consumers therefore finish
+    /// every admitted item before exiting, which is what makes shutdown
+    /// lossless.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.ready.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue: refuse new pushes, wake all blocked consumers.
+    /// Items already admitted remain poppable.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Current depth (snapshot; for metrics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn rejects_when_full_and_returns_item() {
+        let q = BoundedQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        match q.try_push(3) {
+            Err((PushError::Full, item)) => assert_eq!(item, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok(), "space frees after pop");
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        assert!(matches!(q.try_push(3), Err((PushError::Closed, 3))));
+        // Admitted items still come out, in order, then None.
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumers() {
+        let q = Arc::new(BoundedQueue::<u32>::new(1));
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.pop());
+        // Give the consumer time to block, then close.
+        thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn mpmc_delivers_every_item_exactly_once() {
+        let q = Arc::new(BoundedQueue::<u64>::new(8));
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        let total = 200u64;
+        let mut pushed = 0u64;
+        while pushed < total {
+            if q.try_push(pushed).is_ok() {
+                pushed += 1;
+            } else {
+                thread::yield_now();
+            }
+        }
+        q.close();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..total).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,203 @@
+//! Minimal hand-rolled JSON-line *emission* shared by everything that
+//! prints machine-readable artifacts: the corpus runner
+//! (`BENCH_CORPUS.json` lines), the bench binaries (`BENCH_*.json`
+//! lines), and the `nexus serve` protocol (one response object per
+//! request line).
+//!
+//! The offline build environment vendors no `serde`, and before this
+//! module each emitter hand-rolled its own `format!` escaping — with
+//! subtly different coverage (the runner escaped control bytes, the
+//! benches escaped nothing). [`JsonObj`] centralizes the one part that is
+//! easy to get wrong: string escaping (quotes, backslashes, control
+//! characters) and field separation. It deliberately stays a *writer*,
+//! not a data model — values go in typed, already computed, and come out
+//! as one `{...}` line.
+
+use std::fmt::Write as _;
+
+/// Escape a string for embedding inside a JSON string literal (the
+/// quotes are NOT added). Handles `"` `\`, named control escapes, and
+/// `\u00XX` for the remaining control bytes.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    escape_into(&mut out, s);
+    out
+}
+
+fn escape_into(out: &mut String, s: &str) {
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Builder for one JSON object rendered as a single line. Field order is
+/// insertion order; keys are escaped like values.
+///
+/// ```
+/// use nexus::util::json::JsonObj;
+/// let mut o = JsonObj::new();
+/// o.str("scenario", "smoke/spmv-uniform-d30-4x4")
+///     .u64("cycles", 1234)
+///     .f64("utilization", 0.51239, 4)
+///     .bool("validated", true);
+/// assert_eq!(
+///     o.build(),
+///     "{\"scenario\":\"smoke/spmv-uniform-d30-4x4\",\"cycles\":1234,\
+///      \"utilization\":0.5124,\"validated\":true}"
+/// );
+/// ```
+#[derive(Debug, Default)]
+pub struct JsonObj {
+    buf: String,
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        JsonObj { buf: String::new() }
+    }
+
+    fn key(&mut self, k: &str) -> &mut Self {
+        if !self.buf.is_empty() {
+            self.buf.push(',');
+        }
+        self.buf.push('"');
+        escape_into(&mut self.buf, k);
+        self.buf.push_str("\":");
+        self
+    }
+
+    /// A string field (value escaped and quoted).
+    pub fn str(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push('"');
+        escape_into(&mut self.buf, v);
+        self.buf.push('"');
+        self
+    }
+
+    /// An unsigned integer field.
+    pub fn u64(&mut self, k: &str, v: u64) -> &mut Self {
+        self.key(k);
+        let _ = write!(self.buf, "{v}");
+        self
+    }
+
+    /// A float field rendered with a fixed number of decimals (`null` for
+    /// non-finite values, which raw JSON cannot carry).
+    pub fn f64(&mut self, k: &str, v: f64, decimals: usize) -> &mut Self {
+        self.key(k);
+        if v.is_finite() {
+            let _ = write!(self.buf, "{v:.decimals$}");
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    /// A boolean field.
+    pub fn bool(&mut self, k: &str, v: bool) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// A `u64` rendered as the `"0x0123456789abcdef"` hex-string form the
+    /// corpus artifacts use for fingerprints and digests (quoted: JSON
+    /// numbers cannot carry 64-bit values exactly).
+    pub fn hex(&mut self, k: &str, v: u64) -> &mut Self {
+        self.key(k);
+        let _ = write!(self.buf, "\"{v:#018x}\"");
+        self
+    }
+
+    /// A field whose value is already-rendered JSON (nested arrays or
+    /// objects). The caller guarantees `raw` is valid JSON.
+    pub fn raw(&mut self, k: &str, raw: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(raw);
+        self
+    }
+
+    /// Render the accumulated fields as one `{...}` line and reset the
+    /// builder to empty.
+    pub fn build(&mut self) -> String {
+        let mut s = String::with_capacity(self.buf.len() + 2);
+        s.push('{');
+        s.push_str(&std::mem::take(&mut self.buf));
+        s.push('}');
+        s
+    }
+}
+
+/// Render an iterator of already-rendered JSON values as a `[...]` array
+/// (the companion of [`JsonObj::raw`] for nested lists).
+pub fn array<I: IntoIterator<Item = String>>(items: I) -> String {
+    let mut s = String::from("[");
+    for (i, item) in items.into_iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&item);
+    }
+    s.push(']');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escape_covers_specials() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("tab\there"), "tab\\there");
+        assert_eq!(escape("cr\rlf"), "cr\\rlf");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+        assert_eq!(escape("plain"), "plain");
+        // Non-ASCII passes through (JSON strings are UTF-8).
+        assert_eq!(escape("héllo"), "héllo");
+    }
+
+    #[test]
+    fn object_builds_in_insertion_order() {
+        let mut o = JsonObj::new();
+        o.str("name", "x\"y").u64("n", 7).bool("ok", true);
+        assert_eq!(o.build(), "{\"name\":\"x\\\"y\",\"n\":7,\"ok\":true}");
+        // The builder resets after build.
+        o.u64("second", 1);
+        assert_eq!(o.build(), "{\"second\":1}");
+    }
+
+    #[test]
+    fn f64_precision_and_nonfinite() {
+        let mut o = JsonObj::new();
+        o.f64("a", 0.123456, 4).f64("b", f64::NAN, 2).f64("c", f64::INFINITY, 2);
+        assert_eq!(o.build(), "{\"a\":0.1235,\"b\":null,\"c\":null}");
+    }
+
+    #[test]
+    fn hex_and_raw_and_array() {
+        let mut o = JsonObj::new();
+        o.hex("fp", 0x1234).raw("links", &array(vec!["[1,2,3]".into(), "[4,5,6]".into()]));
+        assert_eq!(
+            o.build(),
+            "{\"fp\":\"0x0000000000001234\",\"links\":[[1,2,3],[4,5,6]]}"
+        );
+        assert_eq!(array(Vec::<String>::new()), "[]");
+    }
+
+    #[test]
+    fn empty_object() {
+        assert_eq!(JsonObj::new().build(), "{}");
+    }
+}

@@ -3,10 +3,61 @@
 //! helpers used across the simulator.
 
 pub mod bench;
+pub mod json;
 pub mod prng;
 pub mod prop;
 
 pub use prng::SplitMix64;
+
+/// Incremental FNV-1a 64-bit hasher — the crate's convention for cheap
+/// content fingerprints (compile-cache keys, scenario-stream
+/// decorrelation, serve-protocol digests).
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Fold one 64-bit word into the hash.
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.0 = (self.0 ^ v).wrapping_mul(0x0000_0100_0000_01b3);
+        self
+    }
+
+    /// Fold a byte string in, one byte per round.
+    pub fn bytes(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.u64(b as u64);
+        }
+        self
+    }
+
+    /// Fold a length-prefixed i16 slice in (sign-preserving).
+    pub fn i16s(&mut self, values: &[i16]) -> &mut Self {
+        self.u64(values.len() as u64);
+        for &v in values {
+            self.u64(v as u16 as u64);
+        }
+        self
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// FNV-1a of a string — the one-shot form of [`Fnv64`].
+pub fn fnv1a_str(s: &str) -> u64 {
+    Fnv64::new().bytes(s.as_bytes()).finish()
+}
 
 /// Integer ceiling division.
 #[inline]
@@ -82,5 +133,22 @@ mod tests {
     #[test]
     fn cv_zero_for_uniform() {
         assert_eq!(cv(&[5.0, 5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn fnv_is_deterministic_and_order_sensitive() {
+        assert_eq!(fnv1a_str("abc"), fnv1a_str("abc"));
+        assert_ne!(fnv1a_str("abc"), fnv1a_str("acb"));
+        let mut a = Fnv64::new();
+        a.u64(1).u64(2);
+        let mut b = Fnv64::new();
+        b.u64(2).u64(1);
+        assert_ne!(a.finish(), b.finish());
+        // i16s is length-prefixed: [] vs [0] must differ.
+        let mut c = Fnv64::new();
+        c.i16s(&[]);
+        let mut d = Fnv64::new();
+        d.i16s(&[0]);
+        assert_ne!(c.finish(), d.finish());
     }
 }

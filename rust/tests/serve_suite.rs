@@ -1,0 +1,374 @@
+//! Integration suite for `nexus serve`: protocol correctness over real
+//! sockets, bit-identity of served results against direct in-process
+//! execution, explicit backpressure under overload, and lossless
+//! graceful shutdown.
+//!
+//! Every test binds its own server on port 0, so the suite is parallel-
+//! and CI-safe.
+
+use nexus::config::ArchConfig;
+use nexus::dataset::{effective_shards, Corpus};
+use nexus::machine::Machine;
+use nexus::serve::protocol::{outputs_digest, parse_json, stats_digest, Json};
+use nexus::serve::{Server, ServeOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread::{self, JoinHandle};
+
+/// Bind a server with the given options (addr forced to port 0), return
+/// its address and the running thread.
+fn start(opts: ServeOptions) -> (SocketAddr, JoinHandle<()>) {
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        ..opts
+    })
+    .expect("bind");
+    let addr = server.local_addr().expect("local addr");
+    let handle = thread::spawn(move || server.run().expect("server run"));
+    (addr, handle)
+}
+
+/// Pipeline `requests` down one connection, half-close, and collect every
+/// response line in order.
+fn drive(addr: SocketAddr, requests: &[&str]) -> Vec<String> {
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let reader = BufReader::new(stream);
+    for r in requests {
+        writeln!(writer, "{r}").expect("write");
+    }
+    writer.flush().expect("flush");
+    let _ = writer.shutdown(std::net::Shutdown::Write);
+    reader.lines().map(|l| l.expect("read line")).collect()
+}
+
+fn shutdown(addr: SocketAddr, handle: JoinHandle<()>) {
+    let lines = drive(addr, &["{\"cmd\":\"shutdown\"}"]);
+    let v = parse_json(&lines[0]).expect("shutdown response");
+    assert_eq!(v.get("status").and_then(Json::as_str), Some("ok"));
+    handle.join().expect("server joins after shutdown");
+}
+
+fn status(line: &str) -> (String, Option<String>) {
+    let v = parse_json(line).unwrap_or_else(|e| panic!("bad response {line}: {e}"));
+    (
+        v.get("status").and_then(Json::as_str).unwrap_or("?").to_string(),
+        v.get("error").and_then(Json::as_str).map(str::to_string),
+    )
+}
+
+#[test]
+fn health_and_metrics_respond() {
+    let (addr, handle) = start(ServeOptions::default());
+    let lines = drive(addr, &["GET /health", "{\"cmd\":\"metrics\"}"]);
+    assert_eq!(lines.len(), 2);
+    let h = parse_json(&lines[0]).expect("health");
+    assert_eq!(h.get("status").and_then(Json::as_str), Some("ok"));
+    assert!(h.get("uptime_secs").and_then(Json::as_f64).is_some());
+    let m = parse_json(&lines[1]).expect("metrics");
+    for key in [
+        "received",
+        "completed",
+        "rejected",
+        "malformed",
+        "latency_p50_us",
+        "latency_p99_us",
+        "queue_depth",
+        "queue_capacity",
+        "cache_hit_rate",
+    ] {
+        assert!(m.get(key).is_some(), "metrics missing {key}: {}", lines[1]);
+    }
+    shutdown(addr, handle);
+}
+
+/// The tentpole acceptance property: a served scenario is bit-identical
+/// to a direct `Machine` compile+execute of the same (spec, seed,
+/// shards) — outputs AND the full counter set, via their digests.
+#[test]
+fn served_results_are_bit_identical_to_direct_runs() {
+    for shards in [1usize, 2] {
+        let (addr, handle) = start(ServeOptions {
+            shards,
+            ..ServeOptions::default()
+        });
+        let corpus = Corpus::builtin();
+        for (name, seed) in [
+            ("smoke/spmv-uniform-d30-4x4", 7u64),
+            ("smoke/bfs-rmat-4x4", 3),
+            ("hotspot/spmv-rmat-d20-8x8", 11),
+        ] {
+            let req = format!("{{\"scenario\":\"{name}\",\"seed\":{seed}}}");
+            let lines = drive(addr, &[&req]);
+            let v = parse_json(&lines[0]).expect("run response");
+            assert_eq!(
+                v.get("status").and_then(Json::as_str),
+                Some("ok"),
+                "{name}: {}",
+                lines[0]
+            );
+
+            // Direct run of the same (spec, seed, shards).
+            let sc = corpus.find(name).expect("scenario");
+            let spec = sc.spec(seed);
+            let eff = effective_shards(shards, sc.mesh.1);
+            let cfg = ArchConfig::nexus()
+                .with_array(sc.mesh.0, sc.mesh.1)
+                .with_shards(eff);
+            let exec = Machine::new(cfg).run(&spec).expect("direct run");
+
+            let hex = |key: &str| {
+                v.get(key)
+                    .and_then(Json::as_str)
+                    .and_then(|s| u64::from_str_radix(s.trim_start_matches("0x"), 16).ok())
+                    .unwrap_or_else(|| panic!("{name}: missing {key}"))
+            };
+            assert_eq!(
+                hex("outputs_digest"),
+                outputs_digest(&exec.outputs),
+                "{name} (shards {eff}): served outputs differ from direct run"
+            );
+            assert_eq!(
+                hex("stats_digest"),
+                stats_digest(exec.stats.as_ref().expect("stats")),
+                "{name} (shards {eff}): served counters differ from direct run"
+            );
+            assert_eq!(
+                v.get("cycles").and_then(Json::as_u64),
+                Some(exec.cycles()),
+                "{name}"
+            );
+            assert_eq!(
+                v.get("shards").and_then(Json::as_u64),
+                Some(eff as u64),
+                "{name}"
+            );
+            assert_eq!(v.get("validated").and_then(Json::as_bool), Some(true));
+        }
+        shutdown(addr, handle);
+    }
+}
+
+/// Inline specs are served deterministically too, and repeating the same
+/// request is a compile-cache hit with an identical digest.
+#[test]
+fn inline_specs_repeat_identically_with_cache_hits() {
+    let (addr, handle) = start(ServeOptions::default());
+    let req = "{\"spec\":{\"kernel\":\"spmv\",\"source\":\"hotspot\",\"n\":32,\
+               \"density\":0.2,\"mesh\":[4,4]},\"seed\":5}";
+    let lines = drive(addr, &[req, req, req]);
+    assert_eq!(lines.len(), 3);
+    let first = parse_json(&lines[0]).expect("first");
+    assert_eq!(first.get("status").and_then(Json::as_str), Some("ok"));
+    let digest = first.get("outputs_digest").and_then(Json::as_str).unwrap().to_string();
+    let mut hits = 0;
+    for line in &lines[1..] {
+        let v = parse_json(line).expect("repeat");
+        assert_eq!(
+            v.get("outputs_digest").and_then(Json::as_str),
+            Some(digest.as_str()),
+            "repeat must be bit-identical"
+        );
+        if v.get("cache").and_then(Json::as_str) == Some("hit") {
+            hits += 1;
+        }
+    }
+    assert!(hits >= 1, "repeated spec must hit the shared compile cache");
+
+    // The metrics cache block agrees: hit rate > 0.
+    let m = parse_json(&drive(addr, &["GET /metrics"])[0]).expect("metrics");
+    assert!(
+        m.get("cache_hit_rate").and_then(Json::as_f64).unwrap() > 0.0,
+        "cache hit rate must be > 0 after repeats"
+    );
+    shutdown(addr, handle);
+}
+
+#[test]
+fn protocol_edge_cases_answer_typed_errors() {
+    let (addr, handle) = start(ServeOptions {
+        max_line_bytes: 512,
+        ..ServeOptions::default()
+    });
+    let oversized = format!("{{\"scenario\":\"{}\"}}", "x".repeat(600));
+    let cases = [
+        ("{oops", "malformed"),
+        ("{\"scenario\":\"no/such-scenario\"}", "unknown_scenario"),
+        (oversized.as_str(), "oversized"),
+        ("[1,2,3]", "bad_request"),
+        ("{\"cmd\":\"explode\"}", "bad_request"),
+        ("{\"spec\":{\"kernel\":\"dense-gemm\"}}", "bad_request"),
+    ];
+    let requests: Vec<&str> = cases.iter().map(|(req, _)| *req).collect();
+    let lines = drive(addr, &requests);
+    assert_eq!(lines.len(), cases.len(), "one response per bad request");
+    for ((req, want), line) in cases.iter().zip(&lines) {
+        let (st, err) = status(line);
+        assert_eq!(st, "error", "{req} -> {line}");
+        assert_eq!(err.as_deref(), Some(*want), "{req} -> {line}");
+    }
+    // The connection (and server) survives all of it.
+    let ok = drive(addr, &["{\"scenario\":\"smoke/spmv-uniform-d30-4x4\"}"]);
+    assert_eq!(status(&ok[0]).0, "ok");
+    shutdown(addr, handle);
+}
+
+/// Overload: a burst beyond queue capacity on a single-worker server is
+/// answered with immediate `overloaded` rejections — every request gets
+/// exactly one response, nothing is dropped.
+#[test]
+fn overload_burst_is_rejected_not_dropped() {
+    let (addr, handle) = start(ServeOptions {
+        workers: 1,
+        queue_capacity: 1,
+        ..ServeOptions::default()
+    });
+    let req = "{\"scenario\":\"hotspot/spmv-rmat-d20-8x8\",\"seed\":1}";
+    let requests: Vec<&str> = vec![req; 40];
+    let lines = drive(addr, &requests);
+    assert_eq!(lines.len(), 40, "every request must be answered");
+    let (mut ok, mut overloaded) = (0, 0);
+    for line in &lines {
+        match status(line) {
+            (st, _) if st == "ok" => ok += 1,
+            (st, Some(e)) if st == "error" && e == "overloaded" => {
+                assert!(
+                    line.contains("\"error\":\"overloaded\""),
+                    "literal code required: {line}"
+                );
+                overloaded += 1;
+            }
+            other => panic!("unexpected response {other:?}: {line}"),
+        }
+    }
+    assert_eq!(ok + overloaded, 40, "answered == admitted + rejected");
+    assert!(ok >= 1, "admitted work completes");
+    assert!(
+        overloaded >= 20,
+        "a 40-deep burst into a 1-deep queue must mostly reject (got {overloaded})"
+    );
+
+    // Rejections are visible in metrics, and received == completed+rejected
+    // (no silent drops).
+    let m = parse_json(&drive(addr, &["GET /metrics"])[0]).expect("metrics");
+    let g = |k: &str| m.get(k).and_then(Json::as_u64).unwrap();
+    assert_eq!(g("received"), 40);
+    assert_eq!(g("completed") + g("rejected"), g("received"));
+    assert_eq!(g("completed"), ok as u64);
+    assert_eq!(g("rejected"), overloaded as u64);
+    shutdown(addr, handle);
+}
+
+/// Concurrent clients each get ordered, bit-identical responses.
+#[test]
+fn concurrent_clients_get_ordered_identical_results() {
+    let (addr, handle) = start(ServeOptions {
+        queue_capacity: 256,
+        ..ServeOptions::default()
+    });
+    let names = [
+        "smoke/spmv-uniform-d30-4x4",
+        "smoke/spmv-hotspot-d30-4x4",
+        "smoke/bfs-rmat-4x4",
+    ];
+    let clients: Vec<_> = (0..4)
+        .map(|_| {
+            thread::spawn(move || {
+                let requests: Vec<String> = (0..6)
+                    .map(|i| format!("{{\"scenario\":\"{}\",\"seed\":2}}", names[i % names.len()]))
+                    .collect();
+                let refs: Vec<&str> = requests.iter().map(String::as_str).collect();
+                drive(addr, &refs)
+            })
+        })
+        .collect();
+    let all: Vec<Vec<String>> = clients.into_iter().map(|h| h.join().expect("client")).collect();
+    for lines in &all {
+        assert_eq!(lines.len(), 6);
+        // Responses arrive in request order: scenario i matches names[i%3].
+        for (i, line) in lines.iter().enumerate() {
+            let v = parse_json(line).expect("response");
+            assert_eq!(
+                v.get("scenario").and_then(Json::as_str),
+                Some(names[i % names.len()]),
+                "responses must be in request order: {line}"
+            );
+            assert_eq!(v.get("status").and_then(Json::as_str), Some("ok"));
+        }
+        // And every client saw the same digests as the first client.
+        for (a, b) in lines.iter().zip(&all[0]) {
+            let (va, vb) = (parse_json(a).unwrap(), parse_json(b).unwrap());
+            assert_eq!(
+                va.get("outputs_digest").and_then(Json::as_str),
+                vb.get("outputs_digest").and_then(Json::as_str)
+            );
+            assert_eq!(
+                va.get("stats_digest").and_then(Json::as_str),
+                vb.get("stats_digest").and_then(Json::as_str)
+            );
+        }
+    }
+    shutdown(addr, handle);
+}
+
+/// Graceful shutdown: work admitted before the shutdown request is
+/// executed exactly once and its responses flush; the server then joins
+/// (the exit-0 path) with `completed == admitted`.
+#[test]
+fn graceful_shutdown_drains_inflight_work_losslessly() {
+    let (addr, handle) = start(ServeOptions {
+        workers: 2,
+        queue_capacity: 64,
+        ..ServeOptions::default()
+    });
+    const K: usize = 8;
+    let run = "{\"scenario\":\"smoke/spmv-uniform-d30-4x4\",\"seed\":4}";
+    let mut requests: Vec<&str> = vec![run; K];
+    requests.push("{\"cmd\":\"shutdown\"}");
+    let lines = drive(addr, &requests);
+
+    // All K runs answered ok (none lost to the shutdown), in order, then
+    // the shutdown ack.
+    assert_eq!(lines.len(), K + 1, "K responses + shutdown ack: {lines:?}");
+    let mut digests = std::collections::HashSet::new();
+    for line in &lines[..K] {
+        let v = parse_json(line).expect("drained response");
+        assert_eq!(
+            v.get("status").and_then(Json::as_str),
+            Some("ok"),
+            "admitted work must complete through shutdown: {line}"
+        );
+        digests.insert(
+            v.get("outputs_digest")
+                .and_then(Json::as_str)
+                .unwrap()
+                .to_string(),
+        );
+    }
+    assert_eq!(digests.len(), 1, "same request -> same digest every time");
+    let ack = parse_json(&lines[K]).expect("ack");
+    assert_eq!(ack.get("shutdown").and_then(Json::as_bool), Some(true));
+
+    // The server exits cleanly: run() returns, the thread joins.
+    handle.join().expect("server drains and joins");
+
+    // New connections are refused after shutdown.
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "listener must be closed after drain"
+    );
+}
+
+/// Requests racing a shutdown are either completed or *answered* with
+/// `shutting_down` — never silently dropped, never double-executed.
+#[test]
+fn requests_after_shutdown_are_answered_not_dropped() {
+    let (addr, handle) = start(ServeOptions::default());
+    // Connection A initiates the drain.
+    let a = drive(addr, &["{\"cmd\":\"shutdown\"}"]);
+    assert_eq!(status(&a[0]).0, "ok");
+    handle.join().expect("server joins");
+    // A fresh connection can no longer be made (the listener is gone);
+    // this is the "rejecting new requests" half of the drain contract.
+    assert!(TcpStream::connect(addr).is_err());
+}
