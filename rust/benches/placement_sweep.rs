@@ -1,0 +1,88 @@
+//! `cargo bench --bench placement_sweep` — policy search over the
+//! imbalance corpus sources: every placement × en-route claim policy
+//! combination on SpMV over uniform, R-MAT, and hotspot inputs of the same
+//! density. One machine-readable `BENCH_PLACEMENT.json` line per
+//! (source, placement, claim) cell with cycles and the per-PE committed-op
+//! imbalance metrics (`op_cv`, `op_max_mean`), plus one `best` summary line
+//! per source naming the cheapest combination — the line CI's soft gate
+//! reads to check that some non-default policy beats the default on the
+//! skewed sources without regressing the uniform one.
+
+use nexus::config::{ArchConfig, ClaimPolicy, PlacementPolicy};
+use nexus::machine::Machine;
+use nexus::tensor::gen;
+use nexus::util::json::JsonObj;
+use nexus::util::SplitMix64;
+use nexus::workloads::Spec;
+
+fn spec_for(source: &str, seed: u64) -> Spec {
+    let n = 64;
+    let density = 0.1;
+    let mut rng = SplitMix64::new(seed);
+    let a = match source {
+        "uniform" => gen::random_csr(&mut rng, n, n, density),
+        "rmat" => {
+            let target = ((n * n) as f64 * density).round() as usize;
+            gen::rmat_csr(&mut rng, n, n, target, gen::RMAT_PROBS)
+        }
+        "hotspot" => gen::hotspot_csr(&mut rng, n, n, density, 4, 0.85),
+        other => panic!("unknown source {other}"),
+    };
+    let x = gen::random_vec(&mut rng, n, 3);
+    Spec::Spmv { a, x }
+}
+
+fn main() {
+    let seed = 1u64;
+    let (w, h) = (8usize, 8usize);
+    for source in ["uniform", "rmat", "hotspot"] {
+        let spec = spec_for(source, seed);
+        let mut default_cycles = 0u64;
+        let mut best: Option<(u64, PlacementPolicy, ClaimPolicy)> = None;
+        for placement in PlacementPolicy::ALL {
+            for claim in ClaimPolicy::ALL {
+                let cfg = ArchConfig::nexus()
+                    .with_array(w, h)
+                    .with_placement(placement)
+                    .with_claim(claim);
+                let mut m = Machine::new(cfg);
+                let compiled = m.compile(&spec).expect("compile");
+                let exec = m.execute(&compiled).expect("placement sweep run");
+                assert!(
+                    exec.validated(),
+                    "{source} under {}+{} must validate",
+                    placement.name(),
+                    claim.name()
+                );
+                let stats = exec.stats.as_ref().expect("fabric stats");
+                let cycles = exec.cycles();
+                if placement == PlacementPolicy::default() && claim == ClaimPolicy::default() {
+                    default_cycles = cycles;
+                }
+                if best.map_or(true, |(c, _, _)| cycles < c) {
+                    best = Some((cycles, placement, claim));
+                }
+                let mut o = JsonObj::new();
+                o.str("bench", "placement_sweep")
+                    .str("mesh", &format!("{w}x{h}"))
+                    .str("source", source)
+                    .str("placement", placement.name())
+                    .str("claim", claim.name())
+                    .u64("cycles", cycles)
+                    .f64("op_cv", stats.op_cv(), 4)
+                    .f64("op_max_mean", stats.op_max_mean(), 4)
+                    .f64("load_cv", stats.load_cv(), 4);
+                println!("BENCH_PLACEMENT.json {}", o.build());
+            }
+        }
+        let (best_cycles, best_p, best_c) = best.expect("at least one combination ran");
+        let mut o = JsonObj::new();
+        o.str("bench", "placement_sweep_best")
+            .str("source", source)
+            .str("placement", best_p.name())
+            .str("claim", best_c.name())
+            .u64("cycles", best_cycles)
+            .u64("default_cycles", default_cycles);
+        println!("BENCH_PLACEMENT.json {}", o.build());
+    }
+}

@@ -2,8 +2,10 @@
 //! tensors into the per-PE images the fabric executes.
 //!
 //! The static compiler side — DFG construction and ASAP scheduling — lives
-//! in [`dfg`]; the data-placement side — nnz-balanced and dissimilarity-aware
-//! partitioning (Algorithm 1) — in [`partition`]. This module owns the
+//! in [`dfg`]; the data-placement side — the
+//! [`crate::config::PlacementPolicy`]-selected partitioners (nnz-balanced,
+//! dissimilarity-aware Algorithm 1, hotspot-splitting), dispatched by
+//! [`partition::place_rows`] — in [`partition`]. This module owns the
 //! output artifact: a [`Program`] of per-PE data-memory images, stream
 //! tables, trigger tables, static-AM queues, and the replicated
 //! configuration memory, produced through the [`ProgramBuilder`].

@@ -1,6 +1,7 @@
 //! Data partitioning (§3.1.1 and §3.6, Algorithm 1).
 //!
-//! Two strategies from the paper:
+//! Three row → PE strategies, selectable at compile time via
+//! [`PlacementPolicy`] (see [`place_rows`]):
 //!
 //! - **nnz-balanced row partitioning**: split a CSR matrix's rows into `N`
 //!   contiguous groups such that each group holds ≈ `nnz/N` nonzeros,
@@ -11,12 +12,28 @@
 //!   bank sets cluster onto the same PE (their accesses serialize locally
 //!   instead of contending), while dissimilar rows spread out. We implement
 //!   the clustering step greedily: seeds are picked far apart by bank-set
-//!   distance, rows join the nearest under-capacity cluster.
+//!   distance, rows join the nearest under-capacity cluster. The default.
+//! - **hotspot splitting** ([`hotspot_split`]): greedy LPT scheduling of
+//!   rows by descending nnz onto the lightest PE, spreading heavy rows
+//!   (power-law hubs, hotspot blocks) across the fabric — the degree-aware
+//!   placement DCRA uses for irregular applications.
 //!
 //! Dense 1-D tensors are partitioned into contiguous equal blocks aligned
 //!   with the matrix partition ("Y and Z are partitioned correspondingly").
 
+use crate::config::PlacementPolicy;
 use crate::tensor::Csr;
+
+/// Row → PE mapping under the selected [`PlacementPolicy`]. `banks` feeds
+/// the dissimilarity policy's bank-set signatures and is ignored by the
+/// other two.
+pub fn place_rows(m: &Csr, parts: usize, banks: usize, policy: PlacementPolicy) -> Vec<usize> {
+    match policy {
+        PlacementPolicy::NnzBalanced => nnz_balanced(m, parts),
+        PlacementPolicy::DissimilarityAware => dissimilarity_aware(m, parts, banks),
+        PlacementPolicy::HotspotSplit => hotspot_split(m, parts),
+    }
+}
 
 /// Contiguous nnz-balanced row partition: returns `part[r] in [0, parts)`,
 /// non-decreasing in `r`, with each part's nonzero total ≈ `nnz/parts`.
@@ -103,20 +120,42 @@ pub fn dissimilarity_aware(m: &Csr, parts: usize, banks: usize) -> Vec<usize> {
         load[k] = nnz[s];
     }
     // Assign remaining rows, heaviest first (greedy bin packing): nearest
-    // cluster by bank distance among those under capacity; ties broken by
-    // lighter load.
+    // cluster by bank distance among those whose load would stay within the
+    // nnz budget; ties broken by lighter load. Seedless clusters (only when
+    // `parts > m.rows`) have no bank signature to compare against, so they
+    // compete on load alone, behind every seeded cluster.
     let mut order: Vec<usize> = (0..m.rows).filter(|&r| part[r] == usize::MAX).collect();
     order.sort_unstable_by_key(|&r| std::cmp::Reverse(nnz[r]));
     for r in order {
         let k = (0..parts)
-            .filter(|&k| load[k] + nnz[r] <= cap + nnz[r].min(cap)) // soft cap
-            .min_by_key(|&k| {
-                let d = bank_distance(sets[r], sets[seeds[k.min(seeds.len() - 1)]]);
-                (d, load[k])
+            .filter(|&k| load[k] + nnz[r] <= cap) // hard nnz budget
+            .min_by_key(|&k| match seeds.get(k) {
+                Some(&s) => (bank_distance(sets[r], sets[s]), load[k]),
+                None => (u32::MAX, load[k]),
             })
+            // Every cluster full: fall back to the lightest, overshooting
+            // by at most this one row (the documented ±1-row bound).
             .unwrap_or_else(|| (0..parts).min_by_key(|&k| load[k]).unwrap());
         part[r] = k;
         load[k] += nnz[r];
+    }
+    part
+}
+
+/// Greedy LPT (longest-processing-time) row → PE mapping: rows sorted by
+/// descending nnz, each assigned to the currently lightest PE (ties to the
+/// lowest PE index). Spreads heavy rows — power-law hubs, hotspot blocks —
+/// across the fabric, bounding any PE's load at `ideal + max_row_nnz`.
+pub fn hotspot_split(m: &Csr, parts: usize) -> Vec<usize> {
+    assert!(parts > 0);
+    let mut order: Vec<usize> = (0..m.rows).collect();
+    order.sort_unstable_by_key(|&r| std::cmp::Reverse(m.row_nnz(r)));
+    let mut part = vec![0usize; m.rows];
+    let mut load = vec![0usize; parts];
+    for r in order {
+        let k = (0..parts).min_by_key(|&k| load[k]).unwrap();
+        part[r] = k;
+        load[k] += m.row_nnz(r);
     }
     part
 }
@@ -190,6 +229,126 @@ mod tests {
             ensure(part.len() == rows, || "length".into())?;
             ensure(part.iter().all(|&p| p < parts), || "range".into())
         });
+    }
+
+    /// Regression for the vacuous "soft cap": the old filter
+    /// `load[k] + nnz[r] <= cap + nnz[r].min(cap)` reduced to
+    /// `load[k] <= cap`, so a full cluster could absorb a whole extra heavy
+    /// row. Two identical heavy rows plus one empty row: the heavy rows
+    /// share a bank set, so bank distance pulls the second heavy row onto
+    /// the first's cluster — the old code let it in (one part at 2H), the
+    /// hard budget forces it to the empty-seeded part (both parts at H).
+    #[test]
+    fn dissimilarity_respects_nnz_budget_on_tied_heavy_rows() {
+        let h = 4usize;
+        let m = Csr::from_triplets(3, 8, (0..h).flat_map(|c| [(0, c, 1i16), (1, c, 1i16)]));
+        assert_eq!(m.nnz(), 2 * h);
+        let part = dissimilarity_aware(&m, 2, 8);
+        assert_ne!(part[0], part[1], "heavy rows must split across parts");
+        assert_eq!(max_part_nnz(&m, &part, 2), h, "each part holds one heavy row");
+    }
+
+    /// The documented ±1-row bound, as a property: no cluster exceeds the
+    /// nnz budget `cap` by a full row, i.e. worst < cap + max_row_nnz.
+    #[test]
+    fn dissimilarity_bounds_overshoot_to_less_than_one_row() {
+        forall(100, |rng| {
+            let rows = 1 + rng.below_usize(60);
+            let m = gen::skewed_csr(rng, rows, 32, 0.3);
+            let parts = 1 + rng.below_usize(16);
+            let part = dissimilarity_aware(&m, parts, 8);
+            let cap = (m.nnz() + parts - 1) / parts;
+            let max_nnz = (0..rows).map(|r| m.row_nnz(r)).max().unwrap_or(0);
+            let worst = max_part_nnz(&m, &part, parts);
+            if m.nnz() == 0 {
+                ensure(worst == 0, || "zero-nnz matrix must have zero loads".into())
+            } else {
+                ensure(worst < cap + max_nnz, || {
+                    format!("worst {worst} >= cap {cap} + max row {max_nnz}")
+                })
+            }
+        });
+    }
+
+    /// Regression for the wrong-seed distance `seeds[k.min(seeds.len()-1)]`:
+    /// with `rows < parts` every row is its own seed, and clusters beyond
+    /// `seeds.len()` have no signature to compare against. The defect was
+    /// latent (the greedy loop body is empty exactly when seedless clusters
+    /// exist), so this pins the intended behavior: each row keeps its own
+    /// distinct in-range cluster and seedless clusters stay empty.
+    #[test]
+    fn dissimilarity_with_fewer_rows_than_parts_keeps_rows_on_own_seeds() {
+        let m = Csr::from_triplets(3, 8, [(0, 0, 1i16), (1, 3, 2i16), (2, 6, 3i16)]);
+        let parts = 8;
+        let part = dissimilarity_aware(&m, parts, 8);
+        assert_eq!(part.len(), 3);
+        assert!(part.iter().all(|&p| p < parts));
+        assert_ne!(part[0], part[1]);
+        assert_ne!(part[0], part[2]);
+        assert_ne!(part[1], part[2]);
+    }
+
+    #[test]
+    fn nnz_balanced_never_leaves_a_part_empty_when_rows_suffice() {
+        forall(100, |rng| {
+            let parts = 1 + rng.below_usize(16);
+            let rows = parts + rng.below_usize(60);
+            // Exercise degenerate distributions too: all-zero matrices and
+            // a single heavy row among empties.
+            let m = match rng.below_usize(3) {
+                0 => gen::skewed_csr(rng, rows, 32, 0.3),
+                1 => Csr::zero(rows, 32),
+                _ => {
+                    let r = rng.below_usize(rows);
+                    Csr::from_triplets(rows, 32, (0..16).map(|c| (r, c, 1i16)))
+                }
+            };
+            let part = nnz_balanced(&m, parts);
+            let mut seen = vec![false; parts];
+            for &p in &part {
+                seen[p] = true;
+            }
+            ensure(seen.iter().all(|&s| s), || {
+                format!("empty part with {rows} rows over {parts} parts")
+            })
+        });
+    }
+
+    #[test]
+    fn hotspot_split_spreads_heavy_rows() {
+        forall(50, |rng| {
+            let rows = 1 + rng.below_usize(60);
+            let m = gen::skewed_csr(rng, rows, 32, 0.3);
+            let parts = 1 + rng.below_usize(16);
+            let part = hotspot_split(&m, parts);
+            ensure(part.len() == rows, || "length".into())?;
+            ensure(part.iter().all(|&p| p < parts), || "range".into())?;
+            // LPT's makespan bound: no PE exceeds ideal + one row.
+            let max_nnz = (0..rows).map(|r| m.row_nnz(r)).max().unwrap_or(0);
+            let worst = max_part_nnz(&m, &part, parts);
+            ensure(worst <= m.nnz() / parts + max_nnz, || {
+                format!("LPT bound violated: {worst}")
+            })
+        });
+    }
+
+    #[test]
+    fn place_rows_dispatches_per_policy() {
+        let mut rng = SplitMix64::new(11);
+        let m = gen::hotspot_csr(&mut rng, 48, 48, 0.2, 4, 0.85);
+        for policy in PlacementPolicy::ALL {
+            let part = place_rows(&m, 8, 8, policy);
+            assert_eq!(part.len(), m.rows);
+            assert!(part.iter().all(|&p| p < 8));
+        }
+        assert_eq!(
+            place_rows(&m, 8, 8, PlacementPolicy::DissimilarityAware),
+            dissimilarity_aware(&m, 8, 8),
+        );
+        assert_eq!(
+            place_rows(&m, 8, 8, PlacementPolicy::HotspotSplit),
+            hotspot_split(&m, 8),
+        );
     }
 
     #[test]

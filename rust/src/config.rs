@@ -123,6 +123,105 @@ impl TopologyKind {
     }
 }
 
+/// Data-placement (row → PE mapping) policy used by the compile path for
+/// the row-partitioned sparse workloads (SpMV, SpMSpM's A operand). See
+/// [`crate::compiler::partition`] for the algorithms.
+///
+/// Placement is a *compile-time* choice: it changes which PE owns each row
+/// (and hence the static-AM program), so it is part of the compile-cache
+/// key ([`crate::machine::cache::config_tag`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum PlacementPolicy {
+    /// Contiguous nnz-balanced row split (§3.1.1; linear scan).
+    NnzBalanced,
+    /// Algorithm 1's dissimilarity-aware clustering: rows with similar
+    /// bank-access sets share a PE under an nnz capacity bound (default;
+    /// bit-identical to the pre-policy compiler).
+    #[default]
+    DissimilarityAware,
+    /// Degree/nnz-aware hotspot splitting (DCRA-style): rows sorted by
+    /// descending nnz, each assigned to the currently lightest PE (greedy
+    /// LPT), spreading heavy rows across the fabric.
+    HotspotSplit,
+}
+
+impl PlacementPolicy {
+    /// All variants, in CLI/report order.
+    pub const ALL: [PlacementPolicy; 3] = [
+        PlacementPolicy::NnzBalanced,
+        PlacementPolicy::DissimilarityAware,
+        PlacementPolicy::HotspotSplit,
+    ];
+
+    /// CLI / report name (`--placement <name>`).
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementPolicy::NnzBalanced => "nnz-balanced",
+            PlacementPolicy::DissimilarityAware => "dissimilarity",
+            PlacementPolicy::HotspotSplit => "hotspot-split",
+        }
+    }
+
+    /// Parse a CLI name (as printed by [`PlacementPolicy::name`]).
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|p| p.name() == s)
+    }
+}
+
+/// En-route claim policy: when an idle PE's router holds a ready AM flit,
+/// which (if any) flit does the PE claim for en-route execution this cycle?
+///
+/// Claiming is a *runtime* choice — it never changes the compiled program,
+/// only the dynamic schedule — so it is not part of the compile-cache key.
+/// All policies are deterministic and step-mode/shard invariant: they read
+/// only per-cycle router state (plus, for [`ClaimPolicy::CreditBased`],
+/// per-PE state that mutates *only at claim events*), so active-set and
+/// dense-oracle stepping stay bit-identical under every policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ClaimPolicy {
+    /// Claim the first ready flit in cycle-rotated port order (default;
+    /// bit-identical to the pre-policy fabric).
+    #[default]
+    Eager,
+    /// Among all ready flits, claim the one farthest from its destination
+    /// (by topology hop distance): far-from-home flits gain the most from
+    /// en-route execution, nearly-home flits ride to their owner PE.
+    LocalityBiased,
+    /// Rate-limit claims per PE: a PE claims at most one flit every
+    /// [`ArchConfig::claim_credit_period`] cycles, spreading en-route work
+    /// across more PEs instead of letting hot routers monopolize it.
+    CreditBased,
+    /// Congestion-gated stealing: claim only when the router's total input
+    /// occupancy is at least [`ArchConfig::claim_steal_threshold`] flits,
+    /// so lightly-loaded routers let traffic flow through untouched.
+    StealK,
+}
+
+impl ClaimPolicy {
+    /// All variants, in CLI/report order.
+    pub const ALL: [ClaimPolicy; 4] = [
+        ClaimPolicy::Eager,
+        ClaimPolicy::LocalityBiased,
+        ClaimPolicy::CreditBased,
+        ClaimPolicy::StealK,
+    ];
+
+    /// CLI / report name (`--claim <name>`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ClaimPolicy::Eager => "eager",
+            ClaimPolicy::LocalityBiased => "locality",
+            ClaimPolicy::CreditBased => "credit",
+            ClaimPolicy::StealK => "steal",
+        }
+    }
+
+    /// Parse a CLI name (as printed by [`ClaimPolicy::name`]).
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|p| p.name() == s)
+    }
+}
+
 /// NoC routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutingPolicy {
@@ -210,6 +309,20 @@ pub struct ArchConfig {
     /// clamped to `shards`). `1` steps every shard on the caller's thread;
     /// any value yields bit-identical results for a fixed shard count.
     pub threads: usize,
+    /// Data-placement policy for row-partitioned sparse workloads
+    /// (compile-time; part of the compile-cache key). See
+    /// [`PlacementPolicy`].
+    pub placement: PlacementPolicy,
+    /// En-route claim policy (runtime-only schedule choice). See
+    /// [`ClaimPolicy`]. Ignored when `exec` is
+    /// [`ExecPolicy::DestinationOnly`].
+    pub claim: ClaimPolicy,
+    /// Minimum cycles between en-route claims per PE for
+    /// [`ClaimPolicy::CreditBased`] (ignored otherwise).
+    pub claim_credit_period: u64,
+    /// Minimum router input occupancy (flits across all input buffers)
+    /// before a PE claims for [`ClaimPolicy::StealK`] (ignored otherwise).
+    pub claim_steal_threshold: usize,
 }
 
 impl ArchConfig {
@@ -241,6 +354,10 @@ impl ArchConfig {
             inter_chiplet_latency: 4,
             shards: 1,
             threads: 1,
+            placement: PlacementPolicy::DissimilarityAware,
+            claim: ClaimPolicy::Eager,
+            claim_credit_period: 4,
+            claim_steal_threshold: 2,
         }
     }
 
@@ -337,6 +454,21 @@ impl ArchConfig {
         self
     }
 
+    /// Override the data-placement policy ([`PlacementPolicy`]). Changes
+    /// the compiled row → PE mapping for SpMV / SpMSpM-A; all other
+    /// workloads keep their structural partitions.
+    pub fn with_placement(mut self, placement: PlacementPolicy) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    /// Override the en-route claim policy ([`ClaimPolicy`]). Runtime-only:
+    /// the compiled program is unchanged, only the dynamic schedule moves.
+    pub fn with_claim(mut self, claim: ClaimPolicy) -> Self {
+        self.claim = claim;
+        self
+    }
+
     /// Number of PEs in the fabric.
     #[inline]
     pub fn num_pes(&self) -> usize {
@@ -391,6 +523,12 @@ impl ArchConfig {
         }
         if self.threads == 0 {
             return Err("thread count must be >= 1".into());
+        }
+        if self.claim == ClaimPolicy::CreditBased && self.claim_credit_period == 0 {
+            return Err("credit-based claim period must be >= 1 cycle".into());
+        }
+        if self.claim == ClaimPolicy::StealK && self.claim_steal_threshold == 0 {
+            return Err("steal-K claim threshold must be >= 1 flit".into());
         }
         match self.topology {
             TopologyKind::Mesh2D | TopologyKind::Torus2D => {}
@@ -492,6 +630,42 @@ mod tests {
             .with_shards(3)
             .validate()
             .unwrap();
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in PlacementPolicy::ALL {
+            assert_eq!(PlacementPolicy::parse(p.name()), Some(p));
+        }
+        for c in ClaimPolicy::ALL {
+            assert_eq!(ClaimPolicy::parse(c.name()), Some(c));
+        }
+        assert_eq!(PlacementPolicy::parse("round-robin"), None);
+        assert_eq!(ClaimPolicy::parse("greedy"), None);
+        // Defaults are bit-identical to the pre-policy simulator.
+        assert_eq!(PlacementPolicy::default(), PlacementPolicy::DissimilarityAware);
+        assert_eq!(ClaimPolicy::default(), ClaimPolicy::Eager);
+        assert_eq!(ArchConfig::nexus().placement, PlacementPolicy::DissimilarityAware);
+        assert_eq!(ArchConfig::nexus().claim, ClaimPolicy::Eager);
+    }
+
+    #[test]
+    fn claim_knobs_validated() {
+        ArchConfig::nexus()
+            .with_claim(ClaimPolicy::CreditBased)
+            .validate()
+            .unwrap();
+        let mut c = ArchConfig::nexus().with_claim(ClaimPolicy::CreditBased);
+        c.claim_credit_period = 0;
+        assert!(c.validate().is_err());
+        let mut c = ArchConfig::nexus().with_claim(ClaimPolicy::StealK);
+        c.claim_steal_threshold = 0;
+        assert!(c.validate().is_err());
+        // The knobs are ignored (and unvalidated) under other policies.
+        let mut c = ArchConfig::nexus();
+        c.claim_credit_period = 0;
+        c.claim_steal_threshold = 0;
+        c.validate().unwrap();
     }
 
     #[test]

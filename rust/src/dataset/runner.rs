@@ -10,7 +10,7 @@
 //! exactly which scenarios broke.
 
 use super::corpus::Scenario;
-use crate::config::{StepMode, TopologyKind};
+use crate::config::{ClaimPolicy, PlacementPolicy, StepMode, TopologyKind};
 use crate::machine::{Machine, MachinePool};
 use crate::noc::{build_topology, LINKS_PER_PE};
 use crate::noc::routing::Dir;
@@ -34,6 +34,11 @@ pub struct RunOptions {
     /// Worker threads per simulation (`--threads`; host-side only, results
     /// are bit-identical at any thread count for a fixed shard count).
     pub threads: usize,
+    /// Data-placement policy (`--placement`; compile-time row → PE
+    /// mapping for the row-partitioned kernels).
+    pub placement: PlacementPolicy,
+    /// En-route claim policy (`--claim`; runtime schedule choice).
+    pub claim: ClaimPolicy,
 }
 
 impl Default for RunOptions {
@@ -44,6 +49,8 @@ impl Default for RunOptions {
             topology: TopologyKind::Mesh2D,
             shards: 1,
             threads: 1,
+            placement: PlacementPolicy::default(),
+            claim: ClaimPolicy::default(),
         }
     }
 }
@@ -96,6 +103,10 @@ pub struct ScenarioRun {
     /// Shard count the run actually used ([`effective_shards`] of the
     /// requested `--shards` for this scenario's mesh height).
     pub shards: usize,
+    /// Placement-policy name the run compiled with (`--placement`).
+    pub placement: &'static str,
+    /// En-route claim-policy name the run executed with (`--claim`).
+    pub claim_policy: &'static str,
     pub seed: u64,
     /// Content fingerprint of the scenario's tensors (compile-cache key).
     pub fingerprint: u64,
@@ -116,6 +127,8 @@ impl ScenarioRun {
             .str("mesh", &self.mesh)
             .str("topology", self.topology)
             .u64("shards", self.shards as u64)
+            .str("placement", self.placement)
+            .str("claim_policy", self.claim_policy)
             .u64("seed", self.seed)
             .hex("fingerprint", self.fingerprint);
         match &self.outcome {
@@ -194,7 +207,9 @@ fn run_one(
         .with_topology(opts.topology)
         .with_step_mode(opts.step_mode)
         .with_shards(shards)
-        .with_threads(opts.threads);
+        .with_threads(opts.threads)
+        .with_placement(opts.placement)
+        .with_claim(opts.claim);
     let m = machines
         .entry(sc.mesh)
         .or_insert_with(|| Machine::new(cfg.clone()));
@@ -241,6 +256,8 @@ fn run_one(
         mesh: sc.mesh_name(),
         topology: opts.topology.name(),
         shards,
+        placement: opts.placement.name(),
+        claim_policy: opts.claim.name(),
         seed: opts.seed,
         fingerprint,
         outcome,
@@ -308,6 +325,8 @@ mod tests {
             mesh: "8x8".to_string(),
             topology: "mesh",
             shards: 2,
+            placement: "dissimilarity",
+            claim_policy: "eager",
             seed: 7,
             fingerprint: 0xdead_beef,
             outcome: Err("tab\there \"and\" newline\nthere".to_string()),
@@ -345,6 +364,8 @@ mod tests {
                     assert!(line.contains("\"status\":\"ok\""), "{line}");
                     assert!(line.contains("\"topology\":\"mesh\""), "{line}");
                     assert!(line.contains("\"shards\":1"), "{line}");
+                    assert!(line.contains("\"placement\":\"dissimilarity\""), "{line}");
+                    assert!(line.contains("\"claim_policy\":\"eager\""), "{line}");
                     assert!(line.contains("\"peak_link_demand\":"), "{line}");
                     assert!(line.contains("\"peak_link_gbps\":"), "{line}");
                     assert!(
@@ -391,6 +412,54 @@ mod tests {
             );
             let line = run.json_line();
             assert!(line.contains("\"topology\":\"torus\""), "{line}");
+        }
+    }
+
+    #[test]
+    fn every_policy_combination_validates_on_smoke_scenarios() {
+        // The tentpole's safety net: all placement x claim combinations
+        // must still produce bit-exact validated outputs on the smoke
+        // corpus (the sweep bench only compares *validated* runs).
+        let corpus = Corpus::builtin();
+        let smoke = corpus.filter("smoke/spmv-*");
+        assert!(!smoke.is_empty());
+        for placement in PlacementPolicy::ALL {
+            for claim in ClaimPolicy::ALL {
+                let runs = run_corpus(
+                    &smoke,
+                    RunOptions {
+                        placement,
+                        claim,
+                        ..RunOptions::default()
+                    },
+                );
+                for run in &runs {
+                    let m = run.outcome.as_ref().unwrap_or_else(|e| {
+                        panic!(
+                            "{} failed under {}/{}: {e}",
+                            run.scenario,
+                            placement.name(),
+                            claim.name()
+                        )
+                    });
+                    assert!(
+                        m.validated,
+                        "{} not validated under {}/{}",
+                        run.scenario,
+                        placement.name(),
+                        claim.name()
+                    );
+                    let line = run.json_line();
+                    assert!(
+                        line.contains(&format!("\"placement\":\"{}\"", placement.name())),
+                        "{line}"
+                    );
+                    assert!(
+                        line.contains(&format!("\"claim_policy\":\"{}\"", claim.name())),
+                        "{line}"
+                    );
+                }
+            }
         }
     }
 

@@ -1278,6 +1278,7 @@ impl FabricView<'_> {
             }
             mix(&mut h, pe.trigger_wait);
             mix(&mut h, u64::from(pe.alu_busy) | (u64::from(pe.decode_busy) << 1));
+            mix(&mut h, pe.last_claim_cycle.map_or(u64::MAX, |c| c.wrapping_add(1)));
             for m in pe.inbox.iter().chain(pe.local_redo.iter()) {
                 mix_msg(&mut h, m);
             }

@@ -33,7 +33,7 @@
 //! synchronizes on.
 
 use crate::am::Message;
-use crate::config::{ArchConfig, ExecPolicy, RoutingPolicy, StepMode, TopologyKind};
+use crate::config::{ArchConfig, ClaimPolicy, ExecPolicy, RoutingPolicy, StepMode, TopologyKind};
 use crate::isa::{alu_eval, ConfigEntry, Opcode};
 use crate::noc::router::{PortSnap, Router, MAX_PORTS, PORT_LOCAL};
 use crate::noc::routing::Dir;
@@ -572,6 +572,14 @@ impl ShardCtx<'_> {
     /// In-Network Computing (§3.1.3): a PE whose ALU is idle executes the
     /// head flit of one of its router's input ports, if that flit carries an
     /// ALU-class opcode with both operands resolved to values.
+    ///
+    /// *Which* ready flit (if any) gets claimed is the [`ClaimPolicy`]: a
+    /// runtime schedule choice that must stay invariant across step modes.
+    /// Active-set stepping only visits routers holding flits while the
+    /// dense oracle visits every PE, so a policy may read per-cycle router
+    /// state freely but may mutate per-PE policy state **only at a claim**
+    /// (claims happen identically in both modes); anything regenerating
+    /// per-cycle would diverge.
     fn enroute_phase(&mut self, id: usize) {
         let i = id - self.shard.base;
         if self.pes[i].alu_busy
@@ -580,34 +588,80 @@ impl ShardCtx<'_> {
         {
             return;
         }
+        match self.cfg.claim {
+            ClaimPolicy::CreditBased => {
+                // One claim per credit period per PE: read-only unless the
+                // claim lands (last_claim_cycle is written in claim_port).
+                let ok = match self.pes[i].last_claim_cycle {
+                    None => true,
+                    Some(last) => self.cycle - last >= self.cfg.claim_credit_period,
+                };
+                if !ok {
+                    return;
+                }
+            }
+            ClaimPolicy::StealK => {
+                // Congestion gate: only buffered flits count (staged flits
+                // land at commit, after every phase, in both step modes).
+                let occ: usize = self.routers[i].inputs.iter().map(|b| b.len()).sum();
+                if occ < self.cfg.claim_steal_threshold {
+                    return;
+                }
+            }
+            ClaimPolicy::Eager | ClaimPolicy::LocalityBiased => {}
+        }
         let start = (self.cycle as usize) % self.nports;
+        let mut pick: Option<(usize, usize)> = None; // (port, distance-to-home)
         for k in 0..self.nports {
             let p = (start + k) % self.nports;
-            let ready = self.routers[i].inputs[p]
-                .head_msg()
-                .map(|m| m.alu_ready() && m.head_dest() != Some(id as u16))
-                .unwrap_or(false);
-            if !ready {
+            let Some(m) = self.routers[i].inputs[p].head_msg() else {
+                continue;
+            };
+            if !m.alu_ready() || m.head_dest() == Some(id as u16) {
                 continue;
             }
-            let entry_pc = self.routers[i].inputs[p].head_msg().unwrap().n_pc;
-            let entry = self.config_entry(entry_pc);
-            let m = self.routers[i].inputs[p].head_msg_mut().unwrap();
-            let v = alu_eval(m.opcode, m.op1, m.op2);
-            m.morph(v, &entry);
-            m.executed_enroute = true;
-            self.routers[i].locked_port = Some(p);
-            self.pes[i].alu_busy = true;
-            // The claim must reach this cycle's commit pass (to latch the
-            // busy flag into stats and clear it), so the PE joins the
-            // wake-list even if it holds no messages of its own.
-            self.shard.awake_pes.wake(id);
-            self.pes[i].stats.enroute_ops += 1;
-            self.shard.stats.alu_ops += 1;
-            self.shard.stats.enroute_ops += 1;
-            self.shard.stats.config_reads += 1;
-            return;
+            if self.cfg.claim != ClaimPolicy::LocalityBiased {
+                // First ready flit in rotated port order wins.
+                self.claim_port(id, p);
+                return;
+            }
+            // Locality-biased: scan all ready heads, claim the flit with
+            // the longest remaining trip (rotated order breaks ties), since
+            // far-from-home flits gain the most from executing here.
+            let d = m
+                .route_target()
+                .map(|t| self.topo.distance(id, t as usize))
+                .unwrap_or(0);
+            if pick.map(|(_, best)| d > best).unwrap_or(true) {
+                pick = Some((p, d));
+            }
         }
+        if let Some((p, _)) = pick {
+            self.claim_port(id, p);
+        }
+    }
+
+    /// Commit an en-route claim of router `id`'s input port `p`: morph the
+    /// head flit in place, lock the port for this cycle, and charge stats.
+    fn claim_port(&mut self, id: usize, p: usize) {
+        let i = id - self.shard.base;
+        let entry_pc = self.routers[i].inputs[p].head_msg().unwrap().n_pc;
+        let entry = self.config_entry(entry_pc);
+        let m = self.routers[i].inputs[p].head_msg_mut().unwrap();
+        let v = alu_eval(m.opcode, m.op1, m.op2);
+        m.morph(v, &entry);
+        m.executed_enroute = true;
+        self.routers[i].locked_port = Some(p);
+        self.pes[i].alu_busy = true;
+        self.pes[i].last_claim_cycle = Some(self.cycle);
+        // The claim must reach this cycle's commit pass (to latch the
+        // busy flag into stats and clear it), so the PE joins the
+        // wake-list even if it holds no messages of its own.
+        self.shard.awake_pes.wake(id);
+        self.pes[i].stats.enroute_ops += 1;
+        self.shard.stats.alu_ops += 1;
+        self.shard.stats.enroute_ops += 1;
+        self.shard.stats.config_reads += 1;
     }
 
     // --- phase 3: routing ---------------------------------------------------

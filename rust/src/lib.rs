@@ -122,6 +122,23 @@
 //! `cargo bench --bench corpus` compares uniform vs R-MAT vs hotspot
 //! inputs at 8×8/16×16.
 //!
+//! ## Placement & claim policies
+//!
+//! The two anti-imbalance levers are runtime-selectable policies on
+//! [`ArchConfig`]: [`config::PlacementPolicy`] picks the row→PE
+//! partitioner ([`compiler::partition::place_rows`] — Algorithm 1's
+//! dissimilarity-aware clustering by default, plain nnz-balancing, or
+//! hotspot-splitting that scatters the heaviest rows), and
+//! [`config::ClaimPolicy`] decides when a PE claims a buffered en-route
+//! AM (eager, locality-biased, credit-gated, or steal-K). Placement is a
+//! compile-time choice (part of the compile-cache key); claim policies
+//! are runtime-only, so one compiled artifact serves all of them. Both
+//! are inside the bit-identity contract: every combination passes the
+//! active-vs-dense and sharded lockstep-digest equivalence suites. CLI:
+//! `--placement` / `--claim` on `corpus run` and `validate`;
+//! `cargo bench --bench placement_sweep` grids policy × input source
+//! (`BENCH_PLACEMENT.json`).
+//!
 //! ## Serving
 //!
 //! `nexus serve --addr 127.0.0.1:7077 --workers N` runs the simulator as

@@ -130,6 +130,12 @@ pub fn config_tag(cfg: &ArchConfig) -> u64 {
     for b in cfg.kind.name().bytes() {
         u(b as u64);
     }
+    // Placement changes the row -> PE mapping and hence the compiled
+    // static-AM program; claim policy is runtime-only and deliberately
+    // excluded (all claim policies share one artifact).
+    for b in cfg.placement.name().bytes() {
+        u(b as u64);
+    }
     h
 }
 
@@ -259,6 +265,20 @@ mod tests {
         let b = config_tag(&ArchConfig::nexus().with_array(8, 8));
         assert_ne!(a, b);
         assert_eq!(a, config_tag(&ArchConfig::nexus()));
+    }
+
+    #[test]
+    fn config_tag_covers_placement_but_not_claim() {
+        use crate::config::{ClaimPolicy, PlacementPolicy};
+        let base = config_tag(&ArchConfig::nexus());
+        for p in PlacementPolicy::ALL {
+            let t = config_tag(&ArchConfig::nexus().with_placement(p));
+            assert_eq!(t == base, p == PlacementPolicy::default());
+        }
+        // Claim is a runtime schedule choice: same compiled artifact.
+        for c in ClaimPolicy::ALL {
+            assert_eq!(base, config_tag(&ArchConfig::nexus().with_claim(c)));
+        }
     }
 
     #[test]

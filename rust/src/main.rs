@@ -4,7 +4,7 @@
 //! the cycle-accurate simulator, validates the fabric against software
 //! references and the XLA golden models, and exposes one-off runs.
 
-use nexus::config::{ArchConfig, StepMode, TopologyKind};
+use nexus::config::{ArchConfig, ClaimPolicy, PlacementPolicy, StepMode, TopologyKind};
 use nexus::coordinator::{self, report};
 use nexus::dataset::RunOptions;
 
@@ -54,12 +54,52 @@ fn main() {
         },
     };
 
+    // Data placement: dissimilarity-aware unless
+    // `--placement <nnz-balanced|dissimilarity|hotspot-split>`.
+    let placement = match args
+        .iter()
+        .position(|a| a == "--placement")
+        .and_then(|i| args.get(i + 1))
+    {
+        None => PlacementPolicy::default(),
+        Some(name) => match PlacementPolicy::parse(name) {
+            Some(p) => p,
+            None => {
+                eprintln!(
+                    "unknown placement '{name}' (use: {})",
+                    PlacementPolicy::ALL.map(|p| p.name()).join("|")
+                );
+                std::process::exit(2);
+            }
+        },
+    };
+    // En-route claiming: eager unless `--claim <eager|locality|credit|steal>`.
+    let claim = match args
+        .iter()
+        .position(|a| a == "--claim")
+        .and_then(|i| args.get(i + 1))
+    {
+        None => ClaimPolicy::default(),
+        Some(name) => match ClaimPolicy::parse(name) {
+            Some(c) => c,
+            None => {
+                eprintln!(
+                    "unknown claim policy '{name}' (use: {})",
+                    ClaimPolicy::ALL.map(|c| c.name()).join("|")
+                );
+                std::process::exit(2);
+            }
+        },
+    };
+
     let opts = RunOptions {
         seed,
         step_mode,
         topology,
         shards,
         threads,
+        placement,
+        claim,
     };
 
     match cmd {
@@ -106,14 +146,18 @@ fn main() {
             println!(
                 "nexus — Nexus Machine reproduction CLI\n\n\
                  usage: nexus <command> [--seed N] [--dense-oracle] [--topology T]\n\
-                 \x20             [--shards N] [--threads N]\n\n\
+                 \x20             [--placement P] [--claim C] [--shards N] [--threads N]\n\n\
                  commands:\n\
                  \x20 corpus        dataset/scenario corpus: `corpus list` enumerates the\n\
                  \x20               registered scenarios, `corpus run` executes them with\n\
                  \x20               bit-exact validation, one JSON line per scenario\n\
                  \x20               (--filter GLOB selects, e.g. --filter 'smoke/*';\n\
                  \x20               --topology mesh|torus|ruche|chiplet picks the NoC —\n\
-                 \x20               JSON lines report per-link flits, peak demand, GB/s)\n\
+                 \x20               JSON lines report per-link flits, peak demand, GB/s;\n\
+                 \x20               --placement nnz-balanced|dissimilarity|hotspot-split\n\
+                 \x20               picks the compile-time row placement;\n\
+                 \x20               --claim eager|locality|credit|steal picks the\n\
+                 \x20               en-route claim policy — both echo into the JSON)\n\
                  \x20 validate      run the 13-workload suite on Nexus/TIA/TIA-Valiant,\n\
                  \x20               checking fabric outputs against software references\n\
                  \x20               (--dense-oracle: use the dense reference scheduler\n\
@@ -121,7 +165,8 @@ fn main() {
                  \x20               --topology also applies here)\n\
                  \x20               (--shards N: partition each fabric into N row bands —\n\
                  \x20               part of the modeled schedule; --threads N: step the\n\
-                 \x20               shards on N worker threads, bit-identical at any N)\n\
+                 \x20               shards on N worker threads, bit-identical at any N;\n\
+                 \x20               --placement / --claim apply here too)\n\
                  \x20 serve         long-running batch-execution daemon: NDJSON over TCP\n\
                  \x20               (--addr HOST:PORT, default 127.0.0.1:7077;\n\
                  \x20               --workers N execution threads; --queue-cap N bounded\n\
@@ -177,10 +222,12 @@ fn corpus(args: &[String], opts: RunOptions) {
             }
             eprintln!(
                 "corpus run OK: {} scenario(s) validated ({} stepping, {} topology, \
-                 {} shard(s) x {} thread(s), seed {})",
+                 {} placement, {} claiming, {} shard(s) x {} thread(s), seed {})",
                 lines.lines().count(),
                 opts.step_mode.name(),
                 opts.topology.name(),
+                opts.placement.name(),
+                opts.claim.name(),
                 opts.shards,
                 opts.threads,
                 opts.seed
@@ -239,7 +286,9 @@ fn validate(opts: &RunOptions) {
     ] {
         let cfg = cfg
             .with_step_mode(opts.step_mode)
-            .with_topology(opts.topology);
+            .with_topology(opts.topology)
+            .with_placement(opts.placement)
+            .with_claim(opts.claim);
         let shards = nexus::dataset::effective_shards(opts.shards, cfg.height);
         let cfg = cfg.with_shards(shards).with_threads(opts.threads);
         let kind = cfg.kind.name();

@@ -129,6 +129,10 @@ pub struct Pe {
     pub alu_busy: bool,
     /// Decode unit performed a memory op or stream emission this cycle.
     pub decode_busy: bool,
+    /// Cycle of this PE's last en-route claim (`None` = never). Read by
+    /// [`crate::config::ClaimPolicy::CreditBased`]; written only at claim
+    /// events so both step modes observe identical policy state.
+    pub last_claim_cycle: Option<u64>,
     pub stats: PeStats,
 }
 
@@ -147,6 +151,7 @@ impl Pe {
             stream_q: VecDeque::new(),
             alu_busy: false,
             decode_busy: false,
+            last_claim_cycle: None,
             stats: PeStats::default(),
         }
     }

@@ -151,15 +151,15 @@ fn try_build_tile(
 ) -> Option<Program> {
     assert_eq!(a.cols, b_mat.rows);
     let p = cfg.num_pes();
-    // A (and C, aligned with it) by dissimilarity-aware mapping over the
-    // tile's rows; B rows nnz-balanced so stream tables spread evenly.
+    // A (and C, aligned with it) by the configured placement policy over
+    // the tile's rows; B rows nnz-balanced so stream tables spread evenly.
     let a_tile = Csr::from_triplets(
         rows.len(),
         a.cols,
         rows.clone()
             .flat_map(|r| a.row(r).map(move |(c, v)| (r - rows.start, c, v))),
     );
-    let arow_part = partition::dissimilarity_aware(&a_tile, p, 8);
+    let arow_part = partition::place_rows(&a_tile, p, 8, cfg.placement);
     let brow_part = partition::nnz_balanced(b_mat, p);
 
     let mut b = ProgramBuilder::new(name, cfg);

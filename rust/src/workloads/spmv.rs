@@ -23,9 +23,10 @@ use crate::tensor::Csr;
 pub fn build(name: &str, a: &Csr, x: &[i16], cfg: &ArchConfig) -> Built {
     assert_eq!(x.len(), a.cols);
     let p = cfg.num_pes();
-    // Primary tensor: dissimilarity-aware row mapping (Algorithm 1); the
-    // 1-D tensors partition correspondingly (§3.1.1).
-    let row_part = partition::dissimilarity_aware(a, p, 8);
+    // Primary tensor: row mapping under the configured placement policy
+    // (default: Algorithm 1's dissimilarity-aware clustering); the 1-D
+    // tensors partition correspondingly (§3.1.1).
+    let row_part = partition::place_rows(a, p, 8, cfg.placement);
     let col_part = partition::uniform_blocks(a.cols, p);
 
     let mut b = ProgramBuilder::new(name, cfg);

@@ -13,7 +13,9 @@
 
 use nexus::am::Message;
 use nexus::compiler::{Program, ProgramBuilder};
-use nexus::config::{ArchConfig, ExecPolicy, RoutingPolicy, StepMode, TopologyKind};
+use nexus::config::{
+    ArchConfig, ClaimPolicy, ExecPolicy, PlacementPolicy, RoutingPolicy, StepMode, TopologyKind,
+};
 use nexus::fabric::stats::FabricStats;
 use nexus::fabric::{DeadlockError, NexusFabric};
 use nexus::isa::{ConfigEntry, Opcode};
@@ -58,6 +60,12 @@ fn random_cfg(rng: &mut SplitMix64, exec: ExecPolicy, routing: RoutingPolicy) ->
     cfg.idle_tree_latency = [0, 2, 4][rng.below_usize(3)];
     cfg.exec = exec;
     cfg.routing = routing;
+    // En-route claim policy and its knobs vary per case: every policy must
+    // keep active-set and dense-oracle stepping bit-identical (the claim
+    // phase is the one pass the two modes visit with different PE sets).
+    cfg.claim = ClaimPolicy::ALL[rng.below_usize(ClaimPolicy::ALL.len())];
+    cfg.claim_credit_period = 2 + rng.below(5); // 2..=6
+    cfg.claim_steal_threshold = 1 + rng.below_usize(3); // 1..=3
     cfg.trigger_latency = rng.below(2);
     cfg.max_cycles = 20_000;
     cfg.seed = rng.next_u64();
@@ -712,6 +720,36 @@ fn suite_workloads_equivalent_across_modes() {
             let (sa, sd) = (ea.stats.unwrap(), ed.stats.unwrap());
             if let Some(field) = sa.diff(&sd) {
                 panic!("{} on {}: stats diverged on {field}", spec.name(), base.kind.name());
+            }
+        }
+    }
+}
+
+/// Every placement × claim policy combination must preserve active-set vs
+/// dense-oracle equivalence on a real SpMV workload (the random-program
+/// suites above cover claim policies but bypass the partitioner, so
+/// placement coverage has to come through the `Machine` layer).
+#[test]
+fn placement_and_claim_policies_equivalent_across_modes() {
+    use nexus::machine::Machine;
+    let specs = nexus::workloads::suite(1);
+    let spec = specs
+        .iter()
+        .find(|s| s.name().starts_with("SpMV"))
+        .expect("suite must contain an SpMV spec");
+    for placement in PlacementPolicy::ALL {
+        for claim in ClaimPolicy::ALL {
+            let base = ArchConfig::nexus().with_placement(placement).with_claim(claim);
+            let mut active = Machine::new(base.clone());
+            let mut dense = Machine::new(base.with_step_mode(StepMode::DenseOracle));
+            let ea = active.run(spec).expect("active-set run");
+            let ed = dense.run(spec).expect("dense-oracle run");
+            let tag = format!("{}+{}", placement.name(), claim.name());
+            assert_eq!(ea.outputs, ed.outputs, "outputs diverged under {tag}");
+            assert_eq!(ea.cycles(), ed.cycles(), "cycles diverged under {tag}");
+            let (sa, sd) = (ea.stats.unwrap(), ed.stats.unwrap());
+            if let Some(field) = sa.diff(&sd) {
+                panic!("{tag}: stats diverged on {field}");
             }
         }
     }
