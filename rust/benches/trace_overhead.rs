@@ -1,0 +1,70 @@
+//! `cargo bench --bench trace_overhead` — host-side cost of the tracing
+//! subsystem. Tracing is bit-identical by construction (the property and
+//! integration suites prove that); this bench bounds what it costs in
+//! wall-clock: a disabled `TraceConfig` must be unmeasurable against run
+//! noise, and full lifecycle + PE-state capture should stay under ~2x.
+//! Emits a machine-readable `BENCH_TRACE.json` line; the soft gate is
+//! advisory (host-speed dependent), not a hard assert.
+
+use nexus::config::ArchConfig;
+use nexus::machine::Machine;
+use nexus::trace::TraceConfig;
+use nexus::util::bench::bench;
+
+fn main() {
+    let specs = nexus::workloads::suite(1);
+    let cfg = ArchConfig::nexus();
+
+    // One session machine per trace mode so each path keeps its own warm
+    // compile cache; the compiled artifacts are identical across modes
+    // (tracing is excluded from the config tag).
+    let mut m_off = Machine::new(cfg.clone());
+    let mut m_full = Machine::new(cfg.clone().with_trace(TraceConfig::full()));
+    let mut m_flight = Machine::new(cfg.clone().with_trace(TraceConfig::flight_recorder(256)));
+    let compiled: Vec<_> = specs
+        .iter()
+        .map(|s| m_off.compile(s).expect("compile"))
+        .collect();
+    // Warm every cache (and fault in allocations) before timing.
+    for c in &compiled {
+        m_off.execute(c).expect("warmup off");
+        m_full.execute(c).expect("warmup full");
+        m_flight.execute(c).expect("warmup flight");
+    }
+
+    let off_s = bench("suite end-to-end (tracing off)", 5, || {
+        for c in &compiled {
+            m_off.execute(c).expect("run");
+        }
+    });
+    let full_s = bench("suite end-to-end (tracing full)", 5, || {
+        for c in &compiled {
+            m_full.execute(c).expect("run");
+        }
+    });
+    let flight_s = bench("suite end-to-end (flight recorder)", 5, || {
+        for c in &compiled {
+            m_flight.execute(c).expect("run");
+        }
+    });
+
+    let full_x = full_s / off_s.max(1e-12);
+    let flight_x = flight_s / off_s.max(1e-12);
+    println!(
+        "BENCH_TRACE.json {{\"bench\":\"trace_overhead\",\"workloads\":{},\
+         \"off_s\":{:.6},\"full_s\":{:.6},\"flight_s\":{:.6},\
+         \"full_overhead\":{:.3},\"flight_overhead\":{:.3}}}",
+        compiled.len(),
+        off_s,
+        full_s,
+        flight_s,
+        full_x,
+        flight_x
+    );
+    if full_x >= 2.0 {
+        println!("WARNING: full tracing overhead {full_x:.2}x exceeds the 2x soft gate");
+    }
+    if flight_x >= 2.0 {
+        println!("WARNING: flight-recorder overhead {flight_x:.2}x exceeds the 2x soft gate");
+    }
+}

@@ -191,6 +191,7 @@ impl Backend for GenericCgra {
             outputs: Vec::new(),
             stats: None,
             result: (**r).clone(),
+            trace: None,
         })
     }
 }

@@ -155,6 +155,7 @@ impl Backend for Systolic {
             outputs: Vec::new(),
             stats: None,
             result: (**r).clone(),
+            trace: None,
         })
     }
 }

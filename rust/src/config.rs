@@ -323,6 +323,13 @@ pub struct ArchConfig {
     /// Minimum router input occupancy (flits across all input buffers)
     /// before a PE claims for [`ClaimPolicy::StealK`] (ignored otherwise).
     pub claim_steal_threshold: usize,
+    /// Event-tracing configuration ([`crate::trace::TraceConfig`]).
+    /// Host-side observability only: tracing is provably inert — a traced
+    /// run is bit-identical (outputs, cycles, stats, state digests) to an
+    /// untraced one — and the field is deliberately excluded from the
+    /// compile-cache key ([`crate::machine::cache::config_tag`]). Default
+    /// off.
+    pub trace: crate::trace::TraceConfig,
 }
 
 impl ArchConfig {
@@ -358,6 +365,7 @@ impl ArchConfig {
             claim: ClaimPolicy::Eager,
             claim_credit_period: 4,
             claim_steal_threshold: 2,
+            trace: crate::trace::TraceConfig::off(),
         }
     }
 
@@ -469,6 +477,14 @@ impl ArchConfig {
         self
     }
 
+    /// Override the event-tracing configuration
+    /// ([`crate::trace::TraceConfig`]). Observability-only: results stay
+    /// bit-identical to an untraced run.
+    pub fn with_trace(mut self, trace: crate::trace::TraceConfig) -> Self {
+        self.trace = trace;
+        self
+    }
+
     /// Number of PEs in the fabric.
     #[inline]
     pub fn num_pes(&self) -> usize {
@@ -530,6 +546,7 @@ impl ArchConfig {
         if self.claim == ClaimPolicy::StealK && self.claim_steal_threshold == 0 {
             return Err("steal-K claim threshold must be >= 1 flit".into());
         }
+        self.trace.validate()?;
         match self.topology {
             TopologyKind::Mesh2D | TopologyKind::Torus2D => {}
             TopologyKind::Ruche => {
@@ -666,6 +683,23 @@ mod tests {
         c.claim_credit_period = 0;
         c.claim_steal_threshold = 0;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn trace_config_off_by_default_and_validated() {
+        use crate::trace::TraceConfig;
+        let c = ArchConfig::nexus();
+        assert_eq!(c.trace, TraceConfig::off());
+        ArchConfig::nexus().with_trace(TraceConfig::full()).validate().unwrap();
+        ArchConfig::nexus()
+            .with_trace(TraceConfig::flight_recorder(128))
+            .validate()
+            .unwrap();
+        let bad = TraceConfig {
+            shard_capacity: 0,
+            ..TraceConfig::full()
+        };
+        assert!(ArchConfig::nexus().with_trace(bad).validate().is_err());
     }
 
     #[test]

@@ -88,6 +88,13 @@ pub struct ScenarioMetrics {
     /// Per-directed-link flit counts, nonzero links only, as
     /// `(from_pe, to_pe, flits)` sorted hottest-first.
     pub links: Vec<(usize, usize, u64)>,
+    /// Fraction of PE-cycles that committed ALU or decode work
+    /// ([`crate::fabric::stats::FabricStats::active_pe_fraction`]).
+    pub active_pe_frac: f64,
+    /// Stall attribution as `(class, fraction of PE-cycles)` in the fixed
+    /// order operand / backpressure / axi / claim
+    /// ([`crate::fabric::stats::FabricStats::stall_fractions`]).
+    pub stall_fractions: [(&'static str, f64); 4],
     pub validated: bool,
 }
 
@@ -149,8 +156,11 @@ impl ScenarioRun {
                     .u64("link_flits", m.link_flits_total)
                     .u64("peak_link_demand", m.peak_link_demand)
                     .f64("peak_link_gbps", m.peak_link_gbps, 3)
-                    .raw("links", &links)
-                    .bool("validated", m.validated);
+                    .f64("active_pe_frac", m.active_pe_frac, 4);
+                for (class, frac) in m.stall_fractions {
+                    o.f64(&format!("stall_{class}_frac"), frac, 4);
+                }
+                o.raw("links", &links).bool("validated", m.validated);
             }
             Err(e) => {
                 o.str("status", "error").str("error", e);
@@ -162,6 +172,26 @@ impl ScenarioRun {
     /// True when the scenario executed and validated bit-exactly.
     pub fn passed(&self) -> bool {
         matches!(&self.outcome, Ok(m) if m.validated)
+    }
+
+    /// One aligned human-readable line for `nexus corpus run
+    /// --stall-summary`: the scenario name, the active-PE fraction, and
+    /// the percentage of PE-cycles attributed to each stall class.
+    pub fn stall_summary_line(&self) -> String {
+        match &self.outcome {
+            Ok(m) => {
+                let mut s = format!(
+                    "{:<34} active {:>5.1}%",
+                    self.scenario,
+                    100.0 * m.active_pe_frac
+                );
+                for (class, frac) in m.stall_fractions {
+                    s.push_str(&format!("  {class} {:>5.1}%", 100.0 * frac));
+                }
+                s
+            }
+            Err(e) => format!("{:<34} ERROR: {e}", self.scenario),
+        }
     }
 }
 
@@ -230,6 +260,18 @@ fn run_one(
                 None => (0, 0, Vec::new()),
             };
             let peak_link_gbps = crate::power::link_demand_gbps(peak_link_demand, cfg.freq_mhz);
+            let (active_pe_frac, stall_fractions) = match &e.stats {
+                Some(s) => (s.active_pe_fraction(), s.stall_fractions()),
+                None => (
+                    0.0,
+                    [
+                        ("operand", 0.0),
+                        ("backpressure", 0.0),
+                        ("axi", 0.0),
+                        ("claim", 0.0),
+                    ],
+                ),
+            };
             let congestion =
                 e.result.congestion.iter().sum::<f64>() / e.result.congestion.len() as f64;
             Ok(ScenarioMetrics {
@@ -244,6 +286,8 @@ fn run_one(
                 peak_link_demand,
                 peak_link_gbps,
                 links,
+                active_pe_frac,
+                stall_fractions,
                 validated: e.result.validated,
             })
         }
@@ -375,6 +419,31 @@ mod tests {
                         run.scenario
                     );
                     assert!(line.contains("\"links\":[["), "{line}");
+                    // Stall attribution rides along in every line, and the
+                    // fractions are well-formed (in [0,1], active nonzero
+                    // for a validated run that committed work).
+                    assert!(line.contains("\"active_pe_frac\":"), "{line}");
+                    assert!(line.contains("\"stall_operand_frac\":"), "{line}");
+                    assert!(line.contains("\"stall_backpressure_frac\":"), "{line}");
+                    assert!(line.contains("\"stall_axi_frac\":"), "{line}");
+                    assert!(line.contains("\"stall_claim_frac\":"), "{line}");
+                    assert!(
+                        m.active_pe_frac > 0.0 && m.active_pe_frac <= 1.0,
+                        "{}: active_pe_frac {}",
+                        run.scenario,
+                        m.active_pe_frac
+                    );
+                    for (class, frac) in m.stall_fractions {
+                        assert!(
+                            (0.0..=1.0).contains(&frac),
+                            "{}: stall class {class} fraction {frac}",
+                            run.scenario
+                        );
+                    }
+                    let summary = run.stall_summary_line();
+                    assert!(summary.contains(&run.scenario), "{summary}");
+                    assert!(summary.contains("active"), "{summary}");
+                    assert!(summary.contains("operand"), "{summary}");
                 }
                 Err(e) => panic!("{} failed: {e}", run.scenario),
             }

@@ -76,8 +76,9 @@ use crate::noc::router::{port_class, PortSnap, Router, MAX_PORTS};
 use crate::noc::routing::Dir;
 use crate::noc::topology::{build_topology, Topology, LINKS_PER_PE};
 use crate::pe::Pe;
+use crate::trace::TraceBuffer;
 use shard::{CommitCtx, ShardCtx, ShardState, SpinBarrier};
-use stats::FabricStats;
+use stats::{FabricStats, SERIES_WINDOW};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
@@ -94,6 +95,10 @@ pub struct DeadlockError {
     /// and per-port head-flit routing state (what each stuck head wants and
     /// what its downstream advertises).
     pub detail: String,
+    /// Flight-recorder dump: the most recent trace events before the
+    /// timeout, one formatted line each (newest last). Empty unless the
+    /// run had tracing enabled ([`crate::trace::TraceConfig`]).
+    pub flight: Vec<String>,
 }
 
 impl std::fmt::Display for DeadlockError {
@@ -106,7 +111,14 @@ impl std::fmt::Display for DeadlockError {
             self.culprits.len(),
             self.culprits.join(", "),
             self.detail
-        )
+        )?;
+        if !self.flight.is_empty() {
+            write!(f, "\nflight recorder (last {} events):", self.flight.len())?;
+            for line in &self.flight {
+                write!(f, "\n  {line}")?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -164,6 +176,10 @@ pub struct NexusFabric {
     /// Global cycle counter (includes inter-tile load cycles).
     cycle: u64,
     pub stats: FabricStats,
+    /// Merged trace sink: per-shard rings drain here (in shard index
+    /// order) at every epoch barrier. Bounded when the config asks for a
+    /// flight recorder; not part of the digest or stats surfaces.
+    trace_sink: TraceBuffer,
 }
 
 impl NexusFabric {
@@ -189,8 +205,14 @@ impl NexusFabric {
         let band = (cfg.height / cfg.shards) * cfg.width;
         let shard_of: Vec<u16> = (0..n).map(|id| (id / band) as u16).collect();
         let shards: Vec<ShardState> = (0..cfg.shards)
-            .map(|s| ShardState::new(s, n, s * band, band, cfg.seed))
+            .map(|s| {
+                let mut sh = ShardState::new(s, n, s * band, band, cfg.seed);
+                sh.configure_trace(cfg.trace);
+                sh
+            })
             .collect();
+        let trace_sink =
+            TraceBuffer::new(if cfg.trace.enabled { cfg.trace.sink_capacity } else { 0 });
         // Boundary snapshot tables: one entry per input port terminating a
         // shard-crossing link, keyed `(dest router, dest port)`. Sorting
         // groups entries by owner shard (ids are band-contiguous) and by
@@ -266,6 +288,7 @@ impl NexusFabric {
             snap_router_range,
             cycle: 0,
             stats,
+            trace_sink,
             cfg,
         }
     }
@@ -293,6 +316,7 @@ impl NexusFabric {
         for (s, shard) in self.shards.iter_mut().enumerate() {
             shard.reset(s, self.cfg.seed);
         }
+        self.trace_sink.clear();
         for e in &mut self.snap {
             *e = PortSnap::fresh(self.cfg.router_buf_depth);
         }
@@ -395,6 +419,8 @@ impl NexusFabric {
             shard.awake_pes.clear();
             shard.awake_routers.clear();
             shard.outbox.clear();
+            // PEs were rebuilt above, so every traced PE is Idle again.
+            shard.pe_state.fill(crate::trace::PeTraceState::Idle as u8);
         }
         for id in 0..n {
             if self.pes[id].has_pending_work() {
@@ -535,11 +561,21 @@ impl NexusFabric {
                 );
             }
         }
+        // Flight-recorder dump: whatever trace events the sink still holds
+        // (the most recent N when a bounded flight-recorder sink is
+        // configured; empty when tracing is off). The undrained current-
+        // epoch shard rings are appended in shard index order first.
+        let mut events = self.trace_sink.to_vec();
+        for shard in &self.shards {
+            events.extend(shard.ring.iter().copied());
+        }
+        let flight = crate::trace::flight_lines(&events, 64);
         DeadlockError {
             cycle: self.cycle,
             in_flight,
             culprits,
             detail,
+            flight,
         }
     }
 
@@ -610,6 +646,7 @@ impl NexusFabric {
             snap_router_range: &self.snap_router_range,
             snap_base: lo,
             step_mode: self.cfg.step_mode,
+            cycle: self.cycle,
         };
         ctx.run_commit();
     }
@@ -630,6 +667,7 @@ impl NexusFabric {
             axi_rr: &mut self.axi_rr,
             pending_remaining: &mut self.pending_remaining,
             stats: &mut self.stats,
+            trace_sink: &mut self.trace_sink,
             cycle: &mut self.cycle,
         }
     }
@@ -757,6 +795,7 @@ impl NexusFabric {
         let axi_rr = &mut self.axi_rr;
         let pending_remaining = &mut self.pending_remaining;
         let cycle = &mut self.cycle;
+        let trace_sink = &mut self.trace_sink;
         let mut link_flits = std::mem::take(&mut self.stats.link_flits);
         let stats = &mut self.stats;
         struct Ptrs {
@@ -847,6 +886,7 @@ impl NexusFabric {
                             snap_router_range,
                             snap_base: b.snap_lo,
                             step_mode: cfg.step_mode,
+                            cycle: cur,
                         };
                         ctx.run_commit();
                     }
@@ -880,6 +920,7 @@ impl NexusFabric {
                         axi_rr: &mut *axi_rr,
                         pending_remaining: &mut *pending_remaining,
                         stats: &mut *stats,
+                        trace_sink: &mut *trace_sink,
                         cycle: &mut *cycle,
                     }
                     .axi_refill();
@@ -906,6 +947,7 @@ impl NexusFabric {
                         axi_rr: &mut *axi_rr,
                         pending_remaining: &mut *pending_remaining,
                         stats: &mut *stats,
+                        trace_sink: &mut *trace_sink,
                         cycle: &mut *cycle,
                     }
                     .drain_outboxes();
@@ -931,6 +973,7 @@ impl NexusFabric {
                         axi_rr: &mut *axi_rr,
                         pending_remaining: &mut *pending_remaining,
                         stats: &mut *stats,
+                        trace_sink: &mut *trace_sink,
                         cycle: &mut *cycle,
                     }
                     .epoch_end();
@@ -991,6 +1034,9 @@ impl NexusFabric {
     /// end of a tile (PEs and routers are re-created per tile).
     fn collect_tile_stats(&mut self) {
         self.stats.cycles = self.cycle;
+        // Closing time-series sample: captures the tail window (and makes
+        // post-drain idle stepping a guaranteed no-op on the series).
+        self.stats.sample_series(self.cycle);
         for (id, pe) in self.pes.iter().enumerate() {
             self.stats.per_pe_busy_cycles[id] += pe.stats.busy_cycles;
             // At most one ALU op (local or en-route claim) and one decode
@@ -1089,6 +1135,20 @@ impl NexusFabric {
     pub fn state_digest(&self) -> u64 {
         self.view().digest()
     }
+
+    /// The merged trace-event stream recorded so far (FIFO; empty when
+    /// tracing is disabled). With a flight-recorder sink this is the most
+    /// recent `sink_capacity` events; otherwise the complete run.
+    pub fn trace_events(&self) -> Vec<crate::trace::Event> {
+        self.trace_sink.to_vec()
+    }
+
+    /// Events lost to ring-buffer overflow (shard rings + sink). Sink
+    /// drops are the expected mode of a flight recorder; shard-ring drops
+    /// mean `TraceConfig::shard_capacity` is too small for one epoch.
+    pub fn trace_dropped(&self) -> u64 {
+        self.trace_sink.dropped + self.shards.iter().map(|s| s.ring.dropped).sum::<u64>()
+    }
 }
 
 /// The coordinator's mutable window over the fabric's non-sharded state:
@@ -1108,6 +1168,7 @@ struct EpochIo<'a> {
     axi_rr: &'a mut usize,
     pending_remaining: &'a mut usize,
     stats: &'a mut FabricStats,
+    trace_sink: &'a mut TraceBuffer,
     cycle: &'a mut u64,
 }
 
@@ -1118,6 +1179,10 @@ impl EpochIo<'_> {
         if *self.pending_remaining == 0 {
             return;
         }
+        // Cycles with static AMs still waiting off-chip: AXI-refill stall
+        // attribution. Coordinator-counted (global, like `cycles` itself),
+        // so `merge_delta` must never touch it.
+        self.stats.stall_axi_cycles += 1;
         *self.axi_credit += self.cfg.axi_bytes_per_cycle;
         let n = self.cfg.num_pes();
         let am_bytes = crate::am::packed::AM_BYTES as f64;
@@ -1174,9 +1239,17 @@ impl EpochIo<'_> {
             let delta = std::mem::take(&mut shard.stats);
             self.stats.merge_delta(&delta);
             demand += shard.link_demand;
+            // Deterministic trace merge: shard rings drain in index order,
+            // so the sink's event stream is identical at any thread count.
+            if shard.trace.enabled {
+                shard.ring.drain_into(self.trace_sink);
+            }
         }
         self.stats.peak_link_demand = self.stats.peak_link_demand.max(demand);
         *self.cycle += 1;
+        if *self.cycle % SERIES_WINDOW == 0 {
+            self.stats.sample_series(*self.cycle);
+        }
     }
 }
 

@@ -39,6 +39,7 @@ use crate::noc::router::{PortSnap, Router, MAX_PORTS, PORT_LOCAL};
 use crate::noc::routing::Dir;
 use crate::noc::topology::{link_index, Topology, LINKS_PER_PE};
 use crate::pe::{ActiveStream, Pe, StreamMode, OUTQ_CAP};
+use crate::trace::{Event, EventKind, PeTraceState, TraceBuffer, TraceConfig};
 use crate::util::prng::{stream_seed, SplitMix64};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -94,6 +95,13 @@ pub(crate) struct ShardState {
     /// per-link vectors stay empty here: PE stats live on the `Pe`, link
     /// flits are written to a disjoint band slice of the global vector).
     pub stats: FabricStats,
+    /// Tracing configuration (a copy of `ArchConfig::trace`; emission gate).
+    pub trace: TraceConfig,
+    /// This shard's trace ring: events recorded during this epoch, drained
+    /// into the fabric sink at the epoch barrier (shard index order).
+    pub ring: TraceBuffer,
+    /// Last emitted [`PeTraceState`] code per band PE (transition filter).
+    pub pe_state: Vec<u8>,
 }
 
 impl ShardState {
@@ -111,6 +119,24 @@ impl ShardState {
             outbox: Vec::new(),
             link_demand: 0,
             stats: FabricStats::default(),
+            trace: TraceConfig::off(),
+            ring: TraceBuffer::new(0),
+            pe_state: vec![PeTraceState::Idle as u8; len],
+        }
+    }
+
+    /// Install the fabric's tracing configuration (sizing the ring).
+    pub fn configure_trace(&mut self, trace: TraceConfig) {
+        self.trace = trace;
+        self.ring = TraceBuffer::new(if trace.enabled { trace.shard_capacity } else { 0 });
+        self.pe_state.fill(PeTraceState::Idle as u8);
+    }
+
+    /// Record a message-lifecycle event if lifecycle tracing is on.
+    #[inline]
+    pub fn emit(&mut self, cycle: u64, kind: EventKind, msg: u64, pe: u32, arg: u16) {
+        if self.trace.enabled && self.trace.lifecycle {
+            self.ring.push(Event { cycle, msg, pe, arg, kind });
         }
     }
 
@@ -123,6 +149,8 @@ impl ShardState {
         self.outbox.clear();
         self.link_demand = 0;
         self.stats = FabricStats::default();
+        self.ring.clear();
+        self.pe_state.fill(PeTraceState::Idle as u8);
     }
 
     /// Allocate the next message id in this shard's stream.
@@ -251,7 +279,12 @@ impl ShardCtx<'_> {
             if let Some(m) = pe.local_redo.take() {
                 Some(m)
             } else if pe.trigger_wait > 0 {
+                // Operand/trigger wait: work is pending but the triggered-
+                // instruction scheduler has not released it yet. Counted on
+                // a state-dependent condition both step modes visit
+                // identically (the PE has pending work, so it is awake).
                 pe.trigger_wait -= 1;
+                self.shard.stats.stall_operand_cycles += 1;
                 None
             } else if let Some(m) = pe.inbox.take() {
                 if self.cfg.trigger_latency > 0 {
@@ -276,7 +309,7 @@ impl ShardCtx<'_> {
     fn process_at(&mut self, id: usize, mut m: Message) {
         let op = m.opcode;
         if op == Opcode::Halt {
-            self.retire(m);
+            self.retire(id, m);
             return;
         }
         if op.is_alu() {
@@ -316,6 +349,8 @@ impl ShardCtx<'_> {
         self.shard.stats.mem_ops += 1;
         self.pes[i].stats.mem_ops += 1;
         self.pes[i].decode_busy = true;
+        self.shard
+            .emit(self.cycle, EventKind::MemOp, m.id, id as u32, m.opcode.encode() as u16);
         match m.opcode {
             Opcode::Load => {
                 m.op2 = self.pes[i].dmem[m.op2 as usize];
@@ -341,7 +376,7 @@ impl ShardCtx<'_> {
                 self.pes[i].dmem[m.result as usize] = m.op1;
                 self.pes[i].stats.dmem_writes += 1;
                 self.shard.stats.dmem_writes += 1;
-                self.retire(m);
+                self.retire(id, m);
             }
             Opcode::Accum => {
                 let a = m.result as usize;
@@ -351,7 +386,7 @@ impl ShardCtx<'_> {
                 self.pes[i].stats.dmem_writes += 1;
                 self.shard.stats.dmem_reads += 1;
                 self.shard.stats.dmem_writes += 1;
-                self.retire(m);
+                self.retire(id, m);
             }
             Opcode::AccMin => {
                 let a = m.result as usize;
@@ -375,10 +410,11 @@ impl ShardCtx<'_> {
                 // The message itself always dies; only the stream (if
                 // triggered) carries the update onward. Failed relaxations
                 // are the paper's "AMs terminate early" case.
-                self.retire(m);
+                self.retire(id, m);
             }
             Opcode::Stream => {
                 let key = m.op2 as usize;
+                let mid = m.id;
                 let desc = self.pes[i].trigger[key];
                 debug_assert!(desc.is_some(), "Stream op with no trigger at PE{id}[{key}]");
                 if let Some((base, count)) = desc {
@@ -390,6 +426,7 @@ impl ShardCtx<'_> {
                 }
                 // The triggering message is consumed by the stream engine.
                 self.shard.stats.msgs_retired += 1;
+                self.shard.emit(self.cycle, EventKind::Retire, mid, id as u32, 0);
             }
             _ => unreachable!("non-memory opcode {:?} in exec_memory", m.opcode),
         }
@@ -399,7 +436,7 @@ impl ShardCtx<'_> {
     /// this PE) or out through the AM NIC.
     fn dispatch(&mut self, id: usize, m: Message) {
         if m.opcode == Opcode::Halt || m.ndests == 0 {
-            self.retire(m);
+            self.retire(id, m);
             return;
         }
         let pe = &mut self.pes[id - self.shard.base];
@@ -412,8 +449,9 @@ impl ShardCtx<'_> {
         self.shard.awake_pes.wake(id);
     }
 
-    fn retire(&mut self, _m: Message) {
+    fn retire(&mut self, id: usize, m: Message) {
         self.shard.stats.msgs_retired += 1;
+        self.shard.emit(self.cycle, EventKind::Retire, m.id, id as u32, 0);
     }
 
     /// Install a streaming decode, or queue it if the engine is busy.
@@ -445,7 +483,12 @@ impl ShardCtx<'_> {
             let next = self.pes[i].stream_q.pop_front();
             self.pes[i].stream = next;
         }
-        if self.pes[i].stream.is_none() || self.pes[i].outq.len() >= OUTQ_CAP {
+        if self.pes[i].stream.is_none() {
+            return;
+        }
+        if self.pes[i].outq.len() >= OUTQ_CAP {
+            // A live stream blocked on a full NIC queue: backpressure.
+            self.shard.stats.stall_backpressure_cycles += 1;
             return;
         }
         let (elem, template, done) = {
@@ -498,6 +541,11 @@ impl ShardCtx<'_> {
     fn inject_phase(&mut self, id: usize) {
         let i = id - self.shard.base;
         if !self.routers[i].can_inject() {
+            // Only a stall if a message was actually waiting to inject
+            // (pending work ⇒ the PE is awake in both step modes).
+            if !self.pes[i].outq.is_empty() || !self.pes[i].am_window.is_empty() {
+                self.shard.stats.stall_inject_cycles += 1;
+            }
             return;
         }
         let m = if let Some(m) = self.pes[i].outq.pop_front() {
@@ -562,9 +610,11 @@ impl ShardCtx<'_> {
                 }
             }
         }
+        let (mid, dest) = (m.id, m.head_dest().unwrap_or(u16::MAX));
         self.routers[i].stage(PORT_LOCAL, m);
         self.shard.awake_routers.wake(id);
         self.shard.stats.buf_writes += 1;
+        self.shard.emit(self.cycle, EventKind::Inject, mid, id as u32, dest);
     }
 
     // --- phase 2: en-route (opportunistic) execution ------------------------
@@ -597,6 +647,9 @@ impl ShardCtx<'_> {
                     Some(last) => self.cycle - last >= self.cfg.claim_credit_period,
                 };
                 if !ok {
+                    // Claim opportunity suppressed by the credit gate while
+                    // flits sit buffered here: claim contention.
+                    self.shard.stats.stall_claim_misses += 1;
                     return;
                 }
             }
@@ -605,6 +658,7 @@ impl ShardCtx<'_> {
                 // land at commit, after every phase, in both step modes).
                 let occ: usize = self.routers[i].inputs.iter().map(|b| b.len()).sum();
                 if occ < self.cfg.claim_steal_threshold {
+                    self.shard.stats.stall_claim_misses += 1;
                     return;
                 }
             }
@@ -645,7 +699,8 @@ impl ShardCtx<'_> {
     /// head flit in place, lock the port for this cycle, and charge stats.
     fn claim_port(&mut self, id: usize, p: usize) {
         let i = id - self.shard.base;
-        let entry_pc = self.routers[i].inputs[p].head_msg().unwrap().n_pc;
+        let head = self.routers[i].inputs[p].head_msg().unwrap();
+        let (entry_pc, mid) = (head.n_pc, head.id);
         let entry = self.config_entry(entry_pc);
         let m = self.routers[i].inputs[p].head_msg_mut().unwrap();
         let v = alu_eval(m.opcode, m.op1, m.op2);
@@ -662,6 +717,7 @@ impl ShardCtx<'_> {
         self.shard.stats.alu_ops += 1;
         self.shard.stats.enroute_ops += 1;
         self.shard.stats.config_reads += 1;
+        self.shard.emit(self.cycle, EventKind::Claim, mid, id as u32, p as u16);
     }
 
     // --- phase 3: routing ---------------------------------------------------
@@ -778,10 +834,15 @@ impl ShardCtx<'_> {
                 }
             };
             if !ok {
+                // An allocated crossbar winner its downstream refused:
+                // buffer backpressure (the flit exists in both step modes,
+                // so the count is schedule-invariant).
+                self.shard.stats.stall_backpressure_cycles += 1;
                 continue;
             }
             let mut m = self.routers[i].pop_port(p).unwrap();
             m.hops += 1;
+            let mid = m.id;
             if out == PORT_LOCAL {
                 self.pes[i].inbox = Some(m);
                 self.shard.awake_pes.wake(id);
@@ -814,6 +875,7 @@ impl ShardCtx<'_> {
                 self.link_flits[link_index(id, dir) - self.shard.base * LINKS_PER_PE] += 1;
                 self.shard.link_demand += 1;
             }
+            self.shard.emit(self.cycle, EventKind::Hop, mid, id as u32, out as u16);
             self.routers[i].rr_ptr[out] = (p + 1) % nports;
             moved[p] = true;
         }
@@ -837,6 +899,7 @@ pub(crate) struct CommitCtx<'a> {
     /// Global index of `snap[0]` / `snap_src[0]`.
     pub snap_base: usize,
     pub step_mode: StepMode,
+    pub cycle: u64,
 }
 
 impl CommitCtx<'_> {
@@ -903,8 +966,9 @@ impl CommitCtx<'_> {
     #[inline]
     fn commit_pe(&mut self, id: usize) {
         let i = id - self.shard.base;
-        {
+        let (alu, decode) = {
             let pe = &mut self.pes[i];
+            let latched = (pe.alu_busy, pe.decode_busy);
             if pe.alu_busy {
                 pe.stats.alu_busy_cycles += 1;
             }
@@ -913,9 +977,46 @@ impl CommitCtx<'_> {
             }
             pe.alu_busy = false;
             pe.decode_busy = false;
+            latched
+        };
+        if alu || decode {
+            self.shard.stats.active_pe_cycles += 1;
         }
-        if !self.pes[i].has_pending_work() {
+        let pending = self.pes[i].has_pending_work();
+        if !pending {
             self.shard.awake_pes.sleep(id);
+        }
+        if self.shard.trace.enabled {
+            // One AluCommit per latched ALU cycle: per PE, AluCommit +
+            // MemOp event counts equal `per_pe_committed_ops` exactly.
+            if self.shard.trace.lifecycle && alu {
+                self.shard.ring.push(Event {
+                    cycle: self.cycle,
+                    msg: 0,
+                    pe: id as u32,
+                    arg: 0,
+                    kind: EventKind::AluCommit,
+                });
+            }
+            if self.shard.trace.pe_states {
+                let st = if alu || decode {
+                    PeTraceState::Compute
+                } else if pending {
+                    PeTraceState::Blocked
+                } else {
+                    PeTraceState::Idle
+                };
+                if self.shard.pe_state[i] != st as u8 {
+                    self.shard.pe_state[i] = st as u8;
+                    self.shard.ring.push(Event {
+                        cycle: self.cycle,
+                        msg: 0,
+                        pe: id as u32,
+                        arg: st as u16,
+                        kind: EventKind::PeState,
+                    });
+                }
+            }
         }
     }
 }

@@ -3,6 +3,30 @@
 
 use crate::noc::router::{PortStats, NUM_PORTS};
 
+/// Sampling period (cycles) of the windowed time-series in
+/// [`FabricStats::series`]. A fixed constant — deliberately *not* a
+/// [`crate::trace::TraceConfig`] knob — so the series (and hence the whole
+/// stats block) is bit-identical whether tracing is on or off.
+pub const SERIES_WINDOW: u64 = 64;
+
+/// One windowed time-series sample: the *cumulative* counters at a window
+/// boundary. Consumers derive per-window rates (active-PE fraction, link
+/// occupancy, claim rate) by diffing consecutive samples, which keeps the
+/// stored sample mode-invariant and cheap.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SeriesSample {
+    /// Cycle the sample was taken at (a multiple of [`SERIES_WINDOW`]).
+    pub cycle: u64,
+    /// Cumulative [`FabricStats::active_pe_cycles`] at that cycle.
+    pub active_pe_cycles: u64,
+    /// Cumulative [`FabricStats::flit_hops`] (link occupancy numerator).
+    pub flit_hops: u64,
+    /// Cumulative [`FabricStats::enroute_ops`] (claim-rate numerator).
+    pub enroute_ops: u64,
+    /// Cumulative [`FabricStats::msgs_retired`] (progress indicator).
+    pub msgs_retired: u64,
+}
+
 /// Aggregated run statistics for one fabric execution (possibly multi-tile).
 /// `PartialEq` lets tests assert that a reset fabric reproduces a fresh
 /// fabric's counters bit for bit.
@@ -66,6 +90,36 @@ pub struct FabricStats {
     /// Peak number of link traversals in any single cycle — the
     /// instantaneous bandwidth high-water mark of the whole network.
     pub peak_link_demand: u64,
+    /// PE-cycles on which any unit (ALU or decode) latched work at commit
+    /// — the fabric-wide running total of the per-PE busy latch, counted
+    /// per cycle so time-resolved active fractions can be derived.
+    pub active_pe_cycles: u64,
+    /// Stall attribution: PE-cycles a PE held a ready message (inbox head
+    /// or pending trigger) but launched no operation — waiting on
+    /// operands/trigger cooldowns.
+    pub stall_operand_cycles: u64,
+    /// Stall attribution: PE-cycles a PE had a message ready to inject but
+    /// its router's local port refused it (bubble rule / full buffer).
+    pub stall_inject_cycles: u64,
+    /// Stall attribution: flit-cycles a routed flit won allocation but was
+    /// refused by the downstream buffer (On/Off backpressure), plus
+    /// stream-emission cycles blocked on a full PE output queue.
+    pub stall_backpressure_cycles: u64,
+    /// Stall attribution: cycles the off-chip AXI interface still owed
+    /// data (`pending_remaining > 0` at the refill phase). Global like
+    /// `cycles` — counted once per cycle by the epoch coordinator, never
+    /// part of a shard delta.
+    pub stall_axi_cycles: u64,
+    /// Stall attribution: en-route claim opportunities declined by the
+    /// claim policy's gate (credit period not elapsed, occupancy below the
+    /// steal threshold) while claimable flits were buffered — claim
+    /// contention, in events.
+    pub stall_claim_misses: u64,
+    /// Windowed time-series: cumulative-counter samples every
+    /// [`SERIES_WINDOW`] cycles. Idle windows (no counter movement since
+    /// the previous sample) append nothing, so a drained fabric stepping
+    /// empty cycles leaves the stats block untouched.
+    pub series: Vec<SeriesSample>,
 }
 
 impl FabricStats {
@@ -191,6 +245,67 @@ impl FabricStats {
             .filter(|&(_, f)| f > 0)
     }
 
+    /// Total PE-cycles this run (`cycles × PE count`): the denominator
+    /// for the active fraction and the stall-attribution percentages.
+    pub fn total_pe_cycles(&self) -> u64 {
+        self.cycles
+            .saturating_mul(self.per_pe_busy_cycles.len() as u64)
+    }
+
+    /// Time-averaged fraction of PEs doing useful work per cycle, from
+    /// the always-on [`FabricStats::active_pe_cycles`] counter.
+    pub fn active_pe_fraction(&self) -> f64 {
+        let total = self.total_pe_cycles();
+        if total == 0 {
+            0.0
+        } else {
+            self.active_pe_cycles as f64 / total as f64
+        }
+    }
+
+    /// Stall-attribution breakdown as fractions of total PE-cycles, in
+    /// report order: operand wait, inject/buffer backpressure, AXI refill,
+    /// claim contention. (Claim contention counts *events*, the others
+    /// count PE- or flit-cycles; all are normalized by PE-cycles so the
+    /// classes are comparable across runs.)
+    pub fn stall_fractions(&self) -> [(&'static str, f64); 4] {
+        let total = self.total_pe_cycles().max(1) as f64;
+        [
+            ("operand", self.stall_operand_cycles as f64 / total),
+            (
+                "backpressure",
+                (self.stall_inject_cycles + self.stall_backpressure_cycles) as f64 / total,
+            ),
+            ("axi", self.stall_axi_cycles as f64 / total),
+            ("claim", self.stall_claim_misses as f64 / total),
+        ]
+    }
+
+    /// Append a windowed time-series sample at `cycle` unless nothing
+    /// moved since the previous sample (idle windows — including every
+    /// post-drain cycle — must leave the stats block untouched).
+    pub fn sample_series(&mut self, cycle: u64) {
+        let s = SeriesSample {
+            cycle,
+            active_pe_cycles: self.active_pe_cycles,
+            flit_hops: self.flit_hops,
+            enroute_ops: self.enroute_ops,
+            msgs_retired: self.msgs_retired,
+        };
+        let moved = |last: &SeriesSample| {
+            last.active_pe_cycles != s.active_pe_cycles
+                || last.flit_hops != s.flit_hops
+                || last.enroute_ops != s.enroute_ops
+                || last.msgs_retired != s.msgs_retired
+        };
+        match self.series.last() {
+            Some(last) if moved(last) => self.series.push(s),
+            // First sample: suppressed while every counter is still zero.
+            None if moved(&SeriesSample::default()) => self.series.push(s),
+            _ => {}
+        }
+    }
+
     /// Fold a per-shard statistics *delta* into this aggregate. Every
     /// additive event counter is summed; the globally-derived fields are
     /// deliberately left untouched: `cycles` and `load_cycles` advance once
@@ -215,6 +330,13 @@ impl FabricStats {
         self.scanner_ops += d.scanner_ops;
         self.trigger_checks += d.trigger_checks;
         self.offchip_bytes += d.offchip_bytes;
+        self.active_pe_cycles += d.active_pe_cycles;
+        self.stall_operand_cycles += d.stall_operand_cycles;
+        self.stall_inject_cycles += d.stall_inject_cycles;
+        self.stall_backpressure_cycles += d.stall_backpressure_cycles;
+        self.stall_claim_misses += d.stall_claim_misses;
+        // `stall_axi_cycles` is global (coordinator-counted, like
+        // `cycles`); `series` is appended by the epoch coordinator only.
         for (p, s) in d.port.iter().enumerate() {
             self.absorb_port(p, s);
         }
@@ -263,6 +385,13 @@ impl FabricStats {
         check!(port);
         check!(link_flits);
         check!(peak_link_demand);
+        check!(active_pe_cycles);
+        check!(stall_operand_cycles);
+        check!(stall_inject_cycles);
+        check!(stall_backpressure_cycles);
+        check!(stall_axi_cycles);
+        check!(stall_claim_misses);
+        check!(series);
         // Guard against the field list above going stale: if the structs
         // still differ, a counter was added to FabricStats without a
         // matching check! — fail loudly instead of reporting equality.
@@ -383,6 +512,75 @@ mod tests {
         let before = agg.clone();
         agg.merge_delta(&FabricStats::default());
         assert_eq!(agg, before);
+    }
+
+    #[test]
+    fn series_sampling_skips_idle_windows() {
+        let mut s = FabricStats::default();
+        // Nothing has moved: the very first sample is suppressed too.
+        s.sample_series(64);
+        assert!(s.series.is_empty());
+        s.active_pe_cycles = 10;
+        s.flit_hops = 3;
+        s.sample_series(128);
+        assert_eq!(s.series.len(), 1);
+        assert_eq!(s.series[0].cycle, 128);
+        // An idle window (no counter movement) appends nothing.
+        s.sample_series(192);
+        assert_eq!(s.series.len(), 1);
+        s.msgs_retired = 1;
+        s.sample_series(256);
+        assert_eq!(s.series.len(), 2);
+        assert_eq!(s.series[1].msgs_retired, 1);
+    }
+
+    #[test]
+    fn stall_counters_merge_and_diff() {
+        let mut agg = FabricStats::default();
+        let d = FabricStats {
+            active_pe_cycles: 4,
+            stall_operand_cycles: 1,
+            stall_inject_cycles: 2,
+            stall_backpressure_cycles: 3,
+            stall_claim_misses: 5,
+            // Global: a delta must never move it through merge.
+            stall_axi_cycles: 99,
+            ..FabricStats::default()
+        };
+        agg.merge_delta(&d);
+        assert_eq!(agg.active_pe_cycles, 4);
+        assert_eq!(agg.stall_operand_cycles, 1);
+        assert_eq!(agg.stall_inject_cycles, 2);
+        assert_eq!(agg.stall_backpressure_cycles, 3);
+        assert_eq!(agg.stall_claim_misses, 5);
+        assert_eq!(agg.stall_axi_cycles, 0);
+        // diff names each new field.
+        let named = agg.diff(&FabricStats::default()).expect("must differ");
+        assert!(named.contains("active_pe_cycles"), "{named}");
+        let mut s = FabricStats::default();
+        s.series.push(SeriesSample { cycle: 64, ..SeriesSample::default() });
+        let named = s.diff(&FabricStats::default()).expect("must differ");
+        assert!(named.contains("series"), "{named}");
+    }
+
+    #[test]
+    fn stall_fractions_normalize_by_pe_cycles() {
+        let mut s = FabricStats::default();
+        s.cycles = 100;
+        s.per_pe_busy_cycles = vec![0; 4]; // 400 PE-cycles
+        s.active_pe_cycles = 100;
+        s.stall_operand_cycles = 40;
+        s.stall_inject_cycles = 10;
+        s.stall_backpressure_cycles = 30;
+        s.stall_axi_cycles = 20;
+        s.stall_claim_misses = 4;
+        assert!((s.active_pe_fraction() - 0.25).abs() < 1e-12);
+        let f = s.stall_fractions();
+        assert_eq!(f[0].0, "operand");
+        assert!((f[0].1 - 0.10).abs() < 1e-12);
+        assert!((f[1].1 - 0.10).abs() < 1e-12);
+        assert!((f[2].1 - 0.05).abs() < 1e-12);
+        assert!((f[3].1 - 0.01).abs() < 1e-12);
     }
 
     #[test]

@@ -158,6 +158,41 @@
 //! heavy-tailed request mix against an in-process server
 //! (`BENCH_SERVE.json`).
 //!
+//! ## Observability & tracing
+//!
+//! The [`trace`] subsystem makes the fabric's cycle-level behavior
+//! inspectable without perturbing it. [`config::ArchConfig::with_trace`]
+//! ([`trace::TraceConfig`]) turns on structured event capture — message
+//! lifecycle (inject → hop → en-route claim → commit → retire) and PE
+//! state transitions (idle / compute / blocked) — into per-shard ring
+//! buffers merged deterministically at the epoch barriers, so the merged
+//! stream is identical at any thread count. Tracing is **provably
+//! inert**: it draws no PRNG values, is excluded from
+//! [`fabric::NexusFabric::state_digest`] and the compile-cache key, and a
+//! traced run is bit-identical to an untraced one in outputs, cycles, and
+//! stats — enforced by `tests/step_equivalence.rs` (every randomized case
+//! runs one side under a random `TraceConfig`) and `tests/trace_suite.rs`
+//! (which also proves event-count conservation: per-PE commit events
+//! exactly equal [`fabric::stats::FabricStats::per_pe_committed_ops`]).
+//!
+//! Stall attribution is always on, trace or no trace:
+//! [`fabric::stats::FabricStats`] counts blocked PE-cycles by cause
+//! (operand wait / buffer backpressure / AXI refill / claim contention,
+//! [`fabric::stats::FabricStats::stall_fractions`]) plus a windowed
+//! time-series ([`fabric::stats::FabricStats::series`], one cumulative
+//! sample every [`fabric::stats::SERIES_WINDOW`] cycles). Surfaces:
+//! `nexus trace --scenario NAME --out trace.json` exports a
+//! Chrome/Perfetto trace-event file ([`trace::chrome_trace_json`], one
+//! track per PE); `nexus corpus run --stall-summary` prints a one-line
+//! stall breakdown per scenario (the JSON lines always carry
+//! `active_pe_frac` and the four `stall_*_frac` fields); `nexus validate`
+//! reports peak link demand in GB/s; `nexus serve`'s `/metrics` exposes
+//! live trace-derived gauges; and [`trace::TraceConfig::flight_recorder`]
+//! keeps the last N events to dump into deadlock reports
+//! ([`fabric::DeadlockError`]). `cargo bench --bench trace_overhead`
+//! bounds the host-side cost (`BENCH_TRACE.json`; full capture targets
+//! < 2× wall-clock).
+//!
 //! ## Module map
 //!
 //! The crate contains, from the bottom up:
@@ -183,6 +218,9 @@
 //!   sessions (compile-once/run-many over any [`machine::Backend`]), typed
 //!   [`machine::ExecError`]s, and the [`machine::MachinePool`] batch
 //!   executor every sweep fans out through.
+//! - [`trace`] — zero-perturbation event tracing: per-shard ring buffers,
+//!   deterministic epoch merge, Chrome/Perfetto export, flight recorder
+//!   (see "Observability & tracing" above).
 //! - [`power`] — 22nm-calibrated area/energy models (Figs 10/15, Table 2).
 //! - [`runtime`] — PJRT golden-model runtime (loads `artifacts/*.hlo.txt`;
 //!   the XLA client is gated behind the `pjrt` cargo feature).
@@ -211,6 +249,7 @@ pub mod power;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 pub mod workloads;
 

@@ -200,10 +200,16 @@ impl Backend for FabricArch {
             events: EnergyEvents::from_fabric(s, self.cfg.kind),
             validated: true,
         };
+        let trace = if self.cfg.trace.enabled {
+            Some(fabric.trace_events())
+        } else {
+            None
+        };
         Ok(Execution {
             outputs,
             stats: Some(s.clone()),
             result,
+            trace,
         })
     }
 }

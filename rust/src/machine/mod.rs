@@ -150,6 +150,12 @@ pub struct Execution {
     pub result: RunResult,
     /// Full cycle-accurate counters (fabric backends only).
     pub stats: Option<FabricStats>,
+    /// Cycle-resolved trace events, present only when the executing
+    /// machine's [`ArchConfig`] enabled tracing
+    /// ([`crate::trace::TraceConfig`]) and the backend is cycle-accurate.
+    /// Events are in deterministic epoch-merge order; export with
+    /// [`crate::trace::chrome_trace_json`].
+    pub trace: Option<Vec<crate::trace::Event>>,
 }
 
 impl Execution {

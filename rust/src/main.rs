@@ -105,6 +105,7 @@ fn main() {
     match cmd {
         "corpus" => corpus(&args, opts),
         "serve" => serve(&args, step_mode, topology, shards, threads),
+        "trace" => trace_cmd(&args, opts),
         "validate" => validate(&opts),
         "golden" => golden(seed),
         "fig10" => with_matrix(seed, report::fig10),
@@ -157,7 +158,14 @@ fn main() {
                  \x20               --placement nnz-balanced|dissimilarity|hotspot-split\n\
                  \x20               picks the compile-time row placement;\n\
                  \x20               --claim eager|locality|credit|steal picks the\n\
-                 \x20               en-route claim policy — both echo into the JSON)\n\
+                 \x20               en-route claim policy — both echo into the JSON;\n\
+                 \x20               --stall-summary also prints a per-scenario stall-\n\
+                 \x20               attribution breakdown to stderr)\n\
+                 \x20 trace         run one corpus scenario with cycle-resolved tracing\n\
+                 \x20               and export Chrome/Perfetto trace-event JSON\n\
+                 \x20               (--scenario NAME picks it, --out FILE, default\n\
+                 \x20               trace.json; load in ui.perfetto.dev — tracing is\n\
+                 \x20               zero-perturbation, cycles match an untraced run)\n\
                  \x20 validate      run the 13-workload suite on Nexus/TIA/TIA-Valiant,\n\
                  \x20               checking fabric outputs against software references\n\
                  \x20               (--dense-oracle: use the dense reference scheduler\n\
@@ -202,19 +210,26 @@ fn corpus(args: &[String], opts: RunOptions) {
     match sub {
         "list" => println!("{}", coordinator::corpus_list(filter)),
         "run" => {
-            let (lines, ok) = coordinator::corpus_run(filter, opts);
-            if !lines.is_empty() {
-                println!("{lines}");
+            let stall_summary = args.iter().any(|a| a == "--stall-summary");
+            let (runs, ok) = coordinator::corpus_run_full(filter, opts);
+            for run in &runs {
+                println!("{}", run.json_line());
+            }
+            if stall_summary && !runs.is_empty() {
+                eprintln!("stall attribution (percent of PE-cycles per class):");
+                for run in &runs {
+                    eprintln!("  {}", run.stall_summary_line());
+                }
             }
             if !ok {
                 eprintln!(
                     "corpus run FAILED ({})",
-                    if lines.is_empty() {
+                    if runs.is_empty() {
                         "no scenario matched the filter".to_string()
                     } else {
                         format!(
                             "{} scenario(s) errored or failed validation",
-                            lines.lines().filter(|l| !l.contains("\"status\":\"ok\"")).count()
+                            runs.iter().filter(|r| !r.passed()).count()
                         )
                     }
                 );
@@ -223,7 +238,7 @@ fn corpus(args: &[String], opts: RunOptions) {
             eprintln!(
                 "corpus run OK: {} scenario(s) validated ({} stepping, {} topology, \
                  {} placement, {} claiming, {} shard(s) x {} thread(s), seed {})",
-                lines.lines().count(),
+                runs.len(),
                 opts.step_mode.name(),
                 opts.topology.name(),
                 opts.placement.name(),
@@ -236,6 +251,44 @@ fn corpus(args: &[String], opts: RunOptions) {
         other => {
             eprintln!("unknown corpus subcommand '{other}' (use: corpus list|run)");
             std::process::exit(2);
+        }
+    }
+}
+
+/// `nexus trace --scenario NAME [--out FILE]` plus the global run flags:
+/// run one corpus scenario with full tracing and write the Chrome
+/// trace-event JSON document (Perfetto-loadable). The JSON goes to the
+/// file; the one-line summary goes to stderr.
+fn trace_cmd(args: &[String], opts: RunOptions) {
+    let Some(name) = args
+        .iter()
+        .position(|a| a == "--scenario")
+        .and_then(|i| args.get(i + 1))
+    else {
+        eprintln!("usage: nexus trace --scenario NAME [--out FILE]  (see `nexus corpus list`)");
+        std::process::exit(2);
+    };
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("trace.json");
+    match coordinator::trace_scenario(name, opts) {
+        Ok(t) => {
+            if let Err(e) = std::fs::write(out, &t.json) {
+                eprintln!("trace: cannot write {out}: {e}");
+                std::process::exit(1);
+            }
+            eprintln!(
+                "trace: {} — {} event(s) over {} cycles -> {out} \
+                 (load in ui.perfetto.dev or chrome://tracing)",
+                t.scenario, t.events, t.cycles
+            );
+        }
+        Err(e) => {
+            eprintln!("trace failed: {e}");
+            std::process::exit(1);
         }
     }
 }
@@ -300,8 +353,20 @@ fn validate(opts: &RunOptions) {
                     opts.step_mode.name(),
                     shards
                 );
-                for (name, cycles) in rows {
-                    println!("  {name:<14} {cycles:>9} cycles  OK");
+                let peak = rows
+                    .iter()
+                    .max_by(|a, b| a.peak_link_gbps.total_cmp(&b.peak_link_gbps));
+                for r in &rows {
+                    println!(
+                        "  {:<14} {:>9} cycles  peak link {:>7.2} GB/s  OK",
+                        r.program, r.cycles, r.peak_link_gbps
+                    );
+                }
+                if let Some(p) = peak {
+                    println!(
+                        "  peak link demand: {:.2} GB/s ({} flits/cycle, on {})",
+                        p.peak_link_gbps, p.peak_link_demand, p.program
+                    );
                 }
             }
             Err(e) => {

@@ -55,6 +55,34 @@ pub fn metrics_line(
         .f64("cache_hit_rate", hit_rate, 4)
         .u64("cache_entries", entries as u64)
         .u64("cache_capacity", capacity as u64);
+    // Trace-derived gauges: simulated PE-cycle totals and the stall
+    // attribution accumulated over every completed run.
+    let pe_cycles = m.pe_cycles.load(Ordering::Relaxed);
+    let frac = |n: u64| {
+        if pe_cycles == 0 {
+            0.0
+        } else {
+            n as f64 / pe_cycles as f64
+        }
+    };
+    o.u64("sim_pe_cycles", pe_cycles)
+        .f64("active_pe_frac", m.active_pe_fraction(), 4)
+        .f64(
+            "stall_operand_frac",
+            frac(m.stall_operand.load(Ordering::Relaxed)),
+            4,
+        )
+        .f64(
+            "stall_backpressure_frac",
+            frac(m.stall_backpressure.load(Ordering::Relaxed)),
+            4,
+        )
+        .f64("stall_axi_frac", frac(m.stall_axi.load(Ordering::Relaxed)), 4)
+        .f64(
+            "stall_claim_frac",
+            frac(m.stall_claim.load(Ordering::Relaxed)),
+            4,
+        );
     o.build()
 }
 
@@ -94,6 +122,32 @@ mod tests {
         assert_eq!(v.get("cache_hit_rate").and_then(Json::as_f64), Some(0.75));
         assert_eq!(v.get("queue_capacity").and_then(Json::as_u64), Some(64));
         assert!(v.get("latency_p99_us").and_then(Json::as_u64).unwrap() >= 100);
+    }
+
+    #[test]
+    fn metrics_line_carries_stall_gauges() {
+        let m = Metrics::new();
+        // No runs yet: every gauge is a well-formed zero.
+        let v = parse_json(&metrics_line(&m, 0, 8, 1, (0, 0, 0, 8), false)).unwrap();
+        assert_eq!(v.get("sim_pe_cycles").and_then(Json::as_u64), Some(0));
+        assert_eq!(v.get("active_pe_frac").and_then(Json::as_f64), Some(0.0));
+        // One completed run: 100 cycles x 4 PEs, half the PE-cycles
+        // active, 40 operand-stalled, 10 AXI-stalled.
+        let stats = crate::fabric::stats::FabricStats {
+            cycles: 100,
+            per_pe_busy_cycles: vec![0; 4],
+            active_pe_cycles: 200,
+            stall_operand_cycles: 40,
+            stall_axi_cycles: 10,
+            ..crate::fabric::stats::FabricStats::default()
+        };
+        m.record_run_stats(&stats);
+        let v = parse_json(&metrics_line(&m, 0, 8, 1, (0, 0, 0, 8), false)).unwrap();
+        assert_eq!(v.get("sim_pe_cycles").and_then(Json::as_u64), Some(400));
+        assert_eq!(v.get("active_pe_frac").and_then(Json::as_f64), Some(0.5));
+        assert_eq!(v.get("stall_operand_frac").and_then(Json::as_f64), Some(0.1));
+        assert_eq!(v.get("stall_axi_frac").and_then(Json::as_f64), Some(0.025));
+        assert_eq!(v.get("stall_claim_frac").and_then(Json::as_f64), Some(0.0));
     }
 
     #[test]

@@ -28,6 +28,19 @@ pub struct Metrics {
     /// Lines that failed to parse at all (`malformed`, `oversized`,
     /// `bad_request`, `unknown_scenario`).
     pub malformed: AtomicU64,
+    /// Simulated PE-cycles (cycles × PEs) accumulated over completed
+    /// runs — the denominator of the live stall-attribution gauges.
+    pub pe_cycles: AtomicU64,
+    /// PE-cycles that committed ALU/decode work over completed runs.
+    pub active_pe_cycles: AtomicU64,
+    /// Stall-attributed PE-cycles: operand wait.
+    pub stall_operand: AtomicU64,
+    /// Stall-attributed PE-cycles: injection/buffer backpressure.
+    pub stall_backpressure: AtomicU64,
+    /// Stall-attributed cycles: AXI refill head-of-line wait.
+    pub stall_axi: AtomicU64,
+    /// Stall-attributed events: en-route claim misses.
+    pub stall_claim: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
 }
 
@@ -40,7 +53,42 @@ impl Metrics {
             errored: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             malformed: AtomicU64::new(0),
+            pe_cycles: AtomicU64::new(0),
+            active_pe_cycles: AtomicU64::new(0),
+            stall_operand: AtomicU64::new(0),
+            stall_backpressure: AtomicU64::new(0),
+            stall_axi: AtomicU64::new(0),
+            stall_claim: AtomicU64::new(0),
             latency_us: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Fold one completed run's fabric counters into the live
+    /// stall-attribution gauges (`/metrics` derives fractions from the
+    /// accumulated totals, so they converge to the fleet-wide averages).
+    pub fn record_run_stats(&self, s: &crate::fabric::stats::FabricStats) {
+        self.pe_cycles
+            .fetch_add(s.total_pe_cycles(), Ordering::Relaxed);
+        self.active_pe_cycles
+            .fetch_add(s.active_pe_cycles, Ordering::Relaxed);
+        self.stall_operand
+            .fetch_add(s.stall_operand_cycles, Ordering::Relaxed);
+        self.stall_backpressure.fetch_add(
+            s.stall_inject_cycles + s.stall_backpressure_cycles,
+            Ordering::Relaxed,
+        );
+        self.stall_axi.fetch_add(s.stall_axi_cycles, Ordering::Relaxed);
+        self.stall_claim
+            .fetch_add(s.stall_claim_misses, Ordering::Relaxed);
+    }
+
+    /// Live active-PE fraction across all completed runs (0 with none).
+    pub fn active_pe_fraction(&self) -> f64 {
+        let total = self.pe_cycles.load(Ordering::Relaxed);
+        if total == 0 {
+            0.0
+        } else {
+            self.active_pe_cycles.load(Ordering::Relaxed) as f64 / total as f64
         }
     }
 

@@ -424,6 +424,10 @@ fn execute_job(
         .execute(&compiled)
         .map_err(|e| ServeError::ExecFailed(e.to_string()))?;
     let exec_us = started.elapsed().as_micros() as u64;
+    // Feed the live stall-attribution gauges behind `GET /metrics`.
+    if let Some(stats) = &exec.stats {
+        state.metrics.record_run_stats(stats);
+    }
     Ok(run_response_line(
         &name,
         spec_fingerprint(&spec),

@@ -1,0 +1,533 @@
+//! Cycle-resolved event tracing for the Nexus fabric.
+//!
+//! The simulator's end-of-run aggregates (`FabricStats`) say *how much*
+//! happened; this module records *when* and *where*: message-lifecycle
+//! events (inject → hop → en-route claim → commit → retire) and PE state
+//! transitions (idle / compute / blocked), each stamped with the cycle it
+//! occurred on.
+//!
+//! # Zero perturbation
+//!
+//! Tracing is **provably inert**: event emission reads simulator state but
+//! never writes it, draws no PRNG values, and the trace buffers live
+//! outside the [`crate::fabric::NexusFabric::state_digest`] and
+//! [`crate::fabric::stats::FabricStats`] comparison surfaces. A traced run
+//! is bit-identical to an untraced one — same outputs, cycles, stats, and
+//! per-cycle digest trace — a property enforced across all topologies ×
+//! step modes × shard counts × claim policies by
+//! `tests/step_equivalence.rs` (every differential comparison traces
+//! exactly one side).
+//!
+//! # Sharding
+//!
+//! Each shard band records into its own [`TraceBuffer`] ring (no locks,
+//! no cross-thread writes); at every epoch barrier the coordinator drains
+//! the shard rings **in shard index order** into the fabric-owned sink, so
+//! the merged stream is deterministic at any thread count and
+//! nondecreasing in cycle.
+//!
+//! # Flight recorder
+//!
+//! With a bounded sink capacity ([`TraceConfig::sink_capacity`] > 0) the
+//! sink keeps only the most recent events, ring-buffer style — a flight
+//! recorder whose contents are dumped into
+//! [`crate::fabric::DeadlockError::flight`] when a run times out, turning
+//! deadlock reports into replayable forensics.
+//!
+//! # Export
+//!
+//! [`chrome_trace_json`] renders an event slice in the Chrome trace-event
+//! JSON format: load the file in `about:tracing` or
+//! <https://ui.perfetto.dev> to see per-PE utilization waterfalls and
+//! claim migrations. One instant event per fabric event, one track (tid)
+//! per PE.
+
+use crate::util::json::{array, JsonObj};
+
+/// What a trace sink records. Carried on
+/// [`ArchConfig::trace`](crate::config::ArchConfig::trace); the default
+/// is fully disabled and costs one predictable branch per would-be event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Master switch. When false nothing is recorded.
+    pub enabled: bool,
+    /// Per-shard ring capacity in events. Each shard ring is drained into
+    /// the sink every epoch, so this only needs to hold one epoch's worth
+    /// of events per shard; on overflow the *oldest* events of the epoch
+    /// are dropped (counted, never silently).
+    pub shard_capacity: usize,
+    /// Merged-sink bound: `0` keeps every event (full tracing, for
+    /// export); `> 0` keeps only the most recent N (flight recorder).
+    pub sink_capacity: usize,
+    /// Record message-lifecycle events (inject / hop / claim / commit /
+    /// retire).
+    pub lifecycle: bool,
+    /// Record PE state-transition events (idle / compute / blocked).
+    pub pe_states: bool,
+}
+
+impl TraceConfig {
+    /// Fully disabled (the [`Default`]): zero events, zero allocation.
+    pub fn off() -> Self {
+        TraceConfig {
+            enabled: false,
+            shard_capacity: 0,
+            sink_capacity: 0,
+            lifecycle: false,
+            pe_states: false,
+        }
+    }
+
+    /// Full tracing for export: everything recorded, unbounded sink.
+    pub fn full() -> Self {
+        TraceConfig {
+            enabled: true,
+            shard_capacity: 1 << 14,
+            sink_capacity: 0,
+            lifecycle: true,
+            pe_states: true,
+        }
+    }
+
+    /// Flight recorder: everything recorded, only the most recent
+    /// `last_n` events kept.
+    pub fn flight_recorder(last_n: usize) -> Self {
+        TraceConfig {
+            sink_capacity: last_n.max(1),
+            ..Self::full()
+        }
+    }
+
+    /// Validate internal consistency (mirrors `ArchConfig::validate`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.enabled && self.shard_capacity == 0 {
+            return Err("trace shard_capacity must be >= 1 when tracing is enabled".into());
+        }
+        if self.enabled && !self.lifecycle && !self.pe_states {
+            return Err("enabled trace must record lifecycle and/or pe_states".into());
+        }
+        Ok(())
+    }
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+/// The event vocabulary. Discriminants are stable: they appear in
+/// exported traces and flight-recorder dumps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A PE injected a message into its router's local port.
+    Inject,
+    /// A flit crossed a link (router → router, or into a PE inbox);
+    /// `arg` is the output port index.
+    Hop,
+    /// An idle PE claimed a buffered flit for en-route execution; `arg`
+    /// is the claimed input port.
+    Claim,
+    /// A PE latched an ALU operation this cycle (the commit-side busy
+    /// latch). Per PE, `AluCommit + MemOp` event counts equal
+    /// `FabricStats::per_pe_committed_ops` exactly.
+    AluCommit,
+    /// A PE executed a memory operation (load/store/accumulate/stream).
+    MemOp,
+    /// A message retired (reached terminal execution).
+    Retire,
+    /// A PE changed state; `arg` is the new [`PeTraceState`] code.
+    PeState,
+}
+
+impl EventKind {
+    /// Stable display name (Perfetto event name / flight-recorder tag).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Inject => "inject",
+            EventKind::Hop => "hop",
+            EventKind::Claim => "claim",
+            EventKind::AluCommit => "alu_commit",
+            EventKind::MemOp => "mem_op",
+            EventKind::Retire => "retire",
+            EventKind::PeState => "pe_state",
+        }
+    }
+}
+
+/// PE activity classification recorded by [`EventKind::PeState`] events,
+/// derived at commit time from the busy latches and pending work:
+/// compute when an ALU/decode latch fired, blocked when the PE holds
+/// pending work but executed nothing, idle otherwise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeTraceState {
+    Idle = 0,
+    Compute = 1,
+    Blocked = 2,
+}
+
+impl PeTraceState {
+    pub fn name(self) -> &'static str {
+        match self {
+            PeTraceState::Idle => "idle",
+            PeTraceState::Compute => "compute",
+            PeTraceState::Blocked => "blocked",
+        }
+    }
+
+    /// Decode an `Event::arg` code (defaults to `Idle` for unknown codes).
+    pub fn from_code(code: u32) -> Self {
+        match code {
+            1 => PeTraceState::Compute,
+            2 => PeTraceState::Blocked,
+            _ => PeTraceState::Idle,
+        }
+    }
+}
+
+/// One trace event: 24 bytes, `Copy`, no heap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Cycle the event occurred on.
+    pub cycle: u64,
+    /// Message id (0 for events without a message, e.g. PE states).
+    pub msg: u64,
+    /// PE / router id the event is anchored to.
+    pub pe: u32,
+    /// Kind-specific argument: port index for hops/claims, state code for
+    /// PE states, destination for injects.
+    pub arg: u16,
+    pub kind: EventKind,
+}
+
+/// A fixed-capacity event ring. With `capacity == 0` it is an unbounded
+/// append log (the full-tracing sink); with `capacity > 0` pushing into a
+/// full ring drops the **oldest** event and counts it in
+/// [`TraceBuffer::dropped`] — never a silent loss, never a reorder: FIFO
+/// order of the survivors is preserved.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TraceBuffer {
+    buf: Vec<Event>,
+    /// Index of the oldest event when the ring has wrapped.
+    head: usize,
+    len: usize,
+    capacity: usize,
+    /// Events dropped to overflow since the last [`TraceBuffer::clear`].
+    pub dropped: u64,
+}
+
+impl TraceBuffer {
+    /// `capacity == 0` → unbounded append log; otherwise a ring keeping
+    /// the most recent `capacity` events.
+    pub fn new(capacity: usize) -> Self {
+        TraceBuffer {
+            buf: Vec::new(),
+            head: 0,
+            len: 0,
+            capacity,
+            dropped: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append an event, dropping the oldest one when a bounded ring is
+    /// full.
+    #[inline]
+    pub fn push(&mut self, ev: Event) {
+        if self.capacity == 0 {
+            self.buf.push(ev);
+            self.len += 1;
+            return;
+        }
+        if self.len < self.capacity {
+            if self.buf.len() < self.capacity {
+                self.buf.push(ev);
+            } else {
+                let idx = (self.head + self.len) % self.capacity;
+                self.buf[idx] = ev;
+            }
+            self.len += 1;
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.capacity;
+            self.dropped += 1;
+        }
+    }
+
+    /// The events in FIFO order (oldest first).
+    pub fn iter(&self) -> impl Iterator<Item = &Event> {
+        let (a, b) = if self.capacity == 0 || self.head == 0 {
+            (&self.buf[..self.len.min(self.buf.len())], &self.buf[0..0])
+        } else {
+            (&self.buf[self.head..], &self.buf[..self.head])
+        };
+        a.iter().chain(b.iter())
+    }
+
+    /// Copy out the events in FIFO order.
+    pub fn to_vec(&self) -> Vec<Event> {
+        self.iter().copied().collect()
+    }
+
+    /// Drain every event in FIFO order into `sink`, leaving this buffer
+    /// empty (capacity and drop count retained). This is the epoch-barrier
+    /// merge: called per shard in shard index order.
+    pub fn drain_into(&mut self, sink: &mut TraceBuffer) {
+        if self.len == 0 {
+            return;
+        }
+        if self.capacity == 0 || self.head == 0 {
+            for &ev in &self.buf[..self.len.min(self.buf.len())] {
+                sink.push(ev);
+            }
+        } else {
+            for i in 0..self.len {
+                sink.push(self.buf[(self.head + i) % self.capacity]);
+            }
+        }
+        self.buf.clear();
+        self.head = 0;
+        self.len = 0;
+    }
+
+    /// Empty the buffer and reset the drop count. Capacity is retained;
+    /// for unbounded logs the backing allocation is kept for reuse.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.len = 0;
+        self.dropped = 0;
+    }
+}
+
+/// Render events as Chrome trace-event JSON (the `about:tracing` /
+/// Perfetto format): one metadata event naming each PE track, then one
+/// instant event per fabric event (`ph: "i"`, thread-scoped), with the
+/// cycle as the microsecond timestamp so the timeline reads in cycles.
+pub fn chrome_trace_json(events: &[Event], width: usize, height: usize) -> String {
+    let mut items: Vec<String> = Vec::with_capacity(events.len() + width * height);
+    for id in 0..width * height {
+        let (x, y) = (id % width.max(1), id / width.max(1));
+        let mut args = JsonObj::new();
+        args.str("name", &format!("PE {id} ({x},{y})"));
+        let mut o = JsonObj::new();
+        o.str("name", "thread_name")
+            .str("ph", "M")
+            .u64("pid", 0)
+            .u64("tid", id as u64)
+            .raw("args", &args.build());
+        items.push(o.build());
+    }
+    for ev in events {
+        let mut args = JsonObj::new();
+        if ev.msg != 0 {
+            args.hex("msg", ev.msg);
+        }
+        match ev.kind {
+            EventKind::Hop | EventKind::Claim => {
+                args.u64("port", ev.arg as u64);
+            }
+            EventKind::PeState => {
+                args.str("state", PeTraceState::from_code(ev.arg as u32).name());
+            }
+            EventKind::Inject => {
+                args.u64("dest", ev.arg as u64);
+            }
+            _ => {}
+        }
+        let mut o = JsonObj::new();
+        o.str("name", ev.kind.name())
+            .str("ph", "i")
+            .str("s", "t")
+            .u64("ts", ev.cycle)
+            .u64("pid", 0)
+            .u64("tid", ev.pe as u64)
+            .raw("args", &args.build());
+        items.push(o.build());
+    }
+    let mut root = JsonObj::new();
+    root.raw("traceEvents", &array(items))
+        .str("displayTimeUnit", "ms")
+        .u64("eventCount", events.len() as u64);
+    root.build()
+}
+
+/// Format the most recent `last_n` events as human-readable lines (the
+/// flight-recorder dump attached to deadlock reports), newest last.
+pub fn flight_lines(events: &[Event], last_n: usize) -> Vec<String> {
+    let start = events.len().saturating_sub(last_n);
+    events[start..]
+        .iter()
+        .map(|ev| {
+            let mut line = format!("cycle {} PE{} {}", ev.cycle, ev.pe, ev.kind.name());
+            if ev.msg != 0 {
+                line.push_str(&format!(" msg={:#x}", ev.msg));
+            }
+            match ev.kind {
+                EventKind::Hop | EventKind::Claim => line.push_str(&format!(" port={}", ev.arg)),
+                EventKind::PeState => line.push_str(&format!(
+                    " -> {}",
+                    PeTraceState::from_code(ev.arg as u32).name()
+                )),
+                EventKind::Inject => line.push_str(&format!(" dest={}", ev.arg)),
+                _ => {}
+            }
+            line
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cycle: u64, pe: u32) -> Event {
+        Event {
+            cycle,
+            msg: 0,
+            pe,
+            arg: 0,
+            kind: EventKind::Hop,
+        }
+    }
+
+    #[test]
+    fn unbounded_buffer_keeps_everything_in_order() {
+        let mut b = TraceBuffer::new(0);
+        for i in 0..100 {
+            b.push(ev(i, 0));
+        }
+        assert_eq!(b.len(), 100);
+        assert_eq!(b.dropped, 0);
+        let v = b.to_vec();
+        assert!(v.windows(2).all(|w| w[0].cycle + 1 == w[1].cycle));
+    }
+
+    #[test]
+    fn bounded_overflow_drops_oldest_and_counts() {
+        let mut b = TraceBuffer::new(4);
+        for i in 0..10 {
+            b.push(ev(i, 0));
+        }
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.dropped, 6);
+        // Survivors are the most recent four, still FIFO-ordered.
+        let cycles: Vec<u64> = b.to_vec().iter().map(|e| e.cycle).collect();
+        assert_eq!(cycles, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn overflow_preserves_epoch_merge_order() {
+        // Two shard rings, one of which overflows mid-epoch: the merged
+        // sink must stay FIFO within each shard and ordered by shard
+        // index across shards — overflow never corrupts the merge.
+        let mut shard0 = TraceBuffer::new(3);
+        let mut shard1 = TraceBuffer::new(3);
+        for i in 0..5 {
+            shard0.push(ev(7, i)); // overflows: keeps pe 2,3,4
+        }
+        for i in 0..2 {
+            shard1.push(ev(7, 100 + i));
+        }
+        let mut sink = TraceBuffer::new(0);
+        shard0.drain_into(&mut sink);
+        shard1.drain_into(&mut sink);
+        let pes: Vec<u32> = sink.to_vec().iter().map(|e| e.pe).collect();
+        assert_eq!(pes, vec![2, 3, 4, 100, 101]);
+        assert_eq!(shard0.dropped, 2);
+        assert_eq!(sink.dropped, 0);
+        assert!(shard0.is_empty() && shard1.is_empty());
+        // Next epoch reuses the rings from a clean state.
+        shard0.push(ev(8, 9));
+        shard0.drain_into(&mut sink);
+        assert_eq!(sink.to_vec().last().map(|e| e.pe), Some(9));
+    }
+
+    #[test]
+    fn bounded_sink_is_a_flight_recorder() {
+        let mut sink = TraceBuffer::new(8);
+        for i in 0..100 {
+            sink.push(ev(i, 0));
+        }
+        let cycles: Vec<u64> = sink.to_vec().iter().map(|e| e.cycle).collect();
+        assert_eq!(cycles, (92..100).collect::<Vec<u64>>());
+        assert_eq!(sink.dropped, 92);
+    }
+
+    #[test]
+    fn clear_resets_state_but_keeps_capacity() {
+        let mut b = TraceBuffer::new(2);
+        b.push(ev(0, 0));
+        b.push(ev(1, 0));
+        b.push(ev(2, 0));
+        assert_eq!(b.dropped, 1);
+        b.clear();
+        assert_eq!((b.len(), b.dropped, b.capacity()), (0, 0, 2));
+        b.push(ev(5, 1));
+        assert_eq!(b.to_vec()[0].cycle, 5);
+    }
+
+    #[test]
+    fn chrome_json_counts_match() {
+        let events = vec![
+            Event {
+                cycle: 3,
+                msg: 0x1_0001,
+                pe: 2,
+                arg: 1,
+                kind: EventKind::Hop,
+            },
+            Event {
+                cycle: 4,
+                msg: 0,
+                pe: 2,
+                arg: PeTraceState::Compute as u16,
+                kind: EventKind::PeState,
+            },
+        ];
+        let json = chrome_trace_json(&events, 2, 2);
+        assert!(json.contains("\"traceEvents\":["));
+        assert_eq!(json.matches("\"ph\":\"i\"").count(), 2);
+        assert_eq!(json.matches("\"ph\":\"M\"").count(), 4); // one per PE
+        assert!(json.contains("\"eventCount\":2"));
+        assert!(json.contains("\"state\":\"compute\""));
+    }
+
+    #[test]
+    fn flight_lines_take_the_tail() {
+        let events: Vec<Event> = (0..10).map(|i| ev(i, 1)).collect();
+        let lines = flight_lines(&events, 3);
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("cycle 7"));
+        assert!(lines[2].starts_with("cycle 9"));
+    }
+
+    #[test]
+    fn config_presets_validate() {
+        TraceConfig::off().validate().unwrap();
+        TraceConfig::full().validate().unwrap();
+        TraceConfig::flight_recorder(64).validate().unwrap();
+        let bad = TraceConfig {
+            shard_capacity: 0,
+            ..TraceConfig::full()
+        };
+        assert!(bad.validate().is_err());
+        let bad = TraceConfig {
+            lifecycle: false,
+            pe_states: false,
+            ..TraceConfig::full()
+        };
+        assert!(bad.validate().is_err());
+    }
+}

@@ -4,6 +4,10 @@
 //! random meshes, buffer depths, AXI/AM-queue parameters, and workload
 //! densities, for every (exec policy × routing policy) combination.
 //!
+//! Every case additionally runs exactly one side under a random tracing
+//! configuration ([`nexus::trace::TraceConfig`]), so each comparison
+//! doubles as a zero-perturbation proof for the tracing subsystem.
+//!
 //! Each combination runs `NEXUS_PROP_CASES` randomized cases (default 200;
 //! the CI release job raises it). On a mismatch the harness reports the
 //! failing case seed (via `util::prop::forall_seeded`), the first differing
@@ -20,6 +24,7 @@ use nexus::fabric::stats::FabricStats;
 use nexus::fabric::{DeadlockError, NexusFabric};
 use nexus::isa::{ConfigEntry, Opcode};
 use nexus::pe::{StreamElem, StreamMode};
+use nexus::trace::TraceConfig;
 use nexus::util::prop::{ensure, forall_seeded};
 use nexus::util::SplitMix64;
 
@@ -251,6 +256,33 @@ fn random_program(rng: &mut SplitMix64, cfg: &ArchConfig) -> Program {
     b.build()
 }
 
+/// Random tracing configuration for one case: off, full, a bounded flight
+/// recorder, or a custom draw over capacities and event-class toggles.
+/// Tracing must be invisible to every differential comparison, so each
+/// case runs exactly one side traced and the other untraced — any
+/// perturbation (a counter, a PRNG draw, a schedule change) shows up as a
+/// cross-mode divergence.
+fn random_trace_cfg(rng: &mut SplitMix64) -> TraceConfig {
+    match rng.below_usize(4) {
+        0 => TraceConfig::off(),
+        1 => TraceConfig::full(),
+        2 => TraceConfig::flight_recorder(1 + rng.below_usize(64)),
+        _ => {
+            let mut t = TraceConfig {
+                enabled: true,
+                shard_capacity: [1, 8, 1 << 10][rng.below_usize(3)],
+                sink_capacity: [0, 1, 16][rng.below_usize(3)],
+                lifecycle: rng.chance(0.7),
+                pe_states: rng.chance(0.7),
+            };
+            if !t.lifecycle && !t.pe_states {
+                t.lifecycle = true;
+            }
+            t
+        }
+    }
+}
+
 /// Outcome of one scheduler run, normalized for comparison.
 type RunOutcome = Result<(Vec<i16>, u64, FabricStats), DeadlockError>;
 
@@ -298,7 +330,10 @@ fn equivalent(rng: &mut SplitMix64, exec: ExecPolicy, routing: RoutingPolicy) ->
 /// variants feed [`random_topo_cfg`] draws through here).
 fn equivalent_on(rng: &mut SplitMix64, cfg: ArchConfig) -> Result<(), String> {
     let prog = random_program(rng, &cfg);
-    let (ra, fa) = run_mode(&prog, &cfg, StepMode::ActiveSet);
+    // Trace exactly the active-set side with a random config: every
+    // comparison below then doubles as a trace-neutrality assertion.
+    let traced = cfg.clone().with_trace(random_trace_cfg(rng));
+    let (ra, fa) = run_mode(&prog, &traced, StepMode::ActiveSet);
     let (rd, _fd) = run_mode(&prog, &cfg, StepMode::DenseOracle);
     let diverged = || {
         first_diverging_cycle(&prog, &cfg)
@@ -443,7 +478,13 @@ fn lockstep_digests_and_wake_invariants() {
         // (the random programs use well under 128 words per PE).
         cfg.dmem_words = 128;
         let prog = random_program(rng, &cfg);
-        let mut fa = NexusFabric::new(cfg.clone().with_step_mode(StepMode::ActiveSet));
+        // Tracing the active side turns every per-cycle digest comparison
+        // into a cycle-resolved trace-neutrality check.
+        let mut fa = NexusFabric::new(
+            cfg.clone()
+                .with_step_mode(StepMode::ActiveSet)
+                .with_trace(random_trace_cfg(rng)),
+        );
         let mut fd = NexusFabric::new(cfg.clone().with_step_mode(StepMode::DenseOracle));
         fa.begin_program(&prog);
         fd.begin_program(&prog);
@@ -553,13 +594,17 @@ fn sharded_first_diverging_cycle(prog: &Program, cfg: &ArchConfig, epochs: u64) 
 fn sharded_equivalent(rng: &mut SplitMix64, kind: TopologyKind) -> Result<(), String> {
     let cfg = random_sharded_cfg(rng, kind);
     let prog = random_program(rng, &cfg);
-    let run = |threads: usize| {
-        let mut f = NexusFabric::new(cfg.clone().with_threads(threads));
+    // The multi-threaded side runs traced: the shard rings are filled by
+    // worker threads and merged at epoch barriers, and none of it may
+    // disturb the serial-vs-parallel comparison.
+    let trace = random_trace_cfg(rng);
+    let run = |threads: usize, trace: TraceConfig| {
+        let mut f = NexusFabric::new(cfg.clone().with_threads(threads).with_trace(trace));
         let r = f.run_program(&prog).map(|out| (out, f.cycles(), f.stats.clone()));
         (r, f)
     };
-    let (rs, fs) = run(1);
-    let (rp, _fp) = run(cfg.threads);
+    let (rs, fs) = run(1, TraceConfig::off());
+    let (rp, _fp) = run(cfg.threads, trace);
     let diverged = || {
         sharded_first_diverging_cycle(&prog, &cfg, 2_000)
             .map(|c| format!("first diverging cycle: {c}"))

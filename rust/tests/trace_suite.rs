@@ -1,0 +1,201 @@
+//! Integration suite for the tracing subsystem: zero-perturbation of
+//! traced runs, event-count conservation against `FabricStats`, the
+//! Chrome/Perfetto export round-trip (reparsed with the `nexus serve`
+//! JSON parser), and the flight recorder riding on deadlock reports.
+
+use nexus::config::ArchConfig;
+use nexus::machine::{config_tag, Machine};
+use nexus::serve::protocol::{parse_json, Json};
+use nexus::trace::{chrome_trace_json, EventKind, TraceConfig};
+use nexus::workloads::{suite, Spec};
+
+fn pick<'a>(specs: &'a [Spec], prefix: &str) -> &'a Spec {
+    specs
+        .iter()
+        .find(|s| s.name().starts_with(prefix))
+        .unwrap_or_else(|| panic!("suite must contain a {prefix} spec"))
+}
+
+/// A traced run is bit-identical to an untraced one, and the captured
+/// event stream conserves the commit counters: per PE, `AluCommit +
+/// MemOp` events equal `per_pe_committed_ops`, and `Retire` events equal
+/// `msgs_retired` — on the serial fabric and on a sharded multi-threaded
+/// one.
+#[test]
+fn traced_run_matches_untraced_and_conserves_commit_events() {
+    let specs = suite(1);
+    let spec = pick(&specs, "SpMV");
+    for (shards, threads) in [(1usize, 1usize), (2, 2)] {
+        let base = ArchConfig::nexus().with_shards(shards).with_threads(threads);
+        let mut plain = Machine::new(base.clone());
+        let mut traced = Machine::new(base.clone().with_trace(TraceConfig::full()));
+        let ep = plain.run(spec).expect("untraced run");
+        let et = traced.run(spec).expect("traced run");
+        let tag = format!("shards={shards} threads={threads}");
+        assert_eq!(ep.outputs, et.outputs, "{tag}: outputs diverged");
+        assert_eq!(ep.cycles(), et.cycles(), "{tag}: cycles diverged");
+        let (sp, st) = (ep.stats.unwrap(), et.stats.unwrap());
+        if let Some(field) = sp.diff(&st) {
+            panic!("{tag}: stats diverged on {field}");
+        }
+        assert!(ep.trace.is_none(), "untraced execution must carry no trace");
+        let events = et.trace.expect("traced execution must carry events");
+        assert!(!events.is_empty(), "{tag}: no events captured");
+        // The epoch-merged stream is nondecreasing in cycle at any
+        // shard/thread count.
+        assert!(
+            events.windows(2).all(|w| w[0].cycle <= w[1].cycle),
+            "{tag}: merged stream must be sorted by cycle"
+        );
+        let mut commits = vec![0u64; base.num_pes()];
+        let mut retires = 0u64;
+        for ev in &events {
+            match ev.kind {
+                EventKind::AluCommit | EventKind::MemOp => commits[ev.pe as usize] += 1,
+                EventKind::Retire => retires += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(
+            commits, st.per_pe_committed_ops,
+            "{tag}: commit events must conserve per_pe_committed_ops"
+        );
+        assert_eq!(
+            retires, st.msgs_retired,
+            "{tag}: retire events must conserve msgs_retired"
+        );
+        // Tracing is not part of the architecture: compile-cache artifacts
+        // are shared between traced and untraced machines.
+        assert_eq!(
+            config_tag(&base),
+            config_tag(&base.clone().with_trace(TraceConfig::full()))
+        );
+    }
+}
+
+/// The windowed time-series rides along on every traced-or-not run: a
+/// real workload produces samples with nondecreasing cycles and
+/// monotonically nondecreasing cumulative counters.
+#[test]
+fn series_samples_are_monotone_on_real_workloads() {
+    let specs = suite(1);
+    let mut m = Machine::new(ArchConfig::nexus());
+    let e = m.run(pick(&specs, "SpMV")).expect("run");
+    let s = e.stats.unwrap();
+    assert!(!s.series.is_empty(), "a real run must produce series samples");
+    for w in s.series.windows(2) {
+        assert!(w[0].cycle < w[1].cycle, "sample cycles must increase");
+        assert!(w[0].active_pe_cycles <= w[1].active_pe_cycles);
+        assert!(w[0].flit_hops <= w[1].flit_hops);
+        assert!(w[0].msgs_retired <= w[1].msgs_retired);
+    }
+    let last = s.series.last().unwrap();
+    assert_eq!(
+        last.msgs_retired, s.msgs_retired,
+        "the closing sample must capture the final counter values"
+    );
+}
+
+/// The Chrome trace-event export reparses with the crate's own JSON
+/// parser and its event counts are exact: one metadata record per PE, one
+/// instant event per captured fabric event, every instant on a valid PE
+/// track.
+#[test]
+fn chrome_trace_export_reparses_with_exact_counts() {
+    let specs = suite(1);
+    let cfg = ArchConfig::nexus().with_trace(TraceConfig::full());
+    let mut m = Machine::new(cfg.clone());
+    let e = m.run(pick(&specs, "SpMV")).expect("traced run");
+    let events = e.trace.expect("events");
+    let json = chrome_trace_json(&events, cfg.width, cfg.height);
+    let v = parse_json(&json).expect("export must reparse as JSON");
+    assert_eq!(
+        v.get("eventCount").and_then(Json::as_u64),
+        Some(events.len() as u64)
+    );
+    let Some(Json::Arr(items)) = v.get("traceEvents") else {
+        panic!("traceEvents must be an array");
+    };
+    let ph = |it: &Json| it.get("ph").and_then(Json::as_str).map(str::to_string);
+    let meta = items.iter().filter(|it| ph(it).as_deref() == Some("M")).count();
+    let inst = items.iter().filter(|it| ph(it).as_deref() == Some("i")).count();
+    assert_eq!(meta, cfg.width * cfg.height, "one thread_name record per PE");
+    assert_eq!(inst, events.len(), "one instant event per fabric event");
+    for it in items {
+        if ph(it).as_deref() == Some("i") {
+            let tid = it.get("tid").and_then(Json::as_u64).expect("tid");
+            assert!((tid as usize) < cfg.num_pes(), "tid {tid} out of range");
+            assert!(it.get("ts").and_then(Json::as_u64).is_some(), "ts missing");
+        }
+    }
+}
+
+/// A bounded-sink (flight recorder) configuration dumps its most recent
+/// events into the deadlock report — and the traced deadlock happens on
+/// exactly the same cycle as the untraced one.
+#[test]
+fn flight_recorder_rides_on_deadlock_reports() {
+    use nexus::am::Message;
+    use nexus::compiler::ProgramBuilder;
+    use nexus::fabric::NexusFabric;
+    use nexus::isa::{ConfigEntry, Opcode};
+
+    let mut cfg = ArchConfig::nexus();
+    cfg.max_cycles = 500;
+    cfg.trace = TraceConfig::flight_recorder(32);
+    // A config chain that self-loops (Mul whose next entry is itself)
+    // never becomes terminal: the run must time out, not drain.
+    let mut b = ProgramBuilder::new("livelock", &cfg);
+    let pc = b.config(ConfigEntry::new(Opcode::Mul, 0));
+    let mut am = Message::new();
+    am.opcode = Opcode::Mul;
+    am.n_pc = pc;
+    am.op1 = 1;
+    am.op2 = 1;
+    am.push_dest(15);
+    b.static_am(0, am);
+    let prog = b.build();
+
+    let mut traced = NexusFabric::new(cfg.clone());
+    let err = traced.run_program(&prog).expect_err("livelock must deadlock");
+    assert!(!err.flight.is_empty(), "flight recorder must capture events");
+    assert!(err.flight.len() <= 64, "dump is bounded: {}", err.flight.len());
+    assert!(
+        err.flight.iter().all(|l| l.starts_with("cycle ")),
+        "lines must be cycle-stamped: {:?}",
+        err.flight.first()
+    );
+    let rendered = err.to_string();
+    assert!(rendered.contains("flight recorder"), "{rendered}");
+
+    cfg.trace = TraceConfig::off();
+    let mut plain = NexusFabric::new(cfg);
+    let err2 = plain.run_program(&prog).expect_err("still deadlocks untraced");
+    assert!(err2.flight.is_empty(), "untraced report carries no flight dump");
+    assert_eq!(err.cycle, err2.cycle, "tracing must not move the deadlock");
+    assert_eq!(err.in_flight, err2.in_flight);
+}
+
+/// Ring-buffer overflow in a tiny shard ring drops the oldest events but
+/// keeps the run itself bit-identical; the drop is counted, not silent.
+#[test]
+fn tiny_shard_rings_degrade_gracefully() {
+    let specs = suite(1);
+    let spec = pick(&specs, "SpMV");
+    let tiny = TraceConfig {
+        enabled: true,
+        shard_capacity: 4,
+        sink_capacity: 0,
+        lifecycle: true,
+        pe_states: true,
+    };
+    let mut plain = Machine::new(ArchConfig::nexus());
+    let mut traced = Machine::new(ArchConfig::nexus().with_trace(tiny));
+    let ep = plain.run(spec).expect("untraced run");
+    let et = traced.run(spec).expect("tiny-ring traced run");
+    assert_eq!(ep.outputs, et.outputs);
+    assert_eq!(ep.cycles(), et.cycles());
+    let events = et.trace.expect("events survive overflow");
+    // The stream stays merge-ordered even with per-epoch drops.
+    assert!(events.windows(2).all(|w| w[0].cycle <= w[1].cycle));
+}
